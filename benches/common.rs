@@ -1,0 +1,131 @@
+//! Shared helpers for the table/figure bench harnesses.
+//!
+//! Every bench prints, for each table/figure row the paper reports, the
+//! paper's number next to what this reproduction measures (accuracy from
+//! real scaled training, memory from the analytic model at paper scale,
+//! epoch time measured on this CPU testbed).  The *shape* — who wins, by
+//! roughly what factor — is the reproduction target; absolute numbers
+//! differ because the substrate is an emulator, not an H100.
+
+#![allow(dead_code)]
+
+use elmo::coordinator::{evaluate, EvalReport, Precision, TrainConfig, Trainer};
+use elmo::data::{self, Dataset, Profile};
+use elmo::memmodel::{self, MemParams, Method};
+use elmo::runtime::Runtime;
+
+pub const ART: &str = "artifacts";
+
+pub fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{ART}/manifest.txt")).exists()
+}
+
+/// Epoch override for quick runs: ELMO_EPOCHS=1 cargo bench ...
+pub fn epochs_or(default: usize) -> usize {
+    std::env::var("ELMO_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub struct RunResult {
+    pub report: EvalReport,
+    pub epoch_secs: f64,
+    pub mean_loss: f64,
+    pub overflow_steps: usize,
+    pub trainer_chunks: usize,
+}
+
+/// Train `epochs` on a profile with a precision policy, return final eval.
+pub fn run_training(
+    rt: &mut Runtime,
+    ds: &Dataset,
+    precision: Precision,
+    chunk: usize,
+    epochs: usize,
+    eval_rows: usize,
+) -> anyhow::Result<RunResult> {
+    let cfg = TrainConfig {
+        precision,
+        chunk_size: chunk,
+        epochs,
+        dropout_emb: 0.3,
+        ..TrainConfig::default()
+    };
+    run_training_cfg(rt, ds, cfg, eval_rows)
+}
+
+pub fn run_training_cfg(
+    rt: &mut Runtime,
+    ds: &Dataset,
+    cfg: TrainConfig,
+    eval_rows: usize,
+) -> anyhow::Result<RunResult> {
+    let epochs = cfg.epochs;
+    let mut tr = Trainer::new(rt, ds, cfg, ART)?;
+    tr.warmup(rt)?; // compile executables outside the timed epochs
+    let mut secs = 0.0;
+    let mut loss = 0.0;
+    let mut oflow = 0;
+    for epoch in 0..epochs {
+        let st = tr.run_epoch(rt, ds, epoch)?;
+        secs += st.secs;
+        loss = st.mean_loss;
+        oflow += st.overflow_steps;
+    }
+    let report = evaluate(rt, &tr, ds, eval_rows)?;
+    Ok(RunResult {
+        report,
+        epoch_secs: secs / epochs.max(1) as f64,
+        mean_loss: loss,
+        overflow_steps: oflow,
+        trainer_chunks: tr.chunks(),
+    })
+}
+
+/// Paper-scale peak memory (GiB) for a dataset profile + method.
+pub fn paper_mem_gib(prof: &Profile, method: Method, chunks: u64) -> f64 {
+    memmodel::peak_gib(method, &MemParams::from_profile(prof, chunks))
+}
+
+pub fn method_of(p: Precision) -> Method {
+    match p {
+        Precision::Renee => Method::Renee,
+        Precision::Bf16 => Method::ElmoBf16,
+        Precision::Fp8 | Precision::Fp8HeadKahan => Method::ElmoFp8,
+        Precision::Fp32 => Method::Fp32,
+        Precision::Sampled => Method::Sampled,
+    }
+}
+
+pub fn dataset(name: &str, seed: u64) -> Dataset {
+    data::generate(&data::profile(name).expect("profile"), seed)
+}
+
+pub fn fmt_p(r: &EvalReport) -> [String; 3] {
+    [
+        format!("{:.2}", r.p[0]),
+        format!("{:.2}", r.p[1]),
+        format!("{:.2}", r.p[2]),
+    ]
+}
+
+pub fn fmt_psp(r: &EvalReport) -> [String; 3] {
+    [
+        format!("{:.2}", r.psp[0]),
+        format!("{:.2}", r.psp[1]),
+        format!("{:.2}", r.psp[2]),
+    ]
+}
+
+pub fn mmss(secs: f64) -> String {
+    elmo::util::mmss(secs)
+}
+
+pub fn skip_banner(name: &str) -> bool {
+    if !have_artifacts() {
+        println!("{name}: artifacts missing — run `make artifacts` first");
+        return true;
+    }
+    false
+}

@@ -1,0 +1,34 @@
+//! Figure 1: memory trace of Renee at 3M labels, batch 128 — the
+//! allocation timeline whose peak motivates the whole paper.
+
+mod common;
+
+use elmo::memmodel::{schedule, MemParams, Method, GIB};
+use elmo::util::{gib, print_table};
+
+fn main() {
+    let p = MemParams::paper_example();
+    let tr = schedule(Method::Renee, &p);
+    println!("== Figure 1: Renee memory trace (3M labels, b=128, BERT-base) ==\n");
+    let rows: Vec<Vec<String>> = tr
+        .series()
+        .into_iter()
+        .map(|(ev, live)| {
+            let (phase, tensor) = ev.split_once(':').unwrap();
+            let bar_len = (live as f64 / GIB / 2.0) as usize;
+            vec![
+                phase.to_string(),
+                tensor.to_string(),
+                gib(live),
+                "#".repeat(bar_len),
+            ]
+        })
+        .collect();
+    print_table(&["phase", "event", "live GiB", "trace"], &rows);
+    println!("\npeak: {} GiB   (paper: ~39.7 GiB; Sec 4.4 init 17.9 GiB)", gib(tr.peak()));
+    println!(
+        "observations reproduced: (1) the FP16 weight copy persists the whole\n\
+         step; (2) the gradient is computed in 16-bit then UPCAST to 32-bit;\n\
+         (3) all transients stack on top of live activations at one point."
+    );
+}

@@ -1,0 +1,69 @@
+//! Figure 2a: P@1 over the (exponent, mantissa) grid for classifier-weight
+//! storage, with round-to-nearest-even below the diagonal and stochastic
+//! rounding above it.
+//!
+//! Protocol: train with exact fp32 updates, then snap the classifier onto
+//! the (E, M) grid after every step — exactly "storing the weights in that
+//! format" (the host softfloat is bit-identical to the Pallas quantizer;
+//! see rust/tests/integration.rs::quant_sweep_artifact_matches_rust_softfloat).
+//!
+//! Expected shape (paper): >=3 exponent bits needed; RNE degrades below
+//! ~6 mantissa bits; SR recovers the loss down to very few bits.
+
+mod common;
+
+use common::*;
+use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::data::Batcher;
+use elmo::runtime::Runtime;
+use elmo::util::print_table;
+
+fn main() -> anyhow::Result<()> {
+    if skip_banner("fig2a_bitwidth_grid") {
+        return Ok(());
+    }
+    println!("== Figure 2a: P@1 across (E, M) classifier-weight formats ==\n");
+    let ds = dataset("lf-amazontitles131k", 0);
+    let mut rt = Runtime::new(ART)?;
+    let epochs = epochs_or(2);
+    let e_grid = [2u32, 3, 4, 5];
+    let m_grid = [1u32, 2, 3, 5, 7];
+
+    let mut table: Vec<Vec<String>> = Vec::new();
+    for &sr in &[false, true] {
+        for &e in &e_grid {
+            let mut row = vec![format!("E{e} {}", if sr { "SR" } else { "RNE" })];
+            for &m in &m_grid {
+                let cfg = TrainConfig {
+                    precision: Precision::Fp32,
+                    chunk_size: 512,
+                    epochs,
+                    dropout_emb: 0.3,
+                    ..TrainConfig::default()
+                };
+                let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
+                for epoch in 0..epochs {
+                    let mut b = Batcher::new(ds.train.n, tr.batch, epoch as u64);
+                    while let Some((rows, _)) = b.next_batch() {
+                        tr.step(&mut rt, &ds, &rows)?;
+                        tr.quantize_classifier(e, m, sr);
+                    }
+                }
+                let rep = evaluate(&mut rt, &tr, &ds, 256)?;
+                row.push(format!("{:.1}", rep.p[0]));
+            }
+            table.push(row);
+            println!("  done E{e} sr={sr}");
+        }
+    }
+    let mut header = vec!["format".to_string()];
+    header.extend(m_grid.iter().map(|m| format!("M{m}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    println!();
+    print_table(&header_refs, &table);
+    println!(
+        "\npaper shape to check: E2 rows collapse (range clipping); with RNE,\n\
+         P@1 drops as M shrinks; the SR rows stay near the full-precision value."
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Figure 2b: exponent histogram of classifier logit-gradients vs the
+//! representable ranges of FP8 E5M2 ([-16, 15] incl. subnormals) and
+//! E4M3 ([-9, 8]) — the measurement that justifies keeping gradients in
+//! BF16 (paper Sec 4.3).
+
+mod common;
+
+use common::*;
+use elmo::coordinator::eval::diagnostics_hist;
+use elmo::coordinator::{Precision, TrainConfig, Trainer};
+use elmo::data::Batcher;
+use elmo::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if skip_banner("fig2b_grad_hist") {
+        return Ok(());
+    }
+    println!("== Figure 2b: classifier gradient exponent histogram ==\n");
+    let ds = dataset("lf-amazontitles131k", 0);
+    let mut rt = Runtime::new(ART)?;
+    let cfg = TrainConfig {
+        precision: Precision::Bf16,
+        chunk_size: 512,
+        epochs: 1,
+        dropout_emb: 0.3,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
+    // short warmup so gradients are taken mid-training like the paper
+    let mut b = Batcher::new(ds.train.n, tr.batch, 0);
+    for _ in 0..24 {
+        let (rows, _) = b.next_batch().unwrap();
+        tr.step(&mut rt, &ds, &rows)?;
+    }
+    let (hg, _, _) = diagnostics_hist(&mut rt, &tr, &ds)?;
+    let lo = rt.config().hist_lo;
+    let total: f32 = hg.iter().sum();
+
+    println!("exp2 bucket | count | share");
+    let mut below_e5m2 = 0.0f32;
+    let mut below_e4m3 = 0.0f32;
+    for (i, &c) in hg.iter().enumerate() {
+        let e = lo + i as i32;
+        if c > 0.0 {
+            let share = c / total * 100.0;
+            let bar = "#".repeat((share / 2.0) as usize);
+            println!("2^{e:>4}      | {c:>7} | {share:5.1}% {bar}");
+        }
+        // E5M2 subnormal floor 2^-16, E4M3 floor 2^-9: gradients below
+        // these round to zero in the respective fp8 format
+        if e < -16 {
+            below_e5m2 += c;
+        }
+        if e < -9 {
+            below_e4m3 += c;
+        }
+    }
+    println!(
+        "\ngradients lost to zero in E5M2 (exp < -16): {:.1}%  (paper: ~20%)",
+        below_e5m2 / total * 100.0
+    );
+    println!(
+        "gradients lost to zero in E4M3 (exp <  -9): {:.1}%  (paper: ~90%)",
+        below_e4m3 / total * 100.0
+    );
+    println!("=> gradients must stay BF16; FP8 is for weights/inputs only (Sec 4.3).");
+    Ok(())
+}

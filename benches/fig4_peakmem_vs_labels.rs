@@ -1,0 +1,45 @@
+//! Figure 4: peak GPU memory vs label count (131K -> 18M) for Renee vs
+//! ELMO BF16/FP8.  Beyond 8.6M the paper appends random labels — here the
+//! label count is simply a model parameter.
+
+mod common;
+
+use elmo::memmodel::{peak_gib, MemParams, Method};
+use elmo::util::print_table;
+
+fn main() {
+    println!("== Figure 4: peak memory vs label size (BERT-base, b=128, k=8) ==\n");
+    let sizes: &[(u64, &str)] = &[
+        (131_073, "131K"),
+        (501_070, "500K"),
+        (670_091, "670K"),
+        (1_305_265, "1.3M"),
+        (2_812_281, "3M"),
+        (8_623_847, "8.6M"),
+        (13_000_000, "13M"),
+        (18_000_000, "18M"),
+    ];
+    let mut rows = Vec::new();
+    for &(labels, tag) in sizes {
+        let mut p = MemParams::paper_example();
+        p.labels = labels;
+        let renee = peak_gib(Method::Renee, &p);
+        let bf16 = peak_gib(Method::ElmoBf16, &p);
+        let fp8 = peak_gib(Method::ElmoFp8, &p);
+        rows.push(vec![
+            tag.to_string(),
+            format!("{renee:.1}"),
+            format!("{bf16:.1}"),
+            format!("{fp8:.1}"),
+            format!("{:.1}x", renee / fp8),
+        ]);
+    }
+    print_table(
+        &["labels", "Renee GiB", "ELMO BF16 GiB", "ELMO FP8 GiB", "Renee/FP8"],
+        &rows,
+    );
+    println!(
+        "\npaper reference ratios: ~6x at 3M, ~11x at 8.6M, ~13x at 18M\n\
+         (the ratio grows because Renee's per-label cost is 20 B vs FP8's ~1.3 B)."
+    );
+}

@@ -1,0 +1,148 @@
+//! Perf harness (EXPERIMENTS.md §Perf): times every executable on the hot
+//! path individually, then the composed step, and prints a breakdown.
+//! This is the measurement side of the L3 optimization loop.
+
+use elmo::coordinator::{Precision, TrainConfig, Trainer};
+use elmo::data;
+use elmo::runtime::{Arg, Runtime};
+use elmo::util::{bench_secs, print_table, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let art = "artifacts";
+    if elmo::coordinator::trainer::require_artifacts(art).is_err() {
+        println!("perf_hotpath: artifacts missing, skipping");
+        return Ok(());
+    }
+    let mut rt = Runtime::new(art)?;
+    let mc = rt.config().clone();
+    let (b, d, s, p) = (mc.batch, mc.d, mc.seq, mc.psize);
+    let mut rng = Rng::new(1);
+
+    let toks: Vec<i32> = (0..b * s).map(|_| 1 + rng.below(mc.vocab - 1) as i32).collect();
+    let packed: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 0.02)).collect();
+    let zeros = vec![0.0f32; p];
+    let emb: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    // encoder fwd/bwd per precision
+    for prec in ["fp32", "bf16", "fp8"] {
+        let name = format!("enc_fwd_{prec}");
+        let secs = {
+            let rt = &mut rt;
+            bench_secs(1.0, 50, || {
+                rt.exec(
+                    &name,
+                    &[Arg::F32(&packed), Arg::I32(&toks), Arg::I32(&[1]), Arg::F32(&[0.0])],
+                )
+                .unwrap();
+            })
+        };
+        rows.push(vec![name, format!("{:.2}", secs * 1e3), format!("{:.1}/s", 1.0 / secs)]);
+        let name = format!("enc_bwd_{prec}");
+        let secs = {
+            let rt = &mut rt;
+            bench_secs(1.5, 30, || {
+                rt.exec(
+                    &name,
+                    &[
+                        Arg::F32(&packed),
+                        Arg::F32(&zeros),
+                        Arg::F32(&zeros),
+                        Arg::F32(&zeros),
+                        Arg::I32(&toks),
+                        Arg::F32(&emb),
+                        Arg::F32(&[1e-3]),
+                        Arg::F32(&[0.01]),
+                        Arg::F32(&[1.0]),
+                        Arg::I32(&[1]),
+                        Arg::F32(&[0.0]),
+                    ],
+                )
+                .unwrap();
+            })
+        };
+        rows.push(vec![name, format!("{:.2}", secs * 1e3), format!("{:.1}/s", 1.0 / secs)]);
+    }
+
+    // classifier chunk kernels across sizes
+    for (cfg, lc) in [
+        ("fp32", 1024usize),
+        ("bf16", 256),
+        ("bf16", 1024),
+        ("bf16", 4096),
+        ("fp8", 1024),
+    ] {
+        let name = format!("cls_chunk_{cfg}_{lc}");
+        let w: Vec<f32> = (0..lc * d).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let y = vec![0.0f32; b * lc];
+        let secs = {
+            let rt = &mut rt;
+            bench_secs(1.0, 50, || {
+                rt.exec(
+                    &name,
+                    &[
+                        Arg::F32(&w),
+                        Arg::F32(&emb),
+                        Arg::F32(&y),
+                        Arg::F32(&[0.05]),
+                        Arg::I32(&[3]),
+                        Arg::F32(&[0.0]),
+                    ],
+                )
+                .unwrap();
+            })
+        };
+        rows.push(vec![
+            name,
+            format!("{:.2}", secs * 1e3),
+            format!("{:.1} Mlabel/s", (b * lc) as f64 / secs / 1e6),
+        ]);
+    }
+
+    // scoring
+    {
+        let lc = 1024;
+        let w: Vec<f32> = (0..lc * d).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let secs = {
+            let rt = &mut rt;
+            bench_secs(1.0, 100, || {
+                rt.exec("cls_fwd_1024", &[Arg::F32(&w), Arg::F32(&emb)])
+                    .unwrap();
+            })
+        };
+        rows.push(vec!["cls_fwd_1024".into(), format!("{:.2}", secs * 1e3), format!("{:.1}/s", 1.0 / secs)]);
+    }
+
+    println!("\n== executable-level hot path ==");
+    print_table(&["executable", "ms/call", "rate"], &rows);
+
+    // composed training step on the quickstart profile
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 1);
+    for (prec, chunk) in [
+        (Precision::Bf16, 512usize),
+        (Precision::Fp8, 512),
+        (Precision::Fp32, 512),
+        (Precision::Renee, 1024),
+    ] {
+        let cfg = TrainConfig { precision: prec, chunk_size: chunk, ..TrainConfig::default() };
+        let mut tr = Trainer::new(&rt, &ds, cfg, art)?;
+        let rows_b: Vec<u32> = (0..tr.batch as u32).collect();
+        let secs = {
+            let rt = &mut rt;
+            let ds = &ds;
+            bench_secs(2.0, 20, || {
+                tr.step(rt, ds, &rows_b).unwrap();
+            })
+        };
+        println!(
+            "step[{:22}] {:6.1} ms  ({:.2} steps/s, {:.0} labels/s)",
+            prec.label(),
+            secs * 1e3,
+            1.0 / secs,
+            (prof.labels * tr.batch) as f64 / secs
+        );
+    }
+    Ok(())
+}

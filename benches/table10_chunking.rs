@@ -1,0 +1,63 @@
+//! Table 10 (Appendix F): chunk size vs epoch latency vs peak memory on
+//! Amazon-3M with BF16 — chunking cuts transient memory by k with a flat
+//! (even slightly improving) latency until k gets extreme.
+
+mod common;
+
+use common::*;
+use elmo::coordinator::Precision;
+use elmo::data;
+use elmo::memmodel::{peak_gib, MemParams, Method};
+use elmo::runtime::Runtime;
+use elmo::util::print_table;
+
+fn main() -> anyhow::Result<()> {
+    if skip_banner("table10_chunking") {
+        return Ok(());
+    }
+    println!("== Table 10: chunk count vs latency vs peak memory (Amazon-3M, BF16) ==\n");
+    let prof = data::profile("amazon3m").unwrap(); // L=8192 scaled
+    let ds = data::generate(&prof, 0);
+    let mut rt = Runtime::new(ART)?;
+    let epochs = epochs_or(1);
+    // paper rows (chunk count k): epoch time, peak GiB
+    let paper: &[(u64, &str, f64)] = &[
+        (1, "13:22", 14.74),
+        (2, "12:20", 14.40),
+        (4, "12:12", 12.22),
+        (8, "11:09", 11.13),
+        (16, "11:23", 10.59),
+        (32, "12:39", 10.32),
+        (64, "14:19", 10.20),
+        (128, "19:44", 10.20),
+    ];
+    let l = prof.labels; // 8192
+    let mut rows = Vec::new();
+    for &(k, ptime, pmem) in paper {
+        let lc = (l as u64 / k) as usize;
+        let res = run_training(&mut rt, &ds, Precision::Bf16, lc, epochs, 256)?;
+        let mem = peak_gib(Method::ElmoBf16, &MemParams::from_profile(&prof, k));
+        rows.push(vec![
+            k.to_string(),
+            lc.to_string(),
+            mmss(res.epoch_secs),
+            format!("{mem:.2}"),
+            format!("{:.2}", res.report.p[0]),
+            format!("{ptime} / {pmem:.2}"),
+        ]);
+        println!("  k={k} done");
+    }
+    print_table(
+        &[
+            "chunks k", "Lc (scaled)", "epoch (ours)", "peak GiB (model@3M)",
+            "P@1", "paper epoch / GiB",
+        ],
+        &rows,
+    );
+    println!(
+        "\nshape checks: peak memory falls monotonically with k and flattens\n\
+         (classifier weights dominate once transients shrink); latency is flat\n\
+         for moderate k and degrades at k >= 64 (per-chunk overhead)."
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Mini Fig-2a: train the same classifier with weights stored in different
+//! (E, M) formats, with and without stochastic rounding, and print the P@1
+//! grid.  The full grid is `cargo bench --bench fig2a_bitwidth_grid`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example precision_sweep
+//! ```
+
+use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::data::{self, Batcher};
+use elmo::runtime::Runtime;
+use elmo::util::print_table;
+
+fn main() -> anyhow::Result<()> {
+    let art = "artifacts";
+    elmo::coordinator::trainer::require_artifacts(art)?;
+    let profile = data::profile("quickstart").unwrap();
+    let ds = data::generate(&profile, 3);
+    let mut rt = Runtime::new(art)?;
+
+    let mut rows = Vec::new();
+    for (e, m) in [(8u32, 7u32), (4, 3), (4, 2), (3, 2)] {
+        for sr in [false, true] {
+            let cfg = TrainConfig {
+                precision: Precision::Fp32, // fp32 step, host (E,M) storage
+                chunk_size: 512,
+                epochs: 2,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(&rt, &ds, cfg, art)?;
+            for epoch in 0..2usize {
+                let mut b = Batcher::new(ds.train.n, tr.batch, epoch as u64);
+                while let Some((r, _)) = b.next_batch() {
+                    tr.step(&mut rt, &ds, &r)?;
+                    // store the classifier in (E, M): quantize after every
+                    // step, exactly like keeping the weights in that format
+                    tr.quantize_classifier(e, m, sr);
+                }
+            }
+            let rep = evaluate(&mut rt, &tr, &ds, 192)?;
+            rows.push(vec![
+                format!("E{e}M{m}"),
+                if sr { "SR" } else { "RNE" }.to_string(),
+                format!("{:.2}", rep.p[0]),
+                format!("{:.2}", rep.p[2]),
+            ]);
+            println!(
+                "E{e}M{m} {}: P@1 {:.2}",
+                if sr { "SR " } else { "RNE" },
+                rep.p[0]
+            );
+        }
+    }
+    println!("\nsummary (expect: SR recovers low-mantissa accuracy — Fig 2a):");
+    print_table(&["format", "rounding", "P@1", "P@5"], &rows);
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): trains the full
+//! three-layer stack — rust coordinator -> AOT jax encoder -> Pallas fused
+//! classifier kernel — on the Amazon-3M-scaled workload for several
+//! hundred steps, logging the loss curve, then evaluates P@k/PSP@k and
+//! reports paper-scale memory from the model.
+//!
+//! This is the "all layers compose" proof: Python never runs here.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_e2e [profile] [epochs]
+//! ```
+
+use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::data::{self, Batcher};
+use elmo::memmodel::{self, MemParams, Method};
+use elmo::runtime::Runtime;
+use elmo::util::gib;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let profile_name = args.first().map(|s| s.as_str()).unwrap_or("amazon3m");
+    let epochs: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(3);
+
+    let art = "artifacts";
+    elmo::coordinator::trainer::require_artifacts(art)?;
+    let profile = data::profile(profile_name).expect("unknown profile");
+    let ds = data::generate(&profile, 7);
+    let (n, l, nt, lbar, lhat) = ds.stats();
+    println!("# end-to-end run: {} (paper: {})", profile.name, profile.paper_name);
+    println!("# N={n} L={l} N'={nt} Lbar={lbar:.2} Lhat={lhat:.2}");
+
+    let mut rt = Runtime::new(art)?;
+    let cfg = TrainConfig {
+        precision: Precision::Bf16,
+        chunk_size: 1024,
+        epochs,
+        dropout_emb: 0.4,
+        lr_cls: 0.05,
+        lr_enc: 1e-3,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), art)?;
+    println!("# precision={} chunks={} steps/epoch={}",
+        cfg.precision.label(), tr.chunks(), ds.train.n / tr.batch);
+
+    // loss curve, logged every 8 steps
+    let t0 = std::time::Instant::now();
+    let mut total_steps = 0u64;
+    for epoch in 0..epochs {
+        let mut batcher = Batcher::new(ds.train.n, tr.batch, epoch as u64);
+        let mut window = Vec::new();
+        while let Some((rows, _)) = batcher.next_batch() {
+            let (loss, _) = tr.step(&mut rt, &ds, &rows)?;
+            window.push(loss);
+            total_steps += 1;
+            if window.len() == 8 {
+                let mean: f64 = window.iter().sum::<f64>() / window.len() as f64;
+                println!(
+                    "step {:>5}  loss {:.6}  ({:.2} steps/s)",
+                    total_steps,
+                    mean,
+                    total_steps as f64 / t0.elapsed().as_secs_f64()
+                );
+                window.clear();
+            }
+        }
+        let rep = evaluate(&mut rt, &tr, &ds, 256)?;
+        println!("# epoch {epoch} eval: {}", rep.summary());
+    }
+
+    let rep = evaluate(&mut rt, &tr, &ds, 0)?;
+    println!("# final eval ({} rows): {}", rep.n, rep.summary());
+
+    // paper-scale memory picture for this dataset
+    if profile.paper_labels > 0 {
+        println!("# paper-scale peak memory (memory model, {} labels):", profile.paper_labels);
+        let mp = MemParams::from_profile(&profile, tr.chunks() as u64);
+        for m in [Method::Renee, Method::ElmoBf16, Method::ElmoFp8] {
+            println!(
+                "#   {:<24} {} GiB",
+                m.label(),
+                gib(memmodel::schedule(m, &mp).peak())
+            );
+        }
+    }
+    println!("train_e2e OK ({} steps, {:.1}s)", total_steps, t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,244 @@
+"""AOT compile path: lower every L2/L1 function to HLO *text* artifacts.
+
+Python runs exactly once (`make artifacts`); afterwards the rust binary is
+self-contained.  Interchange is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Besides the .hlo.txt modules this writes:
+  manifest.txt       artifact registry the rust runtime parses (name, file,
+                     typed input/output shapes) + the global model config
+  enc_init_fp32.bin  initial packed encoder params (raw little-endian f32)
+  enc_init_bf16.bin  same, snapped to the BF16 grid (bf16/fp8 configs)
+  golden_*.txt       cross-language golden vectors: the rust `numerics`
+                     module must reproduce these bit-exactly
+"""
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .formats import BF16, E4M3, E5M2, FP16, hash_uniform, quantize_rne, quantize_sr
+from .kernels.quantize import quantize_sweep
+from .kernels.xmc_update import (
+    renee_chunk_update,
+    xmc_chunk_update,
+    xmc_chunk_update_kahan,
+)
+
+CFG = model.CFG
+B, D, S = CFG.batch, CFG.d, CFG.seq
+P = model.packed_size(CFG)
+
+# label-chunk sizes lowered per classifier config.  bf16 gets the full sweep
+# for the Table 10 chunking study; the others get the sizes the experiment
+# harness actually uses.
+CLS_SIZES = {
+    "fp32": [512, 1024, 2048],
+    "bf16": [64, 128, 256, 512, 1024, 2048, 4096, 8192],
+    "fp8": [512, 1024, 2048],
+}
+KAHAN_SIZES = [512]
+RENEE_SIZES = [1024, 2048, 8192]
+SCORE_SIZES = [1024]
+QUANT_N = 131072  # 2048 labels x 64 dims: one Fig-2a classifier
+ENC_PRECS = ["fp32", "bf16", "fp8"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _dims(shape):
+    return "x".join(str(d) for d in shape) if shape else "1"
+
+
+class Registry:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.lines = [
+            f"config vocab={CFG.vocab} d={D} seq={S} layers={CFG.layers} "
+            f"heads={CFG.heads} ffn={CFG.ffn} batch={B} psize={P} "
+            f"hist_bins={model.HIST_BINS} hist_lo={model.HIST_LO}"
+        ]
+
+    def lower(self, name, fn, in_specs, in_names, out_names):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        self.lines.append(f"artifact name={name} file={name}.hlo.txt")
+        for n, spec in zip(in_names, in_specs):
+            ty = "i32" if spec.dtype == jnp.int32 else "f32"
+            self.lines.append(f"in {n} {ty} {_dims(spec.shape)}")
+        out_specs = jax.eval_shape(fn, *in_specs)
+        for n, spec in zip(out_names, out_specs):
+            ty = "i32" if spec.dtype == jnp.int32 else "f32"
+            self.lines.append(f"out {n} {ty} {_dims(spec.shape)}")
+        print(f"  {name}: {len(text)} chars", flush=True)
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def lower_all(out_dir):
+    reg = Registry(out_dir)
+
+    # ---- encoder forward / backward per precision ----
+    for prec in ENC_PRECS:
+        reg.lower(
+            f"enc_fwd_{prec}",
+            lambda pk, tok, seed, p, _prec=prec: (
+                model.encoder_fwd(pk, tok, seed, p, CFG, _prec),
+            ),
+            [f32(P), i32(B, S), i32(1), f32(1)],
+            ["packed", "tokens", "seed", "dropout_p"],
+            ["emb"],
+        )
+        reg.lower(
+            f"enc_bwd_{prec}",
+            lambda pk, m, v, c, tok, eg, lr, wd, st, seed, p, _prec=prec:
+                model.encoder_bwd(pk, m, v, c, tok, eg, lr, wd, st, seed, p,
+                                  CFG, _prec),
+            [f32(P), f32(P), f32(P), f32(P), i32(B, S), f32(B, D),
+             f32(1), f32(1), f32(1), i32(1), f32(1)],
+            ["packed", "m", "v", "c", "tokens", "emb_grad", "lr", "wd",
+             "step", "seed", "dropout_p"],
+            ["packed", "m", "v", "c"],
+        )
+
+    # ---- fused classifier chunk updates (Algorithm 1) ----
+    for cfg, sizes in CLS_SIZES.items():
+        for lc in sizes:
+            reg.lower(
+                f"cls_chunk_{cfg}_{lc}",
+                lambda w, x, y, lr, seed, p, _cfg=cfg:
+                    xmc_chunk_update(w, x, y, lr, seed, p, cfg=_cfg),
+                [f32(lc, D), f32(B, D), f32(B, lc), f32(1), i32(1), f32(1)],
+                ["w", "x", "y", "lr", "seed", "dropout_p"],
+                ["w", "x_grad", "loss", "gmax"],
+            )
+    for lc in KAHAN_SIZES:
+        reg.lower(
+            f"cls_kahan_{lc}",
+            lambda w, c, x, y, lr, seed, p:
+                xmc_chunk_update_kahan(w, c, x, y, lr, seed, p),
+            [f32(lc, D), f32(lc, D), f32(B, D), f32(B, lc), f32(1), i32(1),
+             f32(1)],
+            ["w", "c", "x", "y", "lr", "seed", "dropout_p"],
+            ["w", "c", "x_grad", "loss", "gmax"],
+        )
+    for lc in RENEE_SIZES:
+        reg.lower(
+            f"cls_renee_{lc}",
+            lambda w, m, x, y, lr, mu, sc:
+                renee_chunk_update(w, m, x, y, lr, mu, sc),
+            [f32(lc, D), f32(lc, D), f32(B, D), f32(B, lc), f32(1), f32(1),
+             f32(1)],
+            ["w", "mom", "x", "y", "lr", "momentum", "loss_scale"],
+            ["w", "mom", "x_grad", "loss", "oflow"],
+        )
+
+    # ---- scoring / diagnostics / quantizer ----
+    for lc in SCORE_SIZES:
+        reg.lower(
+            f"cls_fwd_{lc}",
+            lambda w, x: (x @ w.T,),
+            [f32(lc, D), f32(B, D)],
+            ["w", "x"],
+            ["logits"],
+        )
+    reg.lower(
+        "grad_hist_2048",
+        lambda w, x, y: model.grad_hist(w, x, y),
+        [f32(2048, D), f32(B, D), f32(B, 2048)],
+        ["w", "x", "y"],
+        ["hist_grad", "hist_w", "hist_x"],
+    )
+    reg.lower(
+        f"quant_sweep_{QUANT_N}",
+        lambda v, e, m, seed, mode: (quantize_sweep(v, e, m, seed, mode),),
+        [f32(QUANT_N), f32(1), f32(1), i32(1), f32(1)],
+        ["v", "e_bits", "m_bits", "seed", "mode"],
+        ["q"],
+    )
+    reg.finish()
+
+
+def write_inits(out_dir):
+    model.init_packed(CFG, 0).tofile(os.path.join(out_dir, "enc_init_fp32.bin"))
+    model.init_packed(CFG, 0, fmt=BF16).tofile(
+        os.path.join(out_dir, "enc_init_bf16.bin")
+    )
+
+
+def write_golden(out_dir):
+    """Golden vectors the rust softfloat must match bit-exactly: columns are
+    input, rne per format, sr per format (seed 1234, element index = row)."""
+    rng = np.random.default_rng(99)
+    v = np.concatenate([
+        rng.normal(0, 1, 200), rng.normal(0, 1e-4, 100),
+        rng.normal(0, 1e4, 100), rng.uniform(-500, 500, 100),
+        np.array([0.0, 1.0, -1.0, 0.5, 448.0, 449.0, -448.0, 65504.0,
+                  65505.0, 2.0**-10, -(2.0**-10), 3e38, 1e-45]),
+    ]).astype(np.float32)
+    seed = 1234
+    idx = jnp.arange(v.size, dtype=jnp.uint32)
+    u = hash_uniform(idx, jnp.uint32(seed))
+    fmts = [BF16, FP16, E4M3, E5M2]
+    cols = [v]
+    for f in fmts:
+        cols.append(np.asarray(quantize_rne(v, f)))
+    for f in fmts:
+        cols.append(np.asarray(quantize_sr(v, u, f)))
+    header = "# input " + " ".join(f"rne_{f.name}" for f in fmts) + " " + \
+             " ".join(f"sr_{f.name}" for f in fmts) + f" (sr seed={seed})"
+    with open(os.path.join(out_dir, "golden_quant.txt"), "w") as fh:
+        fh.write(header + "\n")
+        for row in zip(*cols):
+            # bit-exact interchange via hex of the f32 bit pattern
+            fh.write(" ".join(f"{np.float32(x).view(np.uint32):08x}"
+                              for x in row) + "\n")
+    # uniforms golden: rust hash RNG must match hash_uniform exactly
+    with open(os.path.join(out_dir, "golden_uniform.txt"), "w") as fh:
+        fh.write(f"# idx uniform_f32_bits (seed={seed})\n")
+        un = np.asarray(u)
+        for i in range(64):
+            fh.write(f"{i} {np.float32(un[i]).view(np.uint32):08x}\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    print(f"lowering to {args.out} (P={P}, b={B}, d={D})", flush=True)
+    write_inits(args.out)
+    write_golden(args.out)
+    lower_all(args.out)
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

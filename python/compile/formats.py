@@ -1,0 +1,216 @@
+"""Software emulation of low-precision floating-point formats (L1 substrate).
+
+The paper trains XMC classifiers in BF16 and FP8 E4M3 with stochastic
+rounding (SR) and no tensor scaling.  CPU PJRT has no fp8 kernels, so we
+emulate every format *value-faithfully*: tensors are carried in f32, but
+their values are constrained to the representable grid of the target format
+(same exponent range, same mantissa spacing, same saturation behaviour).
+
+The quantizer here is pure arithmetic (no bitcasts) so that it lowers
+cleanly both inside Pallas kernels (interpret=True) and in plain jax, and so
+that the Rust `numerics` module can reproduce it bit-exactly:
+
+    ulp(v) = 2^(max(floor(log2|v|), emin) - M)         # subnormal floor
+    RNE(v) = round_half_even(v / ulp) * ulp
+    SR(v)  = floor(v / ulp + u) * ulp,   u ~ U[0,1)
+    clamp to +-max_normal (saturating; E4M3 saturates at 448)
+
+The uniform u comes from an in-kernel counter-based hash RNG
+(`hash_uniform`), mirrored exactly by `rust/src/numerics/rng.rs`, so the
+whole pipeline is reproducible across languages.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FloatFormat:
+    """An IEEE-754-like binary format with E exponent and M mantissa bits."""
+
+    name: str
+    e_bits: int
+    m_bits: int
+    # Max finite value. E4M3 (fp8e4m3fn) gives up the top mantissa pattern
+    # for NaN, so its max is 1.75 * 2^8 = 448, not the IEEE-like 480.
+    max_value: float
+    # Smallest *normal* exponent (unbiased). ulp floors at 2^(emin - M),
+    # which yields exactly the format's subnormal grid.
+    emin: int
+
+    @property
+    def bytes(self) -> float:
+        return (1 + self.e_bits + self.m_bits) / 8.0
+
+
+def ieee_like(name: str, e_bits: int, m_bits: int) -> FloatFormat:
+    """Generic format used by the Fig 2a (E, M) sweep: IEEE-like semantics,
+    max = (2 - 2^-M) * 2^bias, bias = 2^(E-1) - 1."""
+    bias = 2 ** (e_bits - 1) - 1
+    max_value = float((2.0 - 2.0 ** (-m_bits)) * 2.0**bias)
+    return FloatFormat(name, e_bits, m_bits, max_value, 1 - bias)
+
+
+FP32 = FloatFormat("fp32", 8, 23, 3.4028234663852886e38, -126)
+BF16 = FloatFormat("bf16", 8, 7, 3.3895313892515355e38, -126)
+FP16 = FloatFormat("fp16", 5, 10, 65504.0, -14)
+# E4M3 as in fp8e4m3fn (Micikevicius et al. 2022): bias 7, max 448, no inf.
+E4M3 = FloatFormat("e4m3", 4, 3, 448.0, -6)
+# E5M2 follows IEEE semantics: bias 15, max 57344.
+E5M2 = FloatFormat("e5m2", 5, 2, 57344.0, -14)
+
+FORMATS = {f.name: f for f in (FP32, BF16, FP16, E4M3, E5M2)}
+
+
+# ---------------------------------------------------------------------------
+# counter-based hash RNG (SplitMix-style finalizer), mirrored in rust
+# ---------------------------------------------------------------------------
+
+def hash_u32(idx, seed):
+    """Map (element index, seed) -> pseudo-random uint32. idx/seed uint32."""
+    x = (idx * jnp.uint32(0x9E3779B9) + seed).astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = (x * jnp.uint32(0x21F0AAAD)).astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(15))
+    x = (x * jnp.uint32(0x735A2D97)).astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(15))
+    return x
+
+
+def hash_uniform(idx, seed):
+    """Uniform in [0, 1) with 24 bits of resolution (exact in f32)."""
+    return (hash_u32(idx, seed) >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / (1 << 24)
+    )
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+def exact_exp2(e):
+    """2^e for integer-valued f32 e in [-126, 127], EXACT (unlike jnp.exp2,
+    which computes exp(e*ln2) and can be off by an f32 ulp — fatal for grid
+    arithmetic).  Built from two bitcast-constructed normal powers of two.
+    Subnormal results are NOT supported: XLA CPU flushes subnormals to zero,
+    so callers clamp exponents to the normal range (see `_ulp`)."""
+    e = jnp.asarray(e, jnp.float32)
+    e1 = jnp.floor(e * 0.5)
+    e2 = e - e1
+
+    def pow2i(k):
+        bits = ((k + 127.0).astype(jnp.int32)) << 23
+        return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+    return pow2i(e1) * pow2i(e2)
+
+
+def _floor_log2(av):
+    """floor(log2(av)) for av > 0, robust to log2 rounding at powers of 2."""
+    e = jnp.floor(jnp.log2(av))
+    p = exact_exp2(e)
+    # correct possible off-by-one from log2 rounding
+    e = jnp.where(2.0 * p <= av, e + 1.0, e)
+    e = jnp.where(exact_exp2(e) > av, e - 1.0, e)
+    return e
+
+
+def _ulp(v, m_bits, emin):
+    av = jnp.abs(v)
+    e = _floor_log2(jnp.where(av > 0, av, 1.0))
+    e = jnp.maximum(e, jnp.float32(emin))  # subnormal range: fixed ulp
+    # Floor the ulp at 2^-126: XLA CPU flushes f32 subnormals, and no
+    # training-scale value gets near 1e-38 anyway (values below the floor
+    # quantize against a 2^-126 grid instead of the format's true subnormal
+    # tail — a deviation only for f32-subnormal inputs).
+    return exact_exp2(jnp.maximum(e - m_bits, -126.0))
+
+
+# Native-dtype fast path for RNE: casting f32 -> {bf16, f16, f8} rounds
+# half-to-even exactly like the grid arithmetic (asserted bit-for-bit by
+# test_formats.py::test_native_cast_equals_arithmetic), but lowers to a
+# single convert op instead of the log2/floor chain — a large HLO-size and
+# runtime win for the kernels (EXPERIMENTS.md §Perf L1/L2).
+_NATIVE_DTYPES = {
+    "bf16": jnp.bfloat16,
+    "fp16": jnp.float16,
+    "e4m3": jnp.float8_e4m3fn,
+    "e5m2": jnp.float8_e5m2,
+}
+
+
+def quantize_rne(v, fmt_or_m, emin=None, max_value=None):
+    """Round-to-nearest-even onto the format grid, saturating clamp."""
+    if isinstance(fmt_or_m, FloatFormat):
+        dt = _NATIVE_DTYPES.get(fmt_or_m.name)
+        if dt is not None:
+            v = jnp.asarray(v, jnp.float32)
+            # clamp first: the e4m3fn cast maps overflow to NaN, and we
+            # want saturation (paper Sec 4.3: no scaling, rely on E4M3's
+            # native range)
+            q = jnp.clip(v, -fmt_or_m.max_value, fmt_or_m.max_value)
+            q = q.astype(dt).astype(jnp.float32)
+            return jnp.where(v == 0, 0.0, q)
+        m, emin, max_value = fmt_or_m.m_bits, fmt_or_m.emin, fmt_or_m.max_value
+    else:
+        m = fmt_or_m
+    v = jnp.asarray(v, jnp.float32)
+    u = _ulp(v, jnp.float32(m), jnp.float32(emin))
+    q = jnp.round(v / u) * u  # jnp.round is round-half-even
+    q = jnp.clip(q, -max_value, max_value)
+    return jnp.where(v == 0, 0.0, q).astype(jnp.float32)
+
+
+def quantize_sr(v, rnd, fmt_or_m, emin=None, max_value=None):
+    """Stochastic rounding onto the format grid.
+
+    `rnd` is uniform [0,1) per element (from `hash_uniform`).  SR(x) is an
+    unbiased estimate of x, which prevents small SGD updates from being
+    cancelled by round-to-nearest (paper Sec. 3/4.1).
+    """
+    if isinstance(fmt_or_m, FloatFormat):
+        m, emin, max_value = fmt_or_m.m_bits, fmt_or_m.emin, fmt_or_m.max_value
+    else:
+        m = fmt_or_m
+    v = jnp.asarray(v, jnp.float32)
+    u = _ulp(v, jnp.float32(m), jnp.float32(emin))
+    q = jnp.floor(v / u + rnd) * u
+    q = jnp.clip(q, -max_value, max_value)
+    return jnp.where(v == 0, 0.0, q).astype(jnp.float32)
+
+
+def quantize_param(v, e_bits, m_bits, rnd=None):
+    """Runtime-parametric quantizer for the Fig 2a (E, M) sweep.
+
+    e_bits / m_bits are *traced scalars* (f32), so one lowering covers the
+    whole grid of formats.  IEEE-like semantics (see `ieee_like`).
+    """
+    e_bits = jnp.asarray(e_bits, jnp.float32)
+    m_bits = jnp.asarray(m_bits, jnp.float32)
+    bias = exact_exp2(e_bits - 1.0) - 1.0
+    max_value = (2.0 - exact_exp2(-m_bits)) * exact_exp2(bias)
+    emin = 1.0 - bias
+    v = jnp.asarray(v, jnp.float32)
+    u = _ulp(v, m_bits, emin)
+    if rnd is None:
+        q = jnp.round(v / u) * u
+    else:
+        q = jnp.floor(v / u + rnd) * u
+    q = jnp.clip(q, -max_value, max_value)
+    return jnp.where(v == 0, 0.0, q).astype(jnp.float32)
+
+
+def kahan_add(s, c, v, fmt):
+    """One Kahan-compensated accumulation step with quantized storage.
+
+    s: running sum on the `fmt` grid; c: compensation on the `fmt` grid;
+    v: f32 increment.  Returns (s', c') both on the grid.  Used for the
+    encoder's AdamW parameter update (paper Sec. 4.1: Kahan summation for
+    the encoder, SR for the classifier).
+    """
+    y = v - c
+    t = quantize_rne(s + y, fmt)
+    c_new = quantize_rne((t - s) - y, fmt)
+    return t, c_new

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: Kahan-compensated AdamW over the packed parameter vector.
+
+The paper (Sec. 4.1) keeps the *encoder* in pure BF16 and compensates
+round-to-nearest cancellation with Kahan summation (the optimi library's
+Kahan AdamW); the classifier uses SR instead.  This kernel is the encoder
+side: all four state vectors (params p, moments m/v, compensation c) live on
+the BF16 grid; the update itself is computed in f32 and folded into p via a
+Kahan add, so updates far below one BF16 ulp still accumulate.
+
+Packed layout: the whole encoder is a single flat [P] vector (see
+model.ParamSpec), which keeps both this kernel and the rust runtime simple —
+one buffer each for p/m/v/c instead of ~20 per-tensor buffers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import BF16, kahan_add, quantize_rne
+
+DEFAULT_BLOCK = 8192
+
+BETA1, BETA2, EPS = 0.9, 0.999, 1e-8
+
+
+def _kahan_adamw_kernel(
+    p_ref, m_ref, v_ref, c_ref, g_ref, lr_ref, wd_ref, step_ref,
+    pout_ref, mout_ref, vout_ref, cout_ref, *, use_kahan,
+):
+    p = p_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    c = c_ref[...]
+    g = g_ref[...]
+    lr = lr_ref[0]
+    wd = wd_ref[0]
+    step = step_ref[0]
+
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    v_new = BETA2 * v + (1.0 - BETA2) * g * g
+    bc1 = 1.0 - jnp.exp(step * jnp.log(jnp.float32(BETA1)))
+    bc2 = 1.0 - jnp.exp(step * jnp.log(jnp.float32(BETA2)))
+    upd = -lr * (m_new / bc1 / (jnp.sqrt(v_new / bc2) + EPS) + wd * p)
+
+    if use_kahan:
+        mout_ref[...] = quantize_rne(m_new, BF16)
+        vout_ref[...] = quantize_rne(v_new, BF16)
+        p_new, c_new = kahan_add(p, c, upd, BF16)
+        pout_ref[...] = p_new
+        cout_ref[...] = c_new
+    else:
+        mout_ref[...] = m_new
+        vout_ref[...] = v_new
+        pout_ref[...] = p + upd
+        cout_ref[...] = c
+
+
+def kahan_adamw(p, m, v, c, g, lr, wd, step, *, use_kahan=True,
+                block=DEFAULT_BLOCK):
+    """AdamW step over flat vectors [P]. lr/wd/step are shape-(1,) f32
+    (step as float: beta^step is computed via exp/log so it stays traced).
+    With use_kahan, state is stored on the BF16 grid with compensation;
+    otherwise this is plain f32 AdamW (the fp32 encoder baseline)."""
+    (n,) = p.shape
+    block = min(block, n)
+    # pad-free tiling: the packed vector is padded to a multiple of block
+    # by the model packer, so this assert is an invariant, not a caveat.
+    assert n % block == 0, f"P={n} not divisible by block={block}"
+    kernel = functools.partial(_kahan_adamw_kernel, use_kahan=use_kahan)
+    vec = lambda: pl.BlockSpec((block,), lambda i: (i,))
+    scl = lambda: pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[vec(), vec(), vec(), vec(), vec(), scl(), scl(), scl()],
+        out_specs=[vec(), vec(), vec(), vec()],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 4,
+        interpret=True,
+    )(p, m, v, c, g, lr, wd, step)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: runtime-parametric (E, M) quantizer for the Fig 2a
+bit-width study.
+
+One lowering covers the whole exponent x mantissa grid because e_bits and
+m_bits arrive as traced scalars; the coordinator sweeps them at run time
+without recompiling.  `mode` selects RNE (0) or stochastic rounding (1) —
+the diagonal split of Fig 2a.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import hash_uniform, quantize_param
+from .ref import SALT_SR
+
+DEFAULT_BLOCK = 4096
+
+
+def _quant_kernel(v_ref, e_ref, m_ref, seed_ref, mode_ref, out_ref, *, block):
+    i = pl.program_id(0)
+    v = v_ref[...]
+    e_bits = e_ref[0]
+    m_bits = m_ref[0]
+    seed_u = seed_ref[0].astype(jnp.uint32)
+    mode = mode_ref[0]
+
+    gidx = i.astype(jnp.uint32) * jnp.uint32(block) + jax.lax.broadcasted_iota(
+        jnp.uint32, (block,), 0
+    )
+    rnd = hash_uniform(gidx, seed_u + jnp.uint32(SALT_SR))
+    q_sr = quantize_param(v, e_bits, m_bits, rnd)
+    q_rne = quantize_param(v, e_bits, m_bits, None)
+    out_ref[...] = jnp.where(mode > 0, q_sr, q_rne)
+
+
+def quantize_sweep(v, e_bits, m_bits, seed, mode, *, block=DEFAULT_BLOCK):
+    """Quantize flat v [n] onto the IEEE-like (e_bits, m_bits) grid.
+    e_bits/m_bits/mode are shape-(1,) f32, seed shape-(1,) i32."""
+    (n,) = v.shape
+    block = min(block, n)
+    assert n % block == 0, f"n={n} not divisible by block={block}"
+    kernel = functools.partial(_quant_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(v, e_bits, m_bits, seed, mode)

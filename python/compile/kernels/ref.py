@@ -1,0 +1,207 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness reference).
+
+Each function here computes exactly what the corresponding fused kernel in
+`xmc_update.py` / `quantize.py` / `kahan_adamw.py` must produce, but in
+straight-line jnp with no tiling, so pytest can assert bit-level agreement
+(the emulated-format arithmetic is deterministic, including SR, because the
+uniforms come from the counter-based `hash_uniform`).
+"""
+
+import jax.numpy as jnp
+
+from ..formats import (
+    E4M3,
+    FP16,
+    hash_uniform,
+    kahan_add,
+    quantize_param,
+    quantize_rne,
+    quantize_sr,
+)
+
+
+def softplus(z):
+    """Numerically stable log(1 + exp(z))."""
+    return jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def bce_loss(logits, y):
+    """Binary cross-entropy summed over a chunk (paper Appendix B)."""
+    return jnp.sum(softplus(logits) - y * logits)
+
+
+def _elem_rnd(shape, seed, salt):
+    """Per-element uniforms for an array, matching the kernel's indexing:
+    global element index in row-major order, hashed with (seed + salt)."""
+    n = 1
+    for s in shape:
+        n *= s
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(shape)
+    return hash_uniform(idx, jnp.uint32(seed) + jnp.uint32(salt))
+
+
+# salts distinguish the independent random streams inside one kernel call
+SALT_SR = 0x5151
+SALT_DROP = 0xD0D0
+
+
+def dropconnect_mask(shape, seed, p):
+    """DropConnect mask on classifier weights (paper Appendix H): weights are
+    dropped inside the matmul, with inverted scaling 1/(1-p)."""
+    u = _elem_rnd(shape, seed, SALT_DROP)
+    keep = (u >= p).astype(jnp.float32)
+    return keep / jnp.maximum(1.0 - p, 1e-6)
+
+
+def xmc_chunk_update_ref(
+    w, x, y, lr, seed, dropout_p, *, weight_fmt, logit_fmt, fp8_inputs,
+):
+    """Oracle for the fused XMC classifier chunk update (paper Algorithm 1).
+
+    w: [Lc, d] classifier weights (values on weight_fmt grid)
+    x: [b, d] encoder embeddings
+    y: [b, Lc] 0/1 relevance
+    Returns (w_new, x_grad, loss, gmax).
+
+    Precision policy:
+      fp32:  weight_fmt=None, logit_fmt=None, fp8_inputs=False
+      bf16:  weight_fmt=BF16, logit_fmt=BF16, fp8_inputs=False
+      fp8:   weight_fmt=E4M3, logit_fmt=BF16, fp8_inputs=True
+             (FP8xFP8 matmul producing BF16 logits; gradients stay BF16 —
+              paper Sec. 4.3 / Fig 2b)
+    """
+    w = jnp.asarray(w, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+
+    xq = quantize_rne(x, E4M3) if fp8_inputs else x
+    wm = w * dropconnect_mask(w.shape, seed, dropout_p)
+    logits = xq @ wm.T
+    if logit_fmt is not None:
+        logits = quantize_rne(logits, logit_fmt)
+    g = jnp.float32(1.0) / (1.0 + jnp.exp(-logits)) - y
+    if logit_fmt is not None:
+        g = quantize_rne(g, logit_fmt)
+    loss = bce_loss(logits, y)
+    gmax = jnp.max(jnp.abs(g))
+    x_grad = g @ wm
+    if logit_fmt is not None:
+        x_grad = quantize_rne(x_grad, logit_fmt)
+    grad_w = g.T @ xq
+    upd = w - lr * grad_w
+    if weight_fmt is None:
+        w_new = upd
+    else:
+        rnd = _elem_rnd(w.shape, seed, SALT_SR)
+        w_new = quantize_sr(upd, rnd, weight_fmt)
+    return w_new, x_grad, loss.reshape(1), gmax.reshape(1)
+
+
+def xmc_chunk_update_kahan_ref(w, c, x, y, lr, seed, dropout_p):
+    """Oracle for the Kahan-compensated BF16 chunk update (Appendix D.2)."""
+    from ..formats import BF16, kahan_add
+
+    w = jnp.asarray(w, jnp.float32)
+    wm = w * dropconnect_mask(w.shape, seed, dropout_p)
+    logits = quantize_rne(x @ wm.T, BF16)
+    g = quantize_rne(1.0 / (1.0 + jnp.exp(-logits)) - y, BF16)
+    loss = bce_loss(logits, y)
+    gmax = jnp.max(jnp.abs(g))
+    x_grad = quantize_rne(g @ wm, BF16)
+    grad_w = g.T @ x
+    w_new, c_new = kahan_add(w, c, -lr * grad_w, BF16)
+    return w_new, c_new, x_grad, loss.reshape(1), gmax.reshape(1)
+
+
+def _fp16_noclamp(v):
+    """FP16 grid without saturation: overflow -> +-inf (hardware semantics)."""
+    q = quantize_rne(v, FP16.m_bits, FP16.emin, jnp.float32(jnp.inf))
+    return jnp.where(jnp.abs(q) > FP16.max_value, jnp.sign(q) * jnp.inf, q)
+
+
+def renee_chunk_update_ref(w, mom, x, y, lr, momentum, loss_scale, seed):
+    """Oracle for the Renee-style FP16-FP32 mixed-precision chunk update.
+
+    Master weights w stay f32; an ephemeral FP16 copy is used for matmuls;
+    the logit gradient is multiplied by loss_scale and kept on the FP16
+    grid, which is where overflow happens at large label counts (paper
+    Sec. 4.1 / Table 3).  FP16 here is *non-saturating*: values beyond
+    +-65504 become +-inf, exactly like hardware FP16, so the coordinator's
+    loss-scale manager can observe real overflows.
+    Returns (w_new, mom_new, x_grad_scaled, loss, oflow).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    x16 = _fp16_noclamp(x)
+    w16 = _fp16_noclamp(w)
+    logits = _fp16_noclamp(x16 @ w16.T)
+    g = (1.0 / (1.0 + jnp.exp(-logits)) - y) * loss_scale
+    g16 = _fp16_noclamp(g)
+    loss = bce_loss(logits, y)
+    # f32 accumulation over labels (hardware fp16 matmul accumulators are
+    # fp32); the STORED input gradient is fp16, so the final value — not
+    # the partial sums — is where large-L overflow appears.
+    x_grad = _fp16_noclamp(g16 @ w16)
+    grad16 = _fp16_noclamp(g16.T @ x16)
+    grad32 = grad16 / loss_scale  # Renee upcasts gradients to FP32
+    mom_new = momentum * mom + grad32
+    w_new = w - lr * mom_new
+    bad = jnp.any(~jnp.isfinite(grad16)) | jnp.any(~jnp.isfinite(x_grad))
+    oflow = jnp.where(bad, 1.0, 0.0)
+    return w_new, mom_new, x_grad, loss.reshape(1), oflow.reshape(1)
+
+
+def cls_fwd_ref(w, x):
+    """Scoring logits for evaluation: plain f32 matmul over grid values."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32).T
+
+
+def quantize_sweep_ref(v, e_bits, m_bits, seed, use_sr):
+    """Oracle for the runtime-parametric (E, M) quantizer (Fig 2a)."""
+    rnd = _elem_rnd(v.shape, seed, SALT_SR)
+    q_sr = quantize_param(v, e_bits, m_bits, rnd)
+    q_rne = quantize_param(v, e_bits, m_bits, None)
+    return jnp.where(use_sr > 0, q_sr, q_rne)
+
+
+def kahan_adamw_ref(p, m, v, c, grad, lr, wd, step, *, fmt,
+                    beta1=0.9, beta2=0.999, eps=1e-8):
+    """Oracle for the Kahan-AdamW packed-parameter update (paper Sec. 4.1:
+    the encoder optimizer uses Kahan summation to compensate BF16 rounding).
+
+    All of p, m, v, c are flat [P] vectors on the `fmt` grid (or plain f32
+    when fmt is None, in which case c is ignored and AdamW is standard).
+    """
+    p = jnp.asarray(p, jnp.float32)
+    grad = jnp.asarray(grad, jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * grad
+    v_new = beta2 * v + (1.0 - beta2) * grad * grad
+    # exp/log formulation matches the kernel bit-for-bit (jnp's ** differs
+    # from exp(step*log(beta)) in the last ulp, which the Kahan compensation
+    # term would amplify in relative terms)
+    step = jnp.asarray(step, jnp.float32)
+    bc1 = 1.0 - jnp.exp(step * jnp.log(jnp.float32(beta1)))
+    bc2 = 1.0 - jnp.exp(step * jnp.log(jnp.float32(beta2)))
+    upd = -lr * (m_new / bc1 / (jnp.sqrt(v_new / bc2) + eps) + wd * p)
+    if fmt is None:
+        return p + upd, m_new, v_new, c
+    m_q = quantize_rne(m_new, fmt)
+    v_q = quantize_rne(v_new, fmt)
+    p_new, c_new = kahan_add(p, c, upd, fmt)
+    return p_new, m_q, v_q, c_new
+
+
+def grad_hist_ref(w, x, y, nbins=64, lo=-40):
+    """Exponent histograms of (classifier gradients, weights, inputs), used
+    by Fig 2b / Fig 5: bin i counts elements with floor(log2|v|) == lo + i.
+    Zero elements land in the lowest bin by convention."""
+    logits = x @ w.T
+    g = 1.0 / (1.0 + jnp.exp(-logits)) - y
+
+    def hist(v):
+        av = jnp.abs(v).ravel()
+        e = jnp.floor(jnp.log2(jnp.where(av > 0, av, 1.0)))
+        e = jnp.where(av > 0, e, lo)
+        idx = jnp.clip(e - lo, 0, nbins - 1).astype(jnp.int32)
+        return jnp.zeros(nbins, jnp.float32).at[idx].add(1.0)
+
+    return hist(g), hist(w), hist(x)

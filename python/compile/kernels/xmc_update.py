@@ -1,0 +1,345 @@
+"""L1 Pallas kernel: the fused XMC classifier chunk update (Algorithm 1).
+
+This is the paper's compute hot-spot.  One `pallas_call` processes one label
+*chunk* W[Lc, d]; inside, a grid over label tiles of BL rows streams weight
+tiles through VMEM:
+
+    for each tile i (BL labels):
+        w   <- load W tile                      (HBM -> VMEM, BlockSpec)
+        wm  <- dropconnect(w)                   (Appendix H, in-kernel mask)
+        z   <- X @ wm.T                         (MXU matmul, logits)
+        g   <- sigmoid(z) - Y                   (classifier logit gradient)
+        Xg  += g @ wm                           (input gradient, accumulated)
+        gW  <- g.T @ X                          (weight gradient, VMEM only!)
+        w'  <- SR_fmt(w - lr * gW)              (fused SGD + stochastic round)
+        store w'                                (VMEM -> HBM)
+
+The weight gradient gW lives only in the VMEM scratch of a tile iteration and
+is never materialized at chunk (let alone full-label) size — that is the
+paper's "gradient fusion" (Sec. 4.3): classifier-gradient memory ~ 0.
+
+Hardware adaptation (DESIGN.md): the paper's Triton kernel keeps the tile in
+SRAM on an H100; here BlockSpec expresses the same HBM<->VMEM schedule for
+TPU, and `interpret=True` executes it on CPU for correctness (a real-TPU
+build would lower the same kernel through Mosaic).
+
+Precision configs (see `CONFIGS`):
+    fp32       plain f32 SGD (the paper's FLOAT32 baseline, Table 3)
+    bf16       BF16-grid weights/logits/grads, SR update      (ELMO BF16)
+    fp8        E4M3-grid weights + inputs, BF16 logits/grads, SR (ELMO FP8)
+The Renee FP16-FP32 mixed-precision baseline is `renee_chunk_update` below.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import BF16, E4M3, FP16, quantize_rne, quantize_sr, hash_uniform
+from .ref import SALT_DROP, SALT_SR
+
+# label-tile rows per grid step: the VMEM working set is
+# BL*d (weights) + b*d (X) + b*BL (logits/Y) floats — sized for ~16 MiB VMEM
+# at d=64..768 (see DESIGN.md / EXPERIMENTS.md Perf L1).
+DEFAULT_BL = 256
+
+CONFIGS = {
+    # name -> (weight_fmt, logit_fmt, fp8_inputs)
+    "fp32": (None, None, False),
+    "bf16": (BF16, BF16, False),
+    "fp8": (E4M3, BF16, True),
+}
+
+
+def _tile_uniforms(i, bl, d, seed_u32, salt):
+    """Per-element uniforms for the current W tile, keyed by the *global*
+    element index so the whole-chunk reference can reproduce them."""
+    row = jax.lax.broadcasted_iota(jnp.uint32, (bl, d), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (bl, d), 1)
+    gidx = (i.astype(jnp.uint32) * jnp.uint32(bl) + row) * jnp.uint32(d) + col
+    return hash_uniform(gidx, seed_u32 + jnp.uint32(salt))
+
+
+def _softplus(z):
+    return jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def _xmc_kernel(
+    w_ref, x_ref, y_ref, lr_ref, seed_ref, p_ref,
+    wout_ref, xg_ref, loss_ref, gmax_ref,
+    *, bl, d, weight_fmt, logit_fmt, fp8_inputs, nsteps,
+):
+    i = pl.program_id(0)
+    w = w_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    lr = lr_ref[0]
+    p = p_ref[0]
+    seed_u = seed_ref[0].astype(jnp.uint32)
+
+    # --- dropconnect on weights, inside the matmul (Appendix H) ---
+    u_drop = _tile_uniforms(i, bl, d, seed_u, SALT_DROP)
+    keep = (u_drop >= p).astype(jnp.float32) / jnp.maximum(1.0 - p, 1e-6)
+    wm = w * keep
+
+    xq = quantize_rne(x, E4M3) if fp8_inputs else x
+
+    # --- logits on the MXU; FP8xFP8 -> BF16 in the fp8 config ---
+    logits = jnp.dot(xq, wm.T)
+    if logit_fmt is not None:
+        logits = quantize_rne(logits, logit_fmt)
+
+    g = 1.0 / (1.0 + jnp.exp(-logits)) - y
+    if logit_fmt is not None:
+        g = quantize_rne(g, logit_fmt)
+
+    # --- accumulators (same output block for every grid step) ---
+    @pl.when(i == 0)
+    def _init():
+        xg_ref[...] = jnp.zeros(xg_ref.shape, jnp.float32)
+        loss_ref[...] = jnp.zeros(loss_ref.shape, jnp.float32)
+        gmax_ref[...] = jnp.zeros(gmax_ref.shape, jnp.float32)
+
+    loss_ref[...] += jnp.sum(_softplus(logits) - y * logits).reshape(1)
+    gmax_ref[...] = jnp.maximum(gmax_ref[...], jnp.max(jnp.abs(g)).reshape(1))
+    xg_ref[...] += jnp.dot(g, wm)
+
+    @pl.when(i == nsteps - 1)
+    def _finish():
+        if logit_fmt is not None:
+            xg_ref[...] = quantize_rne(xg_ref[...], logit_fmt)
+
+    # --- fused weight gradient + SGD + stochastic rounding (VMEM only) ---
+    grad_w = jnp.dot(g.T, xq)
+    upd = w - lr * grad_w
+    if weight_fmt is None:
+        wout_ref[...] = upd
+    else:
+        u_sr = _tile_uniforms(i, bl, d, seed_u, SALT_SR)
+        wout_ref[...] = quantize_sr(upd, u_sr, weight_fmt)
+
+
+def xmc_chunk_update(w, x, y, lr, seed, dropout_p, *, cfg="bf16", bl=DEFAULT_BL):
+    """Run the fused chunk update. Shapes: w [Lc,d], x [b,d], y [b,Lc];
+    lr/seed/dropout_p are shape-(1,) arrays (scalars are lowered as [1] so
+    the rust runtime can feed them as plain vec1 literals).
+    Returns (w_new [Lc,d], x_grad [b,d], loss [1], gmax [1])."""
+    lc, d = w.shape
+    b = x.shape[0]
+    bl = min(bl, lc)
+    assert lc % bl == 0, f"chunk {lc} not divisible by tile {bl}"
+    nsteps = lc // bl
+    weight_fmt, logit_fmt, fp8_inputs = CONFIGS[cfg]
+    kernel = functools.partial(
+        _xmc_kernel, bl=bl, d=d, weight_fmt=weight_fmt,
+        logit_fmt=logit_fmt, fp8_inputs=fp8_inputs, nsteps=nsteps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nsteps,),
+        in_specs=[
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),    # W tile
+            pl.BlockSpec((b, d), lambda i: (0, 0)),     # X (resident)
+            pl.BlockSpec((b, bl), lambda i: (0, i)),    # Y tile
+            pl.BlockSpec((1,), lambda i: (0,)),         # lr
+            pl.BlockSpec((1,), lambda i: (0,)),         # seed
+            pl.BlockSpec((1,), lambda i: (0,)),         # dropout_p
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),    # W'
+            pl.BlockSpec((b, d), lambda i: (0, 0)),     # X grad (accum)
+            pl.BlockSpec((1,), lambda i: (0,)),         # loss (accum)
+            pl.BlockSpec((1,), lambda i: (0,)),         # gmax (accum)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lc, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, x, y, lr, seed, dropout_p)
+
+
+# ---------------------------------------------------------------------------
+# Kahan variant: BF16 weights + BF16 compensation (paper Appendix D.2,
+# "Kahan summation for head labels" — applied by the coordinator to the
+# top-p% most frequent labels only, FP8+SR for the tail).
+# ---------------------------------------------------------------------------
+
+def _xmc_kahan_kernel(
+    w_ref, c_ref, x_ref, y_ref, lr_ref, seed_ref, p_ref,
+    wout_ref, cout_ref, xg_ref, loss_ref, gmax_ref, *, bl, d, nsteps,
+):
+    from ..formats import kahan_add
+
+    i = pl.program_id(0)
+    w = w_ref[...]
+    c = c_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    lr = lr_ref[0]
+    p = p_ref[0]
+    seed_u = seed_ref[0].astype(jnp.uint32)
+
+    u_drop = _tile_uniforms(i, bl, d, seed_u, SALT_DROP)
+    keep = (u_drop >= p).astype(jnp.float32) / jnp.maximum(1.0 - p, 1e-6)
+    wm = w * keep
+
+    logits = quantize_rne(jnp.dot(x, wm.T), BF16)
+    g = quantize_rne(1.0 / (1.0 + jnp.exp(-logits)) - y, BF16)
+
+    @pl.when(i == 0)
+    def _init():
+        xg_ref[...] = jnp.zeros(xg_ref.shape, jnp.float32)
+        loss_ref[...] = jnp.zeros(loss_ref.shape, jnp.float32)
+        gmax_ref[...] = jnp.zeros(gmax_ref.shape, jnp.float32)
+
+    loss_ref[...] += jnp.sum(_softplus(logits) - y * logits).reshape(1)
+    gmax_ref[...] = jnp.maximum(gmax_ref[...], jnp.max(jnp.abs(g)).reshape(1))
+    xg_ref[...] += jnp.dot(g, wm)
+
+    @pl.when(i == nsteps - 1)
+    def _finish():
+        xg_ref[...] = quantize_rne(xg_ref[...], BF16)
+
+    grad_w = jnp.dot(g.T, x)
+    w_new, c_new = kahan_add(w, c, -lr * grad_w, BF16)
+    wout_ref[...] = w_new
+    cout_ref[...] = c_new
+
+
+def xmc_chunk_update_kahan(w, c, x, y, lr, seed, dropout_p, *, bl=DEFAULT_BL):
+    """BF16 classifier chunk update with Kahan compensation instead of SR.
+    Returns (w_new, c_new, x_grad, loss, gmax)."""
+    lc, d = w.shape
+    b = x.shape[0]
+    bl = min(bl, lc)
+    assert lc % bl == 0
+    nsteps = lc // bl
+    kernel = functools.partial(_xmc_kahan_kernel, bl=bl, d=d, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=(nsteps,),
+        in_specs=[
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, bl), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lc, d), jnp.float32),
+            jax.ShapeDtypeStruct((lc, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, c, x, y, lr, seed, dropout_p)
+
+
+# ---------------------------------------------------------------------------
+# Renee baseline: FP16-FP32 mixed precision with loss scaling
+# ---------------------------------------------------------------------------
+
+def _fp16_noclamp(v):
+    q = quantize_rne(v, FP16.m_bits, FP16.emin, jnp.float32(jnp.inf))
+    return jnp.where(jnp.abs(q) > FP16.max_value, jnp.sign(q) * jnp.inf, q)
+
+
+def _renee_kernel(
+    w_ref, mom_ref, x_ref, y_ref, lr_ref, mu_ref, scale_ref,
+    wout_ref, mout_ref, xg_ref, loss_ref, oflow_ref, *, nsteps,
+):
+    i = pl.program_id(0)
+    w = w_ref[...]
+    mom = mom_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    lr = lr_ref[0]
+    mu = mu_ref[0]
+    scale = scale_ref[0]
+
+    # ephemeral FP16 copies (the extra 4 GiB in Renee's Fig 1 trace)
+    x16 = _fp16_noclamp(x)
+    w16 = _fp16_noclamp(w)
+    logits = _fp16_noclamp(jnp.dot(x16, w16.T))
+    g16 = _fp16_noclamp((1.0 / (1.0 + jnp.exp(-logits)) - y) * scale)
+
+    @pl.when(i == 0)
+    def _init():
+        xg_ref[...] = jnp.zeros(xg_ref.shape, jnp.float32)
+        loss_ref[...] = jnp.zeros(loss_ref.shape, jnp.float32)
+        oflow_ref[...] = jnp.zeros(oflow_ref.shape, jnp.float32)
+
+    loss_ref[...] += jnp.sum(_softplus(logits) - y * logits).reshape(1)
+    # f32 accumulation across tiles (hardware fp16 matmuls accumulate in
+    # fp32); only the STORED tensor is fp16 — quantized at the last tile.
+    xg_ref[...] += jnp.dot(g16, w16)
+
+    @pl.when(i == nsteps - 1)
+    def _store_xg():
+        xg_ref[...] = _fp16_noclamp(xg_ref[...])
+
+    grad16 = _fp16_noclamp(jnp.dot(g16.T, x16))
+    grad32 = grad16 / scale  # the FP32 upcast (another 8 GiB in Fig 1)
+    mom_new = mu * mom + grad32
+    wout_ref[...] = w - lr * mom_new
+    mout_ref[...] = mom_new
+
+    bad = jnp.any(~jnp.isfinite(grad16)) | jnp.any(~jnp.isfinite(xg_ref[...]))
+    oflow_ref[...] = jnp.maximum(
+        oflow_ref[...], jnp.where(bad, 1.0, 0.0).reshape(1)
+    )
+
+
+def renee_chunk_update(w, mom, x, y, lr, momentum, loss_scale, *, bl=DEFAULT_BL):
+    """Renee-style mixed-precision chunk update (baseline for Tables 2/3 and
+    the instability study).  Master weights and momentum stay f32; matmuls
+    run on the FP16 grid; the scaled logit gradient can genuinely overflow
+    to inf, raising the `oflow` flag for the loss-scale manager."""
+    lc, d = w.shape
+    b = x.shape[0]
+    bl = min(bl, lc)
+    assert lc % bl == 0
+    nsteps = lc // bl
+    kernel = functools.partial(_renee_kernel, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=(nsteps,),
+        in_specs=[
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),   # W master
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),   # momentum
+            pl.BlockSpec((b, d), lambda i: (0, 0)),    # X
+            pl.BlockSpec((b, bl), lambda i: (0, i)),   # Y tile
+            pl.BlockSpec((1,), lambda i: (0,)),        # lr
+            pl.BlockSpec((1,), lambda i: (0,)),        # momentum coef
+            pl.BlockSpec((1,), lambda i: (0,)),        # loss scale
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),
+            pl.BlockSpec((bl, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lc, d), jnp.float32),
+            jax.ShapeDtypeStruct((lc, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, mom, x, y, lr, momentum, loss_scale)

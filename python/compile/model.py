@@ -1,0 +1,222 @@
+"""L2: the jax model — a mini-transformer encoder over packed parameters.
+
+This is the paper's BERT/DistilBERT stand-in (DESIGN.md Substitutions): the
+same compute-graph shape (embeddings, multi-head attention, LayerNorm, GELU
+FFN, mean pooling, AdamW) at a CPU-trainable scale.  All parameters live in
+ONE flat f32 vector, which keeps the AOT interface rust-friendly: the
+runtime holds exactly four [P] buffers (params + AdamW m/v + Kahan c).
+
+Precision configs mirror the paper:
+  fp32  plain f32 encoder + standard AdamW
+  bf16  BF16-grid matmul operands + Kahan-AdamW state on the BF16 grid
+  fp8   torchao-style FP8: matmul operands quantized to E4M3 (activations
+        and weights), params still BF16-grid + Kahan-AdamW (Sec. 4.3)
+
+Quantization in the forward pass uses a straight-through estimator so the
+encoder VJP is well-defined (the quantizer's true derivative is zero a.e.).
+
+The backward executable recomputes the forward (activation rematerialization)
+— deliberately: this is the paper's Sec. 4.2 reordering taken to its AOT
+conclusion.  The encoder backward runs *after* all classifier chunks, so no
+encoder activation coexists with classifier transients; recompute trades a
+second forward for that separation.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import BF16, E4M3, hash_uniform, quantize_rne
+from .kernels.kahan_adamw import DEFAULT_BLOCK, kahan_adamw
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    vocab: int = 1024
+    d: int = 64
+    seq: int = 16
+    layers: int = 2
+    heads: int = 4
+    ffn: int = 128
+    batch: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+
+CFG = EncoderConfig()
+
+# embedding dropout salt (independent of the classifier kernel streams)
+SALT_EMB_DROP = 0xE0B0
+
+
+def param_specs(cfg: EncoderConfig):
+    """(name, shape) for every tensor, in packing order."""
+    d, f = cfg.d, cfg.ffn
+    specs = [("tok_emb", (cfg.vocab, d)), ("pos_emb", (cfg.seq, d))]
+    for l in range(cfg.layers):
+        specs += [
+            (f"l{l}.ln1_g", (d,)), (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.wqkv", (d, 3 * d)), (f"l{l}.bqkv", (3 * d,)),
+            (f"l{l}.wo", (d, d)), (f"l{l}.bo", (d,)),
+            (f"l{l}.ln2_g", (d,)), (f"l{l}.ln2_b", (d,)),
+            (f"l{l}.w1", (d, f)), (f"l{l}.b1", (f,)),
+            (f"l{l}.w2", (f, d)), (f"l{l}.b2", (d,)),
+        ]
+    specs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return specs
+
+
+def packed_size(cfg: EncoderConfig) -> int:
+    """Total packed length, padded up to the optimizer kernel block."""
+    n = sum(int(np.prod(s)) for _, s in param_specs(cfg))
+    blk = DEFAULT_BLOCK
+    return ((n + blk - 1) // blk) * blk
+
+
+def unpack(packed, cfg: EncoderConfig):
+    """Flat [P] -> dict of named tensors (static offsets, free at runtime)."""
+    out, off = {}, 0
+    for name, shape in param_specs(cfg):
+        n = int(np.prod(shape))
+        out[name] = packed[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_packed(cfg: EncoderConfig, seed: int = 0, fmt=None) -> np.ndarray:
+    """Initial packed parameter vector (numpy; written to artifacts/ by
+    aot.py so the rust runtime never needs python)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_specs(cfg):
+        if name.endswith("_g"):
+            t = np.ones(shape, np.float32)
+        elif name.endswith("_b") or name.split(".")[-1].startswith("b"):
+            t = np.zeros(shape, np.float32)
+        else:
+            t = rng.normal(0.0, shape[0] ** -0.5, shape).astype(np.float32)
+        chunks.append(t.ravel())
+    flat = np.concatenate(chunks)
+    out = np.zeros(packed_size(cfg), np.float32)
+    out[: flat.size] = flat
+    if fmt is not None:
+        out = np.asarray(quantize_rne(out, fmt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _ste(q_fn, v):
+    """Straight-through estimator: forward = quantized, gradient = identity."""
+    return v + jax.lax.stop_gradient(q_fn(v) - v)
+
+
+def _qmatmul(a, b, prec):
+    """Matmul with emulated low-precision operands (torchao-style for fp8:
+    both operands on the E4M3 grid, accumulation in f32 -> BF16 output)."""
+    if prec == "fp32":
+        return a @ b
+    if prec == "bf16":
+        aq = _ste(lambda t: quantize_rne(t, BF16), a)
+        bq = _ste(lambda t: quantize_rne(t, BF16), b)
+        return _ste(lambda t: quantize_rne(t, BF16), aq @ bq)
+    if prec == "fp8":
+        aq = _ste(lambda t: quantize_rne(t, E4M3), a)
+        bq = _ste(lambda t: quantize_rne(t, E4M3), b)
+        return _ste(lambda t: quantize_rne(t, BF16), aq @ bq)
+    raise ValueError(prec)
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def encoder_fwd(packed, tokens, seed, dropout_p, cfg: EncoderConfig, prec):
+    """tokens [b, s] int32 (0 = PAD) -> pooled embedding [b, d].
+
+    Embedding dropout (the paper's main encoder regularizer, Table 9) is
+    applied to the pooled embedding with the deterministic hash RNG, so the
+    backward executable reproduces it exactly by reusing the seed.
+    """
+    p = unpack(packed, cfg)
+    b, s = tokens.shape
+    h = jnp.take(p["tok_emb"], tokens, axis=0) + p["pos_emb"][None, :, :]
+    mask = (tokens != 0).astype(jnp.float32)  # [b, s]
+    attn_bias = jnp.where(mask[:, None, None, :] > 0, 0.0, -1e9)
+
+    for l in range(cfg.layers):
+        pre = _layer_norm(h, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        qkv = _qmatmul(pre.reshape(b * s, -1), p[f"l{l}.wqkv"], prec)
+        qkv = (qkv + p[f"l{l}.bqkv"]).reshape(b, s, 3, cfg.heads, cfg.head_dim)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        attn = jax.nn.softmax(scores + attn_bias, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b * s, cfg.d)
+        proj = _qmatmul(ctx, p[f"l{l}.wo"], prec) + p[f"l{l}.bo"]
+        h = h + proj.reshape(b, s, cfg.d)
+
+        pre = _layer_norm(h, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        f1 = jax.nn.gelu(
+            _qmatmul(pre.reshape(b * s, -1), p[f"l{l}.w1"], prec)
+            + p[f"l{l}.b1"]
+        )
+        f2 = _qmatmul(f1, p[f"l{l}.w2"], prec) + p[f"l{l}.b2"]
+        h = h + f2.reshape(b, s, cfg.d)
+
+    h = _layer_norm(h, p["lnf_g"], p["lnf_b"])
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    emb = jnp.sum(h * mask[:, :, None], axis=1) / denom
+
+    # embedding dropout (inverted scaling), seed-deterministic
+    idx = jnp.arange(b * cfg.d, dtype=jnp.uint32).reshape(b, cfg.d)
+    u = hash_uniform(idx, seed[0].astype(jnp.uint32) + jnp.uint32(SALT_EMB_DROP))
+    keep = (u >= dropout_p[0]).astype(jnp.float32)
+    emb = emb * keep / jnp.maximum(1.0 - dropout_p[0], 1e-6)
+    return emb
+
+
+# ---------------------------------------------------------------------------
+# backward + optimizer (one executable: recompute-fwd, VJP, Kahan-AdamW)
+# ---------------------------------------------------------------------------
+
+def encoder_bwd(packed, m, v, c, tokens, emb_grad, lr, wd, step, seed,
+                dropout_p, cfg: EncoderConfig, prec):
+    """Recompute the forward, pull `emb_grad` back to parameter space, and
+    apply the (Kahan-)AdamW step via the L1 kernel.  Returns the four new
+    state vectors.  fp32 -> plain AdamW; bf16/fp8 -> BF16-grid Kahan AdamW
+    (paper Sec. 4.1)."""
+    fwd = lambda pk: encoder_fwd(pk, tokens, seed, dropout_p, cfg, prec)
+    _, vjp = jax.vjp(fwd, packed)
+    (grad,) = vjp(emb_grad)
+    use_kahan = prec != "fp32"
+    return kahan_adamw(packed, m, v, c, grad, lr, wd, step, use_kahan=use_kahan)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics (Fig 2b / Fig 5)
+# ---------------------------------------------------------------------------
+
+HIST_BINS, HIST_LO = 64, -40
+
+
+def grad_hist(w, x, y):
+    """Exponent histograms of classifier gradients / weights / inputs."""
+    logits = x @ w.T
+    g = 1.0 / (1.0 + jnp.exp(-logits)) - y
+
+    def hist(val):
+        av = jnp.abs(val).ravel()
+        e = jnp.floor(jnp.log2(jnp.where(av > 0, av, 1.0)))
+        e = jnp.where(av > 0, e, HIST_LO)
+        idx = jnp.clip(e - HIST_LO, 0, HIST_BINS - 1).astype(jnp.int32)
+        return jnp.zeros(HIST_BINS, jnp.float32).at[idx].add(1.0)
+
+    return hist(g), hist(w), hist(x)

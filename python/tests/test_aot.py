@@ -1,0 +1,102 @@
+"""AOT artifact sanity: manifest structure, artifact files, golden files.
+
+These run after `make artifacts`; they skip (not fail) when artifacts/ is
+absent so `pytest` is usable before the first lowering.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def parse_manifest():
+    arts, config = {}, {}
+    cur = None
+    with open(os.path.join(ART, "manifest.txt")) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            if parts[0] == "config":
+                config = dict(kv.split("=") for kv in parts[1:])
+            elif parts[0] == "artifact":
+                kv = dict(p.split("=") for p in parts[1:])
+                cur = kv["name"]
+                arts[cur] = {"file": kv["file"], "in": [], "out": []}
+            elif parts[0] in ("in", "out"):
+                arts[cur][parts[0]].append((parts[1], parts[2], parts[3]))
+    return config, arts
+
+
+def test_manifest_parses_and_files_exist():
+    config, arts = parse_manifest()
+    assert int(config["d"]) == 64 and int(config["batch"]) == 32
+    assert len(arts) >= 20
+    for name, a in arts.items():
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+        assert a["in"] and a["out"], name
+
+
+def test_expected_artifacts_present():
+    _, arts = parse_manifest()
+    for n in [
+        "enc_fwd_fp32", "enc_fwd_bf16", "enc_fwd_fp8",
+        "enc_bwd_fp32", "enc_bwd_bf16", "enc_bwd_fp8",
+        "cls_chunk_bf16_2048", "cls_chunk_fp8_2048", "cls_chunk_fp32_2048",
+        "cls_kahan_512", "cls_renee_8192", "cls_fwd_1024",
+        "grad_hist_2048", "quant_sweep_131072",
+    ]:
+        assert n in arts, n
+
+
+def test_cls_chunk_signature():
+    _, arts = parse_manifest()
+    a = arts["cls_chunk_bf16_1024"]
+    in_names = [n for n, _, _ in a["in"]]
+    assert in_names == ["w", "x", "y", "lr", "seed", "dropout_p"]
+    out_names = [n for n, _, _ in a["out"]]
+    assert out_names == ["w", "x_grad", "loss", "gmax"]
+    dims = dict((n, d) for n, _, d in a["in"])
+    assert dims["w"] == "1024x64" and dims["y"] == "32x1024"
+
+
+def test_init_params_valid():
+    config, _ = parse_manifest()
+    p = np.fromfile(os.path.join(ART, "enc_init_fp32.bin"), np.float32)
+    assert p.size == int(config["psize"])
+    assert np.isfinite(p).all()
+    pb = np.fromfile(os.path.join(ART, "enc_init_bf16.bin"), np.float32)
+    assert pb.size == p.size
+    import ml_dtypes
+    np.testing.assert_array_equal(
+        pb, pb.astype(ml_dtypes.bfloat16).astype(np.float32))
+
+
+def test_golden_files_wellformed():
+    with open(os.path.join(ART, "golden_quant.txt")) as f:
+        lines = [l for l in f if not l.startswith("#")]
+    assert len(lines) > 500
+    row = lines[0].split()
+    assert len(row) == 9  # input + 4 rne + 4 sr
+    vals = [np.uint32(int(h, 16)).view(np.float32) for h in row]
+    assert np.isfinite(vals[0])
+
+
+def test_hlo_text_loads_back():
+    """HLO text round-trips through jax's own parser-independent check:
+    the file must contain an ENTRY computation with the right param count."""
+    _, arts = parse_manifest()
+    a = arts["cls_chunk_bf16_1024"]
+    text = open(os.path.join(ART, a["file"])).read()
+    assert "ENTRY" in text
+    assert text.count("parameter(") >= len(a["in"])

@@ -1,0 +1,186 @@
+"""Property tests for the emulated numeric formats (the paper's substrate).
+
+The most important invariants:
+  * RNE/SR outputs lie exactly on the target grid (idempotence)
+  * SR is bracketed by the neighbouring grid points and unbiased in mean
+  * BF16 emulation agrees bit-exactly with the native bfloat16 cast
+  * E4M3 emulation agrees with ml_dtypes float8_e4m3fn and saturates at 448
+  * Kahan summation accumulates sub-ulp updates that plain RNE cancels
+"""
+
+import ml_dtypes
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.formats import (
+    BF16,
+    E4M3,
+    E5M2,
+    FP16,
+    FORMATS,
+    hash_uniform,
+    ieee_like,
+    kahan_add,
+    quantize_param,
+    quantize_rne,
+    quantize_sr,
+)
+
+FMTS = [BF16, FP16, E4M3, E5M2]
+
+finite_floats = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False,
+    width=32,
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_floats, st.sampled_from(range(len(FMTS))))
+def test_rne_idempotent(x, fi):
+    fmt = FMTS[fi]
+    q = np.asarray(quantize_rne(np.float32(x), fmt))
+    q2 = np.asarray(quantize_rne(q, fmt))
+    np.testing.assert_array_equal(q, q2)
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_floats, st.integers(0, 2**31 - 1), st.sampled_from(range(len(FMTS))))
+def test_sr_on_grid_and_bracketed(x, seed, fi):
+    fmt = FMTS[fi]
+    x = np.float32(x)
+    u = np.asarray(hash_uniform(jnp.uint32(0), jnp.uint32(seed)))
+    q = float(np.asarray(quantize_sr(x, u, fmt)))
+    # on-grid
+    assert q == float(np.asarray(quantize_rne(np.float32(q), fmt)))
+    # bracketed by down/up neighbours (within the clamp)
+    xa = float(np.clip(x, -fmt.max_value, fmt.max_value))
+    lo = min(xa, float(x))
+    hi = max(xa, float(x))
+    span = max(abs(lo), abs(hi), 1e-30)
+    ulp = 2.0 ** (max(np.floor(np.log2(span)), fmt.emin) - fmt.m_bits)
+    assert lo - ulp <= q <= hi + ulp
+
+
+def test_sr_unbiased():
+    """Mean of SR over many seeds converges to the input value."""
+    x = np.float32(1.0 + 0.3 * 2.0**-7)  # 0.3 ulp above a BF16 grid point
+    idx = jnp.arange(20000, dtype=jnp.uint32)
+    u = hash_uniform(idx, jnp.uint32(7))
+    q = np.asarray(quantize_sr(jnp.full((20000,), x), u, BF16))
+    assert abs(q.mean() - float(x)) < 0.02 * 2.0**-7
+    # exactly two distinct outcomes: the bracketing grid points
+    vals = np.unique(q)
+    assert len(vals) == 2
+    assert vals[0] <= x <= vals[1]
+
+
+def test_bf16_matches_native_cast():
+    rng = np.random.default_rng(0)
+    v = np.concatenate([
+        rng.normal(0, 1, 5000), rng.normal(0, 1e-30, 1000),
+        rng.normal(0, 1e30, 1000), [0.0, 1.0, -2.5, 3.3895e38],
+    ]).astype(np.float32)
+    ours = np.asarray(quantize_rne(v, BF16))
+    native = v.astype(ml_dtypes.bfloat16).astype(np.float32)
+    np.testing.assert_array_equal(ours, native)
+
+
+def test_e4m3_matches_mldtypes():
+    rng = np.random.default_rng(1)
+    v = rng.uniform(-440, 440, 20000).astype(np.float32)
+    ours = np.asarray(quantize_rne(v, E4M3))
+    native = v.astype(ml_dtypes.float8_e4m3fn).astype(np.float32)
+    np.testing.assert_array_equal(ours, native)
+
+
+def test_e4m3_saturates_at_448():
+    v = np.array([449.0, 1e9, -1e9, 448.0, 500.0], np.float32)
+    q = np.asarray(quantize_rne(v, E4M3))
+    np.testing.assert_array_equal(q, [448.0, 448.0, -448.0, 448.0, 448.0])
+
+
+def test_e4m3_subnormals():
+    # smallest e4m3 subnormal is 2^-9; below half of it, RNE -> 0
+    q = np.asarray(quantize_rne(np.float32(2.0**-9), E4M3))
+    assert q == 2.0**-9
+    q = np.asarray(quantize_rne(np.float32(2.0**-11), E4M3))
+    assert q == 0.0
+    q = np.asarray(quantize_rne(np.float32(1.5 * 2.0**-9), E4M3))
+    assert q in (2.0**-9, 2.0**-8)  # half-even tie
+
+
+def test_fp16_max():
+    q = np.asarray(quantize_rne(np.float32(65504.0), FP16))
+    assert q == 65504.0
+    v = np.float32(1e-8)  # fp16 subnormal territory: ulp = 2^-24
+    q = float(np.asarray(quantize_rne(v, FP16)))
+    assert q in (0.0, 2.0**-24)
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite_floats, st.integers(2, 6), st.integers(1, 10))
+def test_param_quantizer_matches_fixed(x, e, m):
+    """The runtime-parametric quantizer (Fig 2a kernel) agrees with the
+    fixed-format path for the same IEEE-like (E, M)."""
+    fmt = ieee_like("g", e, m)
+    a = np.asarray(quantize_param(np.float32(x), float(e), float(m)))
+    b = np.asarray(quantize_rne(np.float32(x), fmt))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_kahan_beats_rne_accumulation():
+    """Adding 1000 updates of 0.1 ulp: plain RNE cancels them all, Kahan
+    accumulates them (this is the paper's Sec. 4.1 motivation)."""
+    base = np.float32(1.0)
+    upd = np.float32(0.1 * 2.0**-7)  # 0.1 BF16 ulp at 1.0
+    # plain RNE
+    s = jnp.float32(base)
+    for _ in range(100):
+        s = quantize_rne(s + upd, BF16)
+    assert float(s) == 1.0  # every update cancelled
+    # Kahan
+    s, c = jnp.float32(base), jnp.float32(0.0)
+    for _ in range(1000):
+        s, c = kahan_add(s, c, upd, BF16)
+    expect = 1.0 + 1000 * float(upd)
+    assert abs(float(s) - expect) < 2.0**-7  # within one ulp of the truth
+
+
+def test_native_cast_equals_arithmetic():
+    """The native-dtype RNE fast path (perf, EXPERIMENTS.md §Perf) must be
+    bit-identical to the grid arithmetic it replaced."""
+    from compile.formats import FloatFormat
+
+    rng = np.random.default_rng(0)
+    v = np.concatenate([
+        rng.normal(0, 1, 50000), rng.normal(0, 1e-4, 20000),
+        rng.normal(0, 1e4, 20000), rng.uniform(-500, 500, 20000),
+        [0.0, 1.0, -1.0, 448.0, 449.0, 65504.0, 65505.0, 3e38],
+    ]).astype(np.float32)
+    for f in [BF16, FP16, E4M3, E5M2]:
+        native = np.asarray(quantize_rne(v, f))
+        # renaming the format bypasses the fast path -> arithmetic result
+        arith = np.asarray(quantize_rne(
+            v, FloatFormat("x" + f.name, f.e_bits, f.m_bits, f.max_value,
+                           f.emin)))
+        neq = (native.view(np.uint32) != arith.view(np.uint32)) & ~(
+            (native == 0) & (arith == 0))
+        assert neq.sum() == 0, f"{f.name}: {neq.sum()} bit mismatches"
+
+
+def test_hash_uniform_range_and_determinism():
+    idx = jnp.arange(100000, dtype=jnp.uint32)
+    u = np.asarray(hash_uniform(idx, jnp.uint32(42)))
+    assert (u >= 0).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 0.01
+    u2 = np.asarray(hash_uniform(idx, jnp.uint32(42)))
+    np.testing.assert_array_equal(u, u2)
+    u3 = np.asarray(hash_uniform(idx, jnp.uint32(43)))
+    assert (u != u3).mean() > 0.99
+
+
+def test_format_bytes():
+    assert BF16.bytes == 2.0 and E4M3.bytes == 1.0 and FP16.bytes == 2.0
+    assert FORMATS["fp32"].bytes == 4.0

@@ -1,0 +1,66 @@
+"""Runtime-parametric (E, M) quantizer kernel (Fig 2a) vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.formats import E4M3, BF16, quantize_rne
+from compile.kernels.quantize import quantize_sweep
+from compile.kernels.ref import quantize_sweep_ref
+
+SC = lambda x: np.array([x], np.float32)
+SI = lambda x: np.array([x], np.int32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 10), st.integers(0, 2**30),
+       st.booleans())
+def test_kernel_matches_ref(e, m, seed, sr):
+    rng = np.random.default_rng(seed % 997)
+    v = rng.normal(0, 1, 8192).astype(np.float32)
+    out = quantize_sweep(v, SC(e), SC(m), SI(seed), SC(1.0 if sr else 0.0))
+    refout = quantize_sweep_ref(v, float(e), float(m), seed,
+                                1.0 if sr else 0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(refout))
+
+
+def test_e4m3_point_matches_fixed_format():
+    """(E=4, M=3) in the sweep is IEEE-like (max 240: the top exponent code
+    is reserved), while fp8e4m3fn reclaims it (max 448).  The two grids are
+    identical for |v| <= 224, so spot-check agreement there."""
+    rng = np.random.default_rng(0)
+    v = rng.uniform(-200, 200, 8192).astype(np.float32)
+    out = np.asarray(quantize_sweep(v, SC(4), SC(3), SI(0), SC(0.0)))
+    fixed = np.asarray(quantize_rne(v, E4M3))
+    np.testing.assert_array_equal(out, fixed)
+
+
+def test_bf16_point():
+    rng = np.random.default_rng(1)
+    v = rng.normal(0, 10, 8192).astype(np.float32)
+    out = np.asarray(quantize_sweep(v, SC(8), SC(7), SI(0), SC(0.0)))
+    fixed = np.asarray(quantize_rne(v, BF16))
+    np.testing.assert_array_equal(out, fixed)
+
+
+def test_more_mantissa_is_finer():
+    """Monotonicity: quantization error shrinks as M grows (Fig 2a x-axis)."""
+    rng = np.random.default_rng(2)
+    v = rng.normal(0, 1, 8192).astype(np.float32)
+    errs = []
+    for m in range(1, 11):
+        q = np.asarray(quantize_sweep(v, SC(5), SC(m), SI(0), SC(0.0)))
+        errs.append(np.abs(q - v).mean())
+    assert all(errs[i + 1] <= errs[i] for i in range(len(errs) - 1))
+
+
+def test_low_exponent_clips():
+    """E=2 clips a visible mass of unit-scale values (the paper's finding
+    that 2 exponent bits are insufficient)."""
+    rng = np.random.default_rng(3)
+    v = (rng.normal(0, 5, 8192)).astype(np.float32)
+    q2 = np.asarray(quantize_sweep(v, SC(2), SC(7), SI(0), SC(0.0)))
+    q5 = np.asarray(quantize_sweep(v, SC(5), SC(7), SI(0), SC(0.0)))
+    # E2M7: bias 1, max = (2-2^-7)*2 ~ 3.98 -> heavy clipping at sigma=5
+    clip_frac = (np.abs(q2) >= np.abs(q2).max() - 1e-6).mean()
+    assert clip_frac > 0.1
+    assert np.abs(q5 - v).mean() < np.abs(q2 - v).mean()

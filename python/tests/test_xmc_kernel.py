@@ -1,0 +1,159 @@
+"""Fused XMC classifier kernel (Algorithm 1) vs the pure-jnp oracle.
+
+SR outputs are allowed a <=0.1% fraction of one-ulp mismatches: the kernel's
+tiled matmul can differ from the oracle's whole-chunk matmul in the last f32
+bit, and stochastic rounding's floor is (by design) sensitive to that bit.
+Everything deterministic must agree to f32 matmul tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.formats import BF16, E4M3, quantize_rne
+from compile.kernels import ref
+from compile.kernels.xmc_update import (
+    CONFIGS,
+    renee_chunk_update,
+    xmc_chunk_update,
+    xmc_chunk_update_kahan,
+)
+
+
+def make_problem(lc, d, b, seed=0, wscale=0.05):
+    rng = np.random.default_rng(seed)
+    w = np.asarray(quantize_rne(
+        rng.normal(0, wscale, (lc, d)).astype(np.float32), BF16))
+    x = rng.normal(0, 1, (b, d)).astype(np.float32)
+    y = (rng.random((b, lc)) < 0.01).astype(np.float32)
+    return w, x, y
+
+
+def assert_sr_close(a, b, name, frac=1e-3):
+    a, b = np.asarray(a), np.asarray(b)
+    neq = (a != b).mean()
+    assert neq <= frac, f"{name}: {neq:.2e} fraction of SR mismatches"
+
+
+SCALARS = lambda lr, seed, p: (
+    np.array([lr], np.float32),
+    np.array([seed], np.int32),
+    np.array([p], np.float32),
+)
+
+
+@pytest.mark.parametrize("cfg", ["fp32", "bf16", "fp8"])
+@pytest.mark.parametrize("lc,b", [(256, 8), (512, 16), (1024, 32)])
+def test_chunk_update_matches_ref(cfg, lc, b):
+    w, x, y = make_problem(lc, 64, b, seed=lc + b)
+    lr, seed, p = SCALARS(0.05, 42, 0.0)
+    out = xmc_chunk_update(w, x, y, lr, seed, p, cfg=cfg)
+    weight_fmt, logit_fmt, fp8_inputs = CONFIGS[cfg]
+    refout = ref.xmc_chunk_update_ref(
+        w, x, y, lr[0], seed[0], p[0],
+        weight_fmt=weight_fmt, logit_fmt=logit_fmt, fp8_inputs=fp8_inputs)
+    if cfg == "fp32":
+        np.testing.assert_allclose(out[0], refout[0], rtol=1e-5, atol=1e-6)
+    else:
+        assert_sr_close(out[0], refout[0], f"{cfg}/w")
+    np.testing.assert_allclose(out[1], refout[1], rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(out[2], refout[2], rtol=1e-5)
+    np.testing.assert_allclose(out[3], refout[3], rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([256, 512]),
+    st.sampled_from([4, 8, 32]),
+    st.integers(0, 2**30),
+    st.sampled_from([0.0, 0.25, 0.5]),
+    st.sampled_from(["bf16", "fp8"]),
+)
+def test_chunk_update_hypothesis(lc, b, seed, p, cfg):
+    w, x, y = make_problem(lc, 64, b, seed=seed % 1000)
+    lrv, seedv, pv = SCALARS(0.08, seed, p)
+    out = xmc_chunk_update(w, x, y, lrv, seedv, pv, cfg=cfg)
+    weight_fmt, logit_fmt, fp8_inputs = CONFIGS[cfg]
+    refout = ref.xmc_chunk_update_ref(
+        w, x, y, lrv[0], seedv[0], pv[0],
+        weight_fmt=weight_fmt, logit_fmt=logit_fmt, fp8_inputs=fp8_inputs)
+    assert_sr_close(out[0], refout[0], "w")
+    np.testing.assert_allclose(out[1], refout[1], rtol=5e-5, atol=5e-5)
+    # weights stay on the grid
+    wq = np.asarray(quantize_rne(np.asarray(out[0]),
+                                 weight_fmt))
+    np.testing.assert_array_equal(np.asarray(out[0]), wq)
+
+
+def test_gradients_never_materialized_shape():
+    """The executable's outputs contain no [Lc, d] gradient tensor — only
+    W', the [b, d] input gradient, and two scalars (gradient fusion)."""
+    w, x, y = make_problem(256, 64, 8)
+    out = xmc_chunk_update(w, x, y, *SCALARS(0.05, 1, 0.0), cfg="bf16")
+    shapes = [tuple(np.asarray(o).shape) for o in out]
+    assert shapes == [(256, 64), (8, 64), (1,), (1,)]
+
+
+def test_sr_moves_weights_where_rne_stalls():
+    """With a tiny lr*grad (sub-ulp), SR still updates some weights in
+    expectation — the core claim behind Fig 2a's diagonal."""
+    lc, d, b = 256, 64, 8
+    w, x, y = make_problem(lc, d, b, wscale=1.0)
+    lr, seed, p = SCALARS(1e-6, 3, 0.0)  # updates ~1e-6 << bf16 ulp at 1.0
+    out = xmc_chunk_update(w, x, y, lr, seed, p, cfg="bf16")
+    moved = (np.asarray(out[0]) != w).mean()
+    assert moved > 0.001, "SR should move a nonzero fraction of weights"
+
+
+def test_dropconnect_scaling():
+    """With p=0.5 the surviving weights are scaled 2x inside the matmul;
+    logits stay unbiased in expectation."""
+    lc, d, b = 512, 64, 16
+    w, x, y = make_problem(lc, d, b)
+    base = np.asarray(x @ w.T)
+    accum = np.zeros_like(base)
+    reps = 30
+    for s in range(reps):
+        mask = np.asarray(ref.dropconnect_mask(w.shape, s, np.float32(0.5)))
+        accum += np.asarray(x @ (w * mask).T)
+    accum /= reps
+    corr = np.corrcoef(base.ravel(), accum.ravel())[0, 1]
+    assert corr > 0.98
+
+
+def test_kahan_variant_matches_ref():
+    lc, d, b = 512, 64, 16
+    w, x, y = make_problem(lc, d, b)
+    c = np.zeros_like(w)
+    lr, seed, p = SCALARS(0.05, 11, 0.0)
+    out = xmc_chunk_update_kahan(w, c, x, y, lr, seed, p)
+    refout = ref.xmc_chunk_update_kahan_ref(w, c, x, y, lr[0], seed[0], p[0])
+    for name, a, b_ in zip(["w", "c", "xg", "loss", "gmax"], out, refout):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=3e-5, atol=3e-5, err_msg=name)
+
+
+def test_renee_matches_ref_and_overflows():
+    lc, d, b = 512, 64, 8
+    w, x, y = make_problem(lc, d, b)
+    mom = np.zeros_like(w)
+    lr = np.array([0.05], np.float32)
+    mu = np.array([0.9], np.float32)
+    out = renee_chunk_update(w, mom, x, y, lr, mu, np.array([1024.0], np.float32))
+    refout = ref.renee_chunk_update_ref(w, mom, x, y, lr[0], 0.9, 1024.0, 0)
+    for name, a, b_ in zip(["w", "mom", "xg", "loss", "of"], out, refout):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+    assert float(out[4][0]) == 0.0
+    # absurd loss scale -> guaranteed FP16 overflow -> flag fires
+    out2 = renee_chunk_update(w, mom, x, y, lr, mu, np.array([1e9], np.float32))
+    assert float(out2[4][0]) == 1.0
+
+
+def test_fp8_weights_on_e4m3_grid():
+    w, x, y = make_problem(512, 64, 8)
+    w = np.asarray(quantize_rne(w, E4M3))
+    out = xmc_chunk_update(w, x, y, *SCALARS(0.05, 5, 0.0), cfg="fp8")
+    wn = np.asarray(out[0])
+    np.testing.assert_array_equal(wn, np.asarray(quantize_rne(wn, E4M3)))
+    assert np.abs(wn).max() <= 448.0

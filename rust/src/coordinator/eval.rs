@@ -1,0 +1,163 @@
+//! Chunked evaluation: stream label chunks through the `cls_fwd` scoring
+//! executable and fold into per-row running top-k, then compute P@k /
+//! PSP@k.  Mirrors the paper's protocol (Appendix A) without ever holding
+//! a full [n, L] logit matrix.
+
+use anyhow::{bail, Result};
+
+use crate::data::{propensity::propensities, Dataset, SEQ_LEN};
+use crate::metrics::{EvalAccum, TopK};
+use crate::runtime::{to_vec_f32, Arg, Runtime};
+
+use super::trainer::Trainer;
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalReport {
+    pub p: [f64; 3],
+    pub psp: [f64; 3],
+    pub n: usize,
+    pub secs: f64,
+}
+
+impl EvalReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "P@1 {:.2}  P@3 {:.2}  P@5 {:.2} | PSP@1 {:.2}  PSP@3 {:.2}  PSP@5 {:.2} ({} rows, {:.1}s)",
+            self.p[0], self.p[1], self.p[2],
+            self.psp[0], self.psp[1], self.psp[2],
+            self.n, self.secs,
+        )
+    }
+}
+
+/// Scoring chunk size: the lowered `cls_fwd_*` artifact width.
+pub const SCORE_LC: usize = 1024;
+
+/// Evaluate the trainer's classifier on the test split.
+/// `max_rows` bounds eval cost for inner-loop sweeps (0 = all).
+pub fn evaluate(
+    rt: &mut Runtime,
+    tr: &Trainer,
+    ds: &Dataset,
+    max_rows: usize,
+) -> Result<EvalReport> {
+    let t0 = std::time::Instant::now();
+    let b = tr.batch;
+    let d = tr.d;
+    let l = ds.profile.labels;
+    if tr.l_pad % SCORE_LC != 0 {
+        bail!("l_pad {} not a multiple of scoring chunk {SCORE_LC}", tr.l_pad);
+    }
+    let art = format!("cls_fwd_{SCORE_LC}");
+    let prop = propensities(&ds.label_freq, ds.train.n);
+
+    let n_eval = if max_rows == 0 { ds.test.n } else { ds.test.n.min(max_rows) };
+    let mut accum = EvalAccum::default();
+
+    let enc_cfg = tr.cfg.enc_override.unwrap_or(tr.cfg.precision.enc_cfg());
+    let enc_art = format!("enc_fwd_{enc_cfg}");
+
+    let mut row0 = 0;
+    while row0 < n_eval {
+        let rows: Vec<usize> = (0..b).map(|i| (row0 + i).min(ds.test.n - 1)).collect();
+        let valid = b.min(n_eval - row0);
+        // encoder forward (no dropout at eval)
+        let mut tokens = Vec::with_capacity(b * SEQ_LEN);
+        for &r in &rows {
+            tokens.extend_from_slice(&ds.test.tokens[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
+        }
+        let emb_out = rt.exec(
+            &enc_art,
+            &[
+                Arg::F32(&tr.enc_p),
+                Arg::I32(&tokens),
+                Arg::I32(&[0]),
+                Arg::F32(&[0.0]),
+            ],
+        )?;
+        let emb = to_vec_f32(&emb_out[0])?;
+
+        // stream label chunks, maintain running top-k per row
+        let mut topks: Vec<TopK> = (0..b).map(|_| TopK::new(5)).collect();
+        for chunk in 0..tr.l_pad / SCORE_LC {
+            let wslice = &tr.w[chunk * SCORE_LC * d..(chunk + 1) * SCORE_LC * d];
+            let outs = rt.exec(&art, &[Arg::F32(wslice), Arg::F32(&emb)])?;
+            let logits = to_vec_f32(&outs[0])?; // [b, SCORE_LC]
+            for (bi, tk) in topks.iter_mut().enumerate() {
+                let base = bi * SCORE_LC;
+                for j in 0..SCORE_LC {
+                    let row_idx = chunk * SCORE_LC + j;
+                    if row_idx >= l {
+                        break; // padding rows
+                    }
+                    // map W row back to the true label id (head-Kahan
+                    // permutes rows)
+                    let lab = tr.label_order[row_idx];
+                    tk.push(logits[base + j], lab);
+                }
+            }
+        }
+
+        for bi in 0..valid {
+            let r = rows[bi];
+            let mut rel: Vec<u32> = ds.test.labels.row(r).to_vec();
+            rel.sort_unstable();
+            accum.add(&topks[bi].labels(), &rel, &prop);
+        }
+        row0 += valid;
+    }
+
+    Ok(EvalReport {
+        p: [accum.p_at(0), accum.p_at(1), accum.p_at(2)],
+        psp: [accum.psp_at(0), accum.psp_at(1), accum.psp_at(2)],
+        n: accum.n,
+        secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Gradient/weight/input exponent histograms via the `grad_hist_2048`
+/// diagnostic executable (Fig 2b / Fig 5).  Uses the first 2048 classifier
+/// rows and one training batch.
+pub fn diagnostics_hist(
+    rt: &mut Runtime,
+    tr: &Trainer,
+    ds: &Dataset,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let b = tr.batch;
+    let d = tr.d;
+    let lc = 2048.min(tr.l_pad);
+    if lc != 2048 {
+        bail!("grad_hist artifact needs >= 2048 labels (have {})", tr.l_pad);
+    }
+    let rows: Vec<u32> = (0..b as u32).collect();
+    let tokens = tr.batch_tokens(ds, &rows);
+    let enc_cfg = tr.cfg.enc_override.unwrap_or(tr.cfg.precision.enc_cfg());
+    let emb_out = rt.exec(
+        &format!("enc_fwd_{enc_cfg}"),
+        &[
+            Arg::F32(&tr.enc_p),
+            Arg::I32(&tokens),
+            Arg::I32(&[1]),
+            Arg::F32(&[0.0]),
+        ],
+    )?;
+    let mut y = vec![0.0f32; b * lc];
+    for (bi, &r) in rows.iter().enumerate() {
+        for &lab in ds.train.labels.row(r as usize) {
+            let row = tr.label_row[lab as usize] as usize;
+            if row < lc {
+                y[bi * lc + row] = 1.0;
+            }
+        }
+    }
+    let emb = to_vec_f32(&emb_out[0])?;
+    let outs = rt.exec(
+        "grad_hist_2048",
+        &[Arg::F32(&tr.w[..lc * d]), Arg::F32(&emb), Arg::F32(&y)],
+    )?;
+    Ok((
+        to_vec_f32(&outs[0])?,
+        to_vec_f32(&outs[1])?,
+        to_vec_f32(&outs[2])?,
+    ))
+}

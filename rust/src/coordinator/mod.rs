@@ -1,0 +1,29 @@
+//! L3 coordinator: the training loop that realizes the paper's system
+//! contribution on top of the AOT executables.
+//!
+//! One training step (the paper's Sec. 4.2 reordered flow):
+//!
+//! ```text
+//! 1. enc_fwd            tokens -> pooled embedding X            (L2 exe)
+//! 2. for each label chunk c in 0..k:                            (Sec 4.2)
+//!        cls_chunk_*    (W_c, X, Y_c) -> (W_c', Xgrad_c, ...)   (L1 exe)
+//!        W_c <- W_c'    (host array = the "HBM" weight store)
+//!        Xgrad += Xgrad_c
+//! 3. enc_bwd            recompute fwd + VJP(Xgrad) + Kahan-AdamW (L2 exe)
+//! ```
+//!
+//! The classifier's weight gradient never exists outside the kernel's
+//! VMEM tile (gradient fusion); the only full-width transients are one
+//! chunk of logits inside the executable and the [b, d] input gradient.
+//!
+//! Precision policies (`Precision`) select which executables run and how
+//! the host treats the weight store; the Renee policy adds the loss-scale
+//! manager with genuine FP16 overflow detection.
+
+pub mod eval;
+pub mod schedule;
+pub mod trainer;
+
+pub use eval::{evaluate, EvalReport};
+pub use schedule::LrSchedule;
+pub use trainer::{EpochStats, Precision, TrainConfig, Trainer};

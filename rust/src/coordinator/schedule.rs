@@ -1,0 +1,106 @@
+//! Learning-rate schedules (paper Table 9: every configuration trains with
+//! linear warmup; the encoder additionally decays).
+//!
+//! `LrSchedule` is evaluated per step by the Trainer for both the encoder
+//! and classifier learning rates.
+
+/// Linear warmup to `base`, then optional linear decay to `final_frac *
+/// base` over the remaining steps.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub warmup_steps: u64,
+    /// Total steps for the decay phase end (0 = constant after warmup).
+    pub total_steps: u64,
+    /// LR fraction at `total_steps` (ignored if total_steps == 0).
+    pub final_frac: f32,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule { base, warmup_steps: 0, total_steps: 0, final_frac: 1.0 }
+    }
+
+    pub fn warmup(base: f32, warmup_steps: u64) -> Self {
+        LrSchedule { base, warmup_steps, total_steps: 0, final_frac: 1.0 }
+    }
+
+    pub fn warmup_decay(base: f32, warmup_steps: u64, total_steps: u64, final_frac: f32) -> Self {
+        LrSchedule { base, warmup_steps, total_steps, final_frac }
+    }
+
+    /// LR at a (0-based) step index.
+    pub fn at(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            // linear ramp from base/warmup to base (never exactly 0)
+            return self.base * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.total_steps > self.warmup_steps && step >= self.warmup_steps {
+            let span = (self.total_steps - self.warmup_steps) as f32;
+            let t = ((step - self.warmup_steps) as f32 / span).min(1.0);
+            return self.base * (1.0 - t * (1.0 - self.final_frac));
+        }
+        self.base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.05);
+        for step in [0u64, 1, 100, 1_000_000] {
+            assert_eq!(s.at(step), 0.05);
+        }
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::warmup(1.0, 10);
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 1.0);
+        assert_eq!(s.at(999), 1.0);
+    }
+
+    #[test]
+    fn decay_reaches_final_fraction() {
+        let s = LrSchedule::warmup_decay(1.0, 10, 110, 0.1);
+        assert_eq!(s.at(9), 1.0);
+        assert!((s.at(60) - 0.55).abs() < 1e-5);
+        assert!((s.at(110) - 0.1).abs() < 1e-6);
+        assert!((s.at(10_000) - 0.1).abs() < 1e-6); // clamped
+    }
+
+    #[test]
+    fn schedule_properties() {
+        prop_check("lr_schedule", 200, |rng| {
+            let base = 0.001 + rng.uniform_f32();
+            let warm = rng.below(1000) as u64;
+            let total = warm + rng.below(5000) as u64;
+            let frac = 0.05 + 0.9 * rng.uniform_f32();
+            let s = LrSchedule::warmup_decay(base, warm, total, frac);
+            let mut prev = 0.0f32;
+            for step in 0..warm {
+                let lr = s.at(step);
+                // warmup: positive, nondecreasing, bounded by base
+                if lr <= 0.0 || lr < prev - 1e-7 || lr > base + 1e-7 {
+                    return Err(format!("warmup lr {lr} at {step}"));
+                }
+                prev = lr;
+            }
+            for &step in &[warm, total, total + 10] {
+                let lr = s.at(step);
+                let lo = base * frac.min(1.0) - 1e-6;
+                if lr < lo || lr > base + 1e-7 {
+                    return Err(format!("lr {lr} out of [{lo}, {base}] at {step}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,447 @@
+//! Synthetic XMC dataset substrate (DESIGN.md "Substitutions").
+//!
+//! The paper evaluates on public XMC benchmarks (Amazon-670K, Wiki-500K,
+//! Amazon-3M, ...) plus a contributed 8.6M-label dataset.  Those are text
+//! corpora we cannot ship; the experiments, however, probe *numeric* and
+//! *memory* behaviour, which depends on the label-space geometry (size,
+//! long-tailed Zipf frequencies, labels-per-instance) rather than English.
+//! This module generates learnable multi-label problems with the same
+//! geometry, scaled to CPU:
+//!
+//! * label frequencies follow a Zipf(a) law -> head/tail structure, which
+//!   drives PSP@k (Table 7) and the "Kahan for head labels" policy (Table 6);
+//! * every label carries a deterministic 3-token *signature*; an instance's
+//!   token sequence is built from its labels' signatures plus noise, so a
+//!   transformer encoder can actually learn the mapping (P@k well above
+//!   chance, loss decreasing — the end-to-end signal the harness checks);
+//! * per-dataset profiles mirror Table 1's (N, L, N', Lbar, Lhat) shape at
+//!   1/many scale, and carry the *paper-scale* parameters used by the
+//!   memory model so the GiB columns are computed at true size.
+
+pub mod propensity;
+
+use crate::util::Rng;
+
+pub const SEQ_LEN: usize = 16;
+pub const VOCAB: usize = 1024;
+const SIG_TOKENS: usize = 3;
+
+/// Compressed sparse rows of instance -> labels.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.indices[self.indptr[i] as usize..self.indptr[i + 1] as usize]
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+}
+
+/// One generated split.
+#[derive(Clone, Debug)]
+pub struct Split {
+    /// Token ids, row-major [n, SEQ_LEN]; 0 = PAD.
+    pub tokens: Vec<i32>,
+    pub labels: Csr,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub profile: Profile,
+    pub train: Split,
+    pub test: Split,
+    /// Training-set frequency of each label (for propensities & head split).
+    pub label_freq: Vec<u32>,
+}
+
+/// Scaled stand-in for one paper dataset.  `paper_*` fields carry the
+/// original scale for the analytic memory model (Fig 4, M_tr columns).
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: &'static str,
+    pub paper_name: &'static str,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub labels: usize,
+    /// Average relevant labels per instance (paper's Lbar).
+    pub avg_labels: f64,
+    /// Zipf exponent for label popularity.
+    pub zipf_a: f64,
+    // paper-scale parameters (for the memory model)
+    pub paper_n: u64,
+    pub paper_labels: u64,
+    pub paper_n_test: u64,
+    pub paper_lbar: f64,
+    pub paper_embed_dim: u64,
+    /// Training batch size the paper used for this dataset (Table 9).
+    pub paper_batch: u64,
+    /// Sequence length the paper used (Table 9).
+    pub paper_seq: u64,
+    /// BERT-base (110M params) or DistilBERT (66M) per Table 2.
+    pub paper_encoder: &'static str,
+}
+
+/// The eight paper datasets (Table 1), scaled, plus a tiny quickstart.
+pub fn profiles() -> Vec<Profile> {
+    let p = |name,
+             paper_name,
+             n_train,
+             n_test,
+             labels,
+             avg_labels,
+             zipf_a,
+             paper_n: u64,
+             paper_labels: u64,
+             paper_n_test: u64,
+             paper_lbar: f64,
+             paper_batch: u64,
+             paper_seq: u64,
+             paper_encoder| Profile {
+        name,
+        paper_name,
+        n_train,
+        n_test,
+        labels,
+        avg_labels,
+        zipf_a,
+        paper_n,
+        paper_labels,
+        paper_n_test,
+        paper_lbar,
+        paper_embed_dim: 768,
+        paper_batch,
+        paper_seq,
+        paper_encoder,
+    };
+    vec![
+        p("quickstart", "(toy)", 1024, 512, 1024, 3.0, 0.8,
+          0, 1024, 0, 3.0, 128, 128, "BERT-Base"),
+        p("wiki500k", "Wiki-500K", 3072, 1024, 4096, 4.75, 0.9,
+          1_779_881, 501_070, 769_421, 4.75, 128, 128, "BERT-Base"),
+        p("amazontitles670k", "AmazonTitles-670K", 2048, 1024, 4096, 5.39, 1.0,
+          485_176, 670_091, 150_875, 5.39, 256, 32, "BERT-Base"),
+        p("amazon670k", "Amazon-670K", 2048, 1024, 4096, 5.45, 1.0,
+          490_449, 670_091, 153_025, 5.45, 64, 128, "BERT-Base"),
+        p("amazon3m", "Amazon-3M", 4096, 1024, 8192, 12.0, 0.75,
+          1_717_899, 2_812_281, 742_507, 36.17, 128, 128, "BERT-Base"),
+        p("lf-amazontitles131k", "LF-AmazonTitles-131K", 2048, 1024, 2048, 5.15, 1.0,
+          294_805, 131_073, 134_835, 5.15, 512, 32, "Distil-BERT"),
+        p("lf-wikiseealso320k", "LF-WikiSeeAlso-320K", 2048, 1024, 4096, 4.67, 1.0,
+          693_082, 312_330, 177_515, 4.67, 128, 256, "Distil-BERT"),
+        p("lf-amazontitles1.3m", "LF-AmazonTitles-1.3M", 3072, 1024, 8192, 8.0, 0.85,
+          2_248_619, 1_305_265, 970_237, 22.2, 512, 32, "Distil-BERT"),
+        p("lf-paper2kw8.6m", "LF-Paper2Keywords-8.6M", 4096, 1024, 16384, 9.03, 1.1,
+          2_020_621, 8_623_847, 2_020_621, 9.03, 128, 128, "Distil-BERT"),
+    ]
+}
+
+pub fn profile(name: &str) -> Option<Profile> {
+    profiles().into_iter().find(|p| p.name == name)
+}
+
+/// Labels per confusable sibling group (see `label_signature`).
+pub const SIB_GROUP: u32 = 4;
+
+/// Deterministic token signature of a label: SIG_TOKENS ids in [1, VOCAB).
+///
+/// The first two tokens are shared by the label's sibling group of
+/// `SIB_GROUP` labels; only the third token distinguishes siblings.  This
+/// is what makes the scaled task behave like real XMC: separating a label
+/// from its near-duplicates requires *negative* evidence, so shortlist
+/// sampling (which rarely draws the specific sibling) underperforms
+/// end-to-end training — the paper's Table 2/8 ordering.
+pub fn label_signature(label: u32) -> [i32; SIG_TOKENS] {
+    let mut out = [0i32; SIG_TOKENS];
+    for (j, o) in out.iter_mut().enumerate() {
+        let key = if j < 2 { label / SIB_GROUP } else { label };
+        let h = crate::numerics::hash_u32(key, 0x516 ^ ((j as u32) << 8));
+        *o = 1 + (h % (VOCAB as u32 - 1)) as i32;
+    }
+    out
+}
+
+/// Zipf sampler over [0, n) with exponent a: weight(i) = 1/(i+1)^a,
+/// inverse-CDF over a precomputed cumulative table.
+pub struct ZipfSampler {
+    cum: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, a: f64) -> Self {
+        let mut cum = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(a);
+            cum.push(acc);
+        }
+        let total = acc;
+        for c in cum.iter_mut() {
+            *c /= total;
+        }
+        ZipfSampler { cum }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        match self.cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cum.len() - 1),
+        }
+    }
+}
+
+fn gen_split(
+    profile: &Profile,
+    zipf: &ZipfSampler,
+    perm: &[u32],
+    n: usize,
+    rng: &mut Rng,
+) -> Split {
+    let mut tokens = Vec::with_capacity(n * SEQ_LEN);
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::new();
+    indptr.push(0u32);
+    for _ in 0..n {
+        // number of relevant labels ~ geometric-ish around avg_labels
+        let mut k = 1usize;
+        while (k as f64) < profile.avg_labels - 0.5
+            || (rng.uniform() < 0.35 && (k as f64) < 3.0 * profile.avg_labels)
+        {
+            k += 1;
+            if rng.uniform() < 1.0 / profile.avg_labels {
+                break;
+            }
+        }
+        let k = k.min(profile.labels).max(1);
+        // draw k distinct labels, popularity-biased through the permuted
+        // zipf (perm decouples label id from popularity rank)
+        let mut labs: Vec<u32> = Vec::with_capacity(k);
+        let mut guard = 0;
+        while labs.len() < k && guard < 50 * k + 50 {
+            let l = perm[zipf.sample(rng)];
+            if !labs.contains(&l) {
+                labs.push(l);
+            }
+            guard += 1;
+        }
+        labs.sort_unstable();
+        // tokens: signatures of the labels, shuffled, + noise, cut to SEQ_LEN
+        let mut toks: Vec<i32> = Vec::with_capacity(labs.len() * SIG_TOKENS);
+        for &l in &labs {
+            toks.extend_from_slice(&label_signature(l));
+        }
+        rng.shuffle(&mut toks);
+        toks.truncate(SEQ_LEN);
+        while toks.len() < SEQ_LEN {
+            // pad with noise tokens (low-information filler), keep 1+ pad
+            if toks.len() + 1 < SEQ_LEN && rng.uniform() < 0.3 {
+                toks.push(1 + (rng.next_u32() % (VOCAB as u32 - 1)) as i32);
+            } else {
+                toks.push(0);
+            }
+        }
+        tokens.extend_from_slice(&toks);
+        indices.extend_from_slice(&labs);
+        indptr.push(indices.len() as u32);
+    }
+    Split { tokens, labels: Csr { indptr, indices }, n }
+}
+
+/// Generate train + test splits for a profile, deterministically from
+/// `seed`.  Train and test share the label->signature mapping and the
+/// popularity law, so the test distribution matches train (Table 1's
+/// N'/Lhat shape).
+pub fn generate(profile: &Profile, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    let zipf = ZipfSampler::new(profile.labels, profile.zipf_a);
+    // random permutation so label id != popularity rank
+    let mut perm: Vec<u32> = (0..profile.labels as u32).collect();
+    rng.shuffle(&mut perm);
+    let train = gen_split(profile, &zipf, &perm, profile.n_train, &mut rng);
+    let test = gen_split(profile, &zipf, &perm, profile.n_test, &mut rng);
+    let mut label_freq = vec![0u32; profile.labels];
+    for &l in &train.labels.indices {
+        label_freq[l as usize] += 1;
+    }
+    Dataset { profile: profile.clone(), train, test, label_freq }
+}
+
+impl Dataset {
+    /// Table 1 statistics of the generated data: (N, L, N', Lbar, Lhat).
+    pub fn stats(&self) -> (usize, usize, usize, f64, f64) {
+        let n = self.train.n;
+        let l = self.profile.labels;
+        let lbar = self.train.labels.indices.len() as f64 / n as f64;
+        let used = self.label_freq.iter().filter(|&&f| f > 0).count().max(1);
+        let lhat = self.train.labels.indices.len() as f64 / used as f64;
+        (n, l, self.test.n, lbar, lhat)
+    }
+
+    /// Label ids sorted by descending training frequency (head first) —
+    /// used by the Table 6 head-Kahan policy.
+    pub fn labels_by_freq(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..self.profile.labels as u32).collect();
+        ids.sort_by_key(|&l| std::cmp::Reverse(self.label_freq[l as usize]));
+        ids
+    }
+}
+
+/// Mini-batch iterator with epoch shuffling; pads the last batch by
+/// wrapping (a padded row's loss/gradient still flows — harmless for
+/// training, and eval uses explicit valid-row counts).
+pub struct Batcher {
+    order: Vec<u32>,
+    pos: usize,
+    pub batch: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut rng = Rng::new(seed ^ 0xBA7C);
+        rng.shuffle(&mut order);
+        Batcher { order, pos: 0, batch }
+    }
+
+    /// Next batch of row indices; `None` when the epoch is exhausted.
+    /// The final short batch wraps around to fill `batch` rows, and
+    /// `valid` reports how many are genuine.
+    pub fn next_batch(&mut self) -> Option<(Vec<u32>, usize)> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let n = self.order.len();
+        let valid = self.batch.min(n - self.pos);
+        let mut rows = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            rows.push(self.order[(self.pos + i) % n]);
+        }
+        self.pos += valid;
+        Some((rows, valid))
+    }
+
+    pub fn reshuffle(&mut self, seed: u64) {
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        rng.shuffle(&mut self.order);
+        self.pos = 0;
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len().div_ceil(self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    #[test]
+    fn profiles_cover_paper_table1() {
+        let ps = profiles();
+        assert_eq!(ps.len(), 9);
+        let a3m = profile("amazon3m").unwrap();
+        assert_eq!(a3m.paper_labels, 2_812_281);
+        let p86 = profile("lf-paper2kw8.6m").unwrap();
+        assert_eq!(p86.paper_labels, 8_623_847);
+    }
+
+    #[test]
+    fn generate_quickstart_shapes() {
+        let p = profile("quickstart").unwrap();
+        let ds = generate(&p, 0);
+        assert_eq!(ds.train.tokens.len(), p.n_train * SEQ_LEN);
+        assert_eq!(ds.train.labels.n_rows(), p.n_train);
+        assert_eq!(ds.test.labels.n_rows(), p.n_test);
+        let (_, _, _, lbar, _) = ds.stats();
+        assert!(lbar > 1.0 && lbar < 3.0 * p.avg_labels, "lbar={lbar}");
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let p = profile("quickstart").unwrap();
+        let a = generate(&p, 7);
+        let b = generate(&p, 7);
+        assert_eq!(a.train.tokens, b.train.tokens);
+        assert_eq!(a.train.labels.indices, b.train.labels.indices);
+        let c = generate(&p, 8);
+        assert_ne!(a.train.tokens, c.train.tokens);
+    }
+
+    #[test]
+    fn labels_long_tailed() {
+        let p = profile("lf-amazontitles131k").unwrap();
+        let ds = generate(&p, 0);
+        let by_freq = ds.labels_by_freq();
+        let head: u64 = by_freq[..p.labels / 10]
+            .iter()
+            .map(|&l| ds.label_freq[l as usize] as u64)
+            .sum();
+        let total: u64 = ds.label_freq.iter().map(|&f| f as u64).sum();
+        assert!(
+            head as f64 > 0.5 * total as f64,
+            "top-10% labels should hold >50% of mass (got {head}/{total})"
+        );
+    }
+
+    #[test]
+    fn signatures_learnable() {
+        // signatures are deterministic and rarely collide entirely
+        let a = label_signature(1);
+        assert_eq!(a, label_signature(1));
+        let mut coll = 0;
+        for l in 0..500u32 {
+            if label_signature(l) == label_signature(l + 1) {
+                coll += 1;
+            }
+        }
+        assert!(coll < 3);
+        assert!(a.iter().all(|&t| t >= 1 && t < VOCAB as i32));
+    }
+
+    #[test]
+    fn batcher_exact_cover() {
+        prop_check("batcher_cover", 50, |rng| {
+            let n = 10 + rng.below(500);
+            let batch = 1 + rng.below(64);
+            let mut b = Batcher::new(n, batch, rng.next_u64());
+            let mut seen = vec![0u32; n];
+            let mut batches = 0;
+            while let Some((rows, valid)) = b.next_batch() {
+                if rows.len() != batch {
+                    return Err(format!("batch len {}", rows.len()));
+                }
+                for &r in &rows[..valid] {
+                    seen[r as usize] += 1;
+                }
+                batches += 1;
+            }
+            if batches != n.div_ceil(batch) {
+                return Err(format!("{batches} batches for n={n} b={batch}"));
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err("not an exact cover".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zipf_monotone() {
+        let z = ZipfSampler::new(1000, 1.0);
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..20000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[100]);
+        assert!(counts[0] > 20 * counts[900].max(1) / 2);
+    }
+}

@@ -1,0 +1,55 @@
+//! Propensity scores for PSP@k (Jain et al., KDD 2016), as used by the
+//! paper's Table 7 / Table 8.
+//!
+//! p_l = 1 / (1 + C * exp(-A * ln(N_l + B))),  C = (ln N - 1) * (B + 1)^A
+//!
+//! with the standard A = 0.55, B = 1.5 (the Extreme Classification
+//! Repository defaults used for the Amazon/Wiki benchmarks).
+
+pub const A: f64 = 0.55;
+pub const B: f64 = 1.5;
+
+/// Per-label propensities from training-set label frequencies.
+pub fn propensities(label_freq: &[u32], n_train: usize) -> Vec<f64> {
+    let c = ((n_train.max(2) as f64).ln() - 1.0) * (B + 1.0).powf(A);
+    label_freq
+        .iter()
+        .map(|&nl| 1.0 / (1.0 + c * (-(A) * ((nl as f64) + B).ln()).exp()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    #[test]
+    fn in_unit_interval() {
+        let p = propensities(&[0, 1, 5, 100, 10_000], 100_000);
+        for &x in &p {
+            assert!(x > 0.0 && x <= 1.0, "{x}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_frequency() {
+        prop_check("propensity_monotone", 100, |rng| {
+            let n = 1000 + rng.below(100_000);
+            let f1 = rng.below(1000) as u32;
+            let f2 = f1 + 1 + rng.below(1000) as u32;
+            let p = propensities(&[f1, f2], n);
+            if p[0] > p[1] {
+                return Err(format!("p({f1})={} > p({f2})={}", p[0], p[1]));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn head_labels_near_one() {
+        let p = propensities(&[1_000_000], 1_000_000);
+        assert!(p[0] > 0.9);
+        let p = propensities(&[0], 1_000_000);
+        assert!(p[0] < 0.3, "tail propensity should be small, got {}", p[0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! ELMO: Efficiency via Low-precision and Peak Memory Optimization in Large
+//! Output Spaces (ICML 2025) — a three-layer Rust + JAX + Pallas
+//! reproduction.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): training coordinator — chunk scheduler, precision
+//!   policies, data pipeline, metrics, memory model, CLI.
+//! * L2 (`python/compile/model.py`): jax encoder fwd/bwd, AOT-lowered to
+//!   HLO text under `artifacts/`.
+//! * L1 (`python/compile/kernels/`): Pallas kernels — the fused XMC
+//!   classifier update (Algorithm 1), the parametric quantizer, Kahan-AdamW.
+//!
+//! Python never runs on the training path: `runtime` loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) once; afterwards the
+//! whole training loop is rust calling compiled executables.
+
+pub mod coordinator;
+pub mod data;
+pub mod memmodel;
+pub mod metrics;
+pub mod numerics;
+pub mod runtime;
+pub mod util;

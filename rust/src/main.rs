@@ -1,0 +1,253 @@
+//! `elmo` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train      train one (dataset, precision) config, print loss + P@k
+//!   eval       evaluate a checkpointless fresh run (smoke)
+//!   datasets   print Table-1-style statistics of the synthetic profiles
+//!   memtrace   print the Fig-3-style memory timeline for a method
+//!   sweep      Fig-2a (E, M) bit-width sweep on a small profile
+//!
+//! Hand-rolled arg parsing (no clap offline; see DESIGN.md Substitutions).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::data;
+use elmo::memmodel::{self, MemParams, Method};
+use elmo::runtime::Runtime;
+use elmo::util::{gib, mmss, print_table};
+
+const USAGE: &str = "\
+elmo — ELMO (ICML 2025) reproduction CLI
+
+USAGE:
+  elmo train   [--profile NAME] [--precision fp32|bf16|fp8|renee|sampled|fp8-headkahan]
+               [--epochs N] [--chunk LC] [--lr-cls F] [--lr-enc F]
+               [--dropout-emb F] [--dropout-cls F] [--seed N]
+               [--eval-rows N] [--artifacts DIR]
+  elmo datasets
+  elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
+  elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
+  elmo help
+";
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?;
+        let val = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+        out.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn flag<T: std::str::FromStr>(f: &HashMap<String, String>, k: &str, default: T) -> Result<T> {
+    match f.get(k) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("bad value `{v}` for --{k}")),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&parse_flags(&args[1..])?),
+        Some("datasets") => cmd_datasets(),
+        Some("memtrace") => cmd_memtrace(&parse_flags(&args[1..])?),
+        Some("sweep") => cmd_sweep(&parse_flags(&args[1..])?),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
+    let art: String = flag(f, "artifacts", "artifacts".to_string())?;
+    elmo::coordinator::trainer::require_artifacts(&art)?;
+    let profile_name: String = flag(f, "profile", "quickstart".to_string())?;
+    let prof = data::profile(&profile_name)
+        .ok_or_else(|| anyhow!("unknown profile `{profile_name}` (see `elmo datasets`)"))?;
+    let precision = Precision::parse(&flag(f, "precision", "bf16".to_string())?)?;
+    let cfg = TrainConfig {
+        precision,
+        chunk_size: flag(f, "chunk", 1024usize)?,
+        lr_cls: flag(f, "lr-cls", 0.05f32)?,
+        lr_enc: flag(f, "lr-enc", 1e-3f32)?,
+        dropout_emb: flag(f, "dropout-emb", 0.3f32)?,
+        dropout_cls: flag(f, "dropout-cls", 0.0f32)?,
+        epochs: flag(f, "epochs", 5usize)?,
+        seed: flag(f, "seed", 0u64)?,
+        momentum: flag(f, "momentum", 0.0f32)?,
+        init_loss_scale: flag(f, "loss-scale", 512.0f32)?,
+        ..TrainConfig::default()
+    };
+    let eval_rows: usize = flag(f, "eval-rows", 512usize)?;
+
+    println!(
+        "# ELMO train: profile={} precision={} chunk={} epochs={}",
+        prof.name,
+        precision.label(),
+        cfg.chunk_size,
+        cfg.epochs
+    );
+    let ds = data::generate(&prof, cfg.seed);
+    let (n, l, nt, lbar, lhat) = ds.stats();
+    println!("# data: N={n} L={l} N'={nt} Lbar={lbar:.2} Lhat={lhat:.2}");
+
+    let mut rt = Runtime::new(&art)?;
+    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), &art)?;
+    println!("# chunks per step: {}", tr.chunks());
+
+    for epoch in 0..cfg.epochs {
+        let st = tr.run_epoch(&mut rt, &ds, epoch)?;
+        println!(
+            "epoch {:>3}  loss {:.5}  steps {}  time {}  {}",
+            epoch,
+            st.mean_loss,
+            st.steps,
+            mmss(st.secs),
+            if precision == Precision::Renee {
+                format!("oflow {} scale {}", st.overflow_steps, st.loss_scale)
+            } else {
+                String::new()
+            }
+        );
+    }
+    let rep = evaluate(&mut rt, &tr, &ds, eval_rows)?;
+    println!("eval: {}", rep.summary());
+    // paper-scale memory for this (dataset, method) from the memory model
+    let method = match precision {
+        Precision::Renee => Method::Renee,
+        Precision::Bf16 => Method::ElmoBf16,
+        Precision::Fp8 | Precision::Fp8HeadKahan => Method::ElmoFp8,
+        Precision::Fp32 => Method::Fp32,
+        Precision::Sampled => Method::Sampled,
+    };
+    if prof.paper_labels > 0 {
+        let mp = MemParams::from_profile(&prof, tr.chunks() as u64);
+        println!(
+            "paper-scale peak memory (model): {} GiB [{}]",
+            gib(memmodel::schedule(method, &mp).peak()),
+            method.label()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut rows = Vec::new();
+    for p in data::profiles() {
+        let ds = data::generate(&p, 0);
+        let (n, l, nt, lbar, lhat) = ds.stats();
+        rows.push(vec![
+            p.name.to_string(),
+            p.paper_name.to_string(),
+            n.to_string(),
+            l.to_string(),
+            nt.to_string(),
+            format!("{lbar:.2}"),
+            format!("{lhat:.2}"),
+            p.paper_labels.to_string(),
+        ]);
+    }
+    print_table(
+        &["profile", "paper dataset", "N", "L", "N'", "Lbar", "Lhat", "paper L"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_memtrace(f: &HashMap<String, String>) -> Result<()> {
+    let method = match flag(f, "method", "renee".to_string())?.as_str() {
+        "renee" => Method::Renee,
+        "bf16" => Method::ElmoBf16,
+        "fp8" => Method::ElmoFp8,
+        "fp32" => Method::Fp32,
+        other => bail!("unknown method `{other}`"),
+    };
+    let mut p = MemParams::paper_example();
+    p.labels = flag(f, "labels", p.labels)?;
+    p.chunks = flag(f, "chunks", p.chunks)?;
+    let tr = memmodel::schedule(method, &p);
+    println!(
+        "# {} @ {} labels, b={}, chunks={}",
+        method.label(),
+        p.labels,
+        p.batch,
+        p.chunks
+    );
+    let rows: Vec<Vec<String>> = tr
+        .series()
+        .into_iter()
+        .map(|(label, bytes)| vec![label, gib(bytes)])
+        .collect();
+    print_table(&["event", "live GiB"], &rows);
+    println!("peak: {} GiB", gib(tr.peak()));
+    Ok(())
+}
+
+fn cmd_sweep(f: &HashMap<String, String>) -> Result<()> {
+    let art: String = flag(f, "artifacts", "artifacts".to_string())?;
+    elmo::coordinator::trainer::require_artifacts(&art)?;
+    let profile_name: String = flag(f, "profile", "quickstart".to_string())?;
+    let prof = data::profile(&profile_name)
+        .ok_or_else(|| anyhow!("unknown profile `{profile_name}`"))?;
+    let epochs: usize = flag(f, "epochs", 2usize)?;
+    let ds = data::generate(&prof, 0);
+    let mut rt = Runtime::new(&art)?;
+    let mut rows = Vec::new();
+    for (e_bits, m_bits) in [(5u32, 7u32), (4, 3), (3, 3), (2, 3)] {
+        for sr in [false, true] {
+            let cfg = TrainConfig {
+                precision: Precision::Fp32,
+                epochs,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(&rt, &ds, cfg, &art)?;
+            for epoch in 0..epochs {
+                // quantize after every epoch: emulate storing the
+                // classifier in (E, M) — the Fig 2a protocol at
+                // epoch granularity is refined per-step in the bench
+                let mut b = data::Batcher::new(ds.train.n, tr.batch, epoch as u64);
+                while let Some((rws, _)) = b.next_batch() {
+                    tr.step(&mut rt, &ds, &rws)?;
+                    tr.quantize_classifier(e_bits, m_bits, sr);
+                }
+            }
+            let rep = evaluate(&mut rt, &tr, &ds, 256)?;
+            rows.push(vec![
+                format!("E{e_bits}M{m_bits}"),
+                if sr { "SR" } else { "RNE" }.into(),
+                format!("{:.2}", rep.p[0]),
+                format!("{:.2}", rep.p[1]),
+                format!("{:.2}", rep.p[2]),
+            ]);
+        }
+    }
+    print_table(&["format", "rounding", "P@1", "P@3", "P@5"], &rows);
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Evaluation metrics: P@k and PSP@k (paper Appendix A), plus the running
+//! top-k selection used by the chunked scorer.
+//!
+//! Scoring never materializes the full [n_test, L] logit matrix: the
+//! coordinator streams label chunks through the `cls_fwd` executable and
+//! folds each chunk into a per-row running top-k — the evaluation-side
+//! analogue of the paper's chunked training.
+
+/// Fixed-capacity running top-k of (score, label) pairs.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub k: usize,
+    /// Sorted descending by score.
+    items: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, items: Vec::with_capacity(k + 1) }
+    }
+
+    pub fn push(&mut self, score: f32, label: u32) {
+        if self.items.len() == self.k
+            && score <= self.items.last().map(|x| x.0).unwrap_or(f32::MIN)
+        {
+            return;
+        }
+        let pos = self
+            .items
+            .partition_point(|&(s, _)| s > score || (s == score && true));
+        self.items.insert(pos, (score, label));
+        self.items.truncate(self.k);
+    }
+
+    pub fn labels(&self) -> Vec<u32> {
+        self.items.iter().map(|&(_, l)| l).collect()
+    }
+
+    pub fn items(&self) -> &[(f32, u32)] {
+        &self.items
+    }
+}
+
+/// Precision@k for one instance: |top_k ∩ relevant| / k.
+pub fn p_at_k(topk: &[u32], relevant: &[u32], k: usize) -> f64 {
+    let hits = topk
+        .iter()
+        .take(k)
+        .filter(|l| relevant.binary_search(l).is_ok())
+        .count();
+    hits as f64 / k as f64
+}
+
+/// Propensity-scored precision@k for one instance (Jain et al. 2016):
+/// sum over predicted relevant labels of 1/p_l, normalized by the best
+/// achievable value (the standard XC-repo normalization).
+pub fn psp_at_k(
+    topk: &[u32],
+    relevant: &[u32],
+    propensity: &[f64],
+    k: usize,
+) -> f64 {
+    let num: f64 = topk
+        .iter()
+        .take(k)
+        .filter(|l| relevant.binary_search(l).is_ok())
+        .map(|&l| 1.0 / propensity[l as usize])
+        .sum();
+    // normalizer: the k largest 1/p over the instance's relevant labels
+    let mut best: Vec<f64> =
+        relevant.iter().map(|&l| 1.0 / propensity[l as usize]).collect();
+    best.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let den: f64 = best.iter().take(k).sum();
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Accumulates P@{1,3,5} and PSP@{1,3,5} over instances.
+#[derive(Clone, Debug, Default)]
+pub struct EvalAccum {
+    pub n: usize,
+    pub p: [f64; 3],
+    pub psp: [f64; 3],
+}
+
+pub const KS: [usize; 3] = [1, 3, 5];
+
+impl EvalAccum {
+    pub fn add(&mut self, topk: &[u32], relevant: &[u32], propensity: &[f64]) {
+        self.n += 1;
+        for (i, &k) in KS.iter().enumerate() {
+            self.p[i] += p_at_k(topk, relevant, k);
+            self.psp[i] += psp_at_k(topk, relevant, propensity, k);
+        }
+    }
+
+    pub fn p_at(&self, i: usize) -> f64 {
+        100.0 * self.p[i] / self.n.max(1) as f64
+    }
+
+    pub fn psp_at(&self, i: usize) -> f64 {
+        100.0 * self.psp[i] / self.n.max(1) as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "P@1 {:.2}  P@3 {:.2}  P@5 {:.2} | PSP@1 {:.2}  PSP@3 {:.2}  PSP@5 {:.2}",
+            self.p_at(0), self.p_at(1), self.p_at(2),
+            self.psp_at(0), self.psp_at(1), self.psp_at(2)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    #[test]
+    fn topk_matches_sort() {
+        prop_check("topk_vs_sort", 100, |rng| {
+            let n = 5 + rng.below(500);
+            let k = 1 + rng.below(10);
+            let scores: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut tk = TopK::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                tk.push(s, i as u32);
+            }
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            let want: Vec<f32> =
+                idx.iter().take(k.min(n)).map(|&i| scores[i]).collect();
+            let got: Vec<f32> = tk.items().iter().map(|&(s, _)| s).collect();
+            if got != want {
+                return Err(format!("{got:?} != {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn p_at_k_basic() {
+        // relevant sorted
+        let rel = vec![2u32, 5, 9];
+        assert_eq!(p_at_k(&[5, 1, 3], &rel, 1), 1.0);
+        assert_eq!(p_at_k(&[1, 5, 3], &rel, 1), 0.0);
+        assert!((p_at_k(&[5, 2, 3], &rel, 3) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psp_weights_tail_up() {
+        // two labels: head (p=0.9), tail (p=0.1). Predicting the tail
+        // correctly scores higher than predicting the head correctly.
+        let prop = vec![0.9, 0.1];
+        let head = psp_at_k(&[0], &[0, 1], &prop, 1);
+        let tail = psp_at_k(&[1], &[0, 1], &prop, 1);
+        assert!(tail > head);
+        // perfect normalization: predicting the single best label = 1.0
+        assert!((psp_at_k(&[1], &[1], &prop, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psp_in_unit_interval() {
+        prop_check("psp_unit", 100, |rng| {
+            let l = 50;
+            let prop: Vec<f64> =
+                (0..l).map(|_| rng.uniform().max(0.01)).collect();
+            let mut rel: Vec<u32> =
+                (0..1 + rng.below(5)).map(|_| rng.below(l) as u32).collect();
+            rel.sort_unstable();
+            rel.dedup();
+            let topk: Vec<u32> =
+                (0..5).map(|_| rng.below(l) as u32).collect();
+            for k in [1, 3, 5] {
+                let v = psp_at_k(&topk, &rel, &prop, k);
+                if !(0.0..=1.0 + 1e-9).contains(&v) {
+                    return Err(format!("psp@{k} = {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accum_averages() {
+        let mut a = EvalAccum::default();
+        let prop = vec![0.5; 10];
+        a.add(&[1, 2, 3, 4, 5], &[1], &prop);
+        a.add(&[6, 2, 3, 4, 5], &[1], &prop);
+        assert!((a.p_at(0) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,196 @@
+//! Software-emulated low-precision floating-point formats (L3 mirror of
+//! `python/compile/formats.py`).
+//!
+//! The paper's entire contribution rests on three numeric primitives:
+//! quantization to a reduced (E, M) grid, *stochastic rounding* (SR) for
+//! the classifier's SGD update, and *Kahan summation* for the encoder's
+//! AdamW update.  The rust side re-implements them **bit-exactly** — the
+//! cross-language golden test (`rust/tests/golden_numerics.rs`) asserts
+//! agreement with the jax/Pallas kernels on the vectors emitted by
+//! `aot.py` — so the coordinator can quantize host-side (e.g. the Fig 2a
+//! (E, M) sweep applied to classifier weights between steps) with exactly
+//! the semantics of the L1 kernel.
+
+pub mod softfloat;
+
+pub use softfloat::{
+    hash_u32, hash_uniform, kahan_add, quantize_param, quantize_rne,
+    quantize_sr, FloatFormat, BF16, E4M3, E5M2, FP16, FP32,
+};
+
+/// A Kahan-compensated accumulator over a `FloatFormat` grid — convenience
+/// wrapper used by tests and the Table 6 "Kahan for head labels" policy.
+#[derive(Clone, Copy, Debug)]
+pub struct KahanCell {
+    pub sum: f32,
+    pub comp: f32,
+}
+
+impl KahanCell {
+    pub fn new(v: f32) -> Self {
+        KahanCell { sum: v, comp: 0.0 }
+    }
+
+    pub fn add(&mut self, v: f32, fmt: &FloatFormat) {
+        let (s, c) = kahan_add(self.sum, self.comp, v, fmt);
+        self.sum = s;
+        self.comp = c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    const FMTS: [&FloatFormat; 4] = [&BF16, &FP16, &E4M3, &E5M2];
+
+    #[test]
+    fn rne_idempotent() {
+        prop_check("rne_idempotent", 500, |rng| {
+            let fmt = FMTS[rng.below(4)];
+            let scale = 10.0f32.powi(rng.below(9) as i32 - 4);
+            let x = rng.normal_f32(0.0, scale);
+            let q = quantize_rne(x, fmt);
+            let q2 = quantize_rne(q, fmt);
+            // -0.0 canonicalizes to +0.0 on the second pass (matching the
+            // python side's `where(v == 0, 0.0, q)`), so compare values.
+            if q != q2 {
+                return Err(format!("{x} -> {q} -> {q2} on {}", fmt.name));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sr_on_grid_and_bracketed() {
+        prop_check("sr_bracketed", 500, |rng| {
+            let fmt = FMTS[rng.below(4)];
+            let scale = 10.0f32.powi(rng.below(7) as i32 - 3);
+            let x = rng.normal_f32(0.0, scale);
+            let u = rng.uniform_f32();
+            let q = quantize_sr(x, u, fmt);
+            if q != quantize_rne(q, fmt) {
+                return Err(format!("SR({x}) = {q} off-grid on {}", fmt.name));
+            }
+            let xc = x.clamp(-fmt.max_value, fmt.max_value);
+            let span = x.abs().max(xc.abs()).max(1e-30);
+            let ulp = 2.0f32.powf(
+                (span.log2().floor().max(fmt.emin as f32)) - fmt.m_bits as f32,
+            );
+            let lo = x.min(xc) - ulp;
+            let hi = x.max(xc) + ulp;
+            if q < lo || q > hi {
+                return Err(format!("SR({x}) = {q} outside [{lo}, {hi}]"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sr_unbiased() {
+        // 0.3 ulp above a BF16 grid point: SR must average back to x.
+        let x = 1.0 + 0.3 * 2.0f32.powi(-7);
+        let mut sum = 0.0f64;
+        let n = 20000;
+        for i in 0..n {
+            let u = hash_uniform(i, 7);
+            sum += quantize_sr(x, u, &BF16) as f64;
+        }
+        let err = (sum / n as f64 - x as f64).abs();
+        assert!(err < 0.02 * 2.0f64.powi(-7), "bias {err}");
+    }
+
+    #[test]
+    fn e4m3_saturates() {
+        assert_eq!(quantize_rne(449.0, &E4M3), 448.0);
+        assert_eq!(quantize_rne(1e9, &E4M3), 448.0);
+        assert_eq!(quantize_rne(-1e9, &E4M3), -448.0);
+        assert_eq!(quantize_rne(448.0, &E4M3), 448.0);
+    }
+
+    #[test]
+    fn e4m3_subnormals() {
+        assert_eq!(quantize_rne(2.0f32.powi(-9), &E4M3), 2.0f32.powi(-9));
+        assert_eq!(quantize_rne(2.0f32.powi(-11), &E4M3), 0.0);
+    }
+
+    #[test]
+    fn fp16_values() {
+        assert_eq!(quantize_rne(65504.0, &FP16), 65504.0);
+        assert_eq!(quantize_rne(1.0 + 2.0f32.powi(-11), &FP16), 1.0); // half-even
+    }
+
+    #[test]
+    fn param_matches_fixed_formats() {
+        // the parametric quantizer at (8,7)/(5,10)/(5,2) equals the fixed
+        // IEEE-like formats on in-range values
+        prop_check("param_vs_fixed", 300, |rng| {
+            let x = rng.normal_f32(0.0, 1.0);
+            for (e, m, fmt) in [(8u32, 7u32, &BF16), (5, 10, &FP16), (5, 2, &E5M2)] {
+                let a = quantize_param(x, e as f32, m as f32, None);
+                let b = quantize_rne(x, fmt);
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("({e},{m}) {x}: {a} != {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kahan_beats_rne() {
+        // paper Sec 4.1: sub-ulp updates cancel under RNE, accumulate
+        // under Kahan.
+        let upd = 0.1 * 2.0f32.powi(-7);
+        let mut plain = 1.0f32;
+        for _ in 0..100 {
+            plain = quantize_rne(plain + upd, &BF16);
+        }
+        assert_eq!(plain, 1.0);
+        let mut cell = KahanCell::new(1.0);
+        for _ in 0..1000 {
+            cell.add(upd, &BF16);
+        }
+        let expect = 1.0 + 1000.0 * upd;
+        assert!((cell.sum - expect).abs() < 2.0f32.powi(-7));
+    }
+
+    #[test]
+    fn sr_mean_preserves_tiny_updates() {
+        // applying w <- SR(w + g) with g = 0.01 ulp, the *expected* drift
+        // after n steps is n*g even though most steps do nothing.
+        let g = 0.01 * 2.0f32.powi(-7);
+        let mut drift = 0.0f64;
+        let trials = 2000;
+        let steps = 50;
+        for t in 0..trials {
+            let mut w = 1.0f32;
+            for s in 0..steps {
+                let u = hash_uniform(s, t);
+                w = quantize_sr(w + g, u, &BF16);
+            }
+            drift += (w - 1.0) as f64;
+        }
+        let mean_drift = drift / trials as f64;
+        let expect = steps as f64 * g as f64;
+        assert!(
+            (mean_drift - expect).abs() < 0.25 * expect,
+            "mean drift {mean_drift} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn hash_uniform_matches_splitmix_independence() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..1000 {
+            seen.insert(hash_u32(i, 42));
+        }
+        assert!(seen.len() > 995);
+        let mean: f64 = (0..10000)
+            .map(|i| hash_uniform(i, 1) as f64)
+            .sum::<f64>()
+            / 10000.0;
+        assert!((mean - 0.5).abs() < 0.02);
+    }
+}

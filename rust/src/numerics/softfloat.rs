@@ -1,0 +1,200 @@
+//! Parametric (E, M) softfloat arithmetic, bit-exact with
+//! `python/compile/formats.py`.
+//!
+//! The quantizer is grid arithmetic on f32 carriers:
+//!
+//! ```text
+//! ulp(v) = 2^(max(floor(log2 |v|), emin) - M)     (floored at 2^-126)
+//! RNE(v) = round_half_even(v / ulp) * ulp
+//! SR(v)  = floor(v / ulp + u) * ulp,  u ~ U[0,1)
+//! clamp to +-max_value (saturating)
+//! ```
+//!
+//! Every step is exact or correctly rounded in f32, and the uniform u
+//! comes from the same counter-based hash as the Pallas kernels, so the
+//! two implementations agree bit-for-bit (asserted by the golden test).
+
+/// An IEEE-754-like binary floating-point format.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FloatFormat {
+    pub name: &'static str,
+    pub e_bits: u32,
+    pub m_bits: u32,
+    /// Max finite value (E4M3 sacrifices its top mantissa code to NaN: 448).
+    pub max_value: f32,
+    /// Smallest normal exponent (unbiased); ulp floors at 2^(emin - M).
+    pub emin: i32,
+}
+
+impl FloatFormat {
+    pub const fn bytes(&self) -> f64 {
+        (1 + self.e_bits + self.m_bits) as f64 / 8.0
+    }
+
+    /// Generic IEEE-like format for the Fig 2a sweep.
+    pub fn ieee_like(name: &'static str, e_bits: u32, m_bits: u32) -> Self {
+        let bias = (1i32 << (e_bits - 1)) - 1;
+        let max_value =
+            (2.0 - 2.0f64.powi(-(m_bits as i32))) as f32 * exp2i(bias);
+        FloatFormat { name, e_bits, m_bits, max_value, emin: 1 - bias }
+    }
+}
+
+pub const FP32: FloatFormat =
+    FloatFormat { name: "fp32", e_bits: 8, m_bits: 23, max_value: f32::MAX, emin: -126 };
+pub const BF16: FloatFormat =
+    FloatFormat { name: "bf16", e_bits: 8, m_bits: 7, max_value: 3.389_531_4e38, emin: -126 };
+pub const FP16: FloatFormat =
+    FloatFormat { name: "fp16", e_bits: 5, m_bits: 10, max_value: 65504.0, emin: -14 };
+pub const E4M3: FloatFormat =
+    FloatFormat { name: "e4m3", e_bits: 4, m_bits: 3, max_value: 448.0, emin: -6 };
+pub const E5M2: FloatFormat =
+    FloatFormat { name: "e5m2", e_bits: 5, m_bits: 2, max_value: 57344.0, emin: -14 };
+
+/// Exact 2^e for e in [-126, 127].
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e));
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// floor(log2 |v|) for finite nonzero v, exact (bit extraction; f32
+/// subnormal inputs return their true exponent, capped below by the ulp
+/// floor later anyway).
+#[inline]
+fn floor_log2(av: f32) -> i32 {
+    debug_assert!(av > 0.0);
+    let bits = av.to_bits();
+    let e = ((bits >> 23) & 0xFF) as i32;
+    if e == 0 {
+        // subnormal: exponent from leading zeros of the mantissa
+        let m = bits & 0x7F_FFFF;
+        -127 - (m.leading_zeros() as i32 - 9)
+    } else {
+        e - 127
+    }
+}
+
+#[inline]
+fn ulp_of(v: f32, m_bits: u32, emin: i32) -> f32 {
+    let av = v.abs();
+    let e = if av > 0.0 { floor_log2(av) } else { 0 };
+    let e = e.max(emin);
+    // same 2^-126 floor as the python side (XLA CPU flushes subnormals)
+    exp2i((e - m_bits as i32).max(-126))
+}
+
+/// Round-to-nearest-even onto the format grid, saturating clamp.
+pub fn quantize_rne(v: f32, fmt: &FloatFormat) -> f32 {
+    quantize_rne_raw(v, fmt.m_bits, fmt.emin, fmt.max_value)
+}
+
+pub fn quantize_rne_raw(v: f32, m_bits: u32, emin: i32, max_value: f32) -> f32 {
+    if v == 0.0 || !v.is_finite() {
+        return if v == 0.0 { 0.0 } else { v.signum() * max_value };
+    }
+    let u = ulp_of(v, m_bits, emin);
+    let q = (v / u).round_ties_even() * u;
+    q.clamp(-max_value, max_value)
+}
+
+/// Stochastic rounding onto the format grid: floor(v/ulp + u) * ulp.
+/// `rnd` is uniform [0,1); pair it with `hash_uniform` for cross-language
+/// reproducibility.
+pub fn quantize_sr(v: f32, rnd: f32, fmt: &FloatFormat) -> f32 {
+    if v == 0.0 || !v.is_finite() {
+        return if v == 0.0 { 0.0 } else { v.signum() * fmt.max_value };
+    }
+    let u = ulp_of(v, fmt.m_bits, fmt.emin);
+    let q = (v / u + rnd).floor() * u;
+    q.clamp(-fmt.max_value, fmt.max_value)
+}
+
+/// Runtime-parametric quantizer for the Fig 2a (E, M) sweep — IEEE-like
+/// semantics, mirroring `formats.quantize_param` (e/m as f32 to match the
+/// traced-scalar kernel signature).
+pub fn quantize_param(v: f32, e_bits: f32, m_bits: f32, rnd: Option<f32>) -> f32 {
+    let bias = 2.0f32.powi(e_bits as i32 - 1) - 1.0;
+    let max_value = (2.0 - exp2i(-(m_bits as i32))) * exp2i(bias as i32);
+    let emin = 1 - bias as i32;
+    if v == 0.0 {
+        return 0.0;
+    }
+    let u = ulp_of(v, m_bits as u32, emin);
+    let q = match rnd {
+        None => (v / u).round_ties_even() * u,
+        Some(r) => (v / u + r).floor() * u,
+    };
+    q.clamp(-max_value, max_value)
+}
+
+/// One Kahan-compensated accumulation with quantized storage (paper
+/// Sec. 4.1; mirrors `formats.kahan_add`).
+pub fn kahan_add(s: f32, c: f32, v: f32, fmt: &FloatFormat) -> (f32, f32) {
+    let y = v - c;
+    let t = quantize_rne(s + y, fmt);
+    let c_new = quantize_rne((t - s) - y, fmt);
+    (t, c_new)
+}
+
+/// Counter-based hash RNG (SplitMix-style finalizer), bit-identical to
+/// `formats.hash_u32`.
+#[inline]
+pub fn hash_u32(idx: u32, seed: u32) -> u32 {
+    let mut x = idx.wrapping_mul(0x9E37_79B9).wrapping_add(seed);
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x21F0_AAAD);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x735A_2D97);
+    x ^= x >> 15;
+    x
+}
+
+/// Uniform [0, 1) with 24-bit resolution, bit-identical to
+/// `formats.hash_uniform`.
+#[inline]
+pub fn hash_uniform(idx: u32, seed: u32) -> f32 {
+    (hash_u32(idx, seed) >> 8) as f32 * (1.0 / (1 << 24) as f32)
+}
+
+/// Salts for the independent random streams inside one kernel call — must
+/// match `kernels/ref.py`.
+pub const SALT_SR: u32 = 0x5151;
+pub const SALT_DROP: u32 = 0xD0D0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2i_exact() {
+        for e in -126..=127 {
+            assert_eq!(exp2i(e), 2.0f64.powi(e) as f32, "e={e}");
+        }
+    }
+
+    #[test]
+    fn floor_log2_exact() {
+        for e in -126..127 {
+            let v = exp2i(e);
+            assert_eq!(floor_log2(v), e);
+            assert_eq!(floor_log2(v * 1.5), e);
+            assert_eq!(floor_log2(v * 1.9999), e);
+        }
+    }
+
+    #[test]
+    fn bf16_matches_reference_values() {
+        // spot values computed with numpy/ml_dtypes
+        assert_eq!(quantize_rne(0.0039290693, &BF16), 0.0039367676);
+        assert_eq!(quantize_rne(1.0, &BF16), 1.0);
+        assert_eq!(quantize_rne(-2.5, &BF16), -2.5);
+    }
+
+    #[test]
+    fn ieee_like_bf16_equals_const() {
+        let f = FloatFormat::ieee_like("g", 8, 7);
+        assert_eq!(f.emin, BF16.emin);
+        assert_eq!(f.max_value, BF16.max_value);
+    }
+}

@@ -1,0 +1,207 @@
+//! Text-manifest parser for the artifact registry emitted by `aot.py`.
+//!
+//! Format (line-based, whitespace-separated; no JSON because the offline
+//! image vendors no serde):
+//!
+//! ```text
+//! config vocab=1024 d=64 ... psize=139264 hist_bins=64 hist_lo=-40
+//! artifact name=enc_fwd_bf16 file=enc_fwd_bf16.hlo.txt
+//! in packed f32 139264
+//! in tokens i32 32x16
+//! out emb f32 32x64
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype `{other}`"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Global model constants shared by aot.py and the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d: usize,
+    pub seq: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub batch: usize,
+    pub psize: usize,
+    pub hist_bins: usize,
+    pub hist_lo: i32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn parse(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        for (ln, line) in text.lines().enumerate() {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = |msg: &str| anyhow!("manifest line {}: {msg}", ln + 1);
+            match toks.first().copied() {
+                None => {}
+                Some("config") => {
+                    for kv in &toks[1..] {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| err("bad config kv"))?;
+                        let c = &mut m.config;
+                        match k {
+                            "vocab" => c.vocab = v.parse()?,
+                            "d" => c.d = v.parse()?,
+                            "seq" => c.seq = v.parse()?,
+                            "layers" => c.layers = v.parse()?,
+                            "heads" => c.heads = v.parse()?,
+                            "ffn" => c.ffn = v.parse()?,
+                            "batch" => c.batch = v.parse()?,
+                            "psize" => c.psize = v.parse()?,
+                            "hist_bins" => c.hist_bins = v.parse()?,
+                            "hist_lo" => c.hist_lo = v.parse()?,
+                            _ => {} // forward-compatible
+                        }
+                    }
+                }
+                Some("artifact") => {
+                    let mut name = None;
+                    let mut file = None;
+                    for kv in &toks[1..] {
+                        match kv.split_once('=') {
+                            Some(("name", v)) => name = Some(v.to_string()),
+                            Some(("file", v)) => file = Some(v.to_string()),
+                            _ => return Err(err("bad artifact kv")),
+                        }
+                    }
+                    m.artifacts.push(ArtifactSpec {
+                        name: name.ok_or_else(|| err("missing name"))?,
+                        file: file.ok_or_else(|| err("missing file"))?,
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                Some(dir @ ("in" | "out")) => {
+                    if toks.len() != 4 {
+                        return Err(err("in/out needs 4 tokens"));
+                    }
+                    let spec = TensorSpec {
+                        name: toks[1].to_string(),
+                        dtype: Dtype::parse(toks[2])?,
+                        dims: toks[3]
+                            .split('x')
+                            .map(|d| d.parse::<usize>())
+                            .collect::<std::result::Result<_, _>>()
+                            .map_err(|_| err("bad dims"))?,
+                    };
+                    let art = m
+                        .artifacts
+                        .last_mut()
+                        .ok_or_else(|| err("in/out before artifact"))?;
+                    if dir == "in" {
+                        art.inputs.push(spec);
+                    } else {
+                        art.outputs.push(spec);
+                    }
+                }
+                Some(other) => return Err(err(&format!("unknown directive `{other}`"))),
+            }
+        }
+        if m.config.d == 0 || m.config.batch == 0 {
+            bail!("manifest missing config line");
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+config vocab=1024 d=64 seq=16 layers=2 heads=4 ffn=128 batch=32 psize=139264 hist_bins=64 hist_lo=-40
+artifact name=cls_fwd_1024 file=cls_fwd_1024.hlo.txt
+in w f32 1024x64
+in x f32 32x64
+out logits f32 32x1024
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.config.d, 64);
+        assert_eq!(m.config.hist_lo, -40);
+        let a = m.artifact("cls_fwd_1024").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![1024, 64]);
+        assert_eq!(a.inputs[0].numel(), 65536);
+        assert_eq!(a.outputs[0].dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse_str("bogus line\n").is_err());
+        assert!(Manifest::parse_str("in x f32 4\n").is_err());
+        assert!(Manifest::parse_str("config d=64\nartifact name=a\n").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.txt");
+        if p.exists() {
+            let m = Manifest::parse(&p).unwrap();
+            assert!(m.artifacts.len() >= 20);
+            assert!(m.artifact("enc_fwd_bf16").is_some());
+            assert_eq!(m.config.psize % 8192, 0);
+        }
+    }
+}

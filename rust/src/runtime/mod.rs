@@ -1,0 +1,195 @@
+//! PJRT runtime: load AOT artifacts (HLO text) once, execute them from the
+//! training hot path.  Adapted from /opt/xla-example/load_hlo — note the
+//! gotchas documented there: HLO *text* interchange (not serialized proto),
+//! outputs arrive as a 1-tuple/tuple literal because aot.py lowers with
+//! `return_tuple=True`.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, ModelConfig, TensorSpec};
+
+/// Owns the PJRT CPU client, the artifact registry, and an executable
+/// cache (compile once per artifact, reuse across the whole run).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative executions per artifact (perf accounting).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// `dir` is the artifacts directory produced by `make artifacts`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::parse(&dir.join("manifest.txt"))
+            .context("parsing artifacts/manifest.txt (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            exes: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling `{name}`: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on host slices; shapes come from the manifest.
+    /// Returns the decomposed output tuple as literals.
+    ///
+    /// Implementation note: inputs go through
+    /// `buffer_from_host_buffer` + `execute_b`.  The crate's
+    /// `execute::<Literal>` convenience path leaks its internal
+    /// host-to-device transfer (~input-size bytes per call; see
+    /// EXPERIMENTS.md §Perf L3 iteration 4), which OOM-kills long
+    /// training runs — the buffer path is leak-free and skips one copy.
+    pub fn exec(&mut self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        self.prepare(name)?;
+        let spec = self.manifest.artifact(name).unwrap().clone();
+        if args.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "`{name}` expects {} inputs, got {}",
+                spec.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (arg, tspec) in args.iter().zip(spec.inputs.iter()) {
+            let buf = match (arg, tspec.dtype) {
+                (Arg::F32(data), Dtype::F32) => {
+                    if data.len() != tspec.numel() {
+                        return Err(anyhow!(
+                            "`{name}` input `{}`: {} elems for shape {:?}",
+                            tspec.name, data.len(), tspec.dims
+                        ));
+                    }
+                    self.client
+                        .buffer_from_host_buffer(data, &tspec.dims, None)
+                }
+                (Arg::I32(data), Dtype::I32) => {
+                    if data.len() != tspec.numel() {
+                        return Err(anyhow!(
+                            "`{name}` input `{}`: {} elems for shape {:?}",
+                            tspec.name, data.len(), tspec.dims
+                        ));
+                    }
+                    self.client
+                        .buffer_from_host_buffer(data, &tspec.dims, None)
+                }
+                _ => {
+                    return Err(anyhow!(
+                        "`{name}` input `{}`: dtype mismatch (manifest {:?})",
+                        tspec.name, tspec.dtype
+                    ))
+                }
+            }
+            .map_err(|e| anyhow!("uploading `{}`: {e:?}", tspec.name))?;
+            bufs.push(buf);
+        }
+        let exe = self.exes.get(name).unwrap();
+        let result = exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("executing `{name}`: {e:?}"))?;
+        let row = &result[0];
+        let outs: Vec<xla::Literal> = if row.len() == spec.outputs.len() && row.len() != 1 {
+            // runtime untupled the result for us
+            let mut v = Vec::with_capacity(row.len());
+            for b in row {
+                v.push(
+                    b.to_literal_sync()
+                        .map_err(|e| anyhow!("fetching `{name}`: {e:?}"))?,
+                );
+            }
+            v
+        } else {
+            // single (possibly tuple) output literal
+            let lit = row[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching `{name}`: {e:?}"))?;
+            if spec.outputs.len() == 1 && !matches!(lit.shape(), Ok(xla::Shape::Tuple(_))) {
+                vec![lit]
+            } else {
+                lit.to_tuple()
+                    .map_err(|e| anyhow!("decomposing `{name}` tuple: {e:?}"))?
+            }
+        };
+        if outs.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "`{name}` returned {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            ));
+        }
+        *self.exec_counts.entry(name.to_string()).or_default() += 1;
+        Ok(outs)
+    }
+
+    /// True if the manifest contains this artifact.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.artifact(name).is_some()
+    }
+}
+
+/// A host-side input argument; the manifest supplies shape and dtype.
+#[derive(Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Copy a literal's f32 payload out to a Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Read a shape-(1,) scalar.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(to_vec_f32(lit)?[0])
+}
+
+/// Load a raw little-endian f32 binary (enc_init_*.bin).
+pub fn load_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("file size not a multiple of 4"));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

@@ -1,0 +1,220 @@
+//! Small self-contained utilities: a deterministic RNG, a property-testing
+//! harness, wall-clock helpers, and table printing for the bench harnesses.
+//!
+//! NOTE on dependencies: this image has no network access and only the
+//! `xla` crate's dependency tree vendored, so `rand`, `proptest`,
+//! `criterion`, `serde` etc. are unavailable.  The substitutes below are
+//! deliberately tiny and deterministic (good for reproducibility of the
+//! paper harness) — see DESIGN.md "Substitutions".
+
+use std::time::Instant;
+
+/// SplitMix64: tiny, high-quality, deterministic PRNG (Steele et al. 2014).
+/// Used for dataset synthesis and property-test case generation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k << n expected).
+    pub fn distinct(&mut self, k: usize, n: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        let mut guard = 0;
+        while out.len() < k && guard < 100 * k + 100 {
+            let c = self.below(n);
+            if !out.contains(&c) {
+                out.push(c);
+            }
+            guard += 1;
+        }
+        out
+    }
+}
+
+/// Minimal property-testing harness (offline substitute for `proptest`):
+/// runs `cases` random cases; on failure reports the failing case seed so
+/// the case can be replayed with `Rng::new(seed)`.
+pub fn prop_check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xE1_000_000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed on case seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat-timing for bench harnesses: runs `f` until `min_secs` elapsed or
+/// `max_iters` reached (after one warmup), returns mean seconds/iter.
+pub fn bench_secs(min_secs: f64, max_iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    let mut iters = 0;
+    while iters < max_iters && (iters == 0 || t0.elapsed().as_secs_f64() < min_secs) {
+        f();
+        iters += 1;
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Format seconds as the paper's mm:ss epoch-time column.
+pub fn mmss(secs: f64) -> String {
+    let m = (secs / 60.0).floor() as u64;
+    let s = secs - 60.0 * m as f64;
+    format!("{m}:{s:04.1}")
+}
+
+/// Format bytes as GiB with 2 decimals (the paper's memory columns).
+pub fn gib(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / (1u64 << 30) as f64)
+}
+
+/// Print an aligned text table: `rows` of equal-length string vectors.
+pub fn print_table(header: &[&str], rows: &[Vec<String>]) {
+    let mut w: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < w.len() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:width$}", c, width = w.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", line(header.iter().map(|s| s.to_string()).collect()));
+    println!("{}", "-".repeat(w.iter().sum::<usize>() + 2 * w.len()));
+    for r in rows {
+        println!("{}", line(r.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..10000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 10000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..20000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn distinct_unique() {
+        let mut r = Rng::new(3);
+        let xs = r.distinct(50, 1000);
+        assert_eq!(xs.len(), 50);
+        let mut s = xs.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 50);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(4);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut s = xs.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mmss_format() {
+        assert_eq!(mmss(61.0), "1:01.0");
+    }
+}

@@ -1,0 +1,150 @@
+//! Property-style tests on coordinator invariants that need no artifacts:
+//! chunk scheduling, label permutation/Y-block construction, batching,
+//! dataset statistics.  (Offline substitute for proptest — see util.)
+
+use elmo::data::{self, Batcher};
+use elmo::util::{prop_check, Rng};
+
+#[test]
+fn chunk_cover_is_exact_for_any_l_and_lc() {
+    prop_check("chunk_cover", 200, |rng: &mut Rng| {
+        let lc = [64usize, 128, 256, 512, 1024][rng.below(5)];
+        let l = 1 + rng.below(20_000);
+        let l_pad = l.div_ceil(lc) * lc;
+        let chunks = l_pad / lc;
+        // every real label belongs to exactly one chunk; pad rows to none
+        let mut seen = vec![0u32; l];
+        for c in 0..chunks {
+            for row in c * lc..(c + 1) * lc {
+                if row < l {
+                    seen[row] += 1;
+                }
+            }
+        }
+        if seen.iter().any(|&s| s != 1) {
+            return Err(format!("L={l} Lc={lc}: bad cover"));
+        }
+        if l_pad < l || l_pad - l >= lc {
+            return Err(format!("bad pad {l_pad} for {l}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn y_blocks_partition_positives() {
+    // building per-chunk Y blocks from CSR rows must place every positive
+    // exactly once across chunks, under any label permutation
+    prop_check("y_partition", 100, |rng: &mut Rng| {
+        let l = 64 + rng.below(2000);
+        let lc = [64usize, 128, 256][rng.below(3)];
+        let l_pad = l.div_ceil(lc) * lc;
+        let b = 8;
+        // random permutation (like Fp8HeadKahan's frequency order)
+        let mut order: Vec<u32> = (0..l as u32).collect();
+        rng.shuffle(&mut order);
+        let mut row_of = vec![0u32; l];
+        for (r, &lab) in order.iter().enumerate() {
+            row_of[lab as usize] = r as u32;
+        }
+        // random positives per instance
+        let pos: Vec<Vec<u32>> = (0..b)
+            .map(|_| {
+                let mut v: Vec<u32> =
+                    (0..1 + rng.below(6)).map(|_| rng.below(l) as u32).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect();
+        let mut placed = vec![0usize; b];
+        for chunk in 0..l_pad / lc {
+            let lo = chunk * lc;
+            for (bi, labs) in pos.iter().enumerate() {
+                for &lab in labs {
+                    let row = row_of[lab as usize] as usize;
+                    if row >= lo && row < lo + lc {
+                        placed[bi] += 1;
+                    }
+                }
+            }
+        }
+        for (bi, labs) in pos.iter().enumerate() {
+            if placed[bi] != labs.len() {
+                return Err(format!(
+                    "instance {bi}: placed {} of {}",
+                    placed[bi],
+                    labs.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_epoch_boundaries_and_reshuffle() {
+    prop_check("batcher_epochs", 50, |rng: &mut Rng| {
+        let n = 32 + rng.below(300);
+        let b = 32;
+        let mut batcher = Batcher::new(n, b, rng.next_u64());
+        let mut total = 0;
+        while let Some((rows, valid)) = batcher.next_batch() {
+            if rows.len() != b {
+                return Err("short batch returned".into());
+            }
+            total += valid;
+        }
+        if total != n {
+            return Err(format!("epoch covered {total} of {n}"));
+        }
+        if batcher.next_batch().is_some() {
+            return Err("batcher continued past epoch".into());
+        }
+        batcher.reshuffle(1);
+        if batcher.next_batch().is_none() {
+            return Err("reshuffle did not reset".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dataset_labels_sorted_and_in_range() {
+    for p in data::profiles().into_iter().take(4) {
+        let ds = data::generate(&p, 3);
+        for split in [&ds.train, &ds.test] {
+            for i in 0..split.n {
+                let row = split.labels.row(i);
+                assert!(!row.is_empty(), "{}: empty label set", p.name);
+                assert!(row.windows(2).all(|w| w[0] < w[1]), "unsorted row");
+                assert!(row.iter().all(|&l| (l as usize) < p.labels));
+            }
+            for &t in &split.tokens {
+                assert!((0..data::VOCAB as i32).contains(&t));
+            }
+        }
+    }
+}
+
+#[test]
+fn labels_by_freq_is_permutation_sorted_by_freq() {
+    let p = data::profile("quickstart").unwrap();
+    let ds = data::generate(&p, 0);
+    let order = ds.labels_by_freq();
+    assert_eq!(order.len(), p.labels);
+    for w in order.windows(2) {
+        assert!(ds.label_freq[w[0] as usize] >= ds.label_freq[w[1] as usize]);
+    }
+}
+
+#[test]
+fn propensity_head_vs_tail_on_generated_data() {
+    let p = data::profile("lf-amazontitles131k").unwrap();
+    let ds = data::generate(&p, 0);
+    let prop = data::propensity::propensities(&ds.label_freq, ds.train.n);
+    let order = ds.labels_by_freq();
+    let head = prop[order[0] as usize];
+    let tail = prop[*order.last().unwrap() as usize];
+    assert!(head > tail, "head {head} should exceed tail {tail}");
+}

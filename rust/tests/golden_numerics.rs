@@ -1,0 +1,84 @@
+//! Cross-language golden test: the rust softfloat must reproduce the
+//! jax/Pallas quantizers BIT-EXACTLY on the vectors `aot.py` emits
+//! (artifacts/golden_quant.txt, golden_uniform.txt).
+//!
+//! This is the contract that lets the L3 coordinator quantize host-side
+//! (Fig 2a sweep, Renee fp16 accumulation) with L1-kernel semantics.
+
+use elmo::numerics::{hash_uniform, quantize_rne, quantize_sr, BF16, E4M3, E5M2, FP16};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("golden_quant.txt").exists().then_some(p)
+}
+
+fn parse_hex_f32(h: &str) -> f32 {
+    f32::from_bits(u32::from_str_radix(h, 16).unwrap())
+}
+
+#[test]
+fn golden_quantizers_bit_exact() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let text = std::fs::read_to_string(dir.join("golden_quant.txt")).unwrap();
+    let fmts = [&BF16, &FP16, &E4M3, &E5M2];
+    let seed = 1234u32;
+    let mut rows = 0;
+    let mut sr_mismatch = 0usize;
+    for (i, line) in text.lines().filter(|l| !l.starts_with('#')).enumerate() {
+        let cols: Vec<f32> = line.split_whitespace().map(parse_hex_f32).collect();
+        assert_eq!(cols.len(), 9, "row {i}");
+        let v = cols[0];
+        for (fi, fmt) in fmts.iter().enumerate() {
+            let rne = quantize_rne(v, fmt);
+            let want = cols[1 + fi];
+            assert!(
+                rne.to_bits() == want.to_bits() || (rne == 0.0 && want == 0.0),
+                "RNE {}({v:?}) = {rne:?} (bits {:08x}), golden {want:?} ({:08x}) at row {i}",
+                fmt.name,
+                rne.to_bits(),
+                want.to_bits()
+            );
+        }
+        let u = hash_uniform(i as u32, seed);
+        for (fi, fmt) in fmts.iter().enumerate() {
+            let sr = quantize_sr(v, u, fmt);
+            let want = cols[5 + fi];
+            if !(sr.to_bits() == want.to_bits() || (sr == 0.0 && want == 0.0)) {
+                sr_mismatch += 1;
+                eprintln!(
+                    "SR {}({v:?}, u={u}) = {sr:?}, golden {want:?} at row {i}",
+                    fmt.name
+                );
+            }
+        }
+        rows += 1;
+    }
+    assert!(rows > 400, "golden file too short ({rows} rows)");
+    assert_eq!(sr_mismatch, 0, "{sr_mismatch} SR mismatches");
+}
+
+#[test]
+fn golden_uniforms_bit_exact() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let text = std::fs::read_to_string(dir.join("golden_uniform.txt")).unwrap();
+    let mut checked = 0;
+    for line in text.lines().filter(|l| !l.starts_with('#')) {
+        let mut it = line.split_whitespace();
+        let idx: u32 = it.next().unwrap().parse().unwrap();
+        let want = parse_hex_f32(it.next().unwrap());
+        let got = hash_uniform(idx, 1234);
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "hash_uniform({idx}, 1234): {got} vs {want}"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 64);
+}

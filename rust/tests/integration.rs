@@ -1,0 +1,305 @@
+//! Integration tests over the full stack: PJRT artifact execution, the
+//! training coordinator, precision policies, and checkpointing.
+//!
+//! These need `make artifacts`; they skip gracefully when absent so
+//! `cargo test` stays usable on a fresh clone.
+
+use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::data;
+use elmo::numerics::{quantize_rne, BF16, E4M3};
+use elmo::runtime::{to_vec_f32, Arg, Runtime};
+
+fn art_dir() -> Option<String> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt")
+        .exists()
+        .then(|| p.to_str().unwrap().to_string())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match art_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn mk_trainer(precision: Precision, chunk: usize) -> (Runtime, data::Dataset, Trainer, String) {
+    let art = art_dir().unwrap();
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 1);
+    let rt = Runtime::new(&art).unwrap();
+    let cfg = TrainConfig {
+        precision,
+        chunk_size: chunk,
+        epochs: 1,
+        ..TrainConfig::default()
+    };
+    let tr = Trainer::new(&rt, &ds, cfg, &art).unwrap();
+    (rt, ds, tr, art)
+}
+
+#[test]
+fn artifact_loads_and_executes() {
+    let art = require_artifacts!();
+    let mut rt = Runtime::new(&art).unwrap();
+    // cls_fwd is the simplest artifact: logits = X @ W^T
+    let d = rt.config().d;
+    let b = rt.config().batch;
+    let lc = 1024;
+    let w: Vec<f32> = (0..lc * d).map(|i| (i % 7) as f32 * 0.01).collect();
+    let x: Vec<f32> = (0..b * d).map(|i| (i % 5) as f32 * 0.1).collect();
+    let outs = rt
+        .exec("cls_fwd_1024", &[Arg::F32(&w), Arg::F32(&x)])
+        .unwrap();
+    let logits = to_vec_f32(&outs[0]).unwrap();
+    assert_eq!(logits.len(), b * lc);
+    // spot-check one dot product on the host
+    let mut want = 0.0f32;
+    for k in 0..d {
+        want += x[k] * w[k];
+    }
+    assert!((logits[0] - want).abs() < 1e-3 * want.abs().max(1.0));
+}
+
+#[test]
+fn exec_arity_is_validated() {
+    let art = require_artifacts!();
+    let mut rt = Runtime::new(&art).unwrap();
+    let err = match rt.exec("cls_fwd_1024", &[]) {
+        Err(e) => e,
+        Ok(_) => panic!("arity violation accepted"),
+    };
+    assert!(format!("{err}").contains("expects"));
+    assert!(rt.exec("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn quant_sweep_artifact_matches_rust_softfloat() {
+    // the L1 parametric quantizer and the L3 softfloat must agree
+    // bit-exactly (same SALT_SR stream, same grid arithmetic)
+    let art = require_artifacts!();
+    let mut rt = Runtime::new(&art).unwrap();
+    let n = 131072;
+    let mut v = vec![0.0f32; n];
+    let mut rng = elmo::util::Rng::new(5);
+    for x in v.iter_mut() {
+        *x = rng.normal_f32(0.0, 1.0);
+    }
+    for (e, m, sr) in [(4u32, 3u32, false), (5, 2, true), (8, 7, true), (3, 4, false)] {
+        let outs = rt
+            .exec(
+                "quant_sweep_131072",
+                &[
+                    Arg::F32(&v),
+                    Arg::F32(&[e as f32]),
+                    Arg::F32(&[m as f32]),
+                    Arg::I32(&[777]),
+                    Arg::F32(&[if sr { 1.0 } else { 0.0 }]),
+                ],
+            )
+            .unwrap();
+        let q = to_vec_f32(&outs[0]).unwrap();
+        let mut mismatches = 0;
+        for (i, (&vi, &qi)) in v.iter().zip(q.iter()).enumerate() {
+            let rnd = sr.then(|| {
+                elmo::numerics::hash_uniform(
+                    i as u32,
+                    777u32.wrapping_add(elmo::numerics::softfloat::SALT_SR),
+                )
+            });
+            let want = elmo::numerics::quantize_param(vi, e as f32, m as f32, rnd);
+            if want.to_bits() != qi.to_bits() && !(want == 0.0 && qi == 0.0) {
+                mismatches += 1;
+                if mismatches < 4 {
+                    eprintln!("({e},{m},sr={sr}) idx {i}: v={vi} kernel={qi} rust={want}");
+                }
+            }
+        }
+        assert_eq!(mismatches, 0, "E{e}M{m} sr={sr}");
+    }
+}
+
+#[test]
+fn train_step_decreases_loss() {
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
+    let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..12 {
+        let (rows, _) = batcher.next_batch().unwrap();
+        let (loss, overflow) = tr.step(&mut rt, &ds, &rows).unwrap();
+        assert!(!overflow);
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first,
+        "loss should fall: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn weights_stay_on_grid_per_policy() {
+    require_artifacts!();
+    for (prec, fmt) in [(Precision::Bf16, &BF16), (Precision::Fp8, &E4M3)] {
+        let (mut rt, ds, mut tr, _) = mk_trainer(prec, 512);
+        let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
+        for _ in 0..3 {
+            let (rows, _) = batcher.next_batch().unwrap();
+            tr.step(&mut rt, &ds, &rows).unwrap();
+        }
+        assert!(tr.weights_on_grid(), "{prec:?} weights left the grid");
+        // and they moved
+        assert!(tr.w.iter().any(|&v| v != 0.0));
+        let _ = fmt;
+    }
+}
+
+#[test]
+fn chunked_equals_unchunked_fp32() {
+    // one fp32 step with Lc=512 (2 chunks) must equal Lc=1024 (1 chunk):
+    // chunking is a memory optimization, not a numerics change (paper
+    // Table 10's "no accuracy impact").
+    require_artifacts!();
+    let (mut rt, ds, mut tr_a, _) = mk_trainer(Precision::Fp32, 512);
+    let (_, _, mut tr_b, _) = mk_trainer(Precision::Fp32, 1024);
+    // same dropout seed usage requires same step seeds: both start at 0
+    let rows: Vec<u32> = (0..tr_a.batch as u32).collect();
+    tr_a.step(&mut rt, &ds, &rows).unwrap();
+    tr_b.step(&mut rt, &ds, &rows).unwrap();
+    let max_diff = tr_a
+        .w
+        .iter()
+        .zip(tr_b.w.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff < 1e-5,
+        "chunked vs unchunked fp32 diverged by {max_diff}"
+    );
+    // encoders see the summed Xgrad; they must match too
+    let enc_diff = tr_a
+        .enc_p
+        .iter()
+        .zip(tr_b.enc_p.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(enc_diff < 1e-4, "encoder diverged by {enc_diff}");
+}
+
+#[test]
+fn renee_runs_and_manages_loss_scale() {
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Renee, 1024);
+    tr.loss_scale = 1e9; // force overflow on the first step
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    let w_before = tr.w.clone();
+    let (_, overflowed) = tr.step(&mut rt, &ds, &rows).unwrap();
+    assert!(overflowed, "1e9 scale must overflow fp16");
+    assert_eq!(tr.w, w_before, "overflowed step must not commit updates");
+    assert!(tr.loss_scale < 1e9, "scale must halve after overflow");
+    // a sane scale trains
+    tr.loss_scale = 1024.0;
+    let (_, overflowed) = tr.step(&mut rt, &ds, &rows).unwrap();
+    assert!(!overflowed);
+    assert!(tr.w.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn sampled_policy_touches_only_shortlist() {
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Sampled, 512);
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    tr.step(&mut rt, &ds, &rows).unwrap();
+    let moved = tr.w.chunks(tr.d).filter(|c| c.iter().any(|&v| v != 0.0)).count();
+    assert!(moved > 0, "some rows must move");
+    assert!(
+        moved <= tr.cfg.shortlist,
+        "sampled policy moved {moved} rows > shortlist {}",
+        tr.cfg.shortlist
+    );
+}
+
+#[test]
+fn head_kahan_policy_partitions_and_reorders() {
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Fp8HeadKahan, 512);
+    assert!(tr.head_chunks >= 1);
+    // label permutation is a bijection
+    let mut seen = vec![false; ds.profile.labels];
+    for &l in &tr.label_order {
+        assert!(!seen[l as usize]);
+        seen[l as usize] = true;
+    }
+    assert!(seen.iter().all(|&s| s));
+    // head rows are the most frequent labels
+    let f0 = ds.label_freq[tr.label_order[0] as usize];
+    let flast = ds.label_freq[*tr.label_order.last().unwrap() as usize];
+    assert!(f0 >= flast);
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    tr.step(&mut rt, &ds, &rows).unwrap();
+    // head rows live on the BF16 grid, tail rows on E4M3
+    let lc = tr.cfg.chunk_size * tr.d;
+    let head = &tr.w[..tr.head_chunks * lc];
+    assert!(head.iter().all(|&v| v == quantize_rne(v, &BF16)));
+    let tail = &tr.w[tr.head_chunks * lc..];
+    assert!(tail.iter().all(|&v| v == quantize_rne(v, &E4M3)));
+}
+
+#[test]
+fn evaluate_streams_chunks() {
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
+    let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
+    for _ in 0..8 {
+        let (rows, _) = batcher.next_batch().unwrap();
+        tr.step(&mut rt, &ds, &rows).unwrap();
+    }
+    let rep = evaluate(&mut rt, &tr, &ds, 96).unwrap();
+    assert_eq!(rep.n, 96);
+    for v in rep.p.iter().chain(rep.psp.iter()) {
+        assert!((0.0..=100.0).contains(v));
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    require_artifacts!();
+    let (mut rt, ds, mut tr, art) = mk_trainer(Precision::Bf16, 512);
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    tr.step(&mut rt, &ds, &rows).unwrap();
+    let path = std::env::temp_dir().join("elmo_ckpt_test.bin");
+    let path = path.to_str().unwrap();
+    tr.save_checkpoint(path).unwrap();
+    let cfg = tr.cfg.clone();
+    let mut tr2 = Trainer::new(&rt, &ds, cfg, &art).unwrap();
+    assert_ne!(tr2.w, tr.w);
+    tr2.load_checkpoint(path).unwrap();
+    assert_eq!(tr2.w, tr.w);
+    assert_eq!(tr2.enc_p, tr.enc_p);
+    assert_eq!(tr2.step_count, tr.step_count);
+    // corrupted magic is rejected
+    std::fs::write(path, b"NOTACKPT").unwrap();
+    assert!(tr2.load_checkpoint(path).is_err());
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn fig2a_host_quantization_moves_weights_onto_grid() {
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Fp32, 512);
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    tr.step(&mut rt, &ds, &rows).unwrap();
+    tr.quantize_classifier(4, 3, false);
+    for &v in tr.w.iter() {
+        let q = elmo::numerics::quantize_param(v, 4.0, 3.0, None);
+        assert_eq!(v, q);
+    }
+}
