@@ -1,0 +1,148 @@
+//! Hand-rolled CLI flag parsing (no clap in the offline image — see
+//! DESIGN.md Substitutions), extracted from `main.rs` so the parsing
+//! rules are unit-testable: every malformed invocation must produce a
+//! clear error naming the offending flag, never a panic or a silently
+//! ignored argument.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed `--key value` pairs.
+pub type Flags = HashMap<String, String>;
+
+/// Parse an alternating `--flag value` list.  Rejects non-`--` arguments
+/// (including single-dash and bare words) and flags missing their value.
+pub fn parse_flags(args: &[String]) -> Result<Flags> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?;
+        if key.is_empty() {
+            return Err(anyhow!("expected --flag, got bare `--`"));
+        }
+        let val = args
+            .get(i + 1)
+            // a following `--flag` is the next flag, not this one's value
+            // (no flag in this CLI takes a `--`-prefixed value)
+            .filter(|v| !v.starts_with("--"))
+            .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+        out.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+/// Typed flag lookup with a default; a present-but-unparsable value is an
+/// error naming the flag, not a silent fallback to the default.
+pub fn flag<T: std::str::FromStr>(f: &Flags, k: &str, default: T) -> Result<T> {
+    match f.get(k) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("bad value `{v}` for --{k}")),
+    }
+}
+
+/// A flag that must be present (e.g. `--checkpoint`).
+pub fn require(f: &Flags, k: &str) -> Result<String> {
+    f.get(k).cloned().ok_or_else(|| anyhow!("--{k} is required"))
+}
+
+/// Reject any flag outside a subcommand's known set — catches typos like
+/// `--epoch` for `--epochs` that would otherwise be silently ignored.
+pub fn reject_unknown(f: &Flags, known: &[&str]) -> Result<()> {
+    for k in f.keys() {
+        if !known.contains(&k.as_str()) {
+            let mut hint: Vec<&str> = known.to_vec();
+            hint.sort_unstable();
+            return Err(anyhow!(
+                "unknown flag --{k} (expected one of: --{})",
+                hint.join(", --")
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_alternating_pairs() {
+        let f = parse_flags(&argv(&["--epochs", "5", "--profile", "wiki500k"])).unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f["epochs"], "5");
+        assert_eq!(f["profile"], "wiki500k");
+        assert!(parse_flags(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn missing_value_is_a_clear_error() {
+        let err = parse_flags(&argv(&["--epochs"])).unwrap_err();
+        assert!(format!("{err}").contains("--epochs needs a value"), "{err}");
+        let err = parse_flags(&argv(&["--a", "1", "--b"])).unwrap_err();
+        assert!(format!("{err}").contains("--b needs a value"), "{err}");
+        // a value-less flag must not swallow the flag after it
+        let err = parse_flags(&argv(&["--save", "--epochs", "5"])).unwrap_err();
+        assert!(format!("{err}").contains("--save needs a value"), "{err}");
+    }
+
+    #[test]
+    fn unknown_prefix_is_a_clear_error() {
+        for bad in ["-epochs", "epochs", "-e", "--"] {
+            let err = parse_flags(&argv(&[bad, "5"])).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("expected --flag"), "`{bad}` gave: {msg}");
+        }
+    }
+
+    #[test]
+    fn bad_numeric_value_is_a_clear_error() {
+        let f = parse_flags(&argv(&["--epochs", "five"])).unwrap();
+        let err = flag::<usize>(&f, "epochs", 1).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("bad value `five` for --epochs"), "{msg}");
+        let f = parse_flags(&argv(&["--lr-cls", "0.05x"])).unwrap();
+        assert!(flag::<f32>(&f, "lr-cls", 0.1).is_err());
+    }
+
+    #[test]
+    fn defaults_and_typed_parses() {
+        let f = parse_flags(&argv(&["--chunk", "512", "--lr-cls", "0.1"])).unwrap();
+        assert_eq!(flag(&f, "chunk", 1024usize).unwrap(), 512);
+        assert_eq!(flag(&f, "epochs", 7usize).unwrap(), 7, "absent flag takes default");
+        assert!((flag(&f, "lr-cls", 0.05f32).unwrap() - 0.1).abs() < 1e-9);
+        assert_eq!(
+            flag(&f, "save", String::new()).unwrap(),
+            String::new(),
+            "string default passes through"
+        );
+    }
+
+    #[test]
+    fn unknown_flag_names_itself_and_the_known_set() {
+        let f = parse_flags(&argv(&["--epoch", "5"])).unwrap(); // typo'd --epochs
+        let err = reject_unknown(&f, &["epochs", "profile"]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown flag --epoch"), "{msg}");
+        assert!(msg.contains("--epochs"), "hint should list valid flags: {msg}");
+        let f = parse_flags(&argv(&["--epochs", "5"])).unwrap();
+        assert!(reject_unknown(&f, &["epochs", "profile"]).is_ok());
+        assert!(reject_unknown(&Flags::new(), &[]).is_ok());
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let f = parse_flags(&argv(&["--k", "5"])).unwrap();
+        assert_eq!(require(&f, "k").unwrap(), "5");
+        let err = require(&f, "checkpoint").unwrap_err();
+        assert!(format!("{err}").contains("--checkpoint is required"));
+    }
+}

@@ -1,15 +1,25 @@
-//! Chunked evaluation: stream label chunks through the `cls_fwd` scoring
-//! executable and fold into per-row running top-k, then compute P@k /
-//! PSP@k.  Mirrors the paper's protocol (Appendix A) without ever holding
-//! a full [n, L] logit matrix.
+//! Chunked evaluation: embed test rows, hand each batch to the shared
+//! `infer::ChunkScanner`, and fold the returned top-k into P@k / PSP@k.
+//! Mirrors the paper's protocol (Appendix A) without ever holding a full
+//! [n, L] logit matrix.
+//!
+//! The chunk-scan itself lives in `infer::scanner` — eval and the serving
+//! `Predictor` are two callers of one scoring code path, so a model
+//! reloaded from a checkpoint scores bit-identically to the in-memory one.
 
 use anyhow::{bail, Result};
 
 use crate::data::{propensity::propensities, Dataset, SEQ_LEN};
-use crate::metrics::{EvalAccum, TopK};
+use crate::infer::predict::embed_inference;
+use crate::infer::scanner::{ChunkScanner, ClassifierView};
+use crate::metrics::EvalAccum;
 use crate::runtime::{to_vec_f32, Arg, Runtime};
 
 use super::trainer::Trainer;
+
+/// Re-exported scoring chunk width (the canonical constant moved to
+/// `infer::scanner` with the scanner itself).
+pub use crate::infer::scanner::SCORE_LC;
 
 #[derive(Clone, Debug, Default)]
 pub struct EvalReport {
@@ -30,8 +40,16 @@ impl EvalReport {
     }
 }
 
-/// Scoring chunk size: the lowered `cls_fwd_*` artifact width.
-pub const SCORE_LC: usize = 1024;
+/// Everything the eval protocol needs from a model: encoder params + the
+/// scanner view of the classifier.  Built from a live `Trainer` here or
+/// from a loaded checkpoint by `infer::Predictor` — one protocol, two
+/// weight sources.
+pub struct EvalModel<'a> {
+    pub enc_p: &'a [f32],
+    /// Encoder forward artifact name (`enc_fwd_*`).
+    pub enc_art: String,
+    pub cls: ClassifierView<'a>,
+}
 
 /// Evaluate the trainer's classifier on the test split.
 /// `max_rows` bounds eval cost for inner-loop sweeps (0 = all).
@@ -41,21 +59,37 @@ pub fn evaluate(
     ds: &Dataset,
     max_rows: usize,
 ) -> Result<EvalReport> {
+    let m = EvalModel {
+        enc_p: &tr.enc_p,
+        enc_art: format!("enc_fwd_{}", tr.enc_cfg()),
+        cls: ClassifierView::of_trainer(tr),
+    };
+    evaluate_model(rt, &m, ds, max_rows)
+}
+
+/// Evaluate any `EvalModel` on a dataset's test split: embed batches with
+/// dropout off, scan label chunks through the shared `ChunkScanner`, fold
+/// P@{1,3,5} / PSP@{1,3,5} over the valid rows.
+pub fn evaluate_model(
+    rt: &mut Runtime,
+    m: &EvalModel,
+    ds: &Dataset,
+    max_rows: usize,
+) -> Result<EvalReport> {
     let t0 = std::time::Instant::now();
-    let b = tr.batch;
-    let d = tr.d;
-    let l = ds.profile.labels;
-    if tr.l_pad % SCORE_LC != 0 {
-        bail!("l_pad {} not a multiple of scoring chunk {SCORE_LC}", tr.l_pad);
+    let b = rt.config().batch;
+    if ds.profile.labels != m.cls.labels {
+        bail!(
+            "model scores {} labels but the dataset has {}",
+            m.cls.labels,
+            ds.profile.labels
+        );
     }
-    let art = format!("cls_fwd_{SCORE_LC}");
     let prop = propensities(&ds.label_freq, ds.train.n);
+    let scanner = ChunkScanner::new(5);
 
     let n_eval = if max_rows == 0 { ds.test.n } else { ds.test.n.min(max_rows) };
     let mut accum = EvalAccum::default();
-
-    let enc_cfg = tr.cfg.enc_override.unwrap_or(tr.cfg.precision.enc_cfg());
-    let enc_art = format!("enc_fwd_{enc_cfg}");
 
     let mut row0 = 0;
     while row0 < n_eval {
@@ -66,37 +100,10 @@ pub fn evaluate(
         for &r in &rows {
             tokens.extend_from_slice(&ds.test.tokens[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
         }
-        let emb_out = rt.exec(
-            &enc_art,
-            &[
-                Arg::F32(&tr.enc_p),
-                Arg::I32(&tokens),
-                Arg::I32(&[0]),
-                Arg::F32(&[0.0]),
-            ],
-        )?;
-        let emb = to_vec_f32(&emb_out[0])?;
+        let emb = embed_inference(rt, &m.enc_art, m.enc_p, &tokens)?;
 
-        // stream label chunks, maintain running top-k per row
-        let mut topks: Vec<TopK> = (0..b).map(|_| TopK::new(5)).collect();
-        for chunk in 0..tr.l_pad / SCORE_LC {
-            let wslice = &tr.w[chunk * SCORE_LC * d..(chunk + 1) * SCORE_LC * d];
-            let outs = rt.exec(&art, &[Arg::F32(wslice), Arg::F32(&emb)])?;
-            let logits = to_vec_f32(&outs[0])?; // [b, SCORE_LC]
-            for (bi, tk) in topks.iter_mut().enumerate() {
-                let base = bi * SCORE_LC;
-                for j in 0..SCORE_LC {
-                    let row_idx = chunk * SCORE_LC + j;
-                    if row_idx >= l {
-                        break; // padding rows
-                    }
-                    // map W row back to the true label id (head-Kahan
-                    // permutes rows)
-                    let lab = tr.label_order[row_idx];
-                    tk.push(logits[base + j], lab);
-                }
-            }
-        }
+        // stream label chunks through the shared scanner
+        let topks = scanner.scan(rt, &m.cls, &emb, b)?;
 
         for bi in 0..valid {
             let r = rows[bi];
@@ -131,7 +138,7 @@ pub fn diagnostics_hist(
     }
     let rows: Vec<u32> = (0..b as u32).collect();
     let tokens = tr.batch_tokens(ds, &rows);
-    let enc_cfg = tr.cfg.enc_override.unwrap_or(tr.cfg.precision.enc_cfg());
+    let enc_cfg = tr.enc_cfg();
     let emb_out = rt.exec(
         &format!("enc_fwd_{enc_cfg}"),
         &[

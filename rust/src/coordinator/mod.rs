@@ -20,10 +20,14 @@
 //! the host treats the weight store; the Renee policy adds the loss-scale
 //! manager with genuine FP16 overflow detection.
 
+//! Evaluation and serving share one scoring path: `eval` embeds test rows
+//! and delegates the chunk scan to `infer::ChunkScanner`, the same scanner
+//! the checkpoint-loading `infer::Predictor` uses.
+
 pub mod eval;
 pub mod schedule;
 pub mod trainer;
 
-pub use eval::{evaluate, EvalReport};
+pub use eval::{evaluate, evaluate_model, EvalModel, EvalReport};
 pub use schedule::LrSchedule;
 pub use trainer::{EpochStats, Precision, TrainConfig, Trainer};

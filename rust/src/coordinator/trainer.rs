@@ -253,10 +253,15 @@ impl Trainer {
         self.l_pad / self.cfg.chunk_size
     }
 
+    /// Effective encoder precision config (honors `enc_override`).
+    pub fn enc_cfg(&self) -> &'static str {
+        self.cfg.enc_override.unwrap_or(self.cfg.precision.enc_cfg())
+    }
+
     /// Compile every executable this config will touch, so epoch timings
     /// measure steady-state steps rather than first-use PJRT compilation.
     pub fn warmup(&self, rt: &mut Runtime) -> Result<()> {
-        let enc = self.cfg.enc_override.unwrap_or(self.cfg.precision.enc_cfg());
+        let enc = self.enc_cfg();
         rt.prepare(&format!("enc_fwd_{enc}"))?;
         rt.prepare(&format!("enc_bwd_{enc}"))?;
         rt.prepare(&self.cls_artifact())?;
@@ -332,7 +337,7 @@ impl Trainer {
         self.step_count += 1;
 
         // 1. encoder forward
-        let enc_cfg = self.cfg.enc_override.unwrap_or(self.cfg.precision.enc_cfg());
+        let enc_cfg = self.enc_cfg();
         let tokens = self.batch_tokens(ds, rows);
         let emb_out = rt.exec(
             &format!("enc_fwd_{enc_cfg}"),
@@ -689,68 +694,19 @@ impl Trainer {
 }
 
 impl Trainer {
-    /// Serialize (W, encoder state, step count) to a flat binary with a
-    /// small header.  Format: magic, version, lens, then raw LE f32s.
+    /// Serialize the full model state through the versioned `infer`
+    /// checkpoint format (magic + version + checksum; see
+    /// `infer::checkpoint`).  The stored profile name is empty — use
+    /// `Checkpoint::from_trainer` directly to stamp one.
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        let mut out: Vec<u8> = Vec::new();
-        out.extend_from_slice(b"ELMOCKPT");
-        out.extend_from_slice(&1u32.to_le_bytes());
-        out.extend_from_slice(&(self.step_count).to_le_bytes());
-        for v in [&self.w, &self.mom, &self.kahan_c, &self.enc_p, &self.enc_m, &self.enc_v, &self.enc_c] {
-            out.extend_from_slice(&(v.len() as u64).to_le_bytes());
-            for x in v.iter() {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
-        }
-        std::fs::write(path, out).with_context(|| format!("writing {path}"))
+        crate::infer::Checkpoint::from_trainer(self, "").save(path)
     }
 
-    /// Restore a checkpoint written by `save_checkpoint` (shapes must match
-    /// the current config; mismatches are an error, not a silent resize).
+    /// Restore a checkpoint written by `save_checkpoint` / `elmo train
+    /// --save` (shapes must match the current config; mismatches are an
+    /// error, not a silent resize).
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
-        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
-        if bytes.len() < 20 || &bytes[..8] != b"ELMOCKPT" {
-            bail!("{path}: not an ELMO checkpoint");
-        }
-        let mut off = 8;
-        let ver = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
-        off += 4;
-        if ver != 1 {
-            bail!("unsupported checkpoint version {ver}");
-        }
-        self.step_count = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
-        off += 8;
-        let mut bufs: Vec<Vec<f32>> = Vec::new();
-        for _ in 0..7 {
-            let n = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
-            off += 8;
-            let mut v = Vec::with_capacity(n);
-            for i in 0..n {
-                let s = off + i * 4;
-                v.push(f32::from_le_bytes(bytes[s..s + 4].try_into().unwrap()));
-            }
-            off += n * 4;
-            bufs.push(v);
-        }
-        let [w, mom, kc, p, m, vv, c]: [Vec<f32>; 7] = bufs.try_into().unwrap();
-        for (name, got, want) in [
-            ("w", w.len(), self.w.len()),
-            ("mom", mom.len(), self.mom.len()),
-            ("kahan_c", kc.len(), self.kahan_c.len()),
-            ("enc_p", p.len(), self.enc_p.len()),
-        ] {
-            if got != want {
-                bail!("checkpoint {name} len {got} != expected {want}");
-            }
-        }
-        self.w = w;
-        self.mom = mom;
-        self.kahan_c = kc;
-        self.enc_p = p;
-        self.enc_m = m;
-        self.enc_v = vv;
-        self.enc_c = c;
-        Ok(())
+        crate::infer::Checkpoint::load(path)?.restore(self)
     }
 }
 

@@ -1,0 +1,332 @@
+//! Micro-batching request queue for serving.
+//!
+//! The AOT artifacts are lowered at one fixed batch width `b`, but serving
+//! traffic arrives as variable-size query sets.  `MicroBatcher` packs
+//! queued queries into full `b`-row batches (padding the final partial
+//! batch by repeating its last row — padded rows are scored and then
+//! dropped, exactly like eval's wrapped tail batch) and reports
+//! throughput: queries/sec and p50/p99 queue-to-completion latency.
+//!
+//! The batcher is deliberately runtime-agnostic: `run_ready`/`flush` take
+//! a scoring closure (`&[i32] tokens -> Vec<TopK>`), so the packing and
+//! accounting logic is unit-testable without PJRT.  `Predictor` +
+//! `Runtime` plug in via the same closure shape (see `elmo serve-bench`).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::data::SEQ_LEN;
+use crate::metrics::TopK;
+
+/// One completed query: top-k (score, label) pairs, best first.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub id: u64,
+    pub topk: Vec<(f32, u32)>,
+    pub latency_ms: f64,
+}
+
+/// Serving counters + latency reservoir.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    latencies_ms: Vec<f64>,
+    pub completed: u64,
+    pub batches: u64,
+    /// Rows executed only as padding (capacity lost to partial batches).
+    pub padded_rows: u64,
+    started: Option<Instant>,
+    wall_secs: f64,
+}
+
+impl ServeStats {
+    fn record(&mut self, ms: f64) {
+        self.latencies_ms.push(ms);
+        self.completed += 1;
+    }
+
+    fn mark(&mut self) {
+        let t0 = *self.started.get_or_insert_with(Instant::now);
+        self.wall_secs = t0.elapsed().as_secs_f64();
+    }
+
+    /// Queries per second over the submit..last-completion window.
+    pub fn qps(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.wall_secs
+    }
+
+    fn percentile_ms(&self, q: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = (q / 100.0 * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(99.0)
+    }
+
+    /// Executed-row utilization: completed / (completed + padding).
+    pub fn fill_ratio(&self) -> f64 {
+        let executed = self.completed + self.padded_rows;
+        if executed == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / executed as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} queries in {} batches | {:.1} q/s | p50 {:.2} ms  p99 {:.2} ms | fill {:.0}%",
+            self.completed,
+            self.batches,
+            self.qps(),
+            self.p50_ms(),
+            self.p99_ms(),
+            100.0 * self.fill_ratio()
+        )
+    }
+}
+
+struct Pending {
+    id: u64,
+    tokens: Vec<i32>,
+    enqueued: Instant,
+}
+
+/// Packs variable-size query sets into fixed-width scoring batches.
+pub struct MicroBatcher {
+    /// The artifact's fixed batch width.
+    width: usize,
+    queue: VecDeque<Pending>,
+    next_id: u64,
+    pub stats: ServeStats,
+}
+
+impl MicroBatcher {
+    pub fn new(width: usize) -> Self {
+        assert!(width > 0, "batch width must be positive");
+        MicroBatcher {
+            width,
+            queue: VecDeque::new(),
+            next_id: 0,
+            stats: ServeStats::default(),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Enqueue a query set: `tokens` holds one or more [SEQ_LEN] rows
+    /// back-to-back.  Returns the assigned query ids, in row order.
+    pub fn submit(&mut self, tokens: &[i32]) -> Result<Vec<u64>> {
+        if tokens.is_empty() || tokens.len() % SEQ_LEN != 0 {
+            bail!(
+                "query set must be a non-empty multiple of {SEQ_LEN} tokens, got {}",
+                tokens.len()
+            );
+        }
+        self.stats.mark();
+        let now = Instant::now();
+        let mut ids = Vec::with_capacity(tokens.len() / SEQ_LEN);
+        for row in tokens.chunks_exact(SEQ_LEN) {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.queue.push_back(Pending { id, tokens: row.to_vec(), enqueued: now });
+            ids.push(id);
+        }
+        Ok(ids)
+    }
+
+    /// Queries waiting to be scored.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Full batches currently packable without padding.
+    pub fn ready_batches(&self) -> usize {
+        self.queue.len() / self.width
+    }
+
+    /// Pop `valid` queries, pad to `width` rows, score, record latencies.
+    fn run_batch<F>(&mut self, score: &mut F, out: &mut Vec<Prediction>, valid: usize) -> Result<()>
+    where
+        F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+    {
+        debug_assert!(valid > 0 && valid <= self.width && valid <= self.queue.len());
+        let batch: Vec<Pending> = self.queue.drain(..valid).collect();
+        let mut tokens = Vec::with_capacity(self.width * SEQ_LEN);
+        for q in &batch {
+            tokens.extend_from_slice(&q.tokens);
+        }
+        let pad_row = batch.last().unwrap().tokens.clone();
+        for _ in valid..self.width {
+            tokens.extend_from_slice(&pad_row);
+        }
+        let topks = score(&tokens)?;
+        if topks.len() < valid {
+            bail!("scorer returned {} rows for a {valid}-query batch", topks.len());
+        }
+        let done = Instant::now();
+        for (q, tk) in batch.into_iter().zip(topks.into_iter()) {
+            let ms = done.duration_since(q.enqueued).as_secs_f64() * 1e3;
+            self.stats.record(ms);
+            out.push(Prediction { id: q.id, topk: tk.items().to_vec(), latency_ms: ms });
+        }
+        self.stats.batches += 1;
+        self.stats.padded_rows += (self.width - valid) as u64;
+        self.stats.mark();
+        Ok(())
+    }
+
+    /// Score every currently-full batch; partial remainders stay queued.
+    /// Returns the number of batches executed.
+    pub fn run_ready<F>(&mut self, mut score: F, out: &mut Vec<Prediction>) -> Result<usize>
+    where
+        F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+    {
+        let mut n = 0;
+        while self.queue.len() >= self.width {
+            self.run_batch(&mut score, out, self.width)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Score everything, padding the final partial batch.  Returns the
+    /// number of batches executed.
+    pub fn flush<F>(&mut self, mut score: F, out: &mut Vec<Prediction>) -> Result<usize>
+    where
+        F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+    {
+        let mut n = 0;
+        while self.queue.len() >= self.width {
+            self.run_batch(&mut score, out, self.width)?;
+            n += 1;
+        }
+        if !self.queue.is_empty() {
+            let valid = self.queue.len();
+            self.run_batch(&mut score, out, valid)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fake scorer: each row's top-1 label is its first token, score is
+    /// the row's position in the batch (distinguishes padding copies).
+    fn fake_scorer(width: usize) -> impl FnMut(&[i32]) -> Result<Vec<TopK>> {
+        move |tokens: &[i32]| {
+            assert_eq!(tokens.len(), width * SEQ_LEN, "scorer must see full batches");
+            Ok(tokens
+                .chunks_exact(SEQ_LEN)
+                .map(|row| {
+                    let mut tk = TopK::new(1);
+                    tk.push(1.0, row[0] as u32);
+                    tk
+                })
+                .collect())
+        }
+    }
+
+    fn queries(n: usize, first_token_base: i32) -> Vec<i32> {
+        let mut t = Vec::new();
+        for i in 0..n {
+            let mut row = vec![0i32; SEQ_LEN];
+            row[0] = first_token_base + i as i32;
+            t.extend_from_slice(&row);
+        }
+        t
+    }
+
+    #[test]
+    fn packs_variable_bursts_into_fixed_batches() {
+        let width = 8;
+        let mut mb = MicroBatcher::new(width);
+        let mut out = Vec::new();
+        // bursts of 3 + 9 + 5 = 17 queries -> 2 full batches + 1 padded
+        mb.submit(&queries(3, 100)).unwrap();
+        assert_eq!(mb.ready_batches(), 0);
+        mb.submit(&queries(9, 200)).unwrap();
+        assert_eq!(mb.ready_batches(), 1);
+        let ran = mb.run_ready(fake_scorer(width), &mut out).unwrap();
+        assert_eq!(ran, 1);
+        assert_eq!(out.len(), width);
+        assert_eq!(mb.pending(), 4);
+        mb.submit(&queries(5, 300)).unwrap();
+        let ran = mb.flush(fake_scorer(width), &mut out).unwrap();
+        assert_eq!(ran, 2, "one full + one padded batch");
+        assert_eq!(out.len(), 17);
+        assert_eq!(mb.pending(), 0);
+        // every query answered exactly once, in submit order, with the
+        // fake scorer's label = its own first token
+        let want_tokens: Vec<u32> = (100..103).chain(200..209).chain(300..305).collect();
+        for (i, (p, want)) in out.iter().zip(want_tokens).enumerate() {
+            assert_eq!(p.id, i as u64);
+            assert_eq!(p.topk[0].1, want, "query {i} got the wrong row");
+        }
+        // stats: 17 completed over 3 batches, 3*8 - 17 = 7 padded rows
+        assert_eq!(mb.stats.completed, 17);
+        assert_eq!(mb.stats.batches, 3);
+        assert_eq!(mb.stats.padded_rows, 7);
+        assert!((mb.stats.fill_ratio() - 17.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn submit_rejects_ragged_and_empty_sets() {
+        let mut mb = MicroBatcher::new(4);
+        assert!(mb.submit(&[]).is_err());
+        assert!(mb.submit(&vec![0i32; SEQ_LEN + 1]).is_err());
+        assert_eq!(mb.pending(), 0, "rejected sets must not partially enqueue");
+        assert!(mb.submit(&vec![0i32; 2 * SEQ_LEN]).is_ok());
+        assert_eq!(mb.pending(), 2);
+    }
+
+    #[test]
+    fn run_ready_leaves_partial_batches_queued() {
+        let mut mb = MicroBatcher::new(4);
+        let mut out = Vec::new();
+        mb.submit(&queries(3, 0)).unwrap();
+        assert_eq!(mb.run_ready(fake_scorer(4), &mut out).unwrap(), 0);
+        assert!(out.is_empty());
+        assert_eq!(mb.pending(), 3);
+        assert_eq!(mb.flush(fake_scorer(4), &mut out).unwrap(), 1);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn scorer_errors_propagate() {
+        let mut mb = MicroBatcher::new(2);
+        let mut out = Vec::new();
+        mb.submit(&queries(2, 0)).unwrap();
+        let err = mb.run_ready(|_| bail!("kernel exploded"), &mut out);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn latency_percentiles_are_ordered() {
+        let mut s = ServeStats::default();
+        for ms in [1.0, 2.0, 3.0, 50.0, 100.0] {
+            s.record(ms);
+        }
+        assert!(s.p50_ms() <= s.p99_ms());
+        assert_eq!(s.p99_ms(), 100.0);
+        assert_eq!(ServeStats::default().p50_ms(), 0.0);
+    }
+}

@@ -1,0 +1,445 @@
+//! Versioned binary checkpoint format for the full `Trainer` model state.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8B  b"ELMOCKPT"
+//! version  u32 (= 2; v1 was the pre-`infer` ad-hoc dump, now rejected)
+//! header   precision tag u32, encoder tag u32, chunk_size u32, d u32,
+//!          head_chunks u32, l_pad u64, labels u64, step_count u64,
+//!          loss_scale f32, data seed u64,
+//!          profile-name len u32 + bytes
+//! sections label_order (u64 len + u32 data), then w, mom, kahan_c,
+//!          enc_p, enc_m, enc_v, enc_c (each u64 len + f32 data)
+//! trailer  u64 FNV-1a checksum of every preceding byte
+//! ```
+//!
+//! Corruption detection: the trailing checksum covers magic through the
+//! last section, so truncation and bit-flips are both caught before any
+//! payload is trusted; every read is bounds-checked so a hostile file can
+//! produce an error but never a panic.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Precision, Trainer};
+
+pub const MAGIC: &[u8; 8] = b"ELMOCKPT";
+pub const VERSION: u32 = 2;
+
+/// 64-bit FNV-1a — tiny, dependency-free integrity hash (not crypto;
+/// this guards against corruption, not tampering).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn precision_tag(p: Precision) -> u32 {
+    match p {
+        Precision::Fp32 => 0,
+        Precision::Bf16 => 1,
+        Precision::Fp8 => 2,
+        Precision::Renee => 3,
+        Precision::Sampled => 4,
+        Precision::Fp8HeadKahan => 5,
+    }
+}
+
+fn precision_of(tag: u32) -> Result<Precision> {
+    Ok(match tag {
+        0 => Precision::Fp32,
+        1 => Precision::Bf16,
+        2 => Precision::Fp8,
+        3 => Precision::Renee,
+        4 => Precision::Sampled,
+        5 => Precision::Fp8HeadKahan,
+        other => bail!("unknown precision tag {other} in checkpoint"),
+    })
+}
+
+fn enc_tag(cfg: &str) -> Result<u32> {
+    Ok(match cfg {
+        "fp32" => 0,
+        "bf16" => 1,
+        "fp8" => 2,
+        other => bail!("unknown encoder config `{other}`"),
+    })
+}
+
+fn enc_of(tag: u32) -> Result<&'static str> {
+    Ok(match tag {
+        0 => "fp32",
+        1 => "bf16",
+        2 => "fp8",
+        other => bail!("unknown encoder tag {other} in checkpoint"),
+    })
+}
+
+/// A fully materialized checkpoint: everything needed to serve (or resume)
+/// a trained model without the dataset or the original `TrainConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub precision: Precision,
+    /// Effective encoder precision ("fp32" | "bf16" | "fp8").
+    pub enc_cfg: &'static str,
+    /// Training label-chunk size Lc (the artifact the weights trained on).
+    pub chunk_size: usize,
+    pub d: usize,
+    pub head_chunks: usize,
+    pub l_pad: usize,
+    /// Real label count; `label_order.len() == labels`.
+    pub labels: usize,
+    pub step_count: u64,
+    pub loss_scale: f32,
+    /// Dataset seed the model trained on (lets `elmo predict` regenerate
+    /// the exact test rows).
+    pub seed: u64,
+    /// Dataset profile name ("" when unknown).
+    pub profile: String,
+    /// W row r holds label `label_order[r]`.
+    pub label_order: Vec<u32>,
+    /// Classifier weights [l_pad, d] (scratch rows excluded).
+    pub w: Vec<f32>,
+    /// Renee momentum (empty for other policies).
+    pub mom: Vec<f32>,
+    /// Kahan compensation for head chunks (empty unless head-Kahan).
+    pub kahan_c: Vec<f32>,
+    pub enc_p: Vec<f32>,
+    pub enc_m: Vec<f32>,
+    pub enc_v: Vec<f32>,
+    pub enc_c: Vec<f32>,
+}
+
+/// Bounds-checked little-endian reader; errors (never panics) on overrun.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // `off <= len` always holds, and comparing against the remainder
+        // (rather than checking `off + n`) cannot overflow on a hostile
+        // section length
+        if n > self.b.len() - self.off {
+            bail!(
+                "checkpoint truncated: wanted {} bytes at offset {}, have {}",
+                n,
+                self.off,
+                self.b.len()
+            );
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A u64-length-prefixed f32 section.
+    fn f32_section(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n.checked_mul(4).context("section length overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u32_section(&mut self) -> Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n.checked_mul(4).context("section length overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+impl Checkpoint {
+    /// Snapshot a trainer's full model state.  `profile` is the dataset
+    /// profile name (stored so `elmo predict` can rebuild the test split);
+    /// pass "" when not applicable.
+    pub fn from_trainer(tr: &Trainer, profile: &str) -> Self {
+        Checkpoint {
+            precision: tr.cfg.precision,
+            enc_cfg: tr.enc_cfg(),
+            chunk_size: tr.cfg.chunk_size,
+            d: tr.d,
+            head_chunks: tr.head_chunks,
+            l_pad: tr.l_pad,
+            labels: tr.label_order.len(),
+            step_count: tr.step_count,
+            loss_scale: tr.loss_scale,
+            seed: tr.cfg.seed,
+            profile: profile.to_string(),
+            label_order: tr.label_order.clone(),
+            // exclude the Sampled policy's scratch rows past l_pad
+            w: tr.w[..tr.l_pad * tr.d].to_vec(),
+            mom: tr.mom.clone(),
+            kahan_c: tr.kahan_c.clone(),
+            enc_p: tr.enc_p.clone(),
+            enc_m: tr.enc_m.clone(),
+            enc_v: tr.enc_v.clone(),
+            enc_c: tr.enc_c.clone(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let f32s = self.w.len()
+            + self.mom.len()
+            + self.kahan_c.len()
+            + self.enc_p.len()
+            + self.enc_m.len()
+            + self.enc_v.len()
+            + self.enc_c.len();
+        let mut out: Vec<u8> = Vec::with_capacity(128 + self.profile.len() + 4 * f32s);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&precision_tag(self.precision).to_le_bytes());
+        out.extend_from_slice(&enc_tag(self.enc_cfg)?.to_le_bytes());
+        out.extend_from_slice(&(self.chunk_size as u32).to_le_bytes());
+        out.extend_from_slice(&(self.d as u32).to_le_bytes());
+        out.extend_from_slice(&(self.head_chunks as u32).to_le_bytes());
+        out.extend_from_slice(&(self.l_pad as u64).to_le_bytes());
+        out.extend_from_slice(&(self.labels as u64).to_le_bytes());
+        out.extend_from_slice(&self.step_count.to_le_bytes());
+        out.extend_from_slice(&self.loss_scale.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.profile.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.profile.as_bytes());
+        out.extend_from_slice(&(self.label_order.len() as u64).to_le_bytes());
+        for &l in &self.label_order {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        for sec in [
+            &self.w,
+            &self.mom,
+            &self.kahan_c,
+            &self.enc_p,
+            &self.enc_m,
+            &self.enc_v,
+            &self.enc_c,
+        ] {
+            out.extend_from_slice(&(sec.len() as u64).to_le_bytes());
+            for &x in sec.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        Ok(out)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < MAGIC.len() {
+            bail!("checkpoint truncated: {} bytes is too short even for the magic", bytes.len());
+        }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            bail!("not an ELMO checkpoint (bad magic)");
+        }
+        if bytes.len() < MAGIC.len() + 4 {
+            bail!("checkpoint truncated before the version field");
+        }
+        let ver = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if ver != VERSION {
+            bail!("unsupported checkpoint version {ver} (this build reads version {VERSION})");
+        }
+        if bytes.len() < 12 + 8 {
+            bail!("checkpoint truncated before the checksum trailer");
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv1a(body);
+        if stored != computed {
+            bail!(
+                "checkpoint corrupt: checksum {computed:016x} != stored {stored:016x} \
+                 (truncated or bit-flipped)"
+            );
+        }
+        let mut rd = Rd { b: body, off: 12 };
+        let precision = precision_of(rd.u32()?)?;
+        let enc_cfg = enc_of(rd.u32()?)?;
+        let chunk_size = rd.u32()? as usize;
+        let d = rd.u32()? as usize;
+        let head_chunks = rd.u32()? as usize;
+        let l_pad = rd.u64()? as usize;
+        let labels = rd.u64()? as usize;
+        let step_count = rd.u64()?;
+        let loss_scale = rd.f32()?;
+        let seed = rd.u64()?;
+        let plen = rd.u32()? as usize;
+        let profile = String::from_utf8(rd.take(plen)?.to_vec())
+            .context("checkpoint profile name is not UTF-8")?;
+        let label_order = rd.u32_section()?;
+        let w = rd.f32_section()?;
+        let mom = rd.f32_section()?;
+        let kahan_c = rd.f32_section()?;
+        let enc_p = rd.f32_section()?;
+        let enc_m = rd.f32_section()?;
+        let enc_v = rd.f32_section()?;
+        let enc_c = rd.f32_section()?;
+        if rd.off != body.len() {
+            bail!(
+                "checkpoint has {} trailing bytes after the last section",
+                body.len() - rd.off
+            );
+        }
+        // structural sanity: sizes must agree with the header before any
+        // consumer indexes into them
+        if chunk_size == 0 || d == 0 {
+            bail!("checkpoint header has zero chunk_size or d");
+        }
+        if labels > l_pad || l_pad % chunk_size != 0 {
+            bail!("checkpoint header inconsistent: labels={labels} l_pad={l_pad} Lc={chunk_size}");
+        }
+        if label_order.len() != labels {
+            bail!(
+                "checkpoint label_order has {} entries for {labels} labels",
+                label_order.len()
+            );
+        }
+        let mut seen = vec![false; labels];
+        for &l in &label_order {
+            if (l as usize) >= labels || seen[l as usize] {
+                bail!("checkpoint label_order is not a permutation of 0..{labels}");
+            }
+            seen[l as usize] = true;
+        }
+        let wd = l_pad
+            .checked_mul(d)
+            .with_context(|| format!("checkpoint header overflows: l_pad={l_pad} x d={d}"))?;
+        if w.len() != wd {
+            bail!(
+                "checkpoint w has {} values, header says {wd} ({l_pad} x {d})",
+                w.len()
+            );
+        }
+        if enc_m.len() != enc_p.len() || enc_v.len() != enc_p.len() || enc_c.len() != enc_p.len() {
+            bail!("checkpoint encoder state sections disagree in length");
+        }
+        Ok(Checkpoint {
+            precision,
+            enc_cfg,
+            chunk_size,
+            d,
+            head_chunks,
+            l_pad,
+            labels,
+            step_count,
+            loss_scale,
+            seed,
+            profile,
+            label_order,
+            w,
+            mom,
+            kahan_c,
+            enc_p,
+            enc_m,
+            enc_v,
+            enc_c,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_bytes()?).with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        Self::from_bytes(&bytes).with_context(|| format!("loading checkpoint {path}"))
+    }
+
+    /// Drop the optimizer-state sections (momentum, Kahan compensation,
+    /// AdamW m/v/c).  Serving reads only `w`, `enc_p`, and `label_order`;
+    /// for a Renee model the momentum alone is a second [l_pad, d] f32
+    /// buffer, real money in a peak-memory project.
+    pub fn drop_optimizer_state(&mut self) {
+        self.mom = Vec::new();
+        self.kahan_c = Vec::new();
+        self.enc_m = Vec::new();
+        self.enc_v = Vec::new();
+        self.enc_c = Vec::new();
+    }
+
+    /// Restore this checkpoint into a live trainer.  The header's policy
+    /// and shapes must match the trainer's config — mismatches are an
+    /// error, not a silent resize or a silent policy switch.
+    pub fn restore(&self, tr: &mut Trainer) -> Result<()> {
+        if self.precision != tr.cfg.precision {
+            bail!(
+                "checkpoint trained as {} but the trainer is configured as {}",
+                self.precision.label(),
+                tr.cfg.precision.label()
+            );
+        }
+        if self.enc_cfg != tr.enc_cfg() {
+            bail!(
+                "checkpoint encoder is {} but the trainer's is {}",
+                self.enc_cfg,
+                tr.enc_cfg()
+            );
+        }
+        if self.chunk_size != tr.cfg.chunk_size || self.head_chunks != tr.head_chunks {
+            bail!(
+                "checkpoint chunking (Lc={}, head_chunks={}) != trainer (Lc={}, head_chunks={})",
+                self.chunk_size,
+                self.head_chunks,
+                tr.cfg.chunk_size,
+                tr.head_chunks
+            );
+        }
+        if self.d != tr.d || self.l_pad != tr.l_pad {
+            bail!(
+                "checkpoint geometry ({} x {}) != trainer ({} x {})",
+                self.l_pad,
+                self.d,
+                tr.l_pad,
+                tr.d
+            );
+        }
+        // validate every section length (a hand-built or
+        // optimizer-stripped Checkpoint never went through `from_bytes`)
+        for (name, got, want) in [
+            ("w", self.w.len(), tr.l_pad * tr.d),
+            ("mom", self.mom.len(), tr.mom.len()),
+            ("kahan_c", self.kahan_c.len(), tr.kahan_c.len()),
+            ("enc_p", self.enc_p.len(), tr.enc_p.len()),
+            ("enc_m", self.enc_m.len(), tr.enc_m.len()),
+            ("enc_v", self.enc_v.len(), tr.enc_v.len()),
+            ("enc_c", self.enc_c.len(), tr.enc_c.len()),
+            ("label_order", self.label_order.len(), tr.label_order.len()),
+        ] {
+            if got != want {
+                bail!("checkpoint {name} len {got} != expected {want}");
+            }
+        }
+        tr.w[..self.l_pad * self.d].copy_from_slice(&self.w);
+        tr.mom = self.mom.clone();
+        tr.kahan_c = self.kahan_c.clone();
+        tr.enc_p = self.enc_p.clone();
+        tr.enc_m = self.enc_m.clone();
+        tr.enc_v = self.enc_v.clone();
+        tr.enc_c = self.enc_c.clone();
+        tr.step_count = self.step_count;
+        tr.loss_scale = self.loss_scale;
+        tr.label_order = self.label_order.clone();
+        for (row, &lab) in tr.label_order.iter().enumerate() {
+            tr.label_row[lab as usize] = row as u32;
+        }
+        Ok(())
+    }
+}

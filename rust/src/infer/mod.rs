@@ -1,0 +1,29 @@
+//! Inference subsystem: checkpointing + batched serving.
+//!
+//! Training (the `coordinator`) produces a model; this module makes it
+//! outlive the process and serve traffic:
+//!
+//! * `checkpoint` — a versioned, checksummed binary format that round-trips
+//!   the full `Trainer` state (classifier weights, label permutation,
+//!   encoder params + optimizer state, precision/config header);
+//! * `scanner` — the single chunked top-k scoring path shared by
+//!   `coordinator::evaluate` and serving, streaming `cls_fwd_*` label
+//!   chunks so no full [n, L] logit matrix ever exists;
+//! * `predict` — `Predictor`, a read-only store loaded from a checkpoint
+//!   that serves batched top-k queries;
+//! * `batcher` — a micro-batching request queue that packs variable-size
+//!   query sets into the artifact's fixed batch width and reports
+//!   queries/sec and p50/p99 latency.
+//!
+//! See `docs/INFERENCE.md` for the CLI (`elmo train --save`,
+//! `elmo predict`, `elmo serve-bench`) and the on-disk format.
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod predict;
+pub mod scanner;
+
+pub use batcher::{MicroBatcher, Prediction, ServeStats};
+pub use checkpoint::Checkpoint;
+pub use predict::{embed_inference, Predictor};
+pub use scanner::{ChunkScanner, ClassifierView, SCORE_LC};

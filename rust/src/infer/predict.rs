@@ -1,0 +1,110 @@
+//! `Predictor`: a read-only serving front-end over a loaded checkpoint.
+//!
+//! Loads a `Checkpoint` into an immutable weight store and serves batched
+//! top-k prediction by streaming `cls_fwd_*` label chunks through the
+//! shared `ChunkScanner` — the same code path `coordinator::evaluate`
+//! uses, so a reloaded model scores bit-identically to the in-memory one.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::eval::{evaluate_model, EvalModel, EvalReport};
+use crate::data::{Dataset, SEQ_LEN};
+use crate::metrics::TopK;
+use crate::runtime::{to_vec_f32, Arg, Runtime};
+
+use super::checkpoint::Checkpoint;
+use super::scanner::{ChunkScanner, ClassifierView};
+
+/// Inference-mode encoder forward (dropout off, fixed seed 0) — the one
+/// embed invocation shared by `coordinator::evaluate_model` and the
+/// serving path, so the two cannot drift in artifact arguments.
+pub fn embed_inference(
+    rt: &mut Runtime,
+    enc_art: &str,
+    enc_p: &[f32],
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let outs = rt.exec(
+        enc_art,
+        &[
+            Arg::F32(enc_p),
+            Arg::I32(tokens),
+            Arg::I32(&[0]),
+            Arg::F32(&[0.0]),
+        ],
+    )?;
+    to_vec_f32(&outs[0])
+}
+
+pub struct Predictor {
+    ckpt: Checkpoint,
+}
+
+impl Predictor {
+    /// Load a checkpoint file into a read-only weight store.  Optimizer
+    /// state (momentum, Kahan, AdamW m/v/c) is dropped after validation —
+    /// serving never reads it, and for a Renee model the momentum alone
+    /// would double the resident classifier bytes.
+    pub fn load(path: &str) -> Result<Self> {
+        let mut ckpt = Checkpoint::load(path)?;
+        ckpt.drop_optimizer_state();
+        Ok(Predictor { ckpt })
+    }
+
+    pub fn from_checkpoint(ckpt: Checkpoint) -> Self {
+        Predictor { ckpt }
+    }
+
+    pub fn checkpoint(&self) -> &Checkpoint {
+        &self.ckpt
+    }
+
+    /// The scanner-facing view of the stored classifier.
+    pub fn view(&self) -> ClassifierView<'_> {
+        ClassifierView {
+            w: &self.ckpt.w,
+            d: self.ckpt.d,
+            labels: self.ckpt.labels,
+            l_pad: self.ckpt.l_pad,
+            label_order: &self.ckpt.label_order,
+        }
+    }
+
+    pub fn enc_artifact(&self) -> String {
+        format!("enc_fwd_{}", self.ckpt.enc_cfg)
+    }
+
+    /// Pooled embeddings for one full token batch [batch, SEQ_LEN]
+    /// (inference: dropout off, fixed seed).
+    pub fn embed(&self, rt: &mut Runtime, tokens: &[i32]) -> Result<Vec<f32>> {
+        let b = rt.config().batch;
+        if tokens.len() != b * SEQ_LEN {
+            bail!(
+                "token batch has {} ids, the artifact batch is {} x {SEQ_LEN}",
+                tokens.len(),
+                b
+            );
+        }
+        embed_inference(rt, &self.enc_artifact(), &self.ckpt.enc_p, tokens)
+    }
+
+    /// Batched top-k prediction over one full token batch.  Returns one
+    /// running `TopK` per row, labels already mapped through the stored
+    /// permutation.
+    pub fn predict_batch(&self, rt: &mut Runtime, tokens: &[i32], k: usize) -> Result<Vec<TopK>> {
+        let b = rt.config().batch;
+        let emb = self.embed(rt, tokens)?;
+        ChunkScanner::new(k).scan(rt, &self.view(), &emb, b)
+    }
+
+    /// Evaluate the stored model on a dataset's test split with the exact
+    /// protocol (and code) of `coordinator::evaluate`.
+    pub fn evaluate(&self, rt: &mut Runtime, ds: &Dataset, max_rows: usize) -> Result<EvalReport> {
+        let m = EvalModel {
+            enc_p: &self.ckpt.enc_p,
+            enc_art: self.enc_artifact(),
+            cls: self.view(),
+        };
+        evaluate_model(rt, &m, ds, max_rows)
+    }
+}

@@ -1,0 +1,130 @@
+//! The shared chunked top-k scanner: stream `cls_fwd_*` label chunks over a
+//! batch of embeddings and fold each chunk into a per-row running `TopK`.
+//!
+//! This is the single scoring code path for the whole crate — both the
+//! training-side `coordinator::evaluate` and the serving-side
+//! `infer::Predictor` drive it, so eval and inference cannot drift apart
+//! (the paper's Appendix A protocol, chunked exactly like training so no
+//! full [n, L] logit matrix ever exists).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::trainer::Trainer;
+use crate::metrics::TopK;
+use crate::runtime::{to_vec_f32, Arg, Runtime};
+
+/// Scoring chunk width: the lowered `cls_fwd_*` artifact width.
+pub const SCORE_LC: usize = 1024;
+
+/// Read-only view of a classifier weight store, shaped for chunked scoring.
+///
+/// Both the live `Trainer` (host weight array) and a loaded `Checkpoint`
+/// (the `Predictor`'s store) project into this view, which is what lets
+/// one scanner serve both.
+#[derive(Clone, Copy)]
+pub struct ClassifierView<'a> {
+    /// Row-major [l_pad, d] weights; rows past `labels` are padding.
+    pub w: &'a [f32],
+    pub d: usize,
+    /// Real label count.
+    pub labels: usize,
+    /// Padded row count (a multiple of the training chunk size).
+    pub l_pad: usize,
+    /// Row -> label id (the head-Kahan policy permutes rows).
+    pub label_order: &'a [u32],
+}
+
+impl<'a> ClassifierView<'a> {
+    /// View a live trainer's weight store (excludes the Sampled policy's
+    /// scratch rows, which sit past `l_pad` and are never scored).
+    pub fn of_trainer(tr: &'a Trainer) -> Self {
+        ClassifierView {
+            w: &tr.w[..tr.l_pad * tr.d],
+            d: tr.d,
+            labels: tr.label_order.len(),
+            l_pad: tr.l_pad,
+            label_order: &tr.label_order,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.l_pad % SCORE_LC != 0 {
+            bail!(
+                "l_pad {} not a multiple of scoring chunk {SCORE_LC}",
+                self.l_pad
+            );
+        }
+        let wd = self
+            .l_pad
+            .checked_mul(self.d)
+            .ok_or_else(|| anyhow!("view geometry overflows: {} rows x d={}", self.l_pad, self.d))?;
+        if self.w.len() != wd {
+            bail!(
+                "weight store has {} values, expected {wd} ({} rows x d={})",
+                self.w.len(),
+                self.l_pad,
+                self.d
+            );
+        }
+        if self.label_order.len() != self.labels || self.labels > self.l_pad {
+            bail!(
+                "label_order len {} inconsistent with labels={} l_pad={}",
+                self.label_order.len(),
+                self.labels,
+                self.l_pad
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Reusable chunked top-k scanner over a fixed `k`.
+pub struct ChunkScanner {
+    pub k: usize,
+}
+
+impl ChunkScanner {
+    pub fn new(k: usize) -> Self {
+        ChunkScanner { k }
+    }
+
+    /// Score one batch of pooled embeddings `emb` ([batch, d] row-major)
+    /// against every label chunk of `view`, returning a running top-k per
+    /// row.  Padding rows (>= `view.labels`) never enter the fold.
+    pub fn scan(
+        &self,
+        rt: &mut Runtime,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<TopK>> {
+        view.validate()?;
+        if emb.len() != batch * view.d {
+            bail!(
+                "embedding batch has {} values, expected {} ({} x d={})",
+                emb.len(),
+                batch * view.d,
+                batch,
+                view.d
+            );
+        }
+        let art = format!("cls_fwd_{SCORE_LC}");
+        let mut topks: Vec<TopK> = (0..batch).map(|_| TopK::new(self.k)).collect();
+        for chunk in 0..view.l_pad / SCORE_LC {
+            let wslice = &view.w[chunk * SCORE_LC * view.d..(chunk + 1) * SCORE_LC * view.d];
+            let outs = rt.exec(&art, &[Arg::F32(wslice), Arg::F32(emb)])?;
+            let logits = to_vec_f32(&outs[0])?; // [batch, SCORE_LC]
+            for (bi, tk) in topks.iter_mut().enumerate() {
+                let base = bi * SCORE_LC;
+                for j in 0..SCORE_LC {
+                    let row = chunk * SCORE_LC + j;
+                    if row >= view.labels {
+                        break; // padding rows
+                    }
+                    tk.push(logits[base + j], view.label_order[row]);
+                }
+            }
+        }
+        Ok(topks)
+    }
+}

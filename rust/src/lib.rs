@@ -13,9 +13,16 @@
 //! Python never runs on the training path: `runtime` loads the HLO
 //! artifacts through the PJRT C API (`xla` crate) once; afterwards the
 //! whole training loop is rust calling compiled executables.
+//!
+//! Trained models outlive the process through `infer`: a versioned
+//! checkpoint format, a read-only `Predictor` over the shared chunked
+//! top-k scanner, and a micro-batching request queue (`elmo predict` /
+//! `elmo serve-bench`).
 
+pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod infer;
 pub mod memmodel;
 pub mod metrics;
 pub mod numerics;

@@ -1,23 +1,27 @@
 //! `elmo` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   train      train one (dataset, precision) config, print loss + P@k
-//!   eval       evaluate a checkpointless fresh run (smoke)
-//!   datasets   print Table-1-style statistics of the synthetic profiles
-//!   memtrace   print the Fig-3-style memory timeline for a method
-//!   sweep      Fig-2a (E, M) bit-width sweep on a small profile
+//!   train        train one (dataset, precision) config, print loss + P@k
+//!                (`--save` writes a versioned checkpoint)
+//!   predict      load a checkpoint and evaluate P@k on the profile's
+//!                test rows through the serving path
+//!   serve-bench  micro-batched inference throughput/latency benchmark
+//!   datasets     print Table-1-style statistics of the synthetic profiles
+//!   memtrace     print the Fig-3-style memory timeline for a method
+//!   sweep        Fig-2a (E, M) bit-width sweep on a small profile
 //!
-//! Hand-rolled arg parsing (no clap offline; see DESIGN.md Substitutions).
-
-use std::collections::HashMap;
+//! Flag parsing lives in `elmo::cli` (hand-rolled; no clap offline — see
+//! DESIGN.md Substitutions).
 
 use anyhow::{anyhow, bail, Result};
 
+use elmo::cli::{flag, parse_flags, reject_unknown, require, Flags};
 use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
-use elmo::data;
+use elmo::data::{self, SEQ_LEN, VOCAB};
+use elmo::infer::{Checkpoint, MicroBatcher, Predictor};
 use elmo::memmodel::{self, MemParams, Method};
 use elmo::runtime::Runtime;
-use elmo::util::{gib, mmss, print_table};
+use elmo::util::{gib, mmss, print_table, Rng};
 
 const USAGE: &str = "\
 elmo — ELMO (ICML 2025) reproduction CLI
@@ -26,38 +30,28 @@ USAGE:
   elmo train   [--profile NAME] [--precision fp32|bf16|fp8|renee|sampled|fp8-headkahan]
                [--epochs N] [--chunk LC] [--lr-cls F] [--lr-enc F]
                [--dropout-emb F] [--dropout-cls F] [--seed N]
-               [--eval-rows N] [--artifacts DIR]
+               [--momentum F] [--loss-scale F] [--warmup-steps N]
+               [--eval-rows N] [--artifacts DIR] [--save PATH]
+  elmo predict     --checkpoint PATH [--profile NAME] [--eval-rows N]
+                   [--artifacts DIR]
+  elmo serve-bench --checkpoint PATH [--queries N] [--max-burst N] [--k N]
+                   [--seed N] [--artifacts DIR]
   elmo datasets
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
   elmo help
+
+TRAIN FLAGS:
+  --momentum F      Renee momentum coefficient (default 0; the memory
+                    model charges Renee's momentum buffer regardless)
+  --loss-scale F    Renee initial loss scale (default 512)
+  --warmup-steps N  linear LR warmup steps, encoder + classifier
+                    (default 0; paper Table 9 uses 500-15000 at full scale)
+  --save PATH       write a versioned checkpoint (weights, label
+                    permutation, encoder + optimizer state) after training;
+                    serve it with `elmo predict` / `elmo serve-bench`.
+                    Format: docs/INFERENCE.md
 ";
-
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
-    let mut out = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        let a = &args[i];
-        let key = a
-            .strip_prefix("--")
-            .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?;
-        let val = args
-            .get(i + 1)
-            .ok_or_else(|| anyhow!("--{key} needs a value"))?;
-        out.insert(key.to_string(), val.clone());
-        i += 2;
-    }
-    Ok(out)
-}
-
-fn flag<T: std::str::FromStr>(f: &HashMap<String, String>, k: &str, default: T) -> Result<T> {
-    match f.get(k) {
-        None => Ok(default),
-        Some(v) => v
-            .parse()
-            .map_err(|_| anyhow!("bad value `{v}` for --{k}")),
-    }
-}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -74,6 +68,8 @@ fn main() {
 fn run(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&parse_flags(&args[1..])?),
+        Some("predict") => cmd_predict(&parse_flags(&args[1..])?),
+        Some("serve-bench") => cmd_serve_bench(&parse_flags(&args[1..])?),
         Some("datasets") => cmd_datasets(),
         Some("memtrace") => cmd_memtrace(&parse_flags(&args[1..])?),
         Some("sweep") => cmd_sweep(&parse_flags(&args[1..])?),
@@ -85,7 +81,15 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
-fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
+fn cmd_train(f: &Flags) -> Result<()> {
+    reject_unknown(
+        f,
+        &[
+            "profile", "precision", "epochs", "chunk", "lr-cls", "lr-enc", "dropout-emb",
+            "dropout-cls", "seed", "momentum", "loss-scale", "warmup-steps", "eval-rows",
+            "artifacts", "save",
+        ],
+    )?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
     elmo::coordinator::trainer::require_artifacts(&art)?;
     let profile_name: String = flag(f, "profile", "quickstart".to_string())?;
@@ -103,9 +107,11 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
         seed: flag(f, "seed", 0u64)?,
         momentum: flag(f, "momentum", 0.0f32)?,
         init_loss_scale: flag(f, "loss-scale", 512.0f32)?,
+        warmup_steps: flag(f, "warmup-steps", 0u64)?,
         ..TrainConfig::default()
     };
     let eval_rows: usize = flag(f, "eval-rows", 512usize)?;
+    let save_path: String = flag(f, "save", String::new())?;
 
     println!(
         "# ELMO train: profile={} precision={} chunk={} epochs={}",
@@ -137,6 +143,16 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
             }
         );
     }
+    if !save_path.is_empty() {
+        let ckpt = Checkpoint::from_trainer(&tr, &profile_name);
+        ckpt.save(&save_path)?;
+        println!(
+            "# checkpoint: {} ({} weights + {} encoder params) -> {save_path}",
+            ckpt.precision.label(),
+            ckpt.w.len(),
+            ckpt.enc_p.len()
+        );
+    }
     let rep = evaluate(&mut rt, &tr, &ds, eval_rows)?;
     println!("eval: {}", rep.summary());
     // paper-scale memory for this (dataset, method) from the memory model
@@ -154,6 +170,114 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
             gib(memmodel::schedule(method, &mp).peak()),
             method.label()
         );
+    }
+    Ok(())
+}
+
+fn cmd_predict(f: &Flags) -> Result<()> {
+    reject_unknown(f, &["checkpoint", "profile", "eval-rows", "artifacts"])?;
+    let art: String = flag(f, "artifacts", "artifacts".to_string())?;
+    elmo::coordinator::trainer::require_artifacts(&art)?;
+    let ckpt_path = require(f, "checkpoint")?;
+    let p = Predictor::load(&ckpt_path)?;
+    let ck = p.checkpoint();
+    let profile_name: String = flag(f, "profile", ck.profile.clone())?;
+    if profile_name.is_empty() {
+        bail!("checkpoint carries no profile name; pass --profile NAME");
+    }
+    let prof = data::profile(&profile_name)
+        .ok_or_else(|| anyhow!("unknown profile `{profile_name}` (see `elmo datasets`)"))?;
+    let eval_rows: usize = flag(f, "eval-rows", 512usize)?;
+
+    println!(
+        "# ELMO predict: checkpoint={ckpt_path} precision={} enc={} L={} step={}",
+        ck.precision.label(),
+        ck.enc_cfg,
+        ck.labels,
+        ck.step_count
+    );
+    // the stored seed regenerates the exact split the model trained on
+    let ds = data::generate(&prof, ck.seed);
+    let mut rt = Runtime::new(&art)?;
+    let rep = p.evaluate(&mut rt, &ds, eval_rows)?;
+    println!("eval: {}", rep.summary());
+    Ok(())
+}
+
+fn cmd_serve_bench(f: &Flags) -> Result<()> {
+    reject_unknown(f, &["checkpoint", "queries", "max-burst", "k", "seed", "artifacts"])?;
+    let art: String = flag(f, "artifacts", "artifacts".to_string())?;
+    elmo::coordinator::trainer::require_artifacts(&art)?;
+    let ckpt_path = require(f, "checkpoint")?;
+    let p = Predictor::load(&ckpt_path)?;
+    let n_queries: usize = flag(f, "queries", 512usize)?;
+    let k: usize = flag(f, "k", 5usize)?;
+    let seed: u64 = flag(f, "seed", 0u64)?;
+    let mut rt = Runtime::new(&art)?;
+    let width = rt.config().batch;
+    let max_burst: usize = flag(f, "max-burst", 2 * width)?;
+    if n_queries == 0 || max_burst == 0 {
+        bail!("--queries and --max-burst must be positive");
+    }
+
+    // query stream: test rows of the checkpoint's profile when known,
+    // synthetic token rows otherwise
+    let query_rows: Vec<i32> = match data::profile(&p.checkpoint().profile) {
+        Some(prof) => {
+            let ds = data::generate(&prof, p.checkpoint().seed);
+            ds.test.tokens.clone()
+        }
+        None => {
+            let mut rng = Rng::new(seed ^ 0x5E57);
+            (0..256 * SEQ_LEN)
+                .map(|_| 1 + rng.below(VOCAB - 1) as i32)
+                .collect()
+        }
+    };
+    let rows_available = query_rows.len() / SEQ_LEN;
+
+    println!(
+        "# ELMO serve-bench: {} queries, batch width {width}, bursts of 1..={max_burst}, top-{k}",
+        n_queries
+    );
+    let mut mb = MicroBatcher::new(width);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n_queries);
+    let mut submitted = 0usize;
+    while submitted < n_queries {
+        // a variable-size query set, as open-world traffic would arrive
+        let burst = (1 + rng.below(max_burst)).min(n_queries - submitted);
+        let mut toks = Vec::with_capacity(burst * SEQ_LEN);
+        for i in 0..burst {
+            let r = (submitted + i) % rows_available;
+            toks.extend_from_slice(&query_rows[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
+        }
+        mb.submit(&toks)?;
+        submitted += burst;
+        mb.run_ready(|t| p.predict_batch(&mut rt, t, k), &mut out)?;
+    }
+    mb.flush(|t| p.predict_batch(&mut rt, t, k), &mut out)?;
+
+    let s = &mb.stats;
+    print_table(
+        &["queries", "batches", "fill %", "q/s", "p50 ms", "p99 ms"],
+        &[vec![
+            s.completed.to_string(),
+            s.batches.to_string(),
+            format!("{:.0}", 100.0 * s.fill_ratio()),
+            format!("{:.1}", s.qps()),
+            format!("{:.2}", s.p50_ms()),
+            format!("{:.2}", s.p99_ms()),
+        ]],
+    );
+    // spot-print a few predictions so the output is inspectable
+    for pred in out.iter().take(3) {
+        let labels: Vec<String> = pred
+            .topk
+            .iter()
+            .map(|&(s, l)| format!("{l}:{s:.3}"))
+            .collect();
+        println!("query {:>4}: [{}]", pred.id, labels.join(", "));
     }
     Ok(())
 }
@@ -181,7 +305,8 @@ fn cmd_datasets() -> Result<()> {
     Ok(())
 }
 
-fn cmd_memtrace(f: &HashMap<String, String>) -> Result<()> {
+fn cmd_memtrace(f: &Flags) -> Result<()> {
+    reject_unknown(f, &["method", "labels", "chunks"])?;
     let method = match flag(f, "method", "renee".to_string())?.as_str() {
         "renee" => Method::Renee,
         "bf16" => Method::ElmoBf16,
@@ -210,7 +335,8 @@ fn cmd_memtrace(f: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(f: &HashMap<String, String>) -> Result<()> {
+fn cmd_sweep(f: &Flags) -> Result<()> {
+    reject_unknown(f, &["profile", "epochs", "artifacts"])?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
     elmo::coordinator::trainer::require_artifacts(&art)?;
     let profile_name: String = flag(f, "profile", "quickstart".to_string())?;

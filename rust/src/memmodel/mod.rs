@@ -431,4 +431,60 @@ mod tests {
         assert_eq!(tr.peak(), series.iter().map(|(_, b)| *b).max().unwrap());
         assert!(tr.steady() <= tr.peak());
     }
+
+    const ALL_METHODS: [Method; 6] = [
+        Method::Renee,
+        Method::ElmoBf16,
+        Method::ElmoFp8,
+        Method::Fp32,
+        Method::Sampled,
+        Method::Fp8ClsBf16Enc,
+    ];
+
+    #[test]
+    fn peak_dominates_every_series_point() {
+        for m in ALL_METHODS {
+            let tr = schedule(m, &paper());
+            let peak = tr.peak();
+            for (label, live) in tr.series() {
+                assert!(live <= peak, "{m:?}: {label} live {live} > peak {peak}");
+            }
+            assert!(tr.steady() <= peak, "{m:?}: steady above peak");
+            for (phase, live) in tr.phase_peaks() {
+                assert!(live <= peak, "{m:?}: phase {phase} above peak");
+            }
+        }
+    }
+
+    #[test]
+    fn precision_ladder_fp8_below_bf16_below_renee() {
+        // the paper's headline ordering at the Sec 4.4 walkthrough params
+        let p = paper();
+        let fp8 = peak_gib(Method::ElmoFp8, &p);
+        let bf16 = peak_gib(Method::ElmoBf16, &p);
+        let renee = peak_gib(Method::Renee, &p);
+        assert!(
+            fp8 < bf16 && bf16 < renee,
+            "expected FP8 {fp8} < BF16 {bf16} < Renee {renee}"
+        );
+    }
+
+    #[test]
+    fn peak_monotone_nondecreasing_in_labels() {
+        for m in ALL_METHODS {
+            let mut prev = 0u64;
+            for labels in
+                [50_000u64, 131_073, 670_091, 1_305_265, 2_812_281, 8_623_847, 20_000_000]
+            {
+                let mut p = paper();
+                p.labels = labels;
+                let peak = schedule(m, &p).peak();
+                assert!(
+                    peak >= prev,
+                    "{m:?}: peak shrank from {prev} to {peak} at L={labels}"
+                );
+                prev = peak;
+            }
+        }
+    }
 }

@@ -142,6 +142,86 @@ mod tests {
         });
     }
 
+    /// Naive reference: stable sort descending by score, truncate to k.
+    /// Stability matters — `TopK` keeps the earlier-pushed item ahead of
+    /// (and in preference to) later equal-scored items, exactly like a
+    /// stable descending sort.
+    fn sort_and_truncate(stream: &[(f32, u32)], k: usize) -> Vec<(f32, u32)> {
+        let mut v = stream.to_vec();
+        v.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        v.truncate(k);
+        v
+    }
+
+    #[test]
+    fn topk_matches_sort_and_truncate_with_ties() {
+        // coarse score grid -> ties are common; labels disambiguate order
+        prop_check("topk_ties", 300, |rng| {
+            let n = rng.below(64); // includes the empty stream
+            let k = 1 + rng.below(12);
+            let stream: Vec<(f32, u32)> = (0..n)
+                .map(|i| ((rng.below(8) as f32) * 0.25 - 1.0, i as u32))
+                .collect();
+            let mut tk = TopK::new(k);
+            for &(s, l) in &stream {
+                tk.push(s, l);
+            }
+            let want = sort_and_truncate(&stream, k);
+            if tk.items() != want.as_slice() {
+                return Err(format!(
+                    "n={n} k={k}: {:?} != {:?}",
+                    tk.items(),
+                    want
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_k_exceeding_stream_returns_everything_sorted() {
+        prop_check("topk_k_gt_n", 200, |rng| {
+            let n = rng.below(10);
+            let k = n + 1 + rng.below(10); // k strictly > stream length
+            let stream: Vec<(f32, u32)> =
+                (0..n).map(|i| (rng.normal_f32(0.0, 1.0), i as u32)).collect();
+            let mut tk = TopK::new(k);
+            for &(s, l) in &stream {
+                tk.push(s, l);
+            }
+            if tk.items().len() != n {
+                return Err(format!("kept {} of {n} items at k={k}", tk.items().len()));
+            }
+            if tk.items() != sort_and_truncate(&stream, k).as_slice() {
+                return Err(format!("k>n order mismatch: {:?}", tk.items()));
+            }
+            if tk.labels().len() != n {
+                return Err("labels() disagrees with items()".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_invariants_capacity_and_order() {
+        prop_check("topk_invariants", 200, |rng| {
+            let n = 1 + rng.below(300);
+            let k = 1 + rng.below(8);
+            let mut tk = TopK::new(k);
+            for i in 0..n {
+                tk.push(rng.normal_f32(0.0, 1.0), i as u32);
+                // running invariants hold after EVERY push, not just at end
+                if tk.items().len() > k.min(i + 1) {
+                    return Err(format!("overfull at push {i}"));
+                }
+                if tk.items().windows(2).any(|w| w[0].0 < w[1].0) {
+                    return Err(format!("unsorted after push {i}: {:?}", tk.items()));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn p_at_k_basic() {
         // relevant sorted

@@ -1,0 +1,184 @@
+//! Checkpoint format hardening: byte-level round-trip and corruption
+//! tests that need no artifacts (they exercise `infer::checkpoint`
+//! directly, so they run on every `cargo test`, CI included).
+//!
+//! The contract under test: a well-formed checkpoint round-trips
+//! bit-exactly; every malformed input — truncated, wrong magic, wrong
+//! version, bit-flipped, trailing garbage — is an `Err`, never a panic.
+
+use elmo::coordinator::Precision;
+use elmo::infer::checkpoint::{fnv1a, Checkpoint, MAGIC, VERSION};
+use elmo::infer::Predictor;
+
+/// A small but fully-populated checkpoint (no trainer needed).
+fn tiny_ckpt() -> Checkpoint {
+    let d = 4;
+    let l_pad = 8;
+    let labels = 6;
+    Checkpoint {
+        precision: Precision::Bf16,
+        enc_cfg: "bf16",
+        chunk_size: 8,
+        d,
+        head_chunks: 0,
+        l_pad,
+        labels,
+        step_count: 42,
+        loss_scale: 512.0,
+        seed: 7,
+        profile: "quickstart".to_string(),
+        label_order: vec![5, 0, 3, 1, 4, 2],
+        w: (0..l_pad * d).map(|i| i as f32 * 0.125 - 1.0).collect(),
+        mom: vec![],
+        kahan_c: vec![],
+        enc_p: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+        enc_m: vec![0.1, 0.2, 0.3, 0.4],
+        enc_v: vec![0.5, 0.6, 0.7, 0.8],
+        enc_c: vec![0.0; 4],
+    }
+}
+
+/// Re-stamp the trailing checksum after a deliberate header edit, so the
+/// test reaches the check it targets instead of tripping the checksum.
+fn restamp(mut bytes: Vec<u8>) -> Vec<u8> {
+    let n = bytes.len();
+    let sum = fnv1a(&bytes[..n - 8]);
+    bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+#[test]
+fn roundtrip_is_bit_exact() {
+    let ck = tiny_ckpt();
+    let bytes = ck.to_bytes().unwrap();
+    assert_eq!(&bytes[..8], MAGIC);
+    let back = Checkpoint::from_bytes(&bytes).unwrap();
+    assert_eq!(back, ck);
+    // and the serialization itself is deterministic
+    assert_eq!(back.to_bytes().unwrap(), bytes);
+}
+
+#[test]
+fn every_truncation_point_errors_without_panicking() {
+    let bytes = tiny_ckpt().to_bytes().unwrap();
+    // sweep the whole prefix space: header cuts, mid-section cuts, cut
+    // just before the checksum — all must be clean errors
+    for cut in 0..bytes.len() {
+        let res = Checkpoint::from_bytes(&bytes[..cut]);
+        assert!(res.is_err(), "prefix of {cut}/{} bytes was accepted", bytes.len());
+    }
+}
+
+#[test]
+fn bad_magic_errors() {
+    let mut bytes = tiny_ckpt().to_bytes().unwrap();
+    bytes[..8].copy_from_slice(b"NOTACKPT");
+    let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+    assert!(format!("{err}").contains("magic"), "{err}");
+    // an 8-byte impostor file (the pre-infer test fixture) also errors
+    assert!(Checkpoint::from_bytes(b"NOTACKPT").is_err());
+}
+
+#[test]
+fn version_mismatch_errors_by_name() {
+    let mut bytes = tiny_ckpt().to_bytes().unwrap();
+    bytes[8..12].copy_from_slice(&(VERSION + 7).to_le_bytes());
+    // NOT restamped: version gating must fire before checksum reads,
+    // because an unknown future version may have a different trailer
+    let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("version"), "{msg}");
+    assert!(msg.contains(&(VERSION + 7).to_string()), "{msg}");
+}
+
+#[test]
+fn single_bit_flip_is_detected() {
+    let clean = tiny_ckpt().to_bytes().unwrap();
+    // flip one bit in the header, a weight, and the final section
+    for &pos in &[13usize, clean.len() / 2, clean.len() - 12] {
+        let mut bytes = clean.clone();
+        bytes[pos] ^= 0x10;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(
+            format!("{err}").contains("corrupt"),
+            "flip at {pos}: {err}"
+        );
+    }
+}
+
+#[test]
+fn inconsistent_header_rejected_even_with_valid_checksum() {
+    // a checkpoint whose sections disagree with its header is rejected
+    // after the checksum passes (restamped), so shape trust never rests
+    // on the hash alone
+    let mut ck = tiny_ckpt();
+    ck.w.pop(); // w no longer l_pad * d
+    let err = Checkpoint::from_bytes(&restamp(ck.to_bytes().unwrap())).unwrap_err();
+    assert!(format!("{err}").contains("w has"), "{err}");
+
+    let mut ck = tiny_ckpt();
+    ck.label_order.pop();
+    let err = Checkpoint::from_bytes(&restamp(ck.to_bytes().unwrap())).unwrap_err();
+    assert!(format!("{err}").contains("label_order"), "{err}");
+
+    let mut ck = tiny_ckpt();
+    ck.enc_m.pop();
+    let err = Checkpoint::from_bytes(&restamp(ck.to_bytes().unwrap())).unwrap_err();
+    assert!(format!("{err}").contains("encoder state"), "{err}");
+
+    // a non-permutation label_order would index out of bounds on restore
+    let mut ck = tiny_ckpt();
+    ck.label_order[0] = 99;
+    let err = Checkpoint::from_bytes(&restamp(ck.to_bytes().unwrap())).unwrap_err();
+    assert!(format!("{err}").contains("permutation"), "{err}");
+    let mut ck = tiny_ckpt();
+    ck.label_order[0] = ck.label_order[1]; // duplicate entry
+    let err = Checkpoint::from_bytes(&restamp(ck.to_bytes().unwrap())).unwrap_err();
+    assert!(format!("{err}").contains("permutation"), "{err}");
+}
+
+#[test]
+fn unknown_enc_cfg_is_an_error_not_a_panic() {
+    // all-pub fields mean a hand-built checkpoint can carry a config the
+    // format doesn't know; serialization must refuse, not panic
+    let mut ck = tiny_ckpt();
+    ck.enc_cfg = "int4";
+    let err = ck.to_bytes().unwrap_err();
+    assert!(format!("{err}").contains("encoder config"), "{err}");
+    assert!(ck.save("/tmp/elmo_never_written.bin").is_err());
+}
+
+#[test]
+fn trailing_garbage_rejected() {
+    let mut bytes = tiny_ckpt().to_bytes().unwrap();
+    let n = bytes.len();
+    // splice garbage between the last section and the checksum, restamp
+    bytes.splice(n - 8..n - 8, [0xDEu8, 0xAD].iter().copied());
+    let err = Checkpoint::from_bytes(&restamp(bytes)).unwrap_err();
+    assert!(format!("{err}").contains("trailing"), "{err}");
+}
+
+#[test]
+fn predictor_load_propagates_format_errors() {
+    let dir = std::env::temp_dir();
+    let p = dir.join("elmo_bad_ckpt.bin");
+    let path = p.to_str().unwrap();
+    std::fs::write(path, b"garbage that is not a checkpoint").unwrap();
+    assert!(Predictor::load(path).is_err());
+    let _ = std::fs::remove_file(path);
+    assert!(
+        Predictor::load(dir.join("elmo_no_such_ckpt.bin").to_str().unwrap()).is_err(),
+        "missing file must be an error"
+    );
+}
+
+#[test]
+fn save_load_through_the_filesystem() {
+    let ck = tiny_ckpt();
+    let p = std::env::temp_dir().join("elmo_fs_roundtrip.bin");
+    let path = p.to_str().unwrap();
+    ck.save(path).unwrap();
+    let back = Checkpoint::load(path).unwrap();
+    assert_eq!(back, ck);
+    let _ = std::fs::remove_file(path);
+}

@@ -6,6 +6,7 @@
 
 use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data;
+use elmo::infer::{Checkpoint, Predictor};
 use elmo::numerics::{quantize_rne, BF16, E4M3};
 use elmo::runtime::{to_vec_f32, Arg, Runtime};
 
@@ -288,6 +289,61 @@ fn checkpoint_roundtrip() {
     // corrupted magic is rejected
     std::fs::write(path, b"NOTACKPT").unwrap();
     assert!(tr2.load_checkpoint(path).is_err());
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn predictor_reproduces_in_memory_eval_exactly() {
+    // train -> save -> reload through the serving path: weights must be
+    // bit-exact and P@k / PSP@k identical (not merely close) to the
+    // in-memory evaluate(), because both drive the same ChunkScanner.
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
+    let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
+    for _ in 0..6 {
+        let (rows, _) = batcher.next_batch().unwrap();
+        tr.step(&mut rt, &ds, &rows).unwrap();
+    }
+    let rep_mem = evaluate(&mut rt, &tr, &ds, 96).unwrap();
+
+    let path = std::env::temp_dir().join("elmo_predictor_parity.bin");
+    let path = path.to_str().unwrap();
+    Checkpoint::from_trainer(&tr, "quickstart").save(path).unwrap();
+    let p = Predictor::load(path).unwrap();
+    // bit-exact round-trip of the full model state
+    assert_eq!(p.checkpoint().w, tr.w);
+    assert_eq!(p.checkpoint().enc_p, tr.enc_p);
+    assert_eq!(p.checkpoint().label_order, tr.label_order);
+    assert_eq!(p.checkpoint().profile, "quickstart");
+    assert_eq!(p.checkpoint().seed, tr.cfg.seed);
+
+    let rep_srv = p.evaluate(&mut rt, &ds, 96).unwrap();
+    assert_eq!(rep_srv.n, rep_mem.n);
+    assert_eq!(rep_srv.p, rep_mem.p, "P@k must match the in-memory eval exactly");
+    assert_eq!(rep_srv.psp, rep_mem.psp, "PSP@k must match exactly");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn head_kahan_checkpoint_preserves_permutation() {
+    // the label permutation is part of the model: a head-Kahan checkpoint
+    // served without it would score the wrong labels
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Fp8HeadKahan, 512);
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    tr.step(&mut rt, &ds, &rows).unwrap();
+    let rep_mem = evaluate(&mut rt, &tr, &ds, 64).unwrap();
+    let path = std::env::temp_dir().join("elmo_headkahan_ckpt.bin");
+    let path = path.to_str().unwrap();
+    Checkpoint::from_trainer(&tr, "quickstart").save(path).unwrap();
+    let p = Predictor::load(path).unwrap();
+    assert_ne!(
+        p.checkpoint().label_order,
+        (0..ds.profile.labels as u32).collect::<Vec<_>>(),
+        "head-Kahan must have permuted rows"
+    );
+    let rep_srv = p.evaluate(&mut rt, &ds, 64).unwrap();
+    assert_eq!(rep_srv.p, rep_mem.p);
     let _ = std::fs::remove_file(path);
 }
 
