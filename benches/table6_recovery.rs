@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             ..TrainConfig::default()
         };
         let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
-        tr.w.copy_from_slice(&fp8.w);
+        tr.store.w_mut().copy_from_slice(fp8.store.w());
         tr.enc_p.copy_from_slice(&fp8.enc_p);
         let mut b = Batcher::new(ds.train.n, tr.batch, 9);
         while let Some((rws, _)) = b.next_batch() {

@@ -62,7 +62,7 @@ pub fn evaluate(
     let m = EvalModel {
         enc_p: &tr.enc_p,
         enc_art: format!("enc_fwd_{}", tr.enc_cfg()),
-        cls: ClassifierView::of_trainer(tr),
+        cls: ClassifierView::of_store(&tr.store),
     };
     evaluate_model(rt, &m, ds, max_rows)
 }
@@ -131,10 +131,13 @@ pub fn diagnostics_hist(
     ds: &Dataset,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     let b = tr.batch;
-    let d = tr.d;
-    let lc = 2048.min(tr.l_pad);
+    let d = tr.store.d;
+    let lc = 2048.min(tr.store.l_pad);
     if lc != 2048 {
-        bail!("grad_hist artifact needs >= 2048 labels (have {})", tr.l_pad);
+        bail!(
+            "grad_hist artifact needs >= 2048 labels (have {})",
+            tr.store.l_pad
+        );
     }
     let rows: Vec<u32> = (0..b as u32).collect();
     let tokens = tr.batch_tokens(ds, &rows);
@@ -148,19 +151,11 @@ pub fn diagnostics_hist(
             Arg::F32(&[0.0]),
         ],
     )?;
-    let mut y = vec![0.0f32; b * lc];
-    for (bi, &r) in rows.iter().enumerate() {
-        for &lab in ds.train.labels.row(r as usize) {
-            let row = tr.label_row[lab as usize] as usize;
-            if row < lc {
-                y[bi * lc + row] = 1.0;
-            }
-        }
-    }
+    let y = tr.store.y_block(&ds.train.labels, &rows, 0, lc);
     let emb = to_vec_f32(&emb_out[0])?;
     let outs = rt.exec(
         "grad_hist_2048",
-        &[Arg::F32(&tr.w[..lc * d]), Arg::F32(&emb), Arg::F32(&y)],
+        &[Arg::F32(&tr.store.w()[..lc * d]), Arg::F32(&emb), Arg::F32(&y)],
     )?;
     Ok((
         to_vec_f32(&outs[0])?,

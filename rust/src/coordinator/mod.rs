@@ -16,9 +16,12 @@
 //! VMEM tile (gradient fusion); the only full-width transients are one
 //! chunk of logits inside the executable and the [b, d] input gradient.
 //!
-//! Precision policies (`Precision`) select which executables run and how
-//! the host treats the weight store; the Renee policy adds the loss-scale
-//! manager with genuine FP16 overflow detection.
+//! The chunk loop itself is policy-agnostic: each `Precision` maps to a
+//! `crate::policy::UpdatePolicy` impl that picks the executables, owns the
+//! extra `WeightStore` buffers (momentum, Kahan compensation), and defines
+//! commit/rollback semantics (the Renee policy stages updates and commits
+//! only on clean steps, with genuine FP16 overflow detection).  See
+//! docs/ARCHITECTURE.md for the full layering.
 
 //! Evaluation and serving share one scoring path: `eval` embeds test rows
 //! and delegates the chunk scan to `infer::ChunkScanner`, the same scanner

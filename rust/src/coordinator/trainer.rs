@@ -1,69 +1,30 @@
-//! The Trainer: owns model state (host-side weight store + encoder packed
-//! vectors), the chunk scheduler, and the per-step execution plan.
+//! The Trainer: owns the encoder state, the shared `WeightStore`, and the
+//! precision policy; one step is encoder-forward → the policy's classifier
+//! pass over the store → encoder-backward.
+//!
+//! All per-precision behavior (kernel choice, Kahan chunk routing, Renee
+//! commit-on-clean-step and loss scaling, shortlist sampling) lives in
+//! `policy::UpdatePolicy` impls; this file holds only the policy-agnostic
+//! orchestration.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::{Dataset, SEQ_LEN};
-use crate::numerics::{self, quantize_param, quantize_rne, BF16, E4M3, FP16};
-use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
+use crate::numerics::{self, quantize_param, quantize_rne, BF16, E4M3};
+use crate::policy::{
+    Bf16Policy, Fp32Policy, Fp8HeadKahanPolicy, Fp8Policy, ReneePolicy, SampledPolicy, StepCtx,
+    UpdatePolicy,
+};
+use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::store::WeightStore;
+use crate::util::RingF32;
 
-/// Classifier/encoder precision policy (paper Table 2/3 method rows).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Precision {
-    /// FP32 classifier SGD + FP32 encoder AdamW (Table 3 FLOAT32).
-    Fp32,
-    /// ELMO BF16: BF16 weights with SR, BF16 grads, Kahan-AdamW encoder.
-    Bf16,
-    /// ELMO FP8: E4M3 weights + inputs, BF16 grads, FP8 encoder.
-    Fp8,
-    /// Renee: FP16-FP32 mixed precision + momentum + loss scaling.
-    Renee,
-    /// Sampling baseline (LightXML-shape): fp32 updates on a shortlist of
-    /// positives + uniform negatives only.
-    Sampled,
-    /// ELMO FP8 with BF16+Kahan updates for the top `head_frac` most
-    /// frequent labels (paper Appendix D.2 / Table 6).
-    Fp8HeadKahan,
-}
+pub use crate::policy::Precision;
 
-impl Precision {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "fp32" => Precision::Fp32,
-            "bf16" => Precision::Bf16,
-            "fp8" => Precision::Fp8,
-            "renee" => Precision::Renee,
-            "sampled" => Precision::Sampled,
-            "fp8-headkahan" => Precision::Fp8HeadKahan,
-            other => bail!("unknown precision `{other}`"),
-        })
-    }
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            Precision::Fp32 => "Float32",
-            Precision::Bf16 => "ELMO (BF16)",
-            Precision::Fp8 => "ELMO (FP8)",
-            Precision::Renee => "Renee",
-            Precision::Sampled => "Sampled",
-            Precision::Fp8HeadKahan => "ELMO (FP8+HeadKahan)",
-        }
-    }
-
-    /// Encoder precision config name (enc_fwd_* / enc_bwd_* artifact pick).
-    pub fn enc_cfg(&self) -> &'static str {
-        match self {
-            Precision::Fp32 | Precision::Sampled => "fp32",
-            Precision::Bf16 => "bf16",
-            // Renee trains the encoder in mixed precision; bf16 is the
-            // closest emulation with the same activation widths.
-            Precision::Renee => "bf16",
-            Precision::Fp8 | Precision::Fp8HeadKahan => "fp8",
-        }
-    }
-}
+/// Retained per-step gmax window (diagnostics; bounds memory on long runs).
+pub const GMAX_HISTORY_CAP: usize = 4096;
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -129,6 +90,25 @@ impl Default for TrainConfig {
     }
 }
 
+impl TrainConfig {
+    /// Instantiate this config's precision policy.
+    pub fn build_policy(&self) -> Box<dyn UpdatePolicy> {
+        match self.precision {
+            Precision::Fp32 => Box::new(Fp32Policy),
+            Precision::Bf16 => Box::new(Bf16Policy),
+            Precision::Fp8 => Box::new(Fp8Policy),
+            Precision::Renee => Box::new(ReneePolicy { momentum: self.momentum }),
+            Precision::Sampled => Box::new(SampledPolicy {
+                shortlist: self.shortlist,
+                neg_per_step: self.neg_per_step,
+            }),
+            Precision::Fp8HeadKahan => {
+                Box::new(Fp8HeadKahanPolicy { head_frac: self.head_frac })
+            }
+        }
+    }
+}
+
 /// Per-epoch statistics the harnesses report.
 #[derive(Clone, Debug, Default)]
 pub struct EpochStats {
@@ -140,37 +120,33 @@ pub struct EpochStats {
     pub loss_scale: f32,
     /// Max |classifier logit gradient| seen (Fig 2b context).
     pub gmax: f32,
+    /// Sampled: batch positives that fell past the shortlist width this
+    /// epoch (would previously be dropped silently).
+    pub truncated_positives: usize,
 }
 
 /// Training state + execution plan.
 pub struct Trainer {
     pub cfg: TrainConfig,
-    /// Classifier weights [L_pad, d] row-major, values on the policy's grid.
-    pub w: Vec<f32>,
-    /// Renee momentum buffer (fp32), same shape as w.
-    pub mom: Vec<f32>,
-    /// Kahan compensation for head chunks (Fp8HeadKahan), same shape as w.
-    pub kahan_c: Vec<f32>,
+    /// Chunk-addressed classifier state: weights, momentum, Kahan
+    /// compensation, and the label permutation.
+    pub store: WeightStore,
+    /// The precision policy driving the store.
+    pub policy: Box<dyn UpdatePolicy>,
     /// Packed encoder params + AdamW state.
     pub enc_p: Vec<f32>,
     pub enc_m: Vec<f32>,
     pub enc_v: Vec<f32>,
     pub enc_c: Vec<f32>,
-    /// Labels padded up to a chunk multiple.
-    pub l_pad: usize,
-    pub d: usize,
     pub batch: usize,
-    /// Chunks using the Kahan path (head labels; Fp8HeadKahan only).
-    pub head_chunks: usize,
-    /// Label permutation: W row r holds label label_order[r].  Identity
-    /// except for Fp8HeadKahan, which sorts head labels first.
-    pub label_order: Vec<u32>,
-    /// Inverse permutation: label -> row.
-    pub label_row: Vec<u32>,
     pub loss_scale: f32,
     pub step_count: u64,
-    /// Exponent histogram of |logit grad| maxima per step (diagnostics).
-    pub gmax_history: Vec<f32>,
+    /// Bounded window of per-step |logit grad| maxima (diagnostics).
+    pub gmax_history: RingF32,
+    /// Running max over the whole run (exact even past the ring window).
+    pub gmax_peak: f32,
+    /// Running count of shortlist-truncated positives (Sampled).
+    pub truncated_positives: u64,
 }
 
 impl Trainer {
@@ -179,7 +155,6 @@ impl Trainer {
         let d = mc.d;
         let batch = mc.batch;
         let l = ds.profile.labels;
-        let l_pad = l.div_ceil(cfg.chunk_size) * cfg.chunk_size;
 
         // encoder init from the AOT-written binary (grid matching policy)
         let init_file = match cfg.enc_override.unwrap_or(cfg.precision.enc_cfg()) {
@@ -193,64 +168,39 @@ impl Trainer {
         }
 
         // classifier zero-init (Renee-style); zeros are on every grid.
-        // Sampled policy appends `shortlist` scratch rows: shortlist slots
-        // not filled by positives/negatives gather from (and are never
-        // scattered back to) this region, keeping it identically zero so
-        // scratch rows contribute nothing to the input gradient.
-        let scratch = if cfg.precision == Precision::Sampled {
-            cfg.shortlist
-        } else {
-            0
-        };
-        let w = vec![0.0f32; (l_pad + scratch) * d];
-        let mom = if cfg.precision == Precision::Renee {
-            vec![0.0f32; l_pad * d]
-        } else {
-            Vec::new()
-        };
-
-        let (label_order, head_chunks) = if cfg.precision == Precision::Fp8HeadKahan {
-            let order = ds.labels_by_freq();
-            let head_labels = (cfg.head_frac * l as f64).round() as usize;
-            let hc = head_labels.div_ceil(cfg.chunk_size);
-            (order, hc)
-        } else {
-            ((0..l as u32).collect(), 0)
-        };
-        let mut label_row = vec![0u32; l];
-        for (row, &lab) in label_order.iter().enumerate() {
-            label_row[lab as usize] = row as u32;
-        }
-        let kahan_c = if head_chunks > 0 {
-            vec![0.0f32; l_pad * d]
-        } else {
-            Vec::new()
-        };
+        // The policy declares which buffers the store allocates and which
+        // label permutation it imposes.
+        let policy = cfg.build_policy();
+        let (label_order, head_chunks) = policy.label_order(ds, cfg.chunk_size);
+        let store = WeightStore::new(
+            l,
+            d,
+            cfg.chunk_size,
+            label_order,
+            head_chunks,
+            policy.buffers(),
+        )?;
 
         let psize = mc.psize;
         Ok(Trainer {
             cfg: cfg.clone(),
-            w,
-            mom,
-            kahan_c,
+            store,
+            policy,
             enc_p,
             enc_m: vec![0.0; psize],
             enc_v: vec![0.0; psize],
             enc_c: vec![0.0; psize],
-            l_pad,
-            d,
             batch,
-            head_chunks,
-            label_order,
-            label_row,
             loss_scale: cfg.init_loss_scale,
             step_count: 0,
-            gmax_history: Vec::new(),
+            gmax_history: RingF32::new(GMAX_HISTORY_CAP),
+            gmax_peak: 0.0,
+            truncated_positives: 0,
         })
     }
 
     pub fn chunks(&self) -> usize {
-        self.l_pad / self.cfg.chunk_size
+        self.store.chunks()
     }
 
     /// Effective encoder precision config (honors `enc_override`).
@@ -264,24 +214,10 @@ impl Trainer {
         let enc = self.enc_cfg();
         rt.prepare(&format!("enc_fwd_{enc}"))?;
         rt.prepare(&format!("enc_bwd_{enc}"))?;
-        rt.prepare(&self.cls_artifact())?;
-        if self.head_chunks > 0 {
-            rt.prepare(&format!("cls_kahan_{}", self.cfg.chunk_size))?;
-        }
-        if self.cfg.precision == Precision::Sampled {
-            rt.prepare(&format!("cls_chunk_fp32_{}", self.cfg.shortlist))?;
+        for art in self.policy.artifacts(self.cfg.chunk_size) {
+            rt.prepare(&art)?;
         }
         Ok(())
-    }
-
-    fn cls_artifact(&self) -> String {
-        let lc = self.cfg.chunk_size;
-        match self.cfg.precision {
-            Precision::Fp32 | Precision::Sampled => format!("cls_chunk_fp32_{lc}"),
-            Precision::Bf16 => format!("cls_chunk_bf16_{lc}"),
-            Precision::Fp8 | Precision::Fp8HeadKahan => format!("cls_chunk_fp8_{lc}"),
-            Precision::Renee => format!("cls_renee_{lc}"),
-        }
     }
 
     /// Gather a batch's tokens into the [b, s] i32 layout.
@@ -292,23 +228,6 @@ impl Trainer {
             out.extend_from_slice(&ds.train.tokens[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
         }
         out
-    }
-
-    /// Dense Y block [b, Lc] for one label chunk (permutation-aware).
-    fn batch_y_chunk(&self, ds: &Dataset, rows: &[u32], chunk: usize) -> Vec<f32> {
-        let lc = self.cfg.chunk_size;
-        let lo = chunk * lc;
-        let hi = lo + lc;
-        let mut y = vec![0.0f32; rows.len() * lc];
-        for (bi, &r) in rows.iter().enumerate() {
-            for &lab in ds.train.labels.row(r as usize) {
-                let row = self.label_row[lab as usize] as usize;
-                if row >= lo && row < hi {
-                    y[bi * lc + (row - lo)] = 1.0;
-                }
-            }
-        }
-        y
     }
 
     /// Classifier LR at the current step (linear warmup, Table 9).
@@ -350,24 +269,30 @@ impl Trainer {
         )?;
         let emb = to_vec_f32(&emb_out[0])?;
 
-        // 2. classifier chunks
-        let (xgrad, loss, gmax, overflow) = match self.cfg.precision {
-            Precision::Sampled => self.step_cls_sampled(rt, ds, rows, &emb, seed)?,
-            Precision::Renee => self.step_cls_renee(rt, ds, rows, &emb, seed)?,
-            _ => self.step_cls_chunked(rt, ds, rows, &emb, seed)?,
+        // 2. classifier pass: the policy drives the store (chunk loop for
+        //    every chunk-shaped policy, shortlist kernel for Sampled);
+        //    kernel names resolve once here, not per chunk
+        let arts = self.policy.artifacts(self.cfg.chunk_size);
+        let ctx = StepCtx {
+            emb: &emb,
+            arts: &arts,
+            lr_cls: self.lr_cls_now(),
+            dropout_cls: self.cfg.dropout_cls,
+            seed,
+            batch: self.batch,
+            step_count: self.step_count,
         };
-        self.gmax_history.push(gmax);
+        let out =
+            self.policy
+                .run_step(rt, &mut self.store, ds, rows, &ctx, &mut self.loss_scale)?;
+        self.gmax_history.push(out.gmax);
+        self.gmax_peak = self.gmax_peak.max(out.gmax);
+        self.truncated_positives += out.truncated_positives as u64;
 
-        if overflow {
-            // Renee loss-scale manager: halve the scale, skip both updates
-            self.loss_scale = (self.loss_scale * 0.5).max(1.0);
-            return Ok((loss, true));
-        }
-        if self.cfg.precision == Precision::Renee {
-            // mild scale growth after a stable stretch (standard AMP rule)
-            if self.step_count % 200 == 0 {
-                self.loss_scale = (self.loss_scale * 2.0).min(65536.0);
-            }
+        if out.overflow {
+            // the policy rolled its updates back (Renee AMP semantics);
+            // the encoder must skip this step too
+            return Ok((out.loss, true));
         }
 
         // 3. encoder backward + optimizer (runs AFTER all classifier work —
@@ -380,7 +305,7 @@ impl Trainer {
                 Arg::F32(&self.enc_v),
                 Arg::F32(&self.enc_c),
                 Arg::I32(&tokens),
-                Arg::F32(&xgrad),
+                Arg::F32(&out.xgrad),
                 Arg::F32(&[self.lr_enc_now()]),
                 Arg::F32(&[self.cfg.wd_enc]),
                 Arg::F32(&[self.step_count as f32]),
@@ -392,238 +317,7 @@ impl Trainer {
         self.enc_m = to_vec_f32(&outs[1])?;
         self.enc_v = to_vec_f32(&outs[2])?;
         self.enc_c = to_vec_f32(&outs[3])?;
-        Ok((loss, false))
-    }
-
-    /// ELMO-style chunked classifier pass (fp32 / bf16 / fp8 / head-kahan).
-    fn step_cls_chunked(
-        &mut self,
-        rt: &mut Runtime,
-        ds: &Dataset,
-        rows: &[u32],
-        emb: &[f32],
-        seed: i32,
-    ) -> Result<(Vec<f32>, f64, f32, bool)> {
-        let lc = self.cfg.chunk_size;
-        let nd = self.batch * self.d;
-        let mut xgrad = vec![0.0f32; nd];
-        let mut loss = 0.0f64;
-        let mut gmax = 0.0f32;
-        let art = self.cls_artifact();
-        let kahan_art = format!("cls_kahan_{lc}");
-
-        for chunk in 0..self.chunks() {
-            let wslice = &self.w[chunk * lc * self.d..(chunk + 1) * lc * self.d];
-            let y = self.batch_y_chunk(ds, rows, chunk);
-            let use_kahan = chunk < self.head_chunks;
-            let lr = [self.lr_cls_now()];
-            let cseed = [seed ^ ((chunk as i32) << 8)];
-            let drop = [self.cfg.dropout_cls];
-            let outs = if use_kahan {
-                let cslice =
-                    &self.kahan_c[chunk * lc * self.d..(chunk + 1) * lc * self.d];
-                rt.exec(
-                    &kahan_art,
-                    &[
-                        Arg::F32(wslice),
-                        Arg::F32(cslice),
-                        Arg::F32(emb),
-                        Arg::F32(&y),
-                        Arg::F32(&lr),
-                        Arg::I32(&cseed),
-                        Arg::F32(&drop),
-                    ],
-                )?
-            } else {
-                rt.exec(
-                    &art,
-                    &[
-                        Arg::F32(wslice),
-                        Arg::F32(emb),
-                        Arg::F32(&y),
-                        Arg::F32(&lr),
-                        Arg::I32(&cseed),
-                        Arg::F32(&drop),
-                    ],
-                )?
-            };
-            // write back W' (and C'), accumulate Xgrad/loss/gmax
-            let wnew = to_vec_f32(&outs[0])?;
-            self.w[chunk * lc * self.d..(chunk + 1) * lc * self.d]
-                .copy_from_slice(&wnew);
-            let (xg_idx, loss_idx, gmax_idx) = if use_kahan {
-                let cnew = to_vec_f32(&outs[1])?;
-                self.kahan_c[chunk * lc * self.d..(chunk + 1) * lc * self.d]
-                    .copy_from_slice(&cnew);
-                (2, 3, 4)
-            } else {
-                (1, 2, 3)
-            };
-            let xg = to_vec_f32(&outs[xg_idx])?;
-            for (a, b) in xgrad.iter_mut().zip(xg.iter()) {
-                *a += b;
-            }
-            loss += to_scalar_f32(&outs[loss_idx])? as f64;
-            gmax = gmax.max(to_scalar_f32(&outs[gmax_idx])?);
-        }
-        let denom = (self.batch * ds.profile.labels) as f64;
-        Ok((xgrad, loss / denom, gmax, false))
-    }
-
-    /// Renee classifier pass: fp16-grid Xgrad accumulation across chunks
-    /// (faithful to an unchunked fp16 pipeline), overflow detection, and
-    /// update rollback on overflow.
-    fn step_cls_renee(
-        &mut self,
-        rt: &mut Runtime,
-        ds: &Dataset,
-        rows: &[u32],
-        emb: &[f32],
-        seed: i32,
-    ) -> Result<(Vec<f32>, f64, f32, bool)> {
-        let lc = self.cfg.chunk_size;
-        let nd = self.batch * self.d;
-        let mut xgrad = vec![0.0f32; nd];
-        let mut loss = 0.0f64;
-        let mut overflow = false;
-        let art = self.cls_artifact();
-        let _ = seed;
-
-        let mut new_w: Vec<Vec<f32>> = Vec::with_capacity(self.chunks());
-        let mut new_m: Vec<Vec<f32>> = Vec::with_capacity(self.chunks());
-        for chunk in 0..self.chunks() {
-            let span = chunk * lc * self.d..(chunk + 1) * lc * self.d;
-            let y = self.batch_y_chunk(ds, rows, chunk);
-            let outs = rt.exec(
-                &art,
-                &[
-                    Arg::F32(&self.w[span.clone()]),
-                    Arg::F32(&self.mom[span.clone()]),
-                    Arg::F32(emb),
-                    Arg::F32(&y),
-                    Arg::F32(&[self.lr_cls_now()]),
-                    Arg::F32(&[self.cfg.momentum]),
-                    Arg::F32(&[self.loss_scale]),
-                ],
-            )?;
-            new_w.push(to_vec_f32(&outs[0])?);
-            new_m.push(to_vec_f32(&outs[1])?);
-            let xg = to_vec_f32(&outs[2])?;
-            // f32 accumulation across chunks (hardware fp16 matmuls keep
-            // fp32 accumulators); the stored value is quantized below.
-            for (a, b) in xgrad.iter_mut().zip(xg.iter()) {
-                *a += b;
-            }
-            loss += to_scalar_f32(&outs[3])? as f64;
-            if to_scalar_f32(&outs[4])? > 0.0 {
-                overflow = true;
-            }
-        }
-        // store the accumulated input gradient on the fp16 grid — THIS is
-        // where the paper's large-L overflow appears (scaled grads summed
-        // over millions of labels exceed 65504)
-        for v in xgrad.iter_mut() {
-            let q = quantize_rne(*v, &FP16);
-            *v = if v.abs() > FP16.max_value || !v.is_finite() {
-                f32::INFINITY * v.signum()
-            } else {
-                q
-            };
-        }
-        if xgrad.iter().any(|v| !v.is_finite()) {
-            overflow = true;
-        }
-        if !overflow {
-            // commit updates only on a clean step (AMP semantics)
-            for (chunk, (wn, mn)) in new_w.into_iter().zip(new_m).enumerate() {
-                let span = chunk * lc * self.d..(chunk + 1) * lc * self.d;
-                self.w[span.clone()].copy_from_slice(&wn);
-                self.mom[span].copy_from_slice(&mn);
-            }
-            // unscale the input gradient for the encoder
-            for v in xgrad.iter_mut() {
-                *v /= self.loss_scale;
-            }
-        }
-        let denom = (self.batch * ds.profile.labels) as f64;
-        let gmax = self.loss_scale; // scaled-grad bound proxy
-        Ok((xgrad, loss / denom, gmax, overflow))
-    }
-
-    /// Sampling baseline: update only shortlisted label rows (positives of
-    /// the batch + uniform negatives) with the fp32 kernel.
-    fn step_cls_sampled(
-        &mut self,
-        rt: &mut Runtime,
-        ds: &Dataset,
-        rows: &[u32],
-        emb: &[f32],
-        seed: i32,
-    ) -> Result<(Vec<f32>, f64, f32, bool)> {
-        let lc = self.cfg.shortlist;
-        let art = format!("cls_chunk_fp32_{lc}");
-        if !rt.has(&art) {
-            bail!("no fp32 artifact for shortlist size {lc}");
-        }
-        // shortlist: batch positives + a SMALL uniform negative budget
-        // (emulating the paper-scale ~0.1% label coverage of sampling
-        // methods); remaining slots gather from the zero scratch region
-        // and are never written back.
-        let mut short: Vec<u32> = Vec::with_capacity(lc);
-        for &r in rows {
-            for &lab in ds.train.labels.row(r as usize) {
-                if !short.contains(&lab) {
-                    short.push(lab);
-                }
-            }
-        }
-        short.truncate(lc.saturating_sub(1));
-        let mut rng = crate::util::Rng::new(seed as u64 ^ 0x5A3);
-        let neg_budget = self.cfg.neg_per_step.min(lc - short.len());
-        for _ in 0..neg_budget {
-            let cand = rng.below(ds.profile.labels) as u32;
-            if !short.contains(&cand) {
-                short.push(cand);
-            }
-        }
-        let real = short.len();
-        // gather real rows, then scratch rows for the unused slots
-        let mut wg = vec![0.0f32; lc * self.d];
-        for (i, &lab) in short.iter().enumerate() {
-            let row = self.label_row[lab as usize] as usize;
-            wg[i * self.d..(i + 1) * self.d]
-                .copy_from_slice(&self.w[row * self.d..(row + 1) * self.d]);
-        }
-        // (scratch region is all-zero; wg slots >= real already are zero)
-        let mut y = vec![0.0f32; self.batch * lc];
-        for (bi, &r) in rows.iter().enumerate() {
-            for &lab in ds.train.labels.row(r as usize) {
-                if let Some(pos) = short.iter().position(|&s| s == lab) {
-                    y[bi * lc + pos] = 1.0;
-                }
-            }
-        }
-        let outs = rt.exec(
-            &art,
-            &[
-                Arg::F32(&wg),
-                Arg::F32(emb),
-                Arg::F32(&y),
-                Arg::F32(&[self.lr_cls_now()]),
-                Arg::I32(&[seed]),
-                Arg::F32(&[self.cfg.dropout_cls]),
-            ],
-        )?;
-        let wn = to_vec_f32(&outs[0])?;
-        for (i, &lab) in short.iter().enumerate().take(real) {
-            let row = self.label_row[lab as usize] as usize;
-            self.w[row * self.d..(row + 1) * self.d]
-                .copy_from_slice(&wn[i * self.d..(i + 1) * self.d]);
-        }
-        let xgrad = to_vec_f32(&outs[1])?;
-        let loss = to_scalar_f32(&outs[2])? as f64 / (self.batch * lc) as f64;
-        let gmax = to_scalar_f32(&outs[3])?;
-        Ok((xgrad, loss, gmax, false))
+        Ok((out.loss, false))
     }
 
     /// One full epoch; shuffles, steps every batch, returns stats.
@@ -633,6 +327,7 @@ impl Trainer {
         let mut stats = EpochStats::default();
         let t0 = std::time::Instant::now();
         let mut loss_sum = 0.0;
+        let trunc0 = self.truncated_positives;
         while let Some((rows, _valid)) = batcher.next_batch() {
             let (loss, overflowed) = self.step(rt, ds, &rows)?;
             loss_sum += loss;
@@ -644,7 +339,8 @@ impl Trainer {
         stats.mean_loss = loss_sum / stats.steps.max(1) as f64;
         stats.secs = t0.elapsed().as_secs_f64();
         stats.loss_scale = self.loss_scale;
-        stats.gmax = self.gmax_history.iter().fold(0.0f32, |a, &b| a.max(b));
+        stats.gmax = self.gmax_peak;
+        stats.truncated_positives = (self.truncated_positives - trunc0) as usize;
         Ok(stats)
     }
 
@@ -653,7 +349,7 @@ impl Trainer {
     /// quantizer (`quant_sweep` artifact) via the shared softfloat.
     pub fn quantize_classifier(&mut self, e_bits: u32, m_bits: u32, sr: bool) {
         let seed = (self.step_count as u32).wrapping_add(0xF16A);
-        for (i, v) in self.w.iter_mut().enumerate() {
+        for (i, v) in self.store.w_mut().iter_mut().enumerate() {
             let rnd = if sr {
                 Some(numerics::hash_uniform(
                     i as u32,
@@ -674,22 +370,16 @@ impl Trainer {
             Precision::Fp8 => &E4M3,
             _ => return true,
         };
-        self.w.iter().all(|&v| v == quantize_rne(v, fmt))
+        self.store.w().iter().all(|&v| v == quantize_rne(v, fmt))
     }
 
     /// Rough (scaled-run) live-memory accounting of the trainer's host
     /// buffers, for the perf harness (paper-scale numbers come from
-    /// `memmodel`).
+    /// `memmodel`, which reads the same store).
     pub fn host_bytes(&self) -> HashMap<&'static str, usize> {
-        let mut m = HashMap::new();
-        m.insert("cls_w", self.w.len() * 4);
-        m.insert("cls_mom", self.mom.len() * 4);
-        m.insert("kahan_c", self.kahan_c.len() * 4);
-        m.insert(
-            "encoder",
-            (self.enc_p.len() + self.enc_m.len() + self.enc_v.len() + self.enc_c.len()) * 4,
-        );
-        m
+        let enc_floats =
+            self.enc_p.len() + self.enc_m.len() + self.enc_v.len() + self.enc_c.len();
+        crate::memmodel::host_bytes(&self.store, enc_floats)
     }
 }
 

@@ -403,7 +403,7 @@ mod tests {
             }
         }
         assert!(coll < 3);
-        assert!(a.iter().all(|&t| t >= 1 && t < VOCAB as i32));
+        assert!(a.iter().all(|&t| (1..VOCAB as i32).contains(&t)));
     }
 
     #[test]

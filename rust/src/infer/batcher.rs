@@ -292,9 +292,9 @@ mod tests {
     fn submit_rejects_ragged_and_empty_sets() {
         let mut mb = MicroBatcher::new(4);
         assert!(mb.submit(&[]).is_err());
-        assert!(mb.submit(&vec![0i32; SEQ_LEN + 1]).is_err());
+        assert!(mb.submit(&[0i32; SEQ_LEN + 1]).is_err());
         assert_eq!(mb.pending(), 0, "rejected sets must not partially enqueue");
-        assert!(mb.submit(&vec![0i32; 2 * SEQ_LEN]).is_ok());
+        assert!(mb.submit(&[0i32; 2 * SEQ_LEN]).is_ok());
         assert_eq!(mb.pending(), 2);
     }
 

@@ -174,23 +174,24 @@ impl Checkpoint {
     /// profile name (stored so `elmo predict` can rebuild the test split);
     /// pass "" when not applicable.
     pub fn from_trainer(tr: &Trainer, profile: &str) -> Self {
+        let store = &tr.store;
         Checkpoint {
             precision: tr.cfg.precision,
             enc_cfg: tr.enc_cfg(),
-            chunk_size: tr.cfg.chunk_size,
-            d: tr.d,
-            head_chunks: tr.head_chunks,
-            l_pad: tr.l_pad,
-            labels: tr.label_order.len(),
+            chunk_size: store.chunk_size,
+            d: store.d,
+            head_chunks: store.head_chunks,
+            l_pad: store.l_pad,
+            labels: store.labels,
             step_count: tr.step_count,
             loss_scale: tr.loss_scale,
             seed: tr.cfg.seed,
             profile: profile.to_string(),
-            label_order: tr.label_order.clone(),
-            // exclude the Sampled policy's scratch rows past l_pad
-            w: tr.w[..tr.l_pad * tr.d].to_vec(),
-            mom: tr.mom.clone(),
-            kahan_c: tr.kahan_c.clone(),
+            label_order: store.label_order().to_vec(),
+            // `w_scored` excludes the Sampled policy's scratch rows
+            w: store.w_scored().to_vec(),
+            mom: store.mom().to_vec(),
+            kahan_c: store.kahan().to_vec(),
             enc_p: tr.enc_p.clone(),
             enc_m: tr.enc_m.clone(),
             enc_v: tr.enc_v.clone(),
@@ -393,53 +394,52 @@ impl Checkpoint {
                 tr.enc_cfg()
             );
         }
-        if self.chunk_size != tr.cfg.chunk_size || self.head_chunks != tr.head_chunks {
+        if self.chunk_size != tr.store.chunk_size || self.head_chunks != tr.store.head_chunks {
             bail!(
                 "checkpoint chunking (Lc={}, head_chunks={}) != trainer (Lc={}, head_chunks={})",
                 self.chunk_size,
                 self.head_chunks,
-                tr.cfg.chunk_size,
-                tr.head_chunks
+                tr.store.chunk_size,
+                tr.store.head_chunks
             );
         }
-        if self.d != tr.d || self.l_pad != tr.l_pad {
+        if self.d != tr.store.d || self.l_pad != tr.store.l_pad {
             bail!(
                 "checkpoint geometry ({} x {}) != trainer ({} x {})",
                 self.l_pad,
                 self.d,
-                tr.l_pad,
-                tr.d
+                tr.store.l_pad,
+                tr.store.d
             );
         }
         // validate every section length (a hand-built or
         // optimizer-stripped Checkpoint never went through `from_bytes`)
         for (name, got, want) in [
-            ("w", self.w.len(), tr.l_pad * tr.d),
-            ("mom", self.mom.len(), tr.mom.len()),
-            ("kahan_c", self.kahan_c.len(), tr.kahan_c.len()),
+            ("w", self.w.len(), tr.store.l_pad * tr.store.d),
+            ("mom", self.mom.len(), tr.store.mom().len()),
+            ("kahan_c", self.kahan_c.len(), tr.store.kahan().len()),
             ("enc_p", self.enc_p.len(), tr.enc_p.len()),
             ("enc_m", self.enc_m.len(), tr.enc_m.len()),
             ("enc_v", self.enc_v.len(), tr.enc_v.len()),
             ("enc_c", self.enc_c.len(), tr.enc_c.len()),
-            ("label_order", self.label_order.len(), tr.label_order.len()),
+            (
+                "label_order",
+                self.label_order.len(),
+                tr.store.label_order().len(),
+            ),
         ] {
             if got != want {
                 bail!("checkpoint {name} len {got} != expected {want}");
             }
         }
-        tr.w[..self.l_pad * self.d].copy_from_slice(&self.w);
-        tr.mom = self.mom.clone();
-        tr.kahan_c = self.kahan_c.clone();
+        tr.store
+            .restore_sections(&self.w, &self.mom, &self.kahan_c, &self.label_order)?;
         tr.enc_p = self.enc_p.clone();
         tr.enc_m = self.enc_m.clone();
         tr.enc_v = self.enc_v.clone();
         tr.enc_c = self.enc_c.clone();
         tr.step_count = self.step_count;
         tr.loss_scale = self.loss_scale;
-        tr.label_order = self.label_order.clone();
-        for (row, &lab) in tr.label_order.iter().enumerate() {
-            tr.label_row[lab as usize] = row as u32;
-        }
         Ok(())
     }
 }

@@ -1,6 +1,8 @@
-//! `Predictor`: a read-only serving front-end over a loaded checkpoint.
+//! `Predictor`: a read-only serving front-end over a checkpoint-rebuilt
+//! `WeightStore`.
 //!
-//! Loads a `Checkpoint` into an immutable weight store and serves batched
+//! Loads a `Checkpoint`, moves its classifier sections into the same
+//! chunk-addressed `WeightStore` the trainer uses, and serves batched
 //! top-k prediction by streaming `cls_fwd_*` label chunks through the
 //! shared `ChunkScanner` — the same code path `coordinator::evaluate`
 //! uses, so a reloaded model scores bit-identically to the in-memory one.
@@ -8,9 +10,11 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::eval::{evaluate_model, EvalModel, EvalReport};
+use crate::coordinator::Precision;
 use crate::data::{Dataset, SEQ_LEN};
 use crate::metrics::TopK;
 use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::store::WeightStore;
 
 use super::checkpoint::Checkpoint;
 use super::scanner::{ChunkScanner, ClassifierView};
@@ -37,41 +41,88 @@ pub fn embed_inference(
 }
 
 pub struct Predictor {
-    ckpt: Checkpoint,
+    /// Classifier weights + label permutation, chunk-addressed exactly
+    /// like the trainer's store (no optimizer buffers: serving is
+    /// read-only, and for a Renee model the momentum alone would double
+    /// the resident classifier bytes).
+    store: WeightStore,
+    enc_p: Vec<f32>,
+    precision: Precision,
+    enc_cfg: &'static str,
+    step_count: u64,
+    seed: u64,
+    profile: String,
 }
 
 impl Predictor {
-    /// Load a checkpoint file into a read-only weight store.  Optimizer
-    /// state (momentum, Kahan, AdamW m/v/c) is dropped after validation —
-    /// serving never reads it, and for a Renee model the momentum alone
-    /// would double the resident classifier bytes.
+    /// Load a checkpoint file into a read-only weight store.
     pub fn load(path: &str) -> Result<Self> {
-        let mut ckpt = Checkpoint::load(path)?;
+        Self::from_checkpoint(Checkpoint::load(path)?)
+    }
+
+    /// Rebuild the serving store from a (validated) checkpoint.  The
+    /// classifier sections are moved, not copied; optimizer state is
+    /// dropped — serving never reads it.
+    pub fn from_checkpoint(mut ckpt: Checkpoint) -> Result<Self> {
         ckpt.drop_optimizer_state();
-        Ok(Predictor { ckpt })
+        let store = WeightStore::from_sections(
+            ckpt.labels,
+            ckpt.d,
+            ckpt.chunk_size,
+            ckpt.head_chunks,
+            std::mem::take(&mut ckpt.label_order),
+            std::mem::take(&mut ckpt.w),
+        )?;
+        Ok(Predictor {
+            store,
+            enc_p: std::mem::take(&mut ckpt.enc_p),
+            precision: ckpt.precision,
+            enc_cfg: ckpt.enc_cfg,
+            step_count: ckpt.step_count,
+            seed: ckpt.seed,
+            profile: ckpt.profile,
+        })
     }
 
-    pub fn from_checkpoint(ckpt: Checkpoint) -> Self {
-        Predictor { ckpt }
+    /// The serving weight store (read-only).
+    pub fn store(&self) -> &WeightStore {
+        &self.store
     }
 
-    pub fn checkpoint(&self) -> &Checkpoint {
-        &self.ckpt
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn enc_cfg(&self) -> &'static str {
+        self.enc_cfg
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step_count
+    }
+
+    /// Dataset seed the model trained on (lets `elmo predict` regenerate
+    /// the exact test rows).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Dataset profile name ("" when unknown).
+    pub fn profile(&self) -> &str {
+        &self.profile
+    }
+
+    pub fn enc_params(&self) -> &[f32] {
+        &self.enc_p
     }
 
     /// The scanner-facing view of the stored classifier.
     pub fn view(&self) -> ClassifierView<'_> {
-        ClassifierView {
-            w: &self.ckpt.w,
-            d: self.ckpt.d,
-            labels: self.ckpt.labels,
-            l_pad: self.ckpt.l_pad,
-            label_order: &self.ckpt.label_order,
-        }
+        ClassifierView::of_store(&self.store)
     }
 
     pub fn enc_artifact(&self) -> String {
-        format!("enc_fwd_{}", self.ckpt.enc_cfg)
+        format!("enc_fwd_{}", self.enc_cfg)
     }
 
     /// Pooled embeddings for one full token batch [batch, SEQ_LEN]
@@ -85,7 +136,7 @@ impl Predictor {
                 b
             );
         }
-        embed_inference(rt, &self.enc_artifact(), &self.ckpt.enc_p, tokens)
+        embed_inference(rt, &self.enc_artifact(), &self.enc_p, tokens)
     }
 
     /// Batched top-k prediction over one full token batch.  Returns one
@@ -101,7 +152,7 @@ impl Predictor {
     /// protocol (and code) of `coordinator::evaluate`.
     pub fn evaluate(&self, rt: &mut Runtime, ds: &Dataset, max_rows: usize) -> Result<EvalReport> {
         let m = EvalModel {
-            enc_p: &self.ckpt.enc_p,
+            enc_p: &self.enc_p,
             enc_art: self.enc_artifact(),
             cls: self.view(),
         };

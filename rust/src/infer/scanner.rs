@@ -9,18 +9,18 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::trainer::Trainer;
 use crate::metrics::TopK;
 use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::store::WeightStore;
 
 /// Scoring chunk width: the lowered `cls_fwd_*` artifact width.
 pub const SCORE_LC: usize = 1024;
 
 /// Read-only view of a classifier weight store, shaped for chunked scoring.
 ///
-/// Both the live `Trainer` (host weight array) and a loaded `Checkpoint`
-/// (the `Predictor`'s store) project into this view, which is what lets
-/// one scanner serve both.
+/// Both the live trainer's `WeightStore` and the `Predictor`'s
+/// checkpoint-rebuilt `WeightStore` project into this view, which is what
+/// lets one scanner serve both.
 #[derive(Clone, Copy)]
 pub struct ClassifierView<'a> {
     /// Row-major [l_pad, d] weights; rows past `labels` are padding.
@@ -35,15 +35,15 @@ pub struct ClassifierView<'a> {
 }
 
 impl<'a> ClassifierView<'a> {
-    /// View a live trainer's weight store (excludes the Sampled policy's
-    /// scratch rows, which sit past `l_pad` and are never scored).
-    pub fn of_trainer(tr: &'a Trainer) -> Self {
+    /// View a `WeightStore` (excludes the Sampled policy's scratch rows,
+    /// which sit past `l_pad` and are never scored).
+    pub fn of_store(store: &'a WeightStore) -> Self {
         ClassifierView {
-            w: &tr.w[..tr.l_pad * tr.d],
-            d: tr.d,
-            labels: tr.label_order.len(),
-            l_pad: tr.l_pad,
-            label_order: &tr.label_order,
+            w: store.w_scored(),
+            d: store.d,
+            labels: store.labels,
+            l_pad: store.l_pad,
+            label_order: store.label_order(),
         }
     }
 

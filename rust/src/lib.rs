@@ -2,9 +2,12 @@
 //! Output Spaces (ICML 2025) — a three-layer Rust + JAX + Pallas
 //! reproduction.
 //!
-//! Layer map (see DESIGN.md):
-//! * L3 (this crate): training coordinator — chunk scheduler, precision
-//!   policies, data pipeline, metrics, memory model, CLI.
+//! Layer map (see DESIGN.md and docs/ARCHITECTURE.md):
+//! * L3 (this crate): training coordinator over an explicit
+//!   coordinator → policy → store → runtime stack — `policy` holds one
+//!   `UpdatePolicy` per precision, `store` the chunk-addressed
+//!   `WeightStore` shared by train / eval / infer — plus the data
+//!   pipeline, metrics, memory model, and CLI.
 //! * L2 (`python/compile/model.py`): jax encoder fwd/bwd, AOT-lowered to
 //!   HLO text under `artifacts/`.
 //! * L1 (`python/compile/kernels/`): Pallas kernels — the fused XMC
@@ -26,5 +29,7 @@ pub mod infer;
 pub mod memmodel;
 pub mod metrics;
 pub mod numerics;
+pub mod policy;
 pub mod runtime;
+pub mod store;
 pub mod util;

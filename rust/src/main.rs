@@ -142,6 +142,13 @@ fn cmd_train(f: &Flags) -> Result<()> {
                 String::new()
             }
         );
+        if st.truncated_positives > 0 {
+            eprintln!(
+                "warning: epoch {epoch}: {} batch positives fell past the \
+                 shortlist width and went un-updated (widen the shortlist)",
+                st.truncated_positives
+            );
+        }
     }
     if !save_path.is_empty() {
         let ckpt = Checkpoint::from_trainer(&tr, &profile_name);
@@ -180,8 +187,7 @@ fn cmd_predict(f: &Flags) -> Result<()> {
     elmo::coordinator::trainer::require_artifacts(&art)?;
     let ckpt_path = require(f, "checkpoint")?;
     let p = Predictor::load(&ckpt_path)?;
-    let ck = p.checkpoint();
-    let profile_name: String = flag(f, "profile", ck.profile.clone())?;
+    let profile_name: String = flag(f, "profile", p.profile().to_string())?;
     if profile_name.is_empty() {
         bail!("checkpoint carries no profile name; pass --profile NAME");
     }
@@ -191,13 +197,13 @@ fn cmd_predict(f: &Flags) -> Result<()> {
 
     println!(
         "# ELMO predict: checkpoint={ckpt_path} precision={} enc={} L={} step={}",
-        ck.precision.label(),
-        ck.enc_cfg,
-        ck.labels,
-        ck.step_count
+        p.precision().label(),
+        p.enc_cfg(),
+        p.store().labels,
+        p.step_count()
     );
     // the stored seed regenerates the exact split the model trained on
-    let ds = data::generate(&prof, ck.seed);
+    let ds = data::generate(&prof, p.seed());
     let mut rt = Runtime::new(&art)?;
     let rep = p.evaluate(&mut rt, &ds, eval_rows)?;
     println!("eval: {}", rep.summary());
@@ -222,9 +228,9 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
 
     // query stream: test rows of the checkpoint's profile when known,
     // synthetic token rows otherwise
-    let query_rows: Vec<i32> = match data::profile(&p.checkpoint().profile) {
+    let query_rows: Vec<i32> = match data::profile(p.profile()) {
         Some(prof) => {
-            let ds = data::generate(&prof, p.checkpoint().seed);
+            let ds = data::generate(&prof, p.seed());
             ds.test.tokens.clone()
         }
         None => {

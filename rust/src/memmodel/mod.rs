@@ -13,9 +13,26 @@
 //! activations at b=128/s=128, 3.0 GiB FP8 activations + 0.5 GiB FP8
 //! buffers) come straight from the paper's Sec. 4.4 walkthrough.
 
+use std::collections::HashMap;
+
 use crate::data::Profile;
+use crate::store::WeightStore;
 
 pub const GIB: f64 = (1u64 << 30) as f64;
+
+/// Host-side live-bytes accounting of a training run's resident buffers:
+/// the `WeightStore`'s classifier state plus the packed encoder floats.
+/// This is the scaled-run counterpart of the paper-scale `schedule`
+/// arithmetic below — the perf harness reads it through
+/// `Trainer::host_bytes`.
+pub fn host_bytes(store: &WeightStore, enc_floats: usize) -> HashMap<&'static str, usize> {
+    let mut m = HashMap::new();
+    m.insert("cls_w", store.w().len() * 4);
+    m.insert("cls_mom", store.mom().len() * 4);
+    m.insert("kahan_c", store.kahan().len() * 4);
+    m.insert("encoder", enc_floats * 4);
+    m
+}
 
 /// Precision/method variants the model knows how to schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -467,6 +484,19 @@ mod tests {
             fp8 < bf16 && bf16 < renee,
             "expected FP8 {fp8} < BF16 {bf16} < Renee {renee}"
         );
+    }
+
+    #[test]
+    fn host_bytes_charges_store_buffers() {
+        use crate::store::BufferSpec;
+        let order: Vec<u32> = (0..100u32).collect();
+        let spec = BufferSpec { momentum: true, ..Default::default() };
+        let s = WeightStore::new(100, 8, 50, order, 0, spec).unwrap();
+        let hb = host_bytes(&s, 1000);
+        assert_eq!(hb["cls_w"], 100 * 8 * 4);
+        assert_eq!(hb["cls_mom"], 100 * 8 * 4);
+        assert_eq!(hb["kahan_c"], 0, "no kahan buffer without head chunks");
+        assert_eq!(hb["encoder"], 4000);
     }
 
     #[test]

@@ -25,9 +25,8 @@ impl TopK {
         {
             return;
         }
-        let pos = self
-            .items
-            .partition_point(|&(s, _)| s > score || (s == score && true));
+        // ties keep the earlier-pushed item first (stable-sort order)
+        let pos = self.items.partition_point(|&(s, _)| s >= score);
         self.items.insert(pos, (score, label));
         self.items.truncate(self.k);
     }

@@ -1,0 +1,98 @@
+//! The plain chunked ELMO policies — FP32 baseline, BF16+SR, FP8 E4M3.
+//!
+//! All three run the same fused per-chunk kernel shape
+//! (`cls_chunk_*_{Lc}`: W_c, X, Y_c, lr, seed, dropout -> W_c', Xgrad_c,
+//! loss, gmax) and commit each chunk as soon as it executes; they differ
+//! only in which lowered artifact (and hence weight grid) they bind.
+
+use anyhow::Result;
+
+use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
+use crate::store::{BufferSpec, StagedChunk, WeightStore};
+
+use super::{ChunkExec, Precision, StepCtx, UpdatePolicy};
+
+/// Shared arg packing/unpacking for the plain fused-update kernel.
+pub(crate) fn exec_plain_chunk(
+    rt: &mut Runtime,
+    store: &WeightStore,
+    chunk: usize,
+    y: &[f32],
+    ctx: &StepCtx,
+    artifact: &str,
+) -> Result<ChunkExec> {
+    let lr = [ctx.lr_cls];
+    let cseed = [ctx.seed ^ ((chunk as i32) << 8)];
+    let drop = [ctx.dropout_cls];
+    let outs = rt.exec(
+        artifact,
+        &[
+            Arg::F32(store.chunk_w(chunk)),
+            Arg::F32(ctx.emb),
+            Arg::F32(y),
+            Arg::F32(&lr),
+            Arg::I32(&cseed),
+            Arg::F32(&drop),
+        ],
+    )?;
+    Ok(ChunkExec {
+        staged: StagedChunk { w: to_vec_f32(&outs[0])?, kahan: None, mom: None },
+        xgrad: to_vec_f32(&outs[1])?,
+        loss: to_scalar_f32(&outs[2])?,
+        gmax: to_scalar_f32(&outs[3])?,
+        overflow: false,
+    })
+}
+
+macro_rules! plain_policy {
+    ($name:ident, $precision:expr, $prefix:literal, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Clone, Copy, Debug, Default)]
+        pub struct $name;
+
+        impl UpdatePolicy for $name {
+            fn precision(&self) -> Precision {
+                $precision
+            }
+
+            fn buffers(&self) -> BufferSpec {
+                BufferSpec::default()
+            }
+
+            fn artifact(&self, chunk_size: usize) -> String {
+                format!(concat!($prefix, "{}"), chunk_size)
+            }
+
+            fn exec_chunk(
+                &self,
+                rt: &mut Runtime,
+                store: &WeightStore,
+                chunk: usize,
+                y: &[f32],
+                ctx: &StepCtx,
+                _loss_scale: f32,
+            ) -> Result<ChunkExec> {
+                exec_plain_chunk(rt, store, chunk, y, ctx, &ctx.arts[0])
+            }
+        }
+    };
+}
+
+plain_policy!(
+    Fp32Policy,
+    Precision::Fp32,
+    "cls_chunk_fp32_",
+    "FP32 classifier SGD (Table 3 FLOAT32 row)."
+);
+plain_policy!(
+    Bf16Policy,
+    Precision::Bf16,
+    "cls_chunk_bf16_",
+    "ELMO BF16: BF16 weights updated with stochastic rounding."
+);
+plain_policy!(
+    Fp8Policy,
+    Precision::Fp8,
+    "cls_chunk_fp8_",
+    "ELMO FP8: E4M3 weights + inputs, BF16 gradients."
+);

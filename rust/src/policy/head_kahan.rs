@@ -1,0 +1,93 @@
+//! FP8 + head-Kahan policy (paper Appendix D.2 / Table 6): the top
+//! `head_frac` most-frequent labels are sorted to the front of the store
+//! and updated through the BF16+Kahan kernel; the tail keeps plain FP8.
+//!
+//! The chunk routing that used to be a trainer branch is policy behavior
+//! here: `exec_chunk` picks the Kahan kernel for `chunk <
+//! store.head_chunks` and the plain FP8 kernel otherwise.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
+use crate::store::{BufferSpec, StagedChunk, WeightStore};
+
+use super::chunked::exec_plain_chunk;
+use super::{ChunkExec, Precision, StepCtx, UpdatePolicy};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fp8HeadKahanPolicy {
+    /// Fraction of labels (by training frequency) on the Kahan path.
+    pub head_frac: f64,
+}
+
+impl Fp8HeadKahanPolicy {
+    fn kahan_artifact(chunk_size: usize) -> String {
+        format!("cls_kahan_{chunk_size}")
+    }
+}
+
+impl UpdatePolicy for Fp8HeadKahanPolicy {
+    fn precision(&self) -> Precision {
+        Precision::Fp8HeadKahan
+    }
+
+    fn buffers(&self) -> BufferSpec {
+        BufferSpec { kahan: true, ..Default::default() }
+    }
+
+    fn label_order(&self, ds: &Dataset, chunk_size: usize) -> (Vec<u32>, usize) {
+        let order = ds.labels_by_freq();
+        let head_labels = (self.head_frac * ds.profile.labels as f64).round() as usize;
+        (order, head_labels.div_ceil(chunk_size))
+    }
+
+    fn artifact(&self, chunk_size: usize) -> String {
+        format!("cls_chunk_fp8_{chunk_size}")
+    }
+
+    fn artifacts(&self, chunk_size: usize) -> Vec<String> {
+        vec![self.artifact(chunk_size), Self::kahan_artifact(chunk_size)]
+    }
+
+    fn exec_chunk(
+        &self,
+        rt: &mut Runtime,
+        store: &WeightStore,
+        chunk: usize,
+        y: &[f32],
+        ctx: &StepCtx,
+        _loss_scale: f32,
+    ) -> Result<ChunkExec> {
+        // ctx.arts = our artifacts(): [fp8 chunk kernel, kahan kernel]
+        if chunk >= store.head_chunks {
+            return exec_plain_chunk(rt, store, chunk, y, ctx, &ctx.arts[0]);
+        }
+        let lr = [ctx.lr_cls];
+        let cseed = [ctx.seed ^ ((chunk as i32) << 8)];
+        let drop = [ctx.dropout_cls];
+        let outs = rt.exec(
+            &ctx.arts[1],
+            &[
+                Arg::F32(store.chunk_w(chunk)),
+                Arg::F32(store.chunk_kahan(chunk)),
+                Arg::F32(ctx.emb),
+                Arg::F32(y),
+                Arg::F32(&lr),
+                Arg::I32(&cseed),
+                Arg::F32(&drop),
+            ],
+        )?;
+        Ok(ChunkExec {
+            staged: StagedChunk {
+                w: to_vec_f32(&outs[0])?,
+                kahan: Some(to_vec_f32(&outs[1])?),
+                mom: None,
+            },
+            xgrad: to_vec_f32(&outs[2])?,
+            loss: to_scalar_f32(&outs[3])?,
+            gmax: to_scalar_f32(&outs[4])?,
+            overflow: false,
+        })
+    }
+}

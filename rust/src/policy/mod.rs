@@ -1,0 +1,364 @@
+//! The precision-policy engine: one `UpdatePolicy` impl per `Precision`
+//! variant, all driving the same chunk-addressed `WeightStore`.
+//!
+//! ELMO's core structural claim is that one chunked classifier loop can
+//! host many numeric policies (FP32, BF16+SR, FP8, FP8+head-Kahan,
+//! Renee-style AMP, shortlist sampling) without changing the training
+//! structure.  This module makes that explicit:
+//!
+//! * `UpdatePolicy` names the points where policies differ — which store
+//!   buffers they own (`buffers`), the label permutation they impose
+//!   (`label_order`), the kernel they run per chunk (`artifact`,
+//!   `exec_chunk`), and the step-level commit/rollback semantics
+//!   (`commit_per_chunk`, `finalize`);
+//! * the provided `run_step` is the *single policy-agnostic chunk loop*:
+//!   build the chunk's Y block, execute the policy's kernel, commit (or
+//!   stage) the update, accumulate the input gradient / loss / gmax;
+//! * `Trainer::step` reduces to encoder-forward → `run_step` →
+//!   encoder-backward, with no per-precision match arms.
+//!
+//! The Sampled baseline is the one policy that is not chunk-shaped (it
+//! updates a gathered shortlist in a single kernel call), so it overrides
+//! `run_step` wholesale — policy behavior, not a trainer branch.
+//!
+//! `docs/ARCHITECTURE.md` describes the coordinator → policy → store →
+//! runtime layering and walks through adding a new policy.
+
+pub mod chunked;
+pub mod head_kahan;
+pub mod renee;
+pub mod sampled;
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+pub use crate::store::BufferSpec;
+use crate::store::{StagedChunk, WeightStore};
+
+pub use chunked::{Bf16Policy, Fp32Policy, Fp8Policy};
+pub use head_kahan::Fp8HeadKahanPolicy;
+pub use renee::{update_loss_scale, ReneePolicy};
+pub use sampled::SampledPolicy;
+
+/// Classifier/encoder precision policy (paper Table 2/3 method rows).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Precision {
+    /// FP32 classifier SGD + FP32 encoder AdamW (Table 3 FLOAT32).
+    Fp32,
+    /// ELMO BF16: BF16 weights with SR, BF16 grads, Kahan-AdamW encoder.
+    Bf16,
+    /// ELMO FP8: E4M3 weights + inputs, BF16 grads, FP8 encoder.
+    Fp8,
+    /// Renee: FP16-FP32 mixed precision + momentum + loss scaling.
+    Renee,
+    /// Sampling baseline (LightXML-shape): fp32 updates on a shortlist of
+    /// positives + uniform negatives only.
+    Sampled,
+    /// ELMO FP8 with BF16+Kahan updates for the top `head_frac` most
+    /// frequent labels (paper Appendix D.2 / Table 6).
+    Fp8HeadKahan,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fp32" => Precision::Fp32,
+            "bf16" => Precision::Bf16,
+            "fp8" => Precision::Fp8,
+            "renee" => Precision::Renee,
+            "sampled" => Precision::Sampled,
+            "fp8-headkahan" => Precision::Fp8HeadKahan,
+            other => bail!("unknown precision `{other}`"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "Float32",
+            Precision::Bf16 => "ELMO (BF16)",
+            Precision::Fp8 => "ELMO (FP8)",
+            Precision::Renee => "Renee",
+            Precision::Sampled => "Sampled",
+            Precision::Fp8HeadKahan => "ELMO (FP8+HeadKahan)",
+        }
+    }
+
+    /// Encoder precision config name (enc_fwd_* / enc_bwd_* artifact pick).
+    pub fn enc_cfg(&self) -> &'static str {
+        match self {
+            Precision::Fp32 | Precision::Sampled => "fp32",
+            Precision::Bf16 => "bf16",
+            // Renee trains the encoder in mixed precision; bf16 is the
+            // closest emulation with the same activation widths.
+            Precision::Renee => "bf16",
+            Precision::Fp8 | Precision::Fp8HeadKahan => "fp8",
+        }
+    }
+}
+
+/// Step-scoped inputs every policy sees: the pooled embeddings and the
+/// scalar knobs the trainer resolves per step (LR schedule, dropout,
+/// deterministic seed).  Policy-specific constants (momentum coefficient,
+/// shortlist width, head fraction) live on the policy structs instead.
+pub struct StepCtx<'a> {
+    /// Pooled encoder output, [batch, d] row-major.
+    pub emb: &'a [f32],
+    /// The policy's own `artifacts()` list, resolved once per step so the
+    /// chunk loop never re-formats kernel names (each policy indexes the
+    /// list it produced).
+    pub arts: &'a [String],
+    pub lr_cls: f32,
+    pub dropout_cls: f32,
+    /// Deterministic per-step seed (chunk kernels further mix the chunk
+    /// index in).
+    pub seed: i32,
+    pub batch: usize,
+    /// 1-based step counter (already incremented for this step).
+    pub step_count: u64,
+}
+
+/// What one kernel execution over a chunk produced.
+pub struct ChunkExec {
+    /// Updated weights (and optional state) for this chunk, not yet
+    /// applied to the store.
+    pub staged: StagedChunk,
+    /// This chunk's [batch, d] input-gradient contribution.
+    pub xgrad: Vec<f32>,
+    /// Summed BCE loss over the chunk.
+    pub loss: f32,
+    /// Max |logit gradient| seen in the chunk.
+    pub gmax: f32,
+    /// FP16 overflow detected inside the kernel (Renee).
+    pub overflow: bool,
+}
+
+/// What a whole classifier pass produced.
+pub struct StepOutcome {
+    /// Accumulated [batch, d] input gradient (already unscaled for the
+    /// encoder on clean steps).
+    pub xgrad: Vec<f32>,
+    /// Mean BCE loss (normalized by the policy's denominator).
+    pub loss: f64,
+    /// Max |logit gradient| of the step (Renee reports its scaled-grad
+    /// bound proxy, the loss scale).
+    pub gmax: f32,
+    /// Step overflowed: updates were rolled back, the encoder must skip.
+    pub overflow: bool,
+    /// Batch positives silently dropped past the shortlist width
+    /// (Sampled only); surfaced through `EpochStats`.
+    pub truncated_positives: usize,
+}
+
+/// A numeric update policy over the shared `WeightStore`.
+pub trait UpdatePolicy {
+    fn precision(&self) -> Precision;
+
+    fn label(&self) -> &'static str {
+        self.precision().label()
+    }
+
+    /// Store buffers this policy owns.
+    fn buffers(&self) -> BufferSpec;
+
+    /// Label permutation the policy imposes on the store, plus how many
+    /// leading chunks use the head (Kahan) path.  Identity for all but
+    /// head-Kahan.
+    fn label_order(&self, ds: &Dataset, _chunk_size: usize) -> (Vec<u32>, usize) {
+        ((0..ds.profile.labels as u32).collect(), 0)
+    }
+
+    /// The per-chunk classifier artifact this policy executes.
+    fn artifact(&self, chunk_size: usize) -> String;
+
+    /// Every classifier artifact this policy executes: precompiled by
+    /// `Trainer::warmup`, and resolved once per step into
+    /// `StepCtx::arts` (same order) so `exec_chunk` indexes strings
+    /// instead of re-formatting them per chunk.
+    fn artifacts(&self, chunk_size: usize) -> Vec<String> {
+        vec![self.artifact(chunk_size)]
+    }
+
+    /// Whether chunk updates commit as soon as the chunk executes.  Renee
+    /// returns false: its updates stage until `finalize` proves the step
+    /// clean (AMP commit-on-clean-step semantics).
+    fn commit_per_chunk(&self) -> bool {
+        true
+    }
+
+    /// Execute the policy's kernel for one chunk: pack the store views and
+    /// step context into artifact arguments, unpack the outputs.
+    fn exec_chunk(
+        &self,
+        rt: &mut Runtime,
+        store: &WeightStore,
+        chunk: usize,
+        y: &[f32],
+        ctx: &StepCtx,
+        loss_scale: f32,
+    ) -> Result<ChunkExec>;
+
+    /// Step epilogue after every chunk ran: decide step-level overflow,
+    /// commit or drop the staged updates, transform the accumulated input
+    /// gradient, and manage the loss scale.  Default: nothing to do
+    /// (per-chunk-commit policies have already applied their updates).
+    fn finalize(
+        &self,
+        _store: &mut WeightStore,
+        _staged: Vec<StagedChunk>,
+        _outcome: &mut StepOutcome,
+        _ctx: &StepCtx,
+        _loss_scale: &mut f32,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// One full classifier pass — THE policy-agnostic chunk loop.  Every
+    /// chunk-shaped policy shares this body verbatim; only `exec_chunk`
+    /// and `finalize` differ.  (Sampled overrides the whole method: its
+    /// kernel runs once over a gathered shortlist, not per label chunk.)
+    fn run_step(
+        &self,
+        rt: &mut Runtime,
+        store: &mut WeightStore,
+        ds: &Dataset,
+        rows: &[u32],
+        ctx: &StepCtx,
+        loss_scale: &mut f32,
+    ) -> Result<StepOutcome> {
+        let mut xgrad = vec![0.0f32; ctx.batch * store.d];
+        let mut loss_sum = 0.0f64;
+        let mut gmax = 0.0f32;
+        let mut overflow = false;
+        let commit = self.commit_per_chunk();
+        let n_chunks = store.chunks();
+        let mut staged_all: Vec<StagedChunk> = Vec::new();
+        for chunk in 0..n_chunks {
+            let y = store.y_chunk(&ds.train.labels, rows, chunk);
+            let ex = self.exec_chunk(rt, store, chunk, &y, ctx, *loss_scale)?;
+            if commit {
+                store.commit_chunk(chunk, &ex.staged);
+            } else {
+                staged_all.push(ex.staged);
+            }
+            for (a, b) in xgrad.iter_mut().zip(ex.xgrad.iter()) {
+                *a += b;
+            }
+            loss_sum += ex.loss as f64;
+            gmax = gmax.max(ex.gmax);
+            overflow = overflow || ex.overflow;
+        }
+        let mut outcome = StepOutcome {
+            xgrad,
+            loss: loss_sum / (ctx.batch * store.labels) as f64,
+            gmax,
+            overflow,
+            truncated_positives: 0,
+        };
+        self.finalize(store, staged_all, &mut outcome, ctx, loss_scale)?;
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for (s, p) in [
+            ("fp32", Precision::Fp32),
+            ("bf16", Precision::Bf16),
+            ("fp8", Precision::Fp8),
+            ("renee", Precision::Renee),
+            ("sampled", Precision::Sampled),
+            ("fp8-headkahan", Precision::Fp8HeadKahan),
+        ] {
+            assert_eq!(Precision::parse(s).unwrap(), p);
+        }
+        assert!(Precision::parse("int4").is_err());
+    }
+
+    #[test]
+    fn policies_name_their_artifacts_and_buffers() {
+        let cases: Vec<(Box<dyn UpdatePolicy>, &str, BufferSpec)> = vec![
+            (
+                Box::new(Fp32Policy),
+                "cls_chunk_fp32_512",
+                BufferSpec::default(),
+            ),
+            (
+                Box::new(Bf16Policy),
+                "cls_chunk_bf16_512",
+                BufferSpec::default(),
+            ),
+            (
+                Box::new(Fp8Policy),
+                "cls_chunk_fp8_512",
+                BufferSpec::default(),
+            ),
+            (
+                Box::new(ReneePolicy { momentum: 0.0 }),
+                "cls_renee_512",
+                BufferSpec { momentum: true, ..Default::default() },
+            ),
+            (
+                Box::new(Fp8HeadKahanPolicy { head_frac: 0.2 }),
+                "cls_chunk_fp8_512",
+                BufferSpec { kahan: true, ..Default::default() },
+            ),
+            (
+                Box::new(SampledPolicy { shortlist: 256, neg_per_step: 48 }),
+                "cls_chunk_fp32_512",
+                BufferSpec { scratch_rows: 256, ..Default::default() },
+            ),
+        ];
+        for (policy, artifact, spec) in cases {
+            assert_eq!(policy.artifact(512), artifact, "{}", policy.label());
+            assert_eq!(policy.buffers(), spec, "{}", policy.label());
+            assert_eq!(policy.label(), policy.precision().label());
+        }
+    }
+
+    #[test]
+    fn artifacts_cover_auxiliary_kernels() {
+        let hk = Fp8HeadKahanPolicy { head_frac: 0.2 };
+        assert_eq!(
+            hk.artifacts(512),
+            vec!["cls_chunk_fp8_512".to_string(), "cls_kahan_512".to_string()]
+        );
+        let sp = SampledPolicy { shortlist: 256, neg_per_step: 48 };
+        assert_eq!(
+            sp.artifacts(1024),
+            vec!["cls_chunk_fp32_256".to_string()],
+            "sampled executes only the shortlist-width kernel"
+        );
+        assert_eq!(Fp32Policy.artifacts(1024).len(), 1);
+    }
+
+    #[test]
+    fn only_renee_defers_commits() {
+        assert!(Fp32Policy.commit_per_chunk());
+        assert!(Bf16Policy.commit_per_chunk());
+        assert!(Fp8Policy.commit_per_chunk());
+        assert!(Fp8HeadKahanPolicy { head_frac: 0.2 }.commit_per_chunk());
+        assert!(!ReneePolicy { momentum: 0.9 }.commit_per_chunk());
+    }
+
+    #[test]
+    fn head_kahan_orders_labels_by_frequency() {
+        let prof = crate::data::profile("quickstart").unwrap();
+        let ds = crate::data::generate(&prof, 0);
+        let hk = Fp8HeadKahanPolicy { head_frac: 0.2 };
+        let (order, head_chunks) = hk.label_order(&ds, 512);
+        assert_eq!(order.len(), prof.labels);
+        assert_eq!(head_chunks, 1, "20% of 1024 labels is one 512-chunk");
+        let f0 = ds.label_freq[order[0] as usize];
+        let flast = ds.label_freq[*order.last().unwrap() as usize];
+        assert!(f0 >= flast);
+        // default (identity) permutation for everyone else
+        let (id_order, hc) = Fp8Policy.label_order(&ds, 512);
+        assert_eq!(id_order, (0..prof.labels as u32).collect::<Vec<_>>());
+        assert_eq!(hc, 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Renee policy ("Towards Memory-Efficient Training for Extremely Large
+//! Output Spaces", Schultheis & Babbar 2023): FP16-FP32 mixed precision
+//! with momentum and a dynamic loss scale.
+//!
+//! The AMP semantics that used to be trainer branches live here:
+//!
+//! * chunk updates are *staged*, never committed inside the loop
+//!   (`commit_per_chunk` = false);
+//! * `finalize` quantizes the accumulated input gradient onto the FP16
+//!   grid — this is where the paper's large-L overflow appears, scaled
+//!   grads summed over the label space exceeding 65504 — and only on a
+//!   clean step commits every staged chunk and unscales the gradient;
+//! * the loss scale halves on overflow (floor 1.0) and doubles every 200
+//!   clean steps (cap 65536) — `update_loss_scale`, unit-tested below.
+
+use anyhow::Result;
+
+use crate::numerics::{quantize_rne, FP16};
+use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
+use crate::store::{BufferSpec, StagedChunk, WeightStore};
+
+use super::{ChunkExec, Precision, StepCtx, StepOutcome, UpdatePolicy};
+
+/// The AMP loss-scale manager rule: halve on overflow (never below 1.0),
+/// double after every 200th clean step (never above 65536).
+pub fn update_loss_scale(scale: f32, overflow: bool, step_count: u64) -> f32 {
+    if overflow {
+        (scale * 0.5).max(1.0)
+    } else if step_count % 200 == 0 {
+        (scale * 2.0).min(65536.0)
+    } else {
+        scale
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ReneePolicy {
+    /// Momentum coefficient (the memory model charges the buffer even at
+    /// the default 0.0 — see `TrainConfig::momentum`).
+    pub momentum: f32,
+}
+
+impl UpdatePolicy for ReneePolicy {
+    fn precision(&self) -> Precision {
+        Precision::Renee
+    }
+
+    fn buffers(&self) -> BufferSpec {
+        BufferSpec { momentum: true, ..Default::default() }
+    }
+
+    fn artifact(&self, chunk_size: usize) -> String {
+        format!("cls_renee_{chunk_size}")
+    }
+
+    fn commit_per_chunk(&self) -> bool {
+        false
+    }
+
+    fn exec_chunk(
+        &self,
+        rt: &mut Runtime,
+        store: &WeightStore,
+        chunk: usize,
+        y: &[f32],
+        ctx: &StepCtx,
+        loss_scale: f32,
+    ) -> Result<ChunkExec> {
+        let outs = rt.exec(
+            &ctx.arts[0],
+            &[
+                Arg::F32(store.chunk_w(chunk)),
+                Arg::F32(store.chunk_mom(chunk)),
+                Arg::F32(ctx.emb),
+                Arg::F32(y),
+                Arg::F32(&[ctx.lr_cls]),
+                Arg::F32(&[self.momentum]),
+                Arg::F32(&[loss_scale]),
+            ],
+        )?;
+        Ok(ChunkExec {
+            staged: StagedChunk {
+                w: to_vec_f32(&outs[0])?,
+                kahan: None,
+                mom: Some(to_vec_f32(&outs[1])?),
+            },
+            // f32 accumulation across chunks (hardware fp16 matmuls keep
+            // fp32 accumulators); `finalize` quantizes the stored value.
+            xgrad: to_vec_f32(&outs[2])?,
+            loss: to_scalar_f32(&outs[3])?,
+            gmax: 0.0,
+            overflow: to_scalar_f32(&outs[4])? > 0.0,
+        })
+    }
+
+    fn finalize(
+        &self,
+        store: &mut WeightStore,
+        staged: Vec<StagedChunk>,
+        outcome: &mut StepOutcome,
+        ctx: &StepCtx,
+        loss_scale: &mut f32,
+    ) -> Result<()> {
+        // store the accumulated input gradient on the fp16 grid — THIS is
+        // where the paper's large-L overflow appears (scaled grads summed
+        // over millions of labels exceed 65504)
+        for v in outcome.xgrad.iter_mut() {
+            let q = quantize_rne(*v, &FP16);
+            *v = if v.abs() > FP16.max_value || !v.is_finite() {
+                f32::INFINITY * v.signum()
+            } else {
+                q
+            };
+        }
+        if outcome.xgrad.iter().any(|v| !v.is_finite()) {
+            outcome.overflow = true;
+        }
+        if !outcome.overflow {
+            // commit updates only on a clean step (AMP semantics)
+            for (chunk, st) in staged.iter().enumerate() {
+                store.commit_chunk(chunk, st);
+            }
+            // unscale the input gradient for the encoder
+            for v in outcome.xgrad.iter_mut() {
+                *v /= *loss_scale;
+            }
+        }
+        outcome.gmax = *loss_scale; // scaled-grad bound proxy
+        *loss_scale = update_loss_scale(*loss_scale, outcome.overflow, ctx.step_count);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::update_loss_scale;
+
+    #[test]
+    fn halving_floors_at_one() {
+        assert_eq!(update_loss_scale(512.0, true, 7), 256.0);
+        assert_eq!(update_loss_scale(2.0, true, 7), 1.0);
+        assert_eq!(update_loss_scale(1.5, true, 7), 1.0);
+        assert_eq!(update_loss_scale(1.0, true, 7), 1.0, "floor holds");
+        // repeated overflows stay pinned to the floor
+        let mut s = 8.0;
+        for step in 0..10 {
+            s = update_loss_scale(s, true, step);
+        }
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn regrowth_fires_only_every_200th_clean_step() {
+        assert_eq!(update_loss_scale(512.0, false, 199), 512.0);
+        assert_eq!(update_loss_scale(512.0, false, 200), 1024.0);
+        assert_eq!(update_loss_scale(512.0, false, 201), 512.0);
+        assert_eq!(update_loss_scale(512.0, false, 400), 1024.0);
+    }
+
+    #[test]
+    fn regrowth_caps_at_65536() {
+        assert_eq!(update_loss_scale(65536.0, false, 200), 65536.0);
+        assert_eq!(update_loss_scale(40000.0, false, 200), 65536.0);
+    }
+
+    #[test]
+    fn overflow_takes_precedence_over_regrowth() {
+        // step 200 AND overflow: halve, don't grow
+        assert_eq!(update_loss_scale(512.0, true, 200), 256.0);
+    }
+}

@@ -1,0 +1,459 @@
+//! `WeightStore`: the chunk-addressed host-side classifier state shared by
+//! training, evaluation, and serving.
+//!
+//! The store owns every label-indexed buffer of the model — the weight
+//! matrix `w` ([l_pad (+ scratch), d] row-major), the Renee momentum
+//! buffer, the head-Kahan compensation buffer, and the label permutation —
+//! and hands out *per-chunk views* to whoever executes kernels against it:
+//!
+//! * `policy::UpdatePolicy` impls read `chunk_w`/`chunk_mom`/`chunk_kahan`
+//!   and stage updates as `StagedChunk`s that `commit_chunk` applies;
+//! * `infer::ChunkScanner` scores through the read-only
+//!   `ClassifierView::of_store` projection;
+//! * `infer::Checkpoint` serializes `w_scored()`/`mom()`/`kahan()` and
+//!   restores through `restore_sections`;
+//! * `memmodel::host_bytes` charges the store's live buffers.
+//!
+//! Nothing outside this module indexes the raw vectors, which is what lets
+//! later PRs reshape the storage (per-chunk precision mixes, sharding,
+//! parallel chunk execution) without touching the training loop.
+
+use anyhow::{bail, Result};
+
+use crate::data::Csr;
+
+/// Which optional buffers a precision policy asks the store to allocate
+/// (see `policy::UpdatePolicy::buffers`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BufferSpec {
+    /// Renee: an fp32 momentum buffer, same shape as `w`.
+    pub momentum: bool,
+    /// Head-Kahan: a compensation buffer for the head chunks.
+    pub kahan: bool,
+    /// Sampled: scratch rows appended past `l_pad` that gather zeros for
+    /// unused shortlist slots and are never scattered back.
+    pub scratch_rows: usize,
+}
+
+/// A policy's staged update for one chunk: new weights plus whichever
+/// optional state buffers the policy owns.  Produced by
+/// `UpdatePolicy::exec_chunk`, applied by `WeightStore::commit_chunk` —
+/// either immediately (ELMO policies) or after the step-level overflow
+/// decision (Renee's commit-on-clean-step).
+#[derive(Clone, Debug)]
+pub struct StagedChunk {
+    pub w: Vec<f32>,
+    pub kahan: Option<Vec<f32>>,
+    pub mom: Option<Vec<f32>>,
+}
+
+/// Chunk-addressed classifier weight store.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    /// [l_pad + scratch_rows, d] row-major; values live on the owning
+    /// policy's grid.
+    w: Vec<f32>,
+    /// Renee momentum (fp32), [l_pad, d] or empty.
+    mom: Vec<f32>,
+    /// Kahan compensation for head chunks, [l_pad, d] or empty.
+    kahan_c: Vec<f32>,
+    /// W row r holds label `label_order[r]`; identity except head-Kahan.
+    label_order: Vec<u32>,
+    /// Inverse permutation: label -> row.
+    label_row: Vec<u32>,
+    /// Real label count (`label_order.len()`).
+    pub labels: usize,
+    /// Labels padded up to a chunk multiple.
+    pub l_pad: usize,
+    pub d: usize,
+    /// Label-chunk size Lc.
+    pub chunk_size: usize,
+    /// Leading chunks routed through the Kahan kernel (head-Kahan only).
+    pub head_chunks: usize,
+    /// Scratch rows appended past `l_pad` (Sampled only).
+    pub scratch_rows: usize,
+}
+
+impl WeightStore {
+    /// Allocate a zeroed store (zeros are representable on every grid).
+    /// `label_order` must be a permutation of `0..labels`.
+    pub fn new(
+        labels: usize,
+        d: usize,
+        chunk_size: usize,
+        label_order: Vec<u32>,
+        head_chunks: usize,
+        spec: BufferSpec,
+    ) -> Result<Self> {
+        if labels == 0 || d == 0 || chunk_size == 0 {
+            bail!("weight store needs labels, d, chunk_size > 0");
+        }
+        let l_pad = labels.div_ceil(chunk_size) * chunk_size;
+        let mut store = WeightStore {
+            w: vec![0.0; (l_pad + spec.scratch_rows) * d],
+            mom: if spec.momentum { vec![0.0; l_pad * d] } else { Vec::new() },
+            // allocated only when head chunks actually exist, so the
+            // host-bytes accounting matches the policy's real footprint
+            kahan_c: if spec.kahan && head_chunks > 0 {
+                vec![0.0; l_pad * d]
+            } else {
+                Vec::new()
+            },
+            label_order: Vec::new(),
+            label_row: vec![0; labels],
+            labels,
+            l_pad,
+            d,
+            chunk_size,
+            head_chunks,
+            scratch_rows: spec.scratch_rows,
+        };
+        store.set_label_order(&label_order)?;
+        Ok(store)
+    }
+
+    /// Rebuild a store around checkpointed sections (read-only serving:
+    /// no momentum/Kahan/scratch).  `w` must be the scored [l_pad, d]
+    /// section; it is moved in, not copied — only one classifier-sized
+    /// buffer ever exists on the load path.
+    pub fn from_sections(
+        labels: usize,
+        d: usize,
+        chunk_size: usize,
+        head_chunks: usize,
+        label_order: Vec<u32>,
+        w: Vec<f32>,
+    ) -> Result<Self> {
+        if labels == 0 || d == 0 || chunk_size == 0 {
+            bail!("weight store needs labels, d, chunk_size > 0");
+        }
+        let l_pad = labels.div_ceil(chunk_size) * chunk_size;
+        if w.len() != l_pad * d {
+            bail!(
+                "weight section has {} values, store geometry wants {} ({l_pad} x {d})",
+                w.len(),
+                l_pad * d
+            );
+        }
+        let mut store = WeightStore {
+            w,
+            mom: Vec::new(),
+            kahan_c: Vec::new(),
+            label_order: Vec::new(),
+            label_row: vec![0; labels],
+            labels,
+            l_pad,
+            d,
+            chunk_size,
+            head_chunks,
+            scratch_rows: 0,
+        };
+        store.set_label_order(&label_order)?;
+        Ok(store)
+    }
+
+    /// Number of label chunks per pass.
+    pub fn chunks(&self) -> usize {
+        self.l_pad / self.chunk_size
+    }
+
+    /// Flat index range of one chunk in `w`/`mom`/`kahan`.
+    pub fn chunk_span(&self, chunk: usize) -> std::ops::Range<usize> {
+        chunk * self.chunk_size * self.d..(chunk + 1) * self.chunk_size * self.d
+    }
+
+    /// One chunk of weights, [Lc, d].
+    pub fn chunk_w(&self, chunk: usize) -> &[f32] {
+        &self.w[self.chunk_span(chunk)]
+    }
+
+    /// One chunk of the momentum buffer (Renee).
+    pub fn chunk_mom(&self, chunk: usize) -> &[f32] {
+        debug_assert!(self.has_mom(), "policy without momentum asked for it");
+        &self.mom[self.chunk_span(chunk)]
+    }
+
+    /// One chunk of the Kahan compensation buffer (head chunks).
+    pub fn chunk_kahan(&self, chunk: usize) -> &[f32] {
+        debug_assert!(self.has_kahan(), "policy without kahan state asked for it");
+        &self.kahan_c[self.chunk_span(chunk)]
+    }
+
+    /// Apply a staged chunk update.  Buffers the staged update does not
+    /// carry are left untouched.
+    pub fn commit_chunk(&mut self, chunk: usize, staged: &StagedChunk) {
+        let span = self.chunk_span(chunk);
+        debug_assert_eq!(staged.w.len(), span.len());
+        self.w[span.clone()].copy_from_slice(&staged.w);
+        if let Some(c) = &staged.kahan {
+            self.kahan_c[span.clone()].copy_from_slice(c);
+        }
+        if let Some(m) = &staged.mom {
+            self.mom[span].copy_from_slice(m);
+        }
+    }
+
+    pub fn has_mom(&self) -> bool {
+        !self.mom.is_empty()
+    }
+
+    pub fn has_kahan(&self) -> bool {
+        !self.kahan_c.is_empty()
+    }
+
+    /// The full weight array including any scratch rows.
+    pub fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn w_mut(&mut self) -> &mut [f32] {
+        &mut self.w
+    }
+
+    /// The scored [l_pad, d] region (scratch rows excluded) — what the
+    /// scanner scores and the checkpoint serializes.
+    pub fn w_scored(&self) -> &[f32] {
+        &self.w[..self.l_pad * self.d]
+    }
+
+    pub fn mom(&self) -> &[f32] {
+        &self.mom
+    }
+
+    pub fn mom_mut(&mut self) -> &mut [f32] {
+        &mut self.mom
+    }
+
+    pub fn kahan(&self) -> &[f32] {
+        &self.kahan_c
+    }
+
+    pub fn kahan_mut(&mut self) -> &mut [f32] {
+        &mut self.kahan_c
+    }
+
+    pub fn label_order(&self) -> &[u32] {
+        &self.label_order
+    }
+
+    /// Row holding `label`'s weight vector.
+    pub fn row_of_label(&self, label: u32) -> usize {
+        self.label_row[label as usize] as usize
+    }
+
+    /// One weight row (any row below `l_pad + scratch_rows`).
+    pub fn row(&self, row: usize) -> &[f32] {
+        &self.w[row * self.d..(row + 1) * self.d]
+    }
+
+    pub fn write_row(&mut self, row: usize, values: &[f32]) {
+        debug_assert_eq!(values.len(), self.d);
+        self.w[row * self.d..(row + 1) * self.d].copy_from_slice(values);
+    }
+
+    /// Install a new label permutation and rebuild the inverse map.
+    pub fn set_label_order(&mut self, order: &[u32]) -> Result<()> {
+        if order.len() != self.labels {
+            bail!(
+                "label order has {} entries for {} labels",
+                order.len(),
+                self.labels
+            );
+        }
+        let mut seen = vec![false; self.labels];
+        for &lab in order {
+            if lab as usize >= self.labels || seen[lab as usize] {
+                bail!("label order is not a permutation of 0..{}", self.labels);
+            }
+            seen[lab as usize] = true;
+        }
+        self.label_order = order.to_vec();
+        for (row, &lab) in self.label_order.iter().enumerate() {
+            self.label_row[lab as usize] = row as u32;
+        }
+        Ok(())
+    }
+
+    /// Dense Y block [rows.len(), width] for rows `lo..lo+width` of the
+    /// permuted label space.
+    pub fn y_block(&self, labels: &Csr, rows: &[u32], lo: usize, width: usize) -> Vec<f32> {
+        let hi = lo + width;
+        let mut y = vec![0.0f32; rows.len() * width];
+        for (bi, &r) in rows.iter().enumerate() {
+            for &lab in labels.row(r as usize) {
+                let row = self.label_row[lab as usize] as usize;
+                if (lo..hi).contains(&row) {
+                    y[bi * width + (row - lo)] = 1.0;
+                }
+            }
+        }
+        y
+    }
+
+    /// Dense Y block for one training chunk (permutation-aware).
+    pub fn y_chunk(&self, labels: &Csr, rows: &[u32], chunk: usize) -> Vec<f32> {
+        self.y_block(labels, rows, chunk * self.chunk_size, self.chunk_size)
+    }
+
+    /// Overwrite model sections from a validated checkpoint.  Section
+    /// lengths must match the current allocation exactly — the caller
+    /// (`Checkpoint::restore`) has already matched policy and geometry.
+    pub fn restore_sections(
+        &mut self,
+        w_scored: &[f32],
+        mom: &[f32],
+        kahan: &[f32],
+        label_order: &[u32],
+    ) -> Result<()> {
+        if w_scored.len() != self.l_pad * self.d {
+            bail!(
+                "restore: w has {} values, store wants {}",
+                w_scored.len(),
+                self.l_pad * self.d
+            );
+        }
+        if mom.len() != self.mom.len() || kahan.len() != self.kahan_c.len() {
+            bail!(
+                "restore: optimizer sections ({}, {}) don't match store ({}, {})",
+                mom.len(),
+                kahan.len(),
+                self.mom.len(),
+                self.kahan_c.len()
+            );
+        }
+        self.set_label_order(label_order)?;
+        self.w[..w_scored.len()].copy_from_slice(w_scored);
+        self.mom.copy_from_slice(mom);
+        self.kahan_c.copy_from_slice(kahan);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(labels: usize, d: usize, lc: usize, spec: BufferSpec) -> WeightStore {
+        let order: Vec<u32> = (0..labels as u32).collect();
+        WeightStore::new(labels, d, lc, order, 0, spec).unwrap()
+    }
+
+    #[test]
+    fn geometry_pads_to_chunk_multiple() {
+        let s = mk(1000, 4, 256, BufferSpec::default());
+        assert_eq!(s.l_pad, 1024);
+        assert_eq!(s.chunks(), 4);
+        assert_eq!(s.w().len(), 1024 * 4);
+        assert_eq!(s.w_scored().len(), 1024 * 4);
+        assert!(!s.has_mom() && !s.has_kahan());
+    }
+
+    #[test]
+    fn scratch_rows_extend_w_but_not_scored() {
+        let s = mk(100, 3, 50, BufferSpec { scratch_rows: 7, ..Default::default() });
+        assert_eq!(s.w().len(), (100 + 7) * 3);
+        assert_eq!(s.w_scored().len(), 100 * 3);
+        assert_eq!(s.scratch_rows, 7);
+    }
+
+    #[test]
+    fn chunk_spans_tile_the_scored_region() {
+        let s = mk(96, 2, 32, BufferSpec::default());
+        let mut covered = 0;
+        for c in 0..s.chunks() {
+            let span = s.chunk_span(c);
+            assert_eq!(span.start, covered);
+            assert_eq!(s.chunk_w(c).len(), 32 * 2);
+            covered = span.end;
+        }
+        assert_eq!(covered, s.w_scored().len());
+    }
+
+    #[test]
+    fn commit_chunk_applies_each_staged_buffer() {
+        let mut s = mk(
+            64,
+            2,
+            32,
+            BufferSpec { momentum: true, ..Default::default() },
+        );
+        let staged = StagedChunk {
+            w: vec![1.5; 64],
+            kahan: None,
+            mom: Some(vec![-2.0; 64]),
+        };
+        s.commit_chunk(1, &staged);
+        assert!(s.chunk_w(0).iter().all(|&v| v == 0.0));
+        assert!(s.chunk_w(1).iter().all(|&v| v == 1.5));
+        assert!(s.chunk_mom(1).iter().all(|&v| v == -2.0));
+    }
+
+    #[test]
+    fn kahan_allocated_only_with_head_chunks() {
+        let order: Vec<u32> = (0..64u32).collect();
+        let spec = BufferSpec { kahan: true, ..Default::default() };
+        let none = WeightStore::new(64, 2, 32, order.clone(), 0, spec).unwrap();
+        assert!(!none.has_kahan());
+        let some = WeightStore::new(64, 2, 32, order, 1, spec).unwrap();
+        assert!(some.has_kahan());
+        assert_eq!(some.kahan().len(), 64 * 2);
+    }
+
+    #[test]
+    fn label_order_roundtrips_and_validates() {
+        let mut s = mk(6, 1, 2, BufferSpec::default());
+        s.set_label_order(&[5, 0, 3, 1, 4, 2]).unwrap();
+        for (row, &lab) in s.label_order().iter().enumerate() {
+            assert_eq!(s.row_of_label(lab), row);
+        }
+        assert!(s.set_label_order(&[0, 0, 3, 1, 4, 2]).is_err(), "duplicate");
+        assert!(s.set_label_order(&[9, 0, 3, 1, 4, 2]).is_err(), "out of range");
+        assert!(s.set_label_order(&[0, 1]).is_err(), "short");
+    }
+
+    #[test]
+    fn y_chunk_places_positives_once_under_permutation() {
+        let mut s = mk(8, 1, 4, BufferSpec::default());
+        s.set_label_order(&[7, 6, 5, 4, 3, 2, 1, 0]).unwrap();
+        let csr = Csr { indptr: vec![0, 2, 3], indices: vec![0, 7, 4] };
+        let rows = [0u32, 1u32];
+        let y0 = s.y_chunk(&csr, &rows, 0);
+        let y1 = s.y_chunk(&csr, &rows, 1);
+        // label 7 -> row 0 (chunk 0), label 0 -> row 7 (chunk 1),
+        // label 4 -> row 3 (chunk 0)
+        assert_eq!(y0, vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(y1, vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        let total: f32 = y0.iter().chain(y1.iter()).sum();
+        assert_eq!(total as usize, csr.indices.len());
+    }
+
+    #[test]
+    fn row_read_write_roundtrip() {
+        let mut s = mk(10, 3, 5, BufferSpec::default());
+        s.write_row(4, &[1.0, 2.0, 3.0]);
+        assert_eq!(s.row(4), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.row(3), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn restore_sections_validates_lengths() {
+        let mut s = mk(4, 2, 2, BufferSpec::default());
+        let order: Vec<u32> = vec![2, 3, 0, 1];
+        let w = vec![0.5f32; 4 * 2];
+        s.restore_sections(&w, &[], &[], &order).unwrap();
+        assert_eq!(s.w_scored(), &w[..]);
+        assert_eq!(s.label_order(), &order[..]);
+        assert!(s.restore_sections(&w[..6], &[], &[], &order).is_err());
+        assert!(s.restore_sections(&w, &[1.0], &[], &order).is_err());
+    }
+
+    #[test]
+    fn from_sections_moves_weights_in() {
+        let order: Vec<u32> = (0..6u32).collect();
+        let w = vec![0.25f32; 8 * 3];
+        let s = WeightStore::from_sections(6, 3, 4, 0, order, w.clone()).unwrap();
+        assert_eq!(s.l_pad, 8);
+        assert_eq!(s.w_scored(), &w[..]);
+        assert!(WeightStore::from_sections(6, 3, 4, 0, (0..6).collect(), vec![0.0; 5]).is_err());
+    }
+}

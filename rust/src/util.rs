@@ -83,6 +83,56 @@ impl Rng {
     }
 }
 
+/// Fixed-capacity ring of f32 samples: once full, each push overwrites the
+/// oldest value.  Bounds diagnostics histories (the trainer's per-step
+/// gmax trace) so long runs hold a window, not an unbounded `Vec`.
+#[derive(Clone, Debug)]
+pub struct RingF32 {
+    buf: Vec<f32>,
+    cap: usize,
+    /// Next slot to overwrite once `buf` has reached capacity.
+    next: usize,
+}
+
+impl RingF32 {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be positive");
+        RingF32 { buf: Vec::new(), cap, next: 0 }
+    }
+
+    pub fn push(&mut self, v: f32) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Max over the retained window; 0.0 when empty (the fold the trainer
+    /// has always used for its gmax statistic).
+    pub fn max(&self) -> f32 {
+        self.buf.iter().fold(0.0f32, |a, &b| a.max(b))
+    }
+
+    /// The retained window, in no particular order.
+    pub fn values(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
 /// Minimal property-testing harness (offline substitute for `proptest`):
 /// runs `cases` random cases; on failure reports the failing case seed so
 /// the case can be replayed with `Rng::new(seed)`.
@@ -216,5 +266,35 @@ mod tests {
     #[test]
     fn mmss_format() {
         assert_eq!(mmss(61.0), "1:01.0");
+    }
+
+    #[test]
+    fn ring_caps_and_overwrites_oldest() {
+        let mut r = RingF32::new(3);
+        assert!(r.is_empty());
+        assert_eq!(r.max(), 0.0, "empty ring folds to 0.0");
+        for v in [1.0, 5.0, 2.0] {
+            r.push(v);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.max(), 5.0);
+        r.push(0.5); // evicts 1.0
+        assert_eq!(r.len(), 3, "len stays at capacity");
+        assert_eq!(r.max(), 5.0);
+        r.push(0.5); // evicts 5.0
+        r.push(0.5); // evicts 2.0
+        assert_eq!(r.max(), 0.5, "old peak aged out of the window");
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.values().len(), 3);
+    }
+
+    #[test]
+    fn ring_below_capacity_keeps_everything() {
+        let mut r = RingF32::new(100);
+        for i in 0..10 {
+            r.push(i as f32);
+        }
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.max(), 9.0);
     }
 }

@@ -63,7 +63,7 @@ fn y_blocks_partition_positives() {
             for (bi, labs) in pos.iter().enumerate() {
                 for &lab in labs {
                     let row = row_of[lab as usize] as usize;
-                    if row >= lo && row < lo + lc {
+                    if (lo..lo + lc).contains(&row) {
                         placed[bi] += 1;
                     }
                 }

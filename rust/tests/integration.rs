@@ -158,7 +158,7 @@ fn weights_stay_on_grid_per_policy() {
         }
         assert!(tr.weights_on_grid(), "{prec:?} weights left the grid");
         // and they moved
-        assert!(tr.w.iter().any(|&v| v != 0.0));
+        assert!(tr.store.w().iter().any(|&v| v != 0.0));
         let _ = fmt;
     }
 }
@@ -176,9 +176,10 @@ fn chunked_equals_unchunked_fp32() {
     tr_a.step(&mut rt, &ds, &rows).unwrap();
     tr_b.step(&mut rt, &ds, &rows).unwrap();
     let max_diff = tr_a
-        .w
+        .store
+        .w()
         .iter()
-        .zip(tr_b.w.iter())
+        .zip(tr_b.store.w().iter())
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(
@@ -201,16 +202,51 @@ fn renee_runs_and_manages_loss_scale() {
     let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Renee, 1024);
     tr.loss_scale = 1e9; // force overflow on the first step
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
-    let w_before = tr.w.clone();
+    let w_before = tr.store.w().to_vec();
     let (_, overflowed) = tr.step(&mut rt, &ds, &rows).unwrap();
     assert!(overflowed, "1e9 scale must overflow fp16");
-    assert_eq!(tr.w, w_before, "overflowed step must not commit updates");
+    assert_eq!(tr.store.w(), &w_before[..], "overflowed step must not commit updates");
     assert!(tr.loss_scale < 1e9, "scale must halve after overflow");
     // a sane scale trains
     tr.loss_scale = 1024.0;
     let (_, overflowed) = tr.step(&mut rt, &ds, &rows).unwrap();
     assert!(!overflowed);
-    assert!(tr.w.iter().any(|&v| v != 0.0));
+    assert!(tr.store.w().iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn renee_overflow_rollback_is_byte_identical_and_scale_regrows() {
+    // the three legs of the Renee loss-scale contract (paper baseline /
+    // AMP semantics): overflow rolls updates back byte-for-byte, the
+    // scale halves (floored at 1.0 — unit-tested in policy::renee), and
+    // regrows on the 200th clean step
+    require_artifacts!();
+    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Renee, 1024);
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    // one clean step so w / mom / enc_p are all nonzero
+    let (_, o) = tr.step(&mut rt, &ds, &rows).unwrap();
+    assert!(!o);
+    let w0: Vec<u32> = tr.store.w().iter().map(|v| v.to_bits()).collect();
+    let m0: Vec<u32> = tr.store.mom().iter().map(|v| v.to_bits()).collect();
+    let e0: Vec<u32> = tr.enc_p.iter().map(|v| v.to_bits()).collect();
+
+    tr.loss_scale = 1e9; // force FP16 overflow
+    let (_, o) = tr.step(&mut rt, &ds, &rows).unwrap();
+    assert!(o, "1e9 scale must overflow");
+    let w1: Vec<u32> = tr.store.w().iter().map(|v| v.to_bits()).collect();
+    let m1: Vec<u32> = tr.store.mom().iter().map(|v| v.to_bits()).collect();
+    let e1: Vec<u32> = tr.enc_p.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(w0, w1, "rolled-back weights must be byte-identical");
+    assert_eq!(m0, m1, "rolled-back momentum must be byte-identical");
+    assert_eq!(e0, e1, "the encoder must skip the overflowed step");
+    assert_eq!(tr.loss_scale, 0.5e9, "scale halves after overflow");
+
+    // regrowth: the 200th clean step doubles the scale (cap 65536)
+    tr.loss_scale = 512.0;
+    tr.step_count = 199;
+    let (_, o) = tr.step(&mut rt, &ds, &rows).unwrap();
+    assert!(!o);
+    assert_eq!(tr.loss_scale, 1024.0, "scale doubles at step 200");
 }
 
 #[test]
@@ -219,7 +255,7 @@ fn sampled_policy_touches_only_shortlist() {
     let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Sampled, 512);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
     tr.step(&mut rt, &ds, &rows).unwrap();
-    let moved = tr.w.chunks(tr.d).filter(|c| c.iter().any(|&v| v != 0.0)).count();
+    let moved = tr.store.w().chunks(tr.store.d).filter(|c| c.iter().any(|&v| v != 0.0)).count();
     assert!(moved > 0, "some rows must move");
     assert!(
         moved <= tr.cfg.shortlist,
@@ -232,25 +268,25 @@ fn sampled_policy_touches_only_shortlist() {
 fn head_kahan_policy_partitions_and_reorders() {
     require_artifacts!();
     let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Fp8HeadKahan, 512);
-    assert!(tr.head_chunks >= 1);
+    assert!(tr.store.head_chunks >= 1);
     // label permutation is a bijection
     let mut seen = vec![false; ds.profile.labels];
-    for &l in &tr.label_order {
+    for &l in tr.store.label_order() {
         assert!(!seen[l as usize]);
         seen[l as usize] = true;
     }
     assert!(seen.iter().all(|&s| s));
     // head rows are the most frequent labels
-    let f0 = ds.label_freq[tr.label_order[0] as usize];
-    let flast = ds.label_freq[*tr.label_order.last().unwrap() as usize];
+    let f0 = ds.label_freq[tr.store.label_order()[0] as usize];
+    let flast = ds.label_freq[*tr.store.label_order().last().unwrap() as usize];
     assert!(f0 >= flast);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
     tr.step(&mut rt, &ds, &rows).unwrap();
     // head rows live on the BF16 grid, tail rows on E4M3
-    let lc = tr.cfg.chunk_size * tr.d;
-    let head = &tr.w[..tr.head_chunks * lc];
+    let lc = tr.store.chunk_size * tr.store.d;
+    let head = &tr.store.w()[..tr.store.head_chunks * lc];
     assert!(head.iter().all(|&v| v == quantize_rne(v, &BF16)));
-    let tail = &tr.w[tr.head_chunks * lc..];
+    let tail = &tr.store.w()[tr.store.head_chunks * lc..];
     assert!(tail.iter().all(|&v| v == quantize_rne(v, &E4M3)));
 }
 
@@ -281,9 +317,9 @@ fn checkpoint_roundtrip() {
     tr.save_checkpoint(path).unwrap();
     let cfg = tr.cfg.clone();
     let mut tr2 = Trainer::new(&rt, &ds, cfg, &art).unwrap();
-    assert_ne!(tr2.w, tr.w);
+    assert_ne!(tr2.store.w(), tr.store.w());
     tr2.load_checkpoint(path).unwrap();
-    assert_eq!(tr2.w, tr.w);
+    assert_eq!(tr2.store.w(), tr.store.w());
     assert_eq!(tr2.enc_p, tr.enc_p);
     assert_eq!(tr2.step_count, tr.step_count);
     // corrupted magic is rejected
@@ -311,11 +347,11 @@ fn predictor_reproduces_in_memory_eval_exactly() {
     Checkpoint::from_trainer(&tr, "quickstart").save(path).unwrap();
     let p = Predictor::load(path).unwrap();
     // bit-exact round-trip of the full model state
-    assert_eq!(p.checkpoint().w, tr.w);
-    assert_eq!(p.checkpoint().enc_p, tr.enc_p);
-    assert_eq!(p.checkpoint().label_order, tr.label_order);
-    assert_eq!(p.checkpoint().profile, "quickstart");
-    assert_eq!(p.checkpoint().seed, tr.cfg.seed);
+    assert_eq!(p.store().w_scored(), tr.store.w_scored());
+    assert_eq!(p.enc_params(), &tr.enc_p[..]);
+    assert_eq!(p.store().label_order(), tr.store.label_order());
+    assert_eq!(p.profile(), "quickstart");
+    assert_eq!(p.seed(), tr.cfg.seed);
 
     let rep_srv = p.evaluate(&mut rt, &ds, 96).unwrap();
     assert_eq!(rep_srv.n, rep_mem.n);
@@ -338,8 +374,8 @@ fn head_kahan_checkpoint_preserves_permutation() {
     Checkpoint::from_trainer(&tr, "quickstart").save(path).unwrap();
     let p = Predictor::load(path).unwrap();
     assert_ne!(
-        p.checkpoint().label_order,
-        (0..ds.profile.labels as u32).collect::<Vec<_>>(),
+        p.store().label_order(),
+        &(0..ds.profile.labels as u32).collect::<Vec<_>>()[..],
         "head-Kahan must have permuted rows"
     );
     let rep_srv = p.evaluate(&mut rt, &ds, 64).unwrap();
@@ -354,7 +390,7 @@ fn fig2a_host_quantization_moves_weights_onto_grid() {
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
     tr.step(&mut rt, &ds, &rows).unwrap();
     tr.quantize_classifier(4, 3, false);
-    for &v in tr.w.iter() {
+    for &v in tr.store.w().iter() {
         let q = elmo::numerics::quantize_param(v, 4.0, 3.0, None);
         assert_eq!(v, q);
     }

@@ -1,0 +1,716 @@
+//! Golden parity: the policy/store refactor must be a pure restructuring.
+//!
+//! `legacy` below is the pre-refactor `Trainer` implementation, preserved
+//! verbatim (match-arm step functions over bare `Vec<f32>` state) as the
+//! executable golden reference — running it regenerates the pre-refactor
+//! trajectory in-process, which is strictly stronger than a recorded
+//! vector file because it covers every policy, seed, and step count the
+//! harness asks for.  For each `Precision` policy the tests drive the
+//! legacy trainer and the refactored policy/`WeightStore` trainer over
+//! identical batches and assert BIT-identical per-step losses, overflow
+//! decisions, gmax traces, final weights/encoder state, and final P@k /
+//! PSP@k — and that a checkpoint saved from the refactored trainer still
+//! scores bit-identically after a reload through the serving path.
+//!
+//! The artifact-dependent tests skip gracefully without `make artifacts`;
+//! the host-side construction parity tests (Y blocks, shortlist building)
+//! always run.
+
+// the legacy reference below is kept byte-for-byte, old idioms included
+#![allow(clippy::manual_range_contains)]
+
+use elmo::coordinator::{evaluate, evaluate_model, EvalModel, LrSchedule, Precision, TrainConfig, Trainer};
+use elmo::data::{self, Dataset, SEQ_LEN};
+use elmo::infer::{Checkpoint, ClassifierView, Predictor};
+use elmo::numerics::{quantize_rne, FP16};
+use elmo::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
+use elmo::store::{BufferSpec, WeightStore};
+
+fn art_dir() -> Option<String> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt")
+        .exists()
+        .then(|| p.to_str().unwrap().to_string())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match art_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+/// The pre-refactor trainer, copied from `coordinator::trainer` as it
+/// stood before the policy/store extraction (PR 1 tree).  Do not clean
+/// this up — its value is being byte-for-byte the old numerics.
+mod legacy {
+    use super::*;
+    use anyhow::{bail, Context, Result};
+
+    pub struct LegacyTrainer {
+        pub cfg: TrainConfig,
+        pub w: Vec<f32>,
+        pub mom: Vec<f32>,
+        pub kahan_c: Vec<f32>,
+        pub enc_p: Vec<f32>,
+        pub enc_m: Vec<f32>,
+        pub enc_v: Vec<f32>,
+        pub enc_c: Vec<f32>,
+        pub l_pad: usize,
+        pub d: usize,
+        pub batch: usize,
+        pub head_chunks: usize,
+        pub label_order: Vec<u32>,
+        pub label_row: Vec<u32>,
+        pub loss_scale: f32,
+        pub step_count: u64,
+        pub gmax_history: Vec<f32>,
+    }
+
+    impl LegacyTrainer {
+        pub fn new(rt: &Runtime, ds: &Dataset, cfg: TrainConfig, art_dir: &str) -> Result<Self> {
+            let mc = rt.config();
+            let d = mc.d;
+            let batch = mc.batch;
+            let l = ds.profile.labels;
+            let l_pad = l.div_ceil(cfg.chunk_size) * cfg.chunk_size;
+
+            let init_file = match cfg.enc_override.unwrap_or(cfg.precision.enc_cfg()) {
+                "fp32" => "enc_init_fp32.bin",
+                _ => "enc_init_bf16.bin",
+            };
+            let enc_p = elmo::runtime::load_f32_bin(format!("{art_dir}/{init_file}"))
+                .context("loading encoder init")?;
+            if enc_p.len() != mc.psize {
+                bail!("encoder init size {} != psize {}", enc_p.len(), mc.psize);
+            }
+
+            let scratch = if cfg.precision == Precision::Sampled {
+                cfg.shortlist
+            } else {
+                0
+            };
+            let w = vec![0.0f32; (l_pad + scratch) * d];
+            let mom = if cfg.precision == Precision::Renee {
+                vec![0.0f32; l_pad * d]
+            } else {
+                Vec::new()
+            };
+
+            let (label_order, head_chunks) = if cfg.precision == Precision::Fp8HeadKahan {
+                let order = ds.labels_by_freq();
+                let head_labels = (cfg.head_frac * l as f64).round() as usize;
+                let hc = head_labels.div_ceil(cfg.chunk_size);
+                (order, hc)
+            } else {
+                ((0..l as u32).collect(), 0)
+            };
+            let mut label_row = vec![0u32; l];
+            for (row, &lab) in label_order.iter().enumerate() {
+                label_row[lab as usize] = row as u32;
+            }
+            let kahan_c = if head_chunks > 0 {
+                vec![0.0f32; l_pad * d]
+            } else {
+                Vec::new()
+            };
+
+            let psize = mc.psize;
+            Ok(LegacyTrainer {
+                cfg: cfg.clone(),
+                w,
+                mom,
+                kahan_c,
+                enc_p,
+                enc_m: vec![0.0; psize],
+                enc_v: vec![0.0; psize],
+                enc_c: vec![0.0; psize],
+                l_pad,
+                d,
+                batch,
+                head_chunks,
+                label_order,
+                label_row,
+                loss_scale: cfg.init_loss_scale,
+                step_count: 0,
+                gmax_history: Vec::new(),
+            })
+        }
+
+        pub fn chunks(&self) -> usize {
+            self.l_pad / self.cfg.chunk_size
+        }
+
+        pub fn enc_cfg(&self) -> &'static str {
+            self.cfg.enc_override.unwrap_or(self.cfg.precision.enc_cfg())
+        }
+
+        fn cls_artifact(&self) -> String {
+            let lc = self.cfg.chunk_size;
+            match self.cfg.precision {
+                Precision::Fp32 | Precision::Sampled => format!("cls_chunk_fp32_{lc}"),
+                Precision::Bf16 => format!("cls_chunk_bf16_{lc}"),
+                Precision::Fp8 | Precision::Fp8HeadKahan => format!("cls_chunk_fp8_{lc}"),
+                Precision::Renee => format!("cls_renee_{lc}"),
+            }
+        }
+
+        fn batch_tokens(&self, ds: &Dataset, rows: &[u32]) -> Vec<i32> {
+            let mut out = Vec::with_capacity(rows.len() * SEQ_LEN);
+            for &r in rows {
+                let r = r as usize;
+                out.extend_from_slice(&ds.train.tokens[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
+            }
+            out
+        }
+
+        pub fn batch_y_chunk(&self, ds: &Dataset, rows: &[u32], chunk: usize) -> Vec<f32> {
+            let lc = self.cfg.chunk_size;
+            let lo = chunk * lc;
+            let hi = lo + lc;
+            let mut y = vec![0.0f32; rows.len() * lc];
+            for (bi, &r) in rows.iter().enumerate() {
+                for &lab in ds.train.labels.row(r as usize) {
+                    let row = self.label_row[lab as usize] as usize;
+                    if row >= lo && row < hi {
+                        y[bi * lc + (row - lo)] = 1.0;
+                    }
+                }
+            }
+            y
+        }
+
+        fn lr_cls_now(&self) -> f32 {
+            LrSchedule::warmup(self.cfg.lr_cls, self.cfg.warmup_steps)
+                .at(self.step_count.saturating_sub(1))
+        }
+
+        fn lr_enc_now(&self) -> f32 {
+            LrSchedule::warmup(self.cfg.lr_enc, self.cfg.warmup_steps)
+                .at(self.step_count.saturating_sub(1))
+        }
+
+        fn step_seed(&self) -> i32 {
+            (self.cfg.seed as u32)
+                .wrapping_mul(0x9E37_79B9)
+                .wrapping_add(self.step_count as u32) as i32
+        }
+
+        pub fn step(&mut self, rt: &mut Runtime, ds: &Dataset, rows: &[u32]) -> Result<(f64, bool)> {
+            debug_assert_eq!(rows.len(), self.batch);
+            let seed = self.step_seed();
+            self.step_count += 1;
+
+            let enc_cfg = self.enc_cfg();
+            let tokens = self.batch_tokens(ds, rows);
+            let emb_out = rt.exec(
+                &format!("enc_fwd_{enc_cfg}"),
+                &[
+                    Arg::F32(&self.enc_p),
+                    Arg::I32(&tokens),
+                    Arg::I32(&[seed]),
+                    Arg::F32(&[self.cfg.dropout_emb]),
+                ],
+            )?;
+            let emb = to_vec_f32(&emb_out[0])?;
+
+            let (xgrad, loss, gmax, overflow) = match self.cfg.precision {
+                Precision::Sampled => self.step_cls_sampled(rt, ds, rows, &emb, seed)?,
+                Precision::Renee => self.step_cls_renee(rt, ds, rows, &emb, seed)?,
+                _ => self.step_cls_chunked(rt, ds, rows, &emb, seed)?,
+            };
+            self.gmax_history.push(gmax);
+
+            if overflow {
+                self.loss_scale = (self.loss_scale * 0.5).max(1.0);
+                return Ok((loss, true));
+            }
+            if self.cfg.precision == Precision::Renee && self.step_count % 200 == 0 {
+                self.loss_scale = (self.loss_scale * 2.0).min(65536.0);
+            }
+
+            let outs = rt.exec(
+                &format!("enc_bwd_{enc_cfg}"),
+                &[
+                    Arg::F32(&self.enc_p),
+                    Arg::F32(&self.enc_m),
+                    Arg::F32(&self.enc_v),
+                    Arg::F32(&self.enc_c),
+                    Arg::I32(&tokens),
+                    Arg::F32(&xgrad),
+                    Arg::F32(&[self.lr_enc_now()]),
+                    Arg::F32(&[self.cfg.wd_enc]),
+                    Arg::F32(&[self.step_count as f32]),
+                    Arg::I32(&[seed]),
+                    Arg::F32(&[self.cfg.dropout_emb]),
+                ],
+            )?;
+            self.enc_p = to_vec_f32(&outs[0])?;
+            self.enc_m = to_vec_f32(&outs[1])?;
+            self.enc_v = to_vec_f32(&outs[2])?;
+            self.enc_c = to_vec_f32(&outs[3])?;
+            Ok((loss, false))
+        }
+
+        fn step_cls_chunked(
+            &mut self,
+            rt: &mut Runtime,
+            ds: &Dataset,
+            rows: &[u32],
+            emb: &[f32],
+            seed: i32,
+        ) -> Result<(Vec<f32>, f64, f32, bool)> {
+            let lc = self.cfg.chunk_size;
+            let nd = self.batch * self.d;
+            let mut xgrad = vec![0.0f32; nd];
+            let mut loss = 0.0f64;
+            let mut gmax = 0.0f32;
+            let art = self.cls_artifact();
+            let kahan_art = format!("cls_kahan_{lc}");
+
+            for chunk in 0..self.chunks() {
+                let wslice = &self.w[chunk * lc * self.d..(chunk + 1) * lc * self.d];
+                let y = self.batch_y_chunk(ds, rows, chunk);
+                let use_kahan = chunk < self.head_chunks;
+                let lr = [self.lr_cls_now()];
+                let cseed = [seed ^ ((chunk as i32) << 8)];
+                let drop = [self.cfg.dropout_cls];
+                let outs = if use_kahan {
+                    let cslice =
+                        &self.kahan_c[chunk * lc * self.d..(chunk + 1) * lc * self.d];
+                    rt.exec(
+                        &kahan_art,
+                        &[
+                            Arg::F32(wslice),
+                            Arg::F32(cslice),
+                            Arg::F32(emb),
+                            Arg::F32(&y),
+                            Arg::F32(&lr),
+                            Arg::I32(&cseed),
+                            Arg::F32(&drop),
+                        ],
+                    )?
+                } else {
+                    rt.exec(
+                        &art,
+                        &[
+                            Arg::F32(wslice),
+                            Arg::F32(emb),
+                            Arg::F32(&y),
+                            Arg::F32(&lr),
+                            Arg::I32(&cseed),
+                            Arg::F32(&drop),
+                        ],
+                    )?
+                };
+                let wnew = to_vec_f32(&outs[0])?;
+                self.w[chunk * lc * self.d..(chunk + 1) * lc * self.d]
+                    .copy_from_slice(&wnew);
+                let (xg_idx, loss_idx, gmax_idx) = if use_kahan {
+                    let cnew = to_vec_f32(&outs[1])?;
+                    self.kahan_c[chunk * lc * self.d..(chunk + 1) * lc * self.d]
+                        .copy_from_slice(&cnew);
+                    (2, 3, 4)
+                } else {
+                    (1, 2, 3)
+                };
+                let xg = to_vec_f32(&outs[xg_idx])?;
+                for (a, b) in xgrad.iter_mut().zip(xg.iter()) {
+                    *a += b;
+                }
+                loss += to_scalar_f32(&outs[loss_idx])? as f64;
+                gmax = gmax.max(to_scalar_f32(&outs[gmax_idx])?);
+            }
+            let denom = (self.batch * ds.profile.labels) as f64;
+            Ok((xgrad, loss / denom, gmax, false))
+        }
+
+        fn step_cls_renee(
+            &mut self,
+            rt: &mut Runtime,
+            ds: &Dataset,
+            rows: &[u32],
+            emb: &[f32],
+            seed: i32,
+        ) -> Result<(Vec<f32>, f64, f32, bool)> {
+            let lc = self.cfg.chunk_size;
+            let nd = self.batch * self.d;
+            let mut xgrad = vec![0.0f32; nd];
+            let mut loss = 0.0f64;
+            let mut overflow = false;
+            let art = self.cls_artifact();
+            let _ = seed;
+
+            let mut new_w: Vec<Vec<f32>> = Vec::with_capacity(self.chunks());
+            let mut new_m: Vec<Vec<f32>> = Vec::with_capacity(self.chunks());
+            for chunk in 0..self.chunks() {
+                let span = chunk * lc * self.d..(chunk + 1) * lc * self.d;
+                let y = self.batch_y_chunk(ds, rows, chunk);
+                let outs = rt.exec(
+                    &art,
+                    &[
+                        Arg::F32(&self.w[span.clone()]),
+                        Arg::F32(&self.mom[span.clone()]),
+                        Arg::F32(emb),
+                        Arg::F32(&y),
+                        Arg::F32(&[self.lr_cls_now()]),
+                        Arg::F32(&[self.cfg.momentum]),
+                        Arg::F32(&[self.loss_scale]),
+                    ],
+                )?;
+                new_w.push(to_vec_f32(&outs[0])?);
+                new_m.push(to_vec_f32(&outs[1])?);
+                let xg = to_vec_f32(&outs[2])?;
+                for (a, b) in xgrad.iter_mut().zip(xg.iter()) {
+                    *a += b;
+                }
+                loss += to_scalar_f32(&outs[3])? as f64;
+                if to_scalar_f32(&outs[4])? > 0.0 {
+                    overflow = true;
+                }
+            }
+            for v in xgrad.iter_mut() {
+                let q = quantize_rne(*v, &FP16);
+                *v = if v.abs() > FP16.max_value || !v.is_finite() {
+                    f32::INFINITY * v.signum()
+                } else {
+                    q
+                };
+            }
+            if xgrad.iter().any(|v| !v.is_finite()) {
+                overflow = true;
+            }
+            if !overflow {
+                for (chunk, (wn, mn)) in new_w.into_iter().zip(new_m).enumerate() {
+                    let span = chunk * lc * self.d..(chunk + 1) * lc * self.d;
+                    self.w[span.clone()].copy_from_slice(&wn);
+                    self.mom[span].copy_from_slice(&mn);
+                }
+                for v in xgrad.iter_mut() {
+                    *v /= self.loss_scale;
+                }
+            }
+            let denom = (self.batch * ds.profile.labels) as f64;
+            let gmax = self.loss_scale;
+            Ok((xgrad, loss / denom, gmax, overflow))
+        }
+
+        fn step_cls_sampled(
+            &mut self,
+            rt: &mut Runtime,
+            ds: &Dataset,
+            rows: &[u32],
+            emb: &[f32],
+            seed: i32,
+        ) -> Result<(Vec<f32>, f64, f32, bool)> {
+            let lc = self.cfg.shortlist;
+            let art = format!("cls_chunk_fp32_{lc}");
+            if !rt.has(&art) {
+                bail!("no fp32 artifact for shortlist size {lc}");
+            }
+            let mut short: Vec<u32> = Vec::with_capacity(lc);
+            for &r in rows {
+                for &lab in ds.train.labels.row(r as usize) {
+                    if !short.contains(&lab) {
+                        short.push(lab);
+                    }
+                }
+            }
+            short.truncate(lc.saturating_sub(1));
+            let mut rng = elmo::util::Rng::new(seed as u64 ^ 0x5A3);
+            let neg_budget = self.cfg.neg_per_step.min(lc - short.len());
+            for _ in 0..neg_budget {
+                let cand = rng.below(ds.profile.labels) as u32;
+                if !short.contains(&cand) {
+                    short.push(cand);
+                }
+            }
+            let real = short.len();
+            let mut wg = vec![0.0f32; lc * self.d];
+            for (i, &lab) in short.iter().enumerate() {
+                let row = self.label_row[lab as usize] as usize;
+                wg[i * self.d..(i + 1) * self.d]
+                    .copy_from_slice(&self.w[row * self.d..(row + 1) * self.d]);
+            }
+            let mut y = vec![0.0f32; self.batch * lc];
+            for (bi, &r) in rows.iter().enumerate() {
+                for &lab in ds.train.labels.row(r as usize) {
+                    if let Some(pos) = short.iter().position(|&s| s == lab) {
+                        y[bi * lc + pos] = 1.0;
+                    }
+                }
+            }
+            let outs = rt.exec(
+                &art,
+                &[
+                    Arg::F32(&wg),
+                    Arg::F32(emb),
+                    Arg::F32(&y),
+                    Arg::F32(&[self.lr_cls_now()]),
+                    Arg::I32(&[seed]),
+                    Arg::F32(&[self.cfg.dropout_cls]),
+                ],
+            )?;
+            let wn = to_vec_f32(&outs[0])?;
+            for (i, &lab) in short.iter().enumerate().take(real) {
+                let row = self.label_row[lab as usize] as usize;
+                self.w[row * self.d..(row + 1) * self.d]
+                    .copy_from_slice(&wn[i * self.d..(i + 1) * self.d]);
+            }
+            let xgrad = to_vec_f32(&outs[1])?;
+            let loss = to_scalar_f32(&outs[2])? as f64 / (self.batch * lc) as f64;
+            let gmax = to_scalar_f32(&outs[3])?;
+            Ok((xgrad, loss, gmax, false))
+        }
+    }
+}
+
+use legacy::LegacyTrainer;
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Drive the legacy and refactored trainers over identical batches and
+/// assert bit-identical trajectories, then checkpoint-reload parity.
+fn assert_policy_parity(precision: Precision, chunk: usize, steps: usize) {
+    let Some(art) = art_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 1);
+    let mut rt = Runtime::new(&art).unwrap();
+    let cfg = TrainConfig {
+        precision,
+        chunk_size: chunk,
+        epochs: 1,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), &art).unwrap();
+    let mut leg = LegacyTrainer::new(&rt, &ds, cfg, &art).unwrap();
+
+    let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
+    for step in 0..steps {
+        let (rows, _) = batcher.next_batch().unwrap();
+        let (loss_new, over_new) = tr.step(&mut rt, &ds, &rows).unwrap();
+        let (loss_old, over_old) = leg.step(&mut rt, &ds, &rows).unwrap();
+        assert_eq!(
+            loss_new.to_bits(),
+            loss_old.to_bits(),
+            "{precision:?} step {step}: loss {loss_new} != legacy {loss_old}"
+        );
+        assert_eq!(over_new, over_old, "{precision:?} step {step}: overflow flag");
+    }
+    assert_eq!(
+        bits32(tr.store.w()),
+        bits32(&leg.w),
+        "{precision:?}: final weights diverged"
+    );
+    assert_eq!(
+        bits32(tr.store.mom()),
+        bits32(&leg.mom),
+        "{precision:?}: momentum diverged"
+    );
+    assert_eq!(
+        bits32(tr.store.kahan()),
+        bits32(&leg.kahan_c),
+        "{precision:?}: kahan compensation diverged"
+    );
+    assert_eq!(
+        bits32(&tr.enc_p),
+        bits32(&leg.enc_p),
+        "{precision:?}: encoder params diverged"
+    );
+    assert_eq!(tr.store.label_order(), &leg.label_order[..]);
+    assert_eq!(tr.loss_scale.to_bits(), leg.loss_scale.to_bits());
+    assert_eq!(
+        bits32(tr.gmax_history.values()),
+        bits32(&leg.gmax_history),
+        "{precision:?}: gmax trace diverged"
+    );
+
+    // final P@k / PSP@k: refactored eval vs the legacy weight vectors
+    // through the same protocol
+    let rep_new = evaluate(&mut rt, &tr, &ds, 96).unwrap();
+    let m_old = EvalModel {
+        enc_p: &leg.enc_p,
+        enc_art: format!("enc_fwd_{}", leg.enc_cfg()),
+        cls: ClassifierView {
+            w: &leg.w[..leg.l_pad * leg.d],
+            d: leg.d,
+            labels: leg.label_order.len(),
+            l_pad: leg.l_pad,
+            label_order: &leg.label_order,
+        },
+    };
+    let rep_old = evaluate_model(&mut rt, &m_old, &ds, 96).unwrap();
+    assert_eq!(rep_new.p, rep_old.p, "{precision:?}: P@k diverged");
+    assert_eq!(rep_new.psp, rep_old.psp, "{precision:?}: PSP@k diverged");
+
+    // a checkpoint written by the refactored trainer scores bit-identically
+    // after a reload through the WeightStore-backed serving path
+    let path = std::env::temp_dir().join(format!("elmo_parity_{precision:?}.bin"));
+    let path = path.to_str().unwrap();
+    Checkpoint::from_trainer(&tr, "quickstart").save(path).unwrap();
+    let p = Predictor::load(path).unwrap();
+    assert_eq!(p.store().w_scored(), tr.store.w_scored());
+    let rep_srv = p.evaluate(&mut rt, &ds, 96).unwrap();
+    assert_eq!(rep_srv.p, rep_new.p, "{precision:?}: reload P@k diverged");
+    assert_eq!(rep_srv.psp, rep_new.psp, "{precision:?}: reload PSP@k diverged");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn parity_fp32() {
+    assert_policy_parity(Precision::Fp32, 512, 8);
+}
+
+#[test]
+fn parity_bf16() {
+    assert_policy_parity(Precision::Bf16, 512, 8);
+}
+
+#[test]
+fn parity_fp8() {
+    assert_policy_parity(Precision::Fp8, 512, 8);
+}
+
+#[test]
+fn parity_renee() {
+    // Renee artifacts are lowered at Lc ∈ {1024, 2048, 8192} (aot.py)
+    assert_policy_parity(Precision::Renee, 1024, 8);
+}
+
+#[test]
+fn parity_sampled() {
+    assert_policy_parity(Precision::Sampled, 512, 8);
+}
+
+#[test]
+fn parity_fp8_head_kahan() {
+    assert_policy_parity(Precision::Fp8HeadKahan, 512, 8);
+}
+
+#[test]
+fn parity_renee_forced_overflow() {
+    // the overflow/rollback/halving leg, forced deterministically on both
+    // implementations mid-run
+    let art = require_artifacts!();
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 1);
+    let mut rt = Runtime::new(&art).unwrap();
+    let cfg = TrainConfig {
+        precision: Precision::Renee,
+        chunk_size: 1024,
+        epochs: 1,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), &art).unwrap();
+    let mut leg = LegacyTrainer::new(&rt, &ds, cfg, &art).unwrap();
+    let rows: Vec<u32> = (0..tr.batch as u32).collect();
+    // one clean step, then a forced overflow, then a recovery step
+    for scale in [None, Some(1e9f32), None] {
+        if let Some(s) = scale {
+            tr.loss_scale = s;
+            leg.loss_scale = s;
+        }
+        let (ln, on) = tr.step(&mut rt, &ds, &rows).unwrap();
+        let (lo, oo) = leg.step(&mut rt, &ds, &rows).unwrap();
+        assert_eq!(ln.to_bits(), lo.to_bits());
+        assert_eq!(on, oo);
+        assert_eq!(tr.loss_scale.to_bits(), leg.loss_scale.to_bits());
+    }
+    assert_eq!(bits32(tr.store.w()), bits32(&leg.w));
+    assert_eq!(bits32(tr.store.mom()), bits32(&leg.mom));
+    assert_eq!(bits32(&tr.enc_p), bits32(&leg.enc_p));
+}
+
+// ---- host-side construction parity (no artifacts needed) ----
+
+#[test]
+fn y_chunk_matches_legacy_builder_under_permutation() {
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 3);
+    let lc = 256;
+    // a head-kahan-style frequency permutation
+    let order = ds.labels_by_freq();
+    let store = WeightStore::new(
+        prof.labels,
+        4,
+        lc,
+        order.clone(),
+        1,
+        BufferSpec::default(),
+    )
+    .unwrap();
+    let mut label_row = vec![0u32; prof.labels];
+    for (row, &lab) in order.iter().enumerate() {
+        label_row[lab as usize] = row as u32;
+    }
+    let rows: Vec<u32> = (0..32).collect();
+    for chunk in 0..prof.labels / lc {
+        // the legacy batch_y_chunk body, inlined
+        let lo = chunk * lc;
+        let hi = lo + lc;
+        let mut want = vec![0.0f32; rows.len() * lc];
+        for (bi, &r) in rows.iter().enumerate() {
+            for &lab in ds.train.labels.row(r as usize) {
+                let row = label_row[lab as usize] as usize;
+                if row >= lo && row < hi {
+                    want[bi * lc + (row - lo)] = 1.0;
+                }
+            }
+        }
+        assert_eq!(
+            store.y_chunk(&ds.train.labels, &rows, chunk),
+            want,
+            "chunk {chunk}"
+        );
+    }
+}
+
+#[test]
+fn shortlist_matches_legacy_quadratic_builder() {
+    // the HashSet shortlist must reproduce the legacy Vec::contains scan
+    // exactly: same order, same dedup, same truncation, same negatives
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 5);
+    for (lc, neg, seed) in [(512usize, 48usize, 7i32), (64, 48, 8), (16, 4, 9), (512, 0, 10)] {
+        let rows: Vec<u32> = (0..32).collect();
+        // legacy construction (pre-refactor step_cls_sampled body)
+        let mut want: Vec<u32> = Vec::with_capacity(lc);
+        for &r in &rows {
+            for &lab in ds.train.labels.row(r as usize) {
+                if !want.contains(&lab) {
+                    want.push(lab);
+                }
+            }
+        }
+        let dropped = want.len().saturating_sub(lc.saturating_sub(1));
+        want.truncate(lc.saturating_sub(1));
+        let mut rng = elmo::util::Rng::new(seed as u64 ^ 0x5A3);
+        let neg_budget = neg.min(lc - want.len());
+        for _ in 0..neg_budget {
+            let cand = rng.below(prof.labels) as u32;
+            if !want.contains(&cand) {
+                want.push(cand);
+            }
+        }
+        let (got, truncated) = elmo::policy::sampled::build_shortlist(
+            &ds.train.labels,
+            &rows,
+            lc,
+            neg,
+            prof.labels,
+            seed,
+        );
+        assert_eq!(got, want, "lc={lc} neg={neg} seed={seed}");
+        assert_eq!(truncated, dropped, "lc={lc}: truncation count");
+    }
+}
