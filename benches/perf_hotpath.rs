@@ -4,7 +4,8 @@
 
 use elmo::coordinator::{Precision, TrainConfig, Trainer};
 use elmo::data;
-use elmo::runtime::{Arg, Runtime};
+use elmo::memmodel;
+use elmo::runtime::{Arg, ExecCtx, Runtime, RuntimePool};
 use elmo::util::{bench_secs, print_table, Rng};
 
 fn main() -> anyhow::Result<()> {
@@ -142,6 +143,47 @@ fn main() -> anyhow::Result<()> {
             secs * 1e3,
             1.0 / secs,
             (prof.labels * tr.batch) as f64 / secs
+        );
+    }
+
+    // parallel chunk engine: the same composed step with label chunks
+    // fanned out to a RuntimePool (bit-identical results — see
+    // rust/tests/parallel_parity.rs; this measures the speedup side)
+    println!("\n== parallel chunk engine (bf16, Lc=256 -> 4 chunks/step) ==");
+    let cfg = TrainConfig {
+        precision: Precision::Bf16,
+        chunk_size: 256,
+        ..TrainConfig::default()
+    };
+    let mut serial_secs = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let mut tr = Trainer::new(&rt, &ds, cfg.clone(), art)?;
+        let pool = if workers > 1 {
+            let p = RuntimePool::new(art, workers)?;
+            p.prepare(&tr.policy.artifacts(cfg.chunk_size))?;
+            Some(p)
+        } else {
+            None
+        };
+        let rows_b: Vec<u32> = (0..tr.batch as u32).collect();
+        let staging = memmodel::pool_bytes(&tr.store, tr.batch, workers);
+        let secs = {
+            let rt = &mut rt;
+            let ds = &ds;
+            let pool = pool.as_ref();
+            bench_secs(2.0, 20, || {
+                tr.step_ex(&mut ExecCtx::of(rt, pool), ds, &rows_b).unwrap();
+            })
+        };
+        if workers == 1 {
+            serial_secs = secs;
+        }
+        println!(
+            "step[workers={workers}] {:6.1} ms  ({:.2} steps/s, {:.2}x serial, +{} KiB staging)",
+            secs * 1e3,
+            1.0 / secs,
+            serial_secs / secs,
+            staging >> 10
         );
     }
     Ok(())

@@ -13,7 +13,7 @@ use crate::data::{propensity::propensities, Dataset, SEQ_LEN};
 use crate::infer::predict::embed_inference;
 use crate::infer::scanner::{ChunkScanner, ClassifierView};
 use crate::metrics::EvalAccum;
-use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::runtime::{to_vec_f32, Arg, ExecCtx, Runtime};
 
 use super::trainer::Trainer;
 
@@ -59,12 +59,23 @@ pub fn evaluate(
     ds: &Dataset,
     max_rows: usize,
 ) -> Result<EvalReport> {
+    evaluate_ex(&mut ExecCtx::serial(rt), tr, ds, max_rows)
+}
+
+/// `evaluate` with an explicit execution context: the chunk scan fans out
+/// to `ex.pool` when one is present (bit-identical fold order).
+pub fn evaluate_ex(
+    ex: &mut ExecCtx,
+    tr: &Trainer,
+    ds: &Dataset,
+    max_rows: usize,
+) -> Result<EvalReport> {
     let m = EvalModel {
         enc_p: &tr.enc_p,
         enc_art: format!("enc_fwd_{}", tr.enc_cfg()),
         cls: ClassifierView::of_store(&tr.store),
     };
-    evaluate_model(rt, &m, ds, max_rows)
+    evaluate_model_ex(ex, &m, ds, max_rows)
 }
 
 /// Evaluate any `EvalModel` on a dataset's test split: embed batches with
@@ -76,8 +87,18 @@ pub fn evaluate_model(
     ds: &Dataset,
     max_rows: usize,
 ) -> Result<EvalReport> {
+    evaluate_model_ex(&mut ExecCtx::serial(rt), m, ds, max_rows)
+}
+
+/// `evaluate_model` with an explicit execution context (chunk pool).
+pub fn evaluate_model_ex(
+    ex: &mut ExecCtx,
+    m: &EvalModel,
+    ds: &Dataset,
+    max_rows: usize,
+) -> Result<EvalReport> {
     let t0 = std::time::Instant::now();
-    let b = rt.config().batch;
+    let b = ex.rt.config().batch;
     if ds.profile.labels != m.cls.labels {
         bail!(
             "model scores {} labels but the dataset has {}",
@@ -100,10 +121,11 @@ pub fn evaluate_model(
         for &r in &rows {
             tokens.extend_from_slice(&ds.test.tokens[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
         }
-        let emb = embed_inference(rt, &m.enc_art, m.enc_p, &tokens)?;
+        let emb = embed_inference(ex.rt, &m.enc_art, m.enc_p, &tokens)?;
 
-        // stream label chunks through the shared scanner
-        let topks = scanner.scan(rt, &m.cls, &emb, b)?;
+        // stream label chunks through the shared scanner (pooled when the
+        // caller supplied workers)
+        let topks = scanner.scan_ex(ex, &m.cls, &emb, b)?;
 
         for bi in 0..valid {
             let r = rows[bi];

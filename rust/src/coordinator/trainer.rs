@@ -8,16 +8,17 @@
 //! orchestration.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::{Dataset, SEQ_LEN};
 use crate::numerics::{self, quantize_param, quantize_rne, BF16, E4M3};
 use crate::policy::{
-    Bf16Policy, Fp32Policy, Fp8HeadKahanPolicy, Fp8Policy, ReneePolicy, SampledPolicy, StepCtx,
-    UpdatePolicy,
+    self, Bf16Policy, Fp32Policy, Fp8HeadKahanPolicy, Fp8Policy, ReneePolicy, SampledPolicy,
+    StepCtx, UpdatePolicy,
 };
-use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::runtime::{to_vec_f32, Arg, ExecCtx, Runtime};
 use crate::store::WeightStore;
 use crate::util::RingF32;
 
@@ -131,8 +132,9 @@ pub struct Trainer {
     /// Chunk-addressed classifier state: weights, momentum, Kahan
     /// compensation, and the label permutation.
     pub store: WeightStore,
-    /// The precision policy driving the store.
-    pub policy: Box<dyn UpdatePolicy>,
+    /// The precision policy driving the store.  Behind an `Arc` so the
+    /// parallel chunk engine can share it with `RuntimePool` workers.
+    pub policy: Arc<dyn UpdatePolicy>,
     /// Packed encoder params + AdamW state.
     pub enc_p: Vec<f32>,
     pub enc_m: Vec<f32>,
@@ -170,7 +172,7 @@ impl Trainer {
         // classifier zero-init (Renee-style); zeros are on every grid.
         // The policy declares which buffers the store allocates and which
         // label permutation it imposes.
-        let policy = cfg.build_policy();
+        let policy: Arc<dyn UpdatePolicy> = cfg.build_policy().into();
         let (label_order, head_chunks) = policy.label_order(ds, cfg.chunk_size);
         let store = WeightStore::new(
             l,
@@ -250,7 +252,21 @@ impl Trainer {
     }
 
     /// One training step over `rows`; returns (mean BCE loss, overflowed).
+    /// Serial wrapper over `step_ex` (no chunk pool).
     pub fn step(&mut self, rt: &mut Runtime, ds: &Dataset, rows: &[u32]) -> Result<(f64, bool)> {
+        self.step_ex(&mut ExecCtx::serial(rt), ds, rows)
+    }
+
+    /// One training step with an explicit execution context: the chunk
+    /// loop fans out to `ex.pool` when present (bit-identical to serial —
+    /// see `policy::run_step_pooled`), while the encoder forward/backward
+    /// and any non-chunk-shaped policy stay on `ex.rt`.
+    pub fn step_ex(
+        &mut self,
+        ex: &mut ExecCtx,
+        ds: &Dataset,
+        rows: &[u32],
+    ) -> Result<(f64, bool)> {
         debug_assert_eq!(rows.len(), self.batch);
         let seed = self.step_seed();
         self.step_count += 1;
@@ -258,7 +274,7 @@ impl Trainer {
         // 1. encoder forward
         let enc_cfg = self.enc_cfg();
         let tokens = self.batch_tokens(ds, rows);
-        let emb_out = rt.exec(
+        let emb_out = ex.rt.exec(
             &format!("enc_fwd_{enc_cfg}"),
             &[
                 Arg::F32(&self.enc_p),
@@ -282,9 +298,25 @@ impl Trainer {
             batch: self.batch,
             step_count: self.step_count,
         };
-        let out =
-            self.policy
-                .run_step(rt, &mut self.store, ds, rows, &ctx, &mut self.loss_scale)?;
+        let out = match ex.pool {
+            Some(pool) if self.policy.chunk_shaped() => policy::run_step_pooled(
+                &self.policy,
+                pool,
+                &mut self.store,
+                ds,
+                rows,
+                &ctx,
+                &mut self.loss_scale,
+            )?,
+            _ => self.policy.run_step(
+                ex.rt,
+                &mut self.store,
+                ds,
+                rows,
+                &ctx,
+                &mut self.loss_scale,
+            )?,
+        };
         self.gmax_history.push(out.gmax);
         self.gmax_peak = self.gmax_peak.max(out.gmax);
         self.truncated_positives += out.truncated_positives as u64;
@@ -297,7 +329,7 @@ impl Trainer {
 
         // 3. encoder backward + optimizer (runs AFTER all classifier work —
         //    the Sec 4.2 reordering)
-        let outs = rt.exec(
+        let outs = ex.rt.exec(
             &format!("enc_bwd_{enc_cfg}"),
             &[
                 Arg::F32(&self.enc_p),
@@ -322,6 +354,16 @@ impl Trainer {
 
     /// One full epoch; shuffles, steps every batch, returns stats.
     pub fn run_epoch(&mut self, rt: &mut Runtime, ds: &Dataset, epoch: usize) -> Result<EpochStats> {
+        self.run_epoch_ex(&mut ExecCtx::serial(rt), ds, epoch)
+    }
+
+    /// One full epoch with an explicit execution context (chunk pool).
+    pub fn run_epoch_ex(
+        &mut self,
+        ex: &mut ExecCtx,
+        ds: &Dataset,
+        epoch: usize,
+    ) -> Result<EpochStats> {
         let mut batcher =
             crate::data::Batcher::new(ds.train.n, self.batch, self.cfg.seed ^ epoch as u64);
         let mut stats = EpochStats::default();
@@ -329,7 +371,7 @@ impl Trainer {
         let mut loss_sum = 0.0;
         let trunc0 = self.truncated_positives;
         while let Some((rows, _valid)) = batcher.next_batch() {
-            let (loss, overflowed) = self.step(rt, ds, &rows)?;
+            let (loss, overflowed) = self.step_ex(ex, ds, &rows)?;
             loss_sum += loss;
             stats.steps += 1;
             if overflowed {

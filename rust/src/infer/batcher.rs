@@ -28,10 +28,22 @@ pub struct Prediction {
     pub latency_ms: f64,
 }
 
-/// Serving counters + latency reservoir.
+/// Latency samples retained for percentile reports.  Long serving runs
+/// used to grow the reservoir without bound (and clone-sort the whole
+/// vector per report); the reservoir is now a ring of the most recent
+/// `LATENCY_WINDOW_CAP` samples in the spirit of `util::RingF32` —
+/// percentiles are exact until `completed` exceeds the cap, then reflect
+/// the most recent window, while `completed`/`batches`/`padded_rows`
+/// always count the whole run.
+pub const LATENCY_WINDOW_CAP: usize = 4096;
+
+/// Serving counters + bounded latency reservoir.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
+    /// Most recent <= `LATENCY_WINDOW_CAP` latencies (ring buffer).
     latencies_ms: Vec<f64>,
+    /// Next ring slot to overwrite once the window is full.
+    next_slot: usize,
     pub completed: u64,
     pub batches: u64,
     /// Rows executed only as padding (capacity lost to partial batches).
@@ -42,8 +54,18 @@ pub struct ServeStats {
 
 impl ServeStats {
     fn record(&mut self, ms: f64) {
-        self.latencies_ms.push(ms);
+        if self.latencies_ms.len() < LATENCY_WINDOW_CAP {
+            self.latencies_ms.push(ms);
+        } else {
+            self.latencies_ms[self.next_slot] = ms;
+            self.next_slot = (self.next_slot + 1) % LATENCY_WINDOW_CAP;
+        }
         self.completed += 1;
+    }
+
+    /// Latency samples currently retained (== `completed` below the cap).
+    pub fn window_len(&self) -> usize {
+        self.latencies_ms.len()
     }
 
     fn mark(&mut self) {
@@ -63,6 +85,8 @@ impl ServeStats {
         if self.latencies_ms.is_empty() {
             return 0.0;
         }
+        // the sort is over the bounded window, so every report is
+        // O(cap log cap) with cap-bounded scratch, however long the run
         let mut v = self.latencies_ms.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let idx = (q / 100.0 * (v.len() - 1) as f64).round() as usize;
@@ -328,5 +352,50 @@ mod tests {
         assert!(s.p50_ms() <= s.p99_ms());
         assert_eq!(s.p99_ms(), 100.0);
         assert_eq!(ServeStats::default().p50_ms(), 0.0);
+    }
+
+    /// Reference percentile over ALL samples (what the unbounded
+    /// implementation computed).
+    fn exact_percentile(samples: &[f64], q: f64) -> f64 {
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = (q / 100.0 * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    #[test]
+    fn latency_stats_exact_below_the_cap() {
+        let mut s = ServeStats::default();
+        let samples: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 1000) as f64 * 0.1).collect();
+        for &ms in &samples {
+            s.record(ms);
+        }
+        assert!(samples.len() < LATENCY_WINDOW_CAP);
+        assert_eq!(s.window_len() as u64, s.completed);
+        assert_eq!(s.p50_ms(), exact_percentile(&samples, 50.0));
+        assert_eq!(s.p99_ms(), exact_percentile(&samples, 99.0));
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded_above_the_cap() {
+        let mut s = ServeStats::default();
+        let n = LATENCY_WINDOW_CAP + 1500;
+        for i in 0..n {
+            s.record(i as f64);
+        }
+        assert_eq!(s.completed, n as u64, "totals keep counting past the cap");
+        assert_eq!(s.window_len(), LATENCY_WINDOW_CAP, "reservoir stays capped");
+        // the window holds exactly the most recent LATENCY_WINDOW_CAP
+        // samples (n-cap .. n-1), so percentiles come from that range
+        let lo = (n - LATENCY_WINDOW_CAP) as f64;
+        let hi = (n - 1) as f64;
+        for p in [s.p50_ms(), s.p99_ms()] {
+            assert!((lo..=hi).contains(&p), "{p} outside window [{lo}, {hi}]");
+        }
+        let want50 = exact_percentile(
+            &(n - LATENCY_WINDOW_CAP..n).map(|i| i as f64).collect::<Vec<_>>(),
+            50.0,
+        );
+        assert_eq!(s.p50_ms(), want50, "window-local percentile is exact");
     }
 }

@@ -23,7 +23,7 @@ pub mod checkpoint;
 pub mod predict;
 pub mod scanner;
 
-pub use batcher::{MicroBatcher, Prediction, ServeStats};
+pub use batcher::{MicroBatcher, Prediction, ServeStats, LATENCY_WINDOW_CAP};
 pub use checkpoint::Checkpoint;
 pub use predict::{embed_inference, Predictor};
 pub use scanner::{ChunkScanner, ClassifierView, SCORE_LC};

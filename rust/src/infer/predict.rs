@@ -9,11 +9,11 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::eval::{evaluate_model, EvalModel, EvalReport};
+use crate::coordinator::eval::{evaluate_model_ex, EvalModel, EvalReport};
 use crate::coordinator::Precision;
 use crate::data::{Dataset, SEQ_LEN};
 use crate::metrics::TopK;
-use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::runtime::{to_vec_f32, Arg, ExecCtx, Runtime};
 use crate::store::WeightStore;
 
 use super::checkpoint::Checkpoint;
@@ -143,19 +143,41 @@ impl Predictor {
     /// running `TopK` per row, labels already mapped through the stored
     /// permutation.
     pub fn predict_batch(&self, rt: &mut Runtime, tokens: &[i32], k: usize) -> Result<Vec<TopK>> {
-        let b = rt.config().batch;
-        let emb = self.embed(rt, tokens)?;
-        ChunkScanner::new(k).scan(rt, &self.view(), &emb, b)
+        self.predict_batch_ex(&mut ExecCtx::serial(rt), tokens, k)
+    }
+
+    /// `predict_batch` with an explicit execution context: the label-chunk
+    /// scan fans out to `ex.pool` when serving with `--workers N` (the
+    /// encoder forward stays on `ex.rt`).
+    pub fn predict_batch_ex(
+        &self,
+        ex: &mut ExecCtx,
+        tokens: &[i32],
+        k: usize,
+    ) -> Result<Vec<TopK>> {
+        let b = ex.rt.config().batch;
+        let emb = self.embed(ex.rt, tokens)?;
+        ChunkScanner::new(k).scan_ex(ex, &self.view(), &emb, b)
     }
 
     /// Evaluate the stored model on a dataset's test split with the exact
     /// protocol (and code) of `coordinator::evaluate`.
     pub fn evaluate(&self, rt: &mut Runtime, ds: &Dataset, max_rows: usize) -> Result<EvalReport> {
+        self.evaluate_ex(&mut ExecCtx::serial(rt), ds, max_rows)
+    }
+
+    /// `evaluate` with an explicit execution context (chunk pool).
+    pub fn evaluate_ex(
+        &self,
+        ex: &mut ExecCtx,
+        ds: &Dataset,
+        max_rows: usize,
+    ) -> Result<EvalReport> {
         let m = EvalModel {
             enc_p: &self.enc_p,
             enc_art: self.enc_artifact(),
             cls: self.view(),
         };
-        evaluate_model(rt, &m, ds, max_rows)
+        evaluate_model_ex(ex, &m, ds, max_rows)
     }
 }

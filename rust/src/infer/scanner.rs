@@ -6,11 +6,20 @@
 //! `infer::Predictor` drive it, so eval and inference cannot drift apart
 //! (the paper's Appendix A protocol, chunked exactly like training so no
 //! full [n, L] logit matrix ever exists).
+//!
+//! Scoring chunks are data-independent, so `scan_ex` fans them out to a
+//! `runtime::RuntimePool` when one is supplied: workers execute `cls_fwd`
+//! on cloned chunk weights, and the per-chunk logits fold into the running
+//! `TopK`s **in chunk order** (`OrderedReducer`), which keeps tie-breaking
+//! — and therefore P@k — bit-identical to the serial scan.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::TopK;
-use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::runtime::{to_vec_f32, Arg, ExecCtx, OrderedReducer, Runtime, RuntimePool};
 use crate::store::WeightStore;
 
 /// Scoring chunk width: the lowered `cls_fwd_*` artifact width.
@@ -76,6 +85,36 @@ impl<'a> ClassifierView<'a> {
         }
         Ok(())
     }
+
+    fn validate_emb(&self, emb: &[f32], batch: usize) -> Result<()> {
+        if emb.len() != batch * self.d {
+            bail!(
+                "embedding batch has {} values, expected {} ({} x d={})",
+                emb.len(),
+                batch * self.d,
+                batch,
+                self.d
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Fold one chunk's [batch, SCORE_LC] logits into the running top-k.
+/// Padding rows (>= `view.labels`) never enter the fold.  Called in chunk
+/// order by both the serial and pooled scans — `TopK` tie-breaking is
+/// insertion-ordered, so fold order IS the determinism contract.
+fn fold_chunk(topks: &mut [TopK], view: &ClassifierView, chunk: usize, logits: &[f32]) {
+    for (bi, tk) in topks.iter_mut().enumerate() {
+        let base = bi * SCORE_LC;
+        for j in 0..SCORE_LC {
+            let row = chunk * SCORE_LC + j;
+            if row >= view.labels {
+                break; // padding rows
+            }
+            tk.push(logits[base + j], view.label_order[row]);
+        }
+    }
 }
 
 /// Reusable chunked top-k scanner over a fixed `k`.
@@ -90,7 +129,7 @@ impl ChunkScanner {
 
     /// Score one batch of pooled embeddings `emb` ([batch, d] row-major)
     /// against every label chunk of `view`, returning a running top-k per
-    /// row.  Padding rows (>= `view.labels`) never enter the fold.
+    /// row.  Serial path (see `scan_ex` for the pooled one).
     pub fn scan(
         &self,
         rt: &mut Runtime,
@@ -99,32 +138,87 @@ impl ChunkScanner {
         batch: usize,
     ) -> Result<Vec<TopK>> {
         view.validate()?;
-        if emb.len() != batch * view.d {
-            bail!(
-                "embedding batch has {} values, expected {} ({} x d={})",
-                emb.len(),
-                batch * view.d,
-                batch,
-                view.d
-            );
-        }
+        view.validate_emb(emb, batch)?;
         let art = format!("cls_fwd_{SCORE_LC}");
         let mut topks: Vec<TopK> = (0..batch).map(|_| TopK::new(self.k)).collect();
         for chunk in 0..view.l_pad / SCORE_LC {
             let wslice = &view.w[chunk * SCORE_LC * view.d..(chunk + 1) * SCORE_LC * view.d];
             let outs = rt.exec(&art, &[Arg::F32(wslice), Arg::F32(emb)])?;
             let logits = to_vec_f32(&outs[0])?; // [batch, SCORE_LC]
-            for (bi, tk) in topks.iter_mut().enumerate() {
-                let base = bi * SCORE_LC;
-                for j in 0..SCORE_LC {
-                    let row = chunk * SCORE_LC + j;
-                    if row >= view.labels {
-                        break; // padding rows
-                    }
-                    tk.push(logits[base + j], view.label_order[row]);
-                }
-            }
+            fold_chunk(&mut topks, view, chunk, &logits);
         }
+        Ok(topks)
+    }
+
+    /// Like `scan`, but fans the label chunks out to `ex.pool` when one is
+    /// present.  Bit-identical to `scan` by construction: the fold runs on
+    /// the calling thread in strict chunk order.
+    ///
+    /// A single-chunk view (`l_pad == SCORE_LC`) always takes the serial
+    /// path: there is nothing to overlap, and the pooled path's per-call
+    /// weight/embedding clones are pure overhead in the serving hot loop.
+    pub fn scan_ex(
+        &self,
+        ex: &mut ExecCtx,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<TopK>> {
+        match ex.pool {
+            Some(pool) if view.l_pad > SCORE_LC => self.scan_pooled(pool, view, emb, batch),
+            _ => self.scan(ex.rt, view, emb, batch),
+        }
+    }
+
+    fn scan_pooled(
+        &self,
+        pool: &RuntimePool,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<TopK>> {
+        view.validate()?;
+        view.validate_emb(emb, batch)?;
+        let n_chunks = view.l_pad / SCORE_LC;
+        let art = Arc::new(format!("cls_fwd_{SCORE_LC}"));
+        let emb_sh = Arc::new(emb.to_vec());
+        let (tx, rx) = channel::<(usize, Result<Vec<f32>>)>();
+        // windowed submission: ~2 in-flight chunk weight clones per worker
+        let submit = |chunk: usize| -> Result<()> {
+            let w = view.w[chunk * SCORE_LC * view.d..(chunk + 1) * SCORE_LC * view.d].to_vec();
+            let art = Arc::clone(&art);
+            let emb = Arc::clone(&emb_sh);
+            let tx = tx.clone();
+            pool.submit(
+                chunk % pool.workers(),
+                Box::new(move |rt| {
+                    let r = rt
+                        .exec(&art, &[Arg::F32(&w), Arg::F32(&emb)])
+                        .and_then(|outs| to_vec_f32(&outs[0]));
+                    let _ = tx.send((chunk, r));
+                }),
+            )
+        };
+        let window = (2 * pool.workers()).clamp(1, n_chunks);
+        let mut next = 0;
+        while next < window {
+            submit(next)?;
+            next += 1;
+        }
+        let mut topks: Vec<TopK> = (0..batch).map(|_| TopK::new(self.k)).collect();
+        let mut red = OrderedReducer::new();
+        for _ in 0..n_chunks {
+            let (chunk, res) = rx
+                .recv()
+                .map_err(|_| anyhow!("runtime pool workers hung up mid-scan"))?;
+            if next < n_chunks {
+                submit(next)?;
+                next += 1;
+            }
+            let logits = res?;
+            red.push(chunk, logits, |c, l| fold_chunk(&mut topks, view, c, &l));
+        }
+        debug_assert!(red.is_drained() && red.emitted() == n_chunks);
         Ok(topks)
     }
 }

@@ -16,11 +16,11 @@
 use anyhow::{anyhow, bail, Result};
 
 use elmo::cli::{flag, parse_flags, reject_unknown, require, Flags};
-use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::coordinator::{evaluate, evaluate_ex, Precision, TrainConfig, Trainer};
 use elmo::data::{self, SEQ_LEN, VOCAB};
-use elmo::infer::{Checkpoint, MicroBatcher, Predictor};
+use elmo::infer::{Checkpoint, MicroBatcher, Predictor, SCORE_LC};
 use elmo::memmodel::{self, MemParams, Method};
-use elmo::runtime::Runtime;
+use elmo::runtime::{ExecCtx, Runtime, RuntimePool};
 use elmo::util::{gib, mmss, print_table, Rng};
 
 const USAGE: &str = "\
@@ -31,11 +31,11 @@ USAGE:
                [--epochs N] [--chunk LC] [--lr-cls F] [--lr-enc F]
                [--dropout-emb F] [--dropout-cls F] [--seed N]
                [--momentum F] [--loss-scale F] [--warmup-steps N]
-               [--eval-rows N] [--artifacts DIR] [--save PATH]
+               [--eval-rows N] [--artifacts DIR] [--save PATH] [--workers N]
   elmo predict     --checkpoint PATH [--profile NAME] [--eval-rows N]
-                   [--artifacts DIR]
+                   [--artifacts DIR] [--workers N]
   elmo serve-bench --checkpoint PATH [--queries N] [--max-burst N] [--k N]
-                   [--seed N] [--artifacts DIR]
+                   [--seed N] [--artifacts DIR] [--workers N]
   elmo datasets
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
@@ -51,6 +51,10 @@ TRAIN FLAGS:
                     permutation, encoder + optimizer state) after training;
                     serve it with `elmo predict` / `elmo serve-bench`.
                     Format: docs/INFERENCE.md
+  --workers N       parallel chunk execution: fan label chunks out to N
+                    worker threads (each with its own PJRT runtime) with a
+                    deterministic in-order reduction — results are
+                    bit-identical to --workers 1 (the serial default)
 ";
 
 fn main() {
@@ -63,6 +67,17 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// `--workers N` -> an optional chunk-execution pool (N >= 2; 1 = serial).
+fn build_pool(art: &str, workers: usize) -> Result<Option<RuntimePool>> {
+    if workers == 0 {
+        bail!("--workers must be >= 1");
+    }
+    if workers == 1 {
+        return Ok(None);
+    }
+    Ok(Some(RuntimePool::new(art, workers)?))
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -87,7 +102,7 @@ fn cmd_train(f: &Flags) -> Result<()> {
         &[
             "profile", "precision", "epochs", "chunk", "lr-cls", "lr-enc", "dropout-emb",
             "dropout-cls", "seed", "momentum", "loss-scale", "warmup-steps", "eval-rows",
-            "artifacts", "save",
+            "artifacts", "save", "workers",
         ],
     )?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
@@ -112,6 +127,7 @@ fn cmd_train(f: &Flags) -> Result<()> {
     };
     let eval_rows: usize = flag(f, "eval-rows", 512usize)?;
     let save_path: String = flag(f, "save", String::new())?;
+    let workers: usize = flag(f, "workers", 1usize)?;
 
     println!(
         "# ELMO train: profile={} precision={} chunk={} epochs={}",
@@ -127,9 +143,18 @@ fn cmd_train(f: &Flags) -> Result<()> {
     let mut rt = Runtime::new(&art)?;
     let mut tr = Trainer::new(&rt, &ds, cfg.clone(), &art)?;
     println!("# chunks per step: {}", tr.chunks());
+    let pool = build_pool(&art, workers)?;
+    if let Some(p) = &pool {
+        p.prepare(&tr.policy.artifacts(cfg.chunk_size))?;
+        println!(
+            "# parallel chunk engine: {} workers (+{} MiB in-flight staging)",
+            p.workers(),
+            memmodel::pool_bytes(&tr.store, tr.batch, p.workers()) >> 20
+        );
+    }
 
     for epoch in 0..cfg.epochs {
-        let st = tr.run_epoch(&mut rt, &ds, epoch)?;
+        let st = tr.run_epoch_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), &ds, epoch)?;
         println!(
             "epoch {:>3}  loss {:.5}  steps {}  time {}  {}",
             epoch,
@@ -160,7 +185,7 @@ fn cmd_train(f: &Flags) -> Result<()> {
             ckpt.enc_p.len()
         );
     }
-    let rep = evaluate(&mut rt, &tr, &ds, eval_rows)?;
+    let rep = evaluate_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), &tr, &ds, eval_rows)?;
     println!("eval: {}", rep.summary());
     // paper-scale memory for this (dataset, method) from the memory model
     let method = match precision {
@@ -182,7 +207,7 @@ fn cmd_train(f: &Flags) -> Result<()> {
 }
 
 fn cmd_predict(f: &Flags) -> Result<()> {
-    reject_unknown(f, &["checkpoint", "profile", "eval-rows", "artifacts"])?;
+    reject_unknown(f, &["checkpoint", "profile", "eval-rows", "artifacts", "workers"])?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
     elmo::coordinator::trainer::require_artifacts(&art)?;
     let ckpt_path = require(f, "checkpoint")?;
@@ -194,6 +219,7 @@ fn cmd_predict(f: &Flags) -> Result<()> {
     let prof = data::profile(&profile_name)
         .ok_or_else(|| anyhow!("unknown profile `{profile_name}` (see `elmo datasets`)"))?;
     let eval_rows: usize = flag(f, "eval-rows", 512usize)?;
+    let workers: usize = flag(f, "workers", 1usize)?;
 
     println!(
         "# ELMO predict: checkpoint={ckpt_path} precision={} enc={} L={} step={}",
@@ -205,13 +231,20 @@ fn cmd_predict(f: &Flags) -> Result<()> {
     // the stored seed regenerates the exact split the model trained on
     let ds = data::generate(&prof, p.seed());
     let mut rt = Runtime::new(&art)?;
-    let rep = p.evaluate(&mut rt, &ds, eval_rows)?;
+    let pool = build_pool(&art, workers)?;
+    if let Some(pl) = &pool {
+        pl.prepare(&[format!("cls_fwd_{SCORE_LC}")])?;
+    }
+    let rep = p.evaluate_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), &ds, eval_rows)?;
     println!("eval: {}", rep.summary());
     Ok(())
 }
 
 fn cmd_serve_bench(f: &Flags) -> Result<()> {
-    reject_unknown(f, &["checkpoint", "queries", "max-burst", "k", "seed", "artifacts"])?;
+    reject_unknown(
+        f,
+        &["checkpoint", "queries", "max-burst", "k", "seed", "artifacts", "workers"],
+    )?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
     elmo::coordinator::trainer::require_artifacts(&art)?;
     let ckpt_path = require(f, "checkpoint")?;
@@ -219,7 +252,12 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
     let n_queries: usize = flag(f, "queries", 512usize)?;
     let k: usize = flag(f, "k", 5usize)?;
     let seed: u64 = flag(f, "seed", 0u64)?;
+    let workers: usize = flag(f, "workers", 1usize)?;
     let mut rt = Runtime::new(&art)?;
+    let pool = build_pool(&art, workers)?;
+    if let Some(pl) = &pool {
+        pl.prepare(&[format!("cls_fwd_{SCORE_LC}")])?;
+    }
     let width = rt.config().batch;
     let max_burst: usize = flag(f, "max-burst", 2 * width)?;
     if n_queries == 0 || max_burst == 0 {
@@ -243,7 +281,8 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
     let rows_available = query_rows.len() / SEQ_LEN;
 
     println!(
-        "# ELMO serve-bench: {} queries, batch width {width}, bursts of 1..={max_burst}, top-{k}",
+        "# ELMO serve-bench: {} queries, batch width {width}, bursts of 1..={max_burst}, \
+         top-{k}, {workers} worker(s)",
         n_queries
     );
     let mut mb = MicroBatcher::new(width);
@@ -260,9 +299,15 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
         }
         mb.submit(&toks)?;
         submitted += burst;
-        mb.run_ready(|t| p.predict_batch(&mut rt, t, k), &mut out)?;
+        mb.run_ready(
+            |t| p.predict_batch_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), t, k),
+            &mut out,
+        )?;
     }
-    mb.flush(|t| p.predict_batch(&mut rt, t, k), &mut out)?;
+    mb.flush(
+        |t| p.predict_batch_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), t, k),
+        &mut out,
+    )?;
 
     let s = &mb.stats;
     print_table(

@@ -34,6 +34,42 @@ pub fn host_bytes(store: &WeightStore, enc_floats: usize) -> HashMap<&'static st
     m
 }
 
+/// In-flight chunk jobs per worker under the pooled chunk loop's windowed
+/// submission (`policy::run_step_pooled` keeps at most `2 * workers`
+/// chunks outstanding).
+pub const POOL_WINDOW_PER_WORKER: usize = 2;
+
+/// Extra host bytes the parallel chunk engine (`runtime::RuntimePool`)
+/// keeps resident at `workers` > 1: each in-flight chunk job carries
+/// cloned inputs (chunk weights, optional momentum/Kahan views, the dense
+/// Y block) and produces staged outputs (updated chunk weights + the
+/// [batch, d] xgrad contribution), plus one owned embedding copy shared
+/// per step.  Each worker additionally owns its own PJRT client and
+/// compiled-executable cache — the same artifacts compiled once *per
+/// worker* (`Runtime::cached_executables` counts them); those allocations
+/// live inside PJRT and are not charged in bytes here.
+///
+/// Returns 0 for `workers <= 1` (the serial path clones nothing).
+pub fn pool_bytes(store: &WeightStore, batch: usize, workers: usize) -> usize {
+    if workers <= 1 {
+        return 0;
+    }
+    let lc_d = store.chunk_size * store.d;
+    let mut per_job = 2 * lc_d; // chunk weights in + staged weights out
+    if store.has_mom() {
+        per_job += 2 * lc_d;
+    }
+    if store.has_kahan() {
+        // only head chunks carry a Kahan view (submit_chunk clones it for
+        // `chunk < head_chunks`); charge the average over the chunk space
+        per_job += 2 * lc_d * store.head_chunks / store.chunks().max(1);
+    }
+    per_job += batch * store.chunk_size; // dense Y block
+    per_job += batch * store.d; // per-chunk xgrad contribution
+    let shared = batch * store.d; // one owned embedding copy per step
+    (workers * POOL_WINDOW_PER_WORKER * per_job + shared) * 4
+}
+
 /// Precision/method variants the model knows how to schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -497,6 +533,26 @@ mod tests {
         assert_eq!(hb["cls_mom"], 100 * 8 * 4);
         assert_eq!(hb["kahan_c"], 0, "no kahan buffer without head chunks");
         assert_eq!(hb["encoder"], 4000);
+    }
+
+    #[test]
+    fn pool_bytes_charges_only_parallel_runs() {
+        use crate::store::BufferSpec;
+        let order: Vec<u32> = (0..128u32).collect();
+        let plain = WeightStore::new(128, 8, 32, order.clone(), 0, BufferSpec::default()).unwrap();
+        assert_eq!(pool_bytes(&plain, 16, 0), 0);
+        assert_eq!(pool_bytes(&plain, 16, 1), 0, "serial path clones nothing");
+        let two = pool_bytes(&plain, 16, 2);
+        let four = pool_bytes(&plain, 16, 4);
+        assert!(two > 0);
+        assert!(four > two, "staging grows with the worker count");
+        // exact arithmetic for the plain store: per job 2*lc*d + b*lc + b*d
+        let per_job = 2 * 32 * 8 + 16 * 32 + 16 * 8;
+        assert_eq!(two, (2 * POOL_WINDOW_PER_WORKER * per_job + 16 * 8) * 4);
+        // optional buffers are charged when the policy owns them
+        let spec = BufferSpec { momentum: true, ..Default::default() };
+        let renee = WeightStore::new(128, 8, 32, order, 0, spec).unwrap();
+        assert!(pool_bytes(&renee, 16, 2) > two, "momentum clones cost extra");
     }
 
     #[test]

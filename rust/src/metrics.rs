@@ -20,6 +20,14 @@ impl TopK {
     }
 
     pub fn push(&mut self, score: f32, label: u32) {
+        // Non-finite scores never enter the fold.  A NaN would satisfy no
+        // `s >= score` comparison and land at rank 0, silently poisoning
+        // P@k and serving results; ±inf only ever arise from upstream
+        // numeric failure (finite weights x finite embeddings), so they
+        // are dropped rather than ranked.
+        if !score.is_finite() {
+            return;
+        }
         if self.items.len() == self.k
             && score <= self.items.last().map(|x| x.0).unwrap_or(f32::MIN)
         {
@@ -199,6 +207,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn topk_skips_non_finite_scores() {
+        // streams salted with NaN / ±inf must rank exactly like the same
+        // stream with the non-finite entries filtered out
+        prop_check("topk_non_finite", 300, |rng| {
+            let n = rng.below(200);
+            let k = 1 + rng.below(8);
+            let stream: Vec<(f32, u32)> = (0..n)
+                .map(|i| {
+                    let s = match rng.below(10) {
+                        0 => f32::NAN,
+                        1 => f32::INFINITY,
+                        2 => f32::NEG_INFINITY,
+                        _ => rng.normal_f32(0.0, 1.0),
+                    };
+                    (s, i as u32)
+                })
+                .collect();
+            let mut tk = TopK::new(k);
+            for &(s, l) in &stream {
+                tk.push(s, l);
+            }
+            let finite: Vec<(f32, u32)> =
+                stream.iter().copied().filter(|(s, _)| s.is_finite()).collect();
+            let want = sort_and_truncate(&finite, k);
+            if tk.items() != want.as_slice() {
+                return Err(format!("n={n} k={k}: {:?} != {want:?}", tk.items()));
+            }
+            if tk.items().iter().any(|(s, _)| !s.is_finite()) {
+                return Err("non-finite score survived".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_all_non_finite_stream_is_empty() {
+        let mut tk = TopK::new(3);
+        for (i, s) in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::NAN]
+            .into_iter()
+            .enumerate()
+        {
+            tk.push(s, i as u32);
+        }
+        assert!(tk.items().is_empty(), "got {:?}", tk.items());
+        assert!(tk.labels().is_empty());
+        // and a later finite score still ranks normally
+        tk.push(0.5, 9);
+        assert_eq!(tk.items(), &[(0.5, 9)]);
     }
 
     #[test]

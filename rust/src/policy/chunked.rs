@@ -8,28 +8,26 @@
 use anyhow::Result;
 
 use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
-use crate::store::{BufferSpec, StagedChunk, WeightStore};
+use crate::store::{BufferSpec, StagedChunk};
 
-use super::{ChunkExec, Precision, StepCtx, UpdatePolicy};
+use super::{ChunkExec, ChunkInputs, Precision, StepCtx, UpdatePolicy};
 
 /// Shared arg packing/unpacking for the plain fused-update kernel.
 pub(crate) fn exec_plain_chunk(
     rt: &mut Runtime,
-    store: &WeightStore,
-    chunk: usize,
-    y: &[f32],
+    inp: &ChunkInputs,
     ctx: &StepCtx,
     artifact: &str,
 ) -> Result<ChunkExec> {
     let lr = [ctx.lr_cls];
-    let cseed = [ctx.seed ^ ((chunk as i32) << 8)];
+    let cseed = [ctx.seed ^ ((inp.chunk as i32) << 8)];
     let drop = [ctx.dropout_cls];
     let outs = rt.exec(
         artifact,
         &[
-            Arg::F32(store.chunk_w(chunk)),
+            Arg::F32(inp.w),
             Arg::F32(ctx.emb),
-            Arg::F32(y),
+            Arg::F32(inp.y),
             Arg::F32(&lr),
             Arg::I32(&cseed),
             Arg::F32(&drop),
@@ -66,13 +64,11 @@ macro_rules! plain_policy {
             fn exec_chunk(
                 &self,
                 rt: &mut Runtime,
-                store: &WeightStore,
-                chunk: usize,
-                y: &[f32],
+                inp: &ChunkInputs,
                 ctx: &StepCtx,
                 _loss_scale: f32,
             ) -> Result<ChunkExec> {
-                exec_plain_chunk(rt, store, chunk, y, ctx, &ctx.arts[0])
+                exec_plain_chunk(rt, inp, ctx, &ctx.arts[0])
             }
         }
     };

@@ -3,17 +3,17 @@
 //! and updated through the BF16+Kahan kernel; the tail keeps plain FP8.
 //!
 //! The chunk routing that used to be a trainer branch is policy behavior
-//! here: `exec_chunk` picks the Kahan kernel for `chunk <
-//! store.head_chunks` and the plain FP8 kernel otherwise.
+//! here: `exec_chunk` picks the Kahan kernel for `chunk < head_chunks`
+//! (carried in `ChunkInputs`) and the plain FP8 kernel otherwise.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
 use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
-use crate::store::{BufferSpec, StagedChunk, WeightStore};
+use crate::store::{BufferSpec, StagedChunk};
 
 use super::chunked::exec_plain_chunk;
-use super::{ChunkExec, Precision, StepCtx, UpdatePolicy};
+use super::{ChunkExec, ChunkInputs, Precision, StepCtx, UpdatePolicy};
 
 #[derive(Clone, Copy, Debug)]
 pub struct Fp8HeadKahanPolicy {
@@ -53,26 +53,27 @@ impl UpdatePolicy for Fp8HeadKahanPolicy {
     fn exec_chunk(
         &self,
         rt: &mut Runtime,
-        store: &WeightStore,
-        chunk: usize,
-        y: &[f32],
+        inp: &ChunkInputs,
         ctx: &StepCtx,
         _loss_scale: f32,
     ) -> Result<ChunkExec> {
         // ctx.arts = our artifacts(): [fp8 chunk kernel, kahan kernel]
-        if chunk >= store.head_chunks {
-            return exec_plain_chunk(rt, store, chunk, y, ctx, &ctx.arts[0]);
+        if inp.chunk >= inp.head_chunks {
+            return exec_plain_chunk(rt, inp, ctx, &ctx.arts[0]);
         }
+        let kahan = inp
+            .kahan
+            .ok_or_else(|| anyhow!("head chunk {} is missing its kahan view", inp.chunk))?;
         let lr = [ctx.lr_cls];
-        let cseed = [ctx.seed ^ ((chunk as i32) << 8)];
+        let cseed = [ctx.seed ^ ((inp.chunk as i32) << 8)];
         let drop = [ctx.dropout_cls];
         let outs = rt.exec(
             &ctx.arts[1],
             &[
-                Arg::F32(store.chunk_w(chunk)),
-                Arg::F32(store.chunk_kahan(chunk)),
+                Arg::F32(inp.w),
+                Arg::F32(kahan),
                 Arg::F32(ctx.emb),
-                Arg::F32(y),
+                Arg::F32(inp.y),
                 Arg::F32(&lr),
                 Arg::I32(&cseed),
                 Arg::F32(&drop),

@@ -21,6 +21,13 @@
 //! updates a gathered shortlist in a single kernel call), so it overrides
 //! `run_step` wholesale — policy behavior, not a trainer branch.
 //!
+//! Label chunks are data-independent, so the chunk loop also runs
+//! *parallel*: `run_step_pooled` fans chunks out to a
+//! `runtime::RuntimePool` and folds the results through the shared
+//! `StepAccum` in strict chunk order (`runtime::OrderedReducer`), making
+//! `--workers N` bit-identical to the serial path.  Both loops share one
+//! fold (`StepAccum::fold`) so they cannot drift numerically.
+//!
 //! `docs/ARCHITECTURE.md` describes the coordinator → policy → store →
 //! runtime layering and walks through adding a new policy.
 
@@ -29,10 +36,13 @@ pub mod head_kahan;
 pub mod renee;
 pub mod sampled;
 
-use anyhow::{bail, Result};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::data::Dataset;
-use crate::runtime::Runtime;
+use crate::runtime::{OrderedReducer, Runtime, RuntimePool};
 pub use crate::store::BufferSpec;
 use crate::store::{StagedChunk, WeightStore};
 
@@ -118,6 +128,39 @@ pub struct StepCtx<'a> {
     pub step_count: u64,
 }
 
+/// Borrowed per-chunk kernel inputs.  On the serial path these view the
+/// live `WeightStore`; on the pooled path they view the owned buffers
+/// shipped to a worker thread — `exec_chunk` cannot tell the difference,
+/// which is what keeps the two paths bit-identical by construction.
+pub struct ChunkInputs<'a> {
+    pub chunk: usize,
+    /// This chunk's [Lc, d] weights.
+    pub w: &'a [f32],
+    /// Renee momentum chunk, when the policy owns one.
+    pub mom: Option<&'a [f32]>,
+    /// Kahan compensation chunk (head chunks of head-Kahan only).
+    pub kahan: Option<&'a [f32]>,
+    /// Dense [batch, Lc] label block.
+    pub y: &'a [f32],
+    /// Leading chunks routed through the Kahan kernel.
+    pub head_chunks: usize,
+}
+
+impl<'a> ChunkInputs<'a> {
+    /// View one chunk of a live store (the serial path).
+    pub fn of_store(store: &'a WeightStore, chunk: usize, y: &'a [f32]) -> Self {
+        ChunkInputs {
+            chunk,
+            w: store.chunk_w(chunk),
+            mom: store.has_mom().then(|| store.chunk_mom(chunk)),
+            kahan: (store.has_kahan() && chunk < store.head_chunks)
+                .then(|| store.chunk_kahan(chunk)),
+            y,
+            head_chunks: store.head_chunks,
+        }
+    }
+}
+
 /// What one kernel execution over a chunk produced.
 pub struct ChunkExec {
     /// Updated weights (and optional state) for this chunk, not yet
@@ -151,7 +194,11 @@ pub struct StepOutcome {
 }
 
 /// A numeric update policy over the shared `WeightStore`.
-pub trait UpdatePolicy {
+///
+/// `Send + Sync` because chunk-shaped policies are shared (behind an
+/// `Arc`) with `RuntimePool` workers; every impl is a small plain-data
+/// struct, so the bound costs nothing.
+pub trait UpdatePolicy: Send + Sync {
     fn precision(&self) -> Precision;
 
     fn label(&self) -> &'static str {
@@ -186,14 +233,19 @@ pub trait UpdatePolicy {
         true
     }
 
-    /// Execute the policy's kernel for one chunk: pack the store views and
+    /// Whether `run_step` is the shared chunk loop (eligible for pooled
+    /// execution).  Sampled returns false: its kernel runs once over a
+    /// gathered shortlist, so there is nothing to fan out.
+    fn chunk_shaped(&self) -> bool {
+        true
+    }
+
+    /// Execute the policy's kernel for one chunk: pack the chunk views and
     /// step context into artifact arguments, unpack the outputs.
     fn exec_chunk(
         &self,
         rt: &mut Runtime,
-        store: &WeightStore,
-        chunk: usize,
-        y: &[f32],
+        inp: &ChunkInputs,
         ctx: &StepCtx,
         loss_scale: f32,
     ) -> Result<ChunkExec>;
@@ -217,6 +269,10 @@ pub trait UpdatePolicy {
     /// chunk-shaped policy shares this body verbatim; only `exec_chunk`
     /// and `finalize` differ.  (Sampled overrides the whole method: its
     /// kernel runs once over a gathered shortlist, not per label chunk.)
+    ///
+    /// The fold (commit / xgrad / loss / gmax accumulation) lives in
+    /// `StepAccum`, shared with `run_step_pooled` so the serial and
+    /// parallel paths cannot drift numerically.
     fn run_step(
         &self,
         rt: &mut Runtime,
@@ -226,38 +282,217 @@ pub trait UpdatePolicy {
         ctx: &StepCtx,
         loss_scale: &mut f32,
     ) -> Result<StepOutcome> {
-        let mut xgrad = vec![0.0f32; ctx.batch * store.d];
-        let mut loss_sum = 0.0f64;
-        let mut gmax = 0.0f32;
-        let mut overflow = false;
-        let commit = self.commit_per_chunk();
         let n_chunks = store.chunks();
-        let mut staged_all: Vec<StagedChunk> = Vec::new();
+        let mut acc = StepAccum::new(ctx.batch, store.d, self.commit_per_chunk(), n_chunks);
         for chunk in 0..n_chunks {
             let y = store.y_chunk(&ds.train.labels, rows, chunk);
-            let ex = self.exec_chunk(rt, store, chunk, &y, ctx, *loss_scale)?;
-            if commit {
-                store.commit_chunk(chunk, &ex.staged);
-            } else {
-                staged_all.push(ex.staged);
-            }
-            for (a, b) in xgrad.iter_mut().zip(ex.xgrad.iter()) {
-                *a += b;
-            }
-            loss_sum += ex.loss as f64;
-            gmax = gmax.max(ex.gmax);
-            overflow = overflow || ex.overflow;
+            let inp = ChunkInputs::of_store(store, chunk, &y);
+            let ex = self.exec_chunk(rt, &inp, ctx, *loss_scale)?;
+            acc.fold(store, chunk, ex);
         }
+        acc.finish(self, store, ctx, loss_scale)
+    }
+}
+
+/// The step-level reduction both chunk loops share: commit (or stage)
+/// each chunk's update, accumulate the input gradient, sum the loss, fold
+/// gmax/overflow — **in strict chunk order** — then close the step with
+/// the padding-corrected mean loss and the policy's `finalize`.
+pub struct StepAccum {
+    xgrad: Vec<f32>,
+    loss_sum: f64,
+    gmax: f32,
+    overflow: bool,
+    commit: bool,
+    staged: Vec<StagedChunk>,
+}
+
+impl StepAccum {
+    pub fn new(batch: usize, d: usize, commit: bool, n_chunks: usize) -> Self {
+        StepAccum {
+            xgrad: vec![0.0f32; batch * d],
+            loss_sum: 0.0,
+            gmax: 0.0,
+            overflow: false,
+            commit,
+            staged: if commit { Vec::new() } else { Vec::with_capacity(n_chunks) },
+        }
+    }
+
+    /// Fold one chunk's result.  MUST be called in chunk order 0, 1, ...:
+    /// f32 accumulation order, commit order, and the staged vector's
+    /// index-equals-chunk invariant (Renee's `finalize`) all depend on it.
+    pub fn fold(&mut self, store: &mut WeightStore, chunk: usize, mut ex: ChunkExec) {
+        store.zero_staged_padding(chunk, &mut ex.staged);
+        if self.commit {
+            store.commit_chunk(chunk, &ex.staged);
+        } else {
+            debug_assert_eq!(self.staged.len(), chunk, "staged chunks must arrive in order");
+            self.staged.push(ex.staged);
+        }
+        for (a, b) in self.xgrad.iter_mut().zip(ex.xgrad.iter()) {
+            *a += b;
+        }
+        self.loss_sum += ex.loss as f64;
+        self.gmax = self.gmax.max(ex.gmax);
+        self.overflow = self.overflow || ex.overflow;
+    }
+
+    /// Close the step: padding-corrected mean loss, then the policy's
+    /// `finalize` (overflow decision, staged commits, xgrad transform).
+    pub fn finish<P: UpdatePolicy + ?Sized>(
+        self,
+        policy: &P,
+        store: &mut WeightStore,
+        ctx: &StepCtx,
+        loss_scale: &mut f32,
+    ) -> Result<StepOutcome> {
         let mut outcome = StepOutcome {
-            xgrad,
-            loss: loss_sum / (ctx.batch * store.labels) as f64,
-            gmax,
-            overflow,
+            xgrad: self.xgrad,
+            loss: padded_mean_loss(self.loss_sum, ctx.batch, store.labels, store.pad_rows()),
+            gmax: self.gmax,
+            overflow: self.overflow,
             truncated_positives: 0,
         };
-        self.finalize(store, staged_all, &mut outcome, ctx, loss_scale)?;
+        policy.finalize(store, self.staged, &mut outcome, ctx, loss_scale)?;
         Ok(outcome)
     }
+}
+
+/// Mean BCE over the *real* labels.  The per-chunk kernels sum loss over
+/// all `l_pad` rows, but every padded row (weights pinned at zero by
+/// `WeightStore::zero_staged_padding`) contributes exactly softplus(0) =
+/// ln 2 per batch element; subtract that constant and normalize by the
+/// real label count so the reported loss is invariant to chunk-size
+/// padding.  The subtraction uses the f32 ln 2 the kernel itself sums;
+/// the kernel's f32 reduction order makes the cancellation exact only to
+/// ~1e-7 relative, which is fine for a reported diagnostic — the training
+/// signal (xgrad) gets exact zeros from the pinned pad rows.  With no
+/// padding this reduces bit-exactly to the historical
+/// `loss_sum / (batch * labels)`.
+pub fn padded_mean_loss(loss_sum: f64, batch: usize, labels: usize, pad_rows: usize) -> f64 {
+    let pad = (pad_rows * batch) as f64 * std::f32::consts::LN_2 as f64;
+    (loss_sum - pad) / (batch * labels) as f64
+}
+
+/// Per-step state shared with every pooled chunk job (one owned copy of
+/// the embeddings and resolved artifact names, plus the scalar knobs).
+struct PooledStep {
+    emb: Vec<f32>,
+    arts: Vec<String>,
+    lr_cls: f32,
+    dropout_cls: f32,
+    seed: i32,
+    batch: usize,
+    step_count: u64,
+    loss_scale: f32,
+    head_chunks: usize,
+}
+
+type ChunkResult = (usize, Result<ChunkExec>);
+
+/// Clone chunk `chunk`'s inputs out of the store and queue its kernel on
+/// the pool (stable `chunk % workers` assignment).  The job reports back
+/// on `tx`; send failures are ignored because the coordinator may have
+/// already bailed on an earlier chunk's error.
+#[allow(clippy::too_many_arguments)] // internal fan-out helper, not API
+fn submit_chunk(
+    pool: &RuntimePool,
+    policy: &Arc<dyn UpdatePolicy>,
+    store: &WeightStore,
+    ds: &Dataset,
+    rows: &[u32],
+    sh: &Arc<PooledStep>,
+    chunk: usize,
+    tx: &Sender<ChunkResult>,
+) -> Result<()> {
+    let w = store.chunk_w(chunk).to_vec();
+    let mom = store.has_mom().then(|| store.chunk_mom(chunk).to_vec());
+    let kahan = (store.has_kahan() && chunk < store.head_chunks)
+        .then(|| store.chunk_kahan(chunk).to_vec());
+    let y = store.y_chunk(&ds.train.labels, rows, chunk);
+    let policy = Arc::clone(policy);
+    let sh = Arc::clone(sh);
+    let tx = tx.clone();
+    pool.submit(
+        chunk % pool.workers(),
+        Box::new(move |rt| {
+            let ctx = StepCtx {
+                emb: sh.emb.as_slice(),
+                arts: sh.arts.as_slice(),
+                lr_cls: sh.lr_cls,
+                dropout_cls: sh.dropout_cls,
+                seed: sh.seed,
+                batch: sh.batch,
+                step_count: sh.step_count,
+            };
+            let inp = ChunkInputs {
+                chunk,
+                w: &w,
+                mom: mom.as_deref(),
+                kahan: kahan.as_deref(),
+                y: &y,
+                head_chunks: sh.head_chunks,
+            };
+            let _ = tx.send((chunk, policy.exec_chunk(rt, &inp, &ctx, sh.loss_scale)));
+        }),
+    )
+}
+
+/// One full classifier pass with label chunks fanned out to a
+/// `RuntimePool` — the parallel twin of `UpdatePolicy::run_step`.
+///
+/// Chunks execute on whichever worker frees up, but results fold through
+/// the same `StepAccum` in strict chunk order via `OrderedReducer`, so
+/// xgrad accumulation, loss sums, gmax folds, store commits, and Renee's
+/// staged-commit indexing are bit-identical to the serial loop.
+/// Submission is windowed (~2 jobs in flight per worker) so at most a few
+/// chunks' cloned inputs and staged outputs are resident at once —
+/// `memmodel::pool_bytes` charges this staging.
+pub fn run_step_pooled(
+    policy: &Arc<dyn UpdatePolicy>,
+    pool: &RuntimePool,
+    store: &mut WeightStore,
+    ds: &Dataset,
+    rows: &[u32],
+    ctx: &StepCtx,
+    loss_scale: &mut f32,
+) -> Result<StepOutcome> {
+    debug_assert!(policy.chunk_shaped(), "pooled execution is for chunk-shaped policies");
+    let n_chunks = store.chunks();
+    let sh = Arc::new(PooledStep {
+        emb: ctx.emb.to_vec(),
+        arts: ctx.arts.to_vec(),
+        lr_cls: ctx.lr_cls,
+        dropout_cls: ctx.dropout_cls,
+        seed: ctx.seed,
+        batch: ctx.batch,
+        step_count: ctx.step_count,
+        loss_scale: *loss_scale,
+        head_chunks: store.head_chunks,
+    });
+    let (tx, rx) = channel::<ChunkResult>();
+    let window = (2 * pool.workers()).clamp(1, n_chunks);
+    let mut next = 0;
+    while next < window {
+        submit_chunk(pool, policy, store, ds, rows, &sh, next, &tx)?;
+        next += 1;
+    }
+    let mut acc = StepAccum::new(ctx.batch, store.d, policy.commit_per_chunk(), n_chunks);
+    let mut red = OrderedReducer::new();
+    for _ in 0..n_chunks {
+        let (chunk, res) = rx
+            .recv()
+            .map_err(|_| anyhow!("runtime pool workers hung up mid-step"))?;
+        if next < n_chunks {
+            submit_chunk(pool, policy, store, ds, rows, &sh, next, &tx)?;
+            next += 1;
+        }
+        let ex = res?;
+        red.push(chunk, ex, |c, ex| acc.fold(store, c, ex));
+    }
+    debug_assert!(red.is_drained() && red.emitted() == n_chunks);
+    acc.finish(policy.as_ref(), store, ctx, loss_scale)
 }
 
 #[cfg(test)]
@@ -343,6 +578,38 @@ mod tests {
         assert!(Fp8Policy.commit_per_chunk());
         assert!(Fp8HeadKahanPolicy { head_frac: 0.2 }.commit_per_chunk());
         assert!(!ReneePolicy { momentum: 0.9 }.commit_per_chunk());
+    }
+
+    #[test]
+    fn only_sampled_is_not_chunk_shaped() {
+        assert!(Fp32Policy.chunk_shaped());
+        assert!(Bf16Policy.chunk_shaped());
+        assert!(Fp8Policy.chunk_shaped());
+        assert!(ReneePolicy { momentum: 0.0 }.chunk_shaped());
+        assert!(Fp8HeadKahanPolicy { head_frac: 0.2 }.chunk_shaped());
+        assert!(!SampledPolicy { shortlist: 256, neg_per_step: 48 }.chunk_shaped());
+    }
+
+    #[test]
+    fn padded_mean_loss_reduces_to_plain_mean_without_padding() {
+        let loss_sum = 123.456_f64;
+        let plain = loss_sum / (32.0 * 1000.0);
+        assert_eq!(
+            padded_mean_loss(loss_sum, 32, 1000, 0).to_bits(),
+            plain.to_bits(),
+            "no padding must be bit-identical to the historical normalization"
+        );
+    }
+
+    #[test]
+    fn padded_mean_loss_cancels_the_pad_contribution() {
+        // synthesize the kernel's sum: real loss + pad_rows * batch * ln 2
+        let (batch, labels, pad_rows) = (16usize, 90usize, 6usize);
+        let real = 37.25_f64;
+        let summed = real + (pad_rows * batch) as f64 * std::f32::consts::LN_2 as f64;
+        let got = padded_mean_loss(summed, batch, labels, pad_rows);
+        let want = real / (batch * labels) as f64;
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
     }
 
     #[test]

@@ -13,13 +13,13 @@
 //! * the loss scale halves on overflow (floor 1.0) and doubles every 200
 //!   clean steps (cap 65536) — `update_loss_scale`, unit-tested below.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::numerics::{quantize_rne, FP16};
 use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
 use crate::store::{BufferSpec, StagedChunk, WeightStore};
 
-use super::{ChunkExec, Precision, StepCtx, StepOutcome, UpdatePolicy};
+use super::{ChunkExec, ChunkInputs, Precision, StepCtx, StepOutcome, UpdatePolicy};
 
 /// The AMP loss-scale manager rule: halve on overflow (never below 1.0),
 /// double after every 200th clean step (never above 65536).
@@ -60,19 +60,20 @@ impl UpdatePolicy for ReneePolicy {
     fn exec_chunk(
         &self,
         rt: &mut Runtime,
-        store: &WeightStore,
-        chunk: usize,
-        y: &[f32],
+        inp: &ChunkInputs,
         ctx: &StepCtx,
         loss_scale: f32,
     ) -> Result<ChunkExec> {
+        let mom = inp
+            .mom
+            .ok_or_else(|| anyhow!("renee chunk {} is missing its momentum view", inp.chunk))?;
         let outs = rt.exec(
             &ctx.arts[0],
             &[
-                Arg::F32(store.chunk_w(chunk)),
-                Arg::F32(store.chunk_mom(chunk)),
+                Arg::F32(inp.w),
+                Arg::F32(mom),
                 Arg::F32(ctx.emb),
-                Arg::F32(y),
+                Arg::F32(inp.y),
                 Arg::F32(&[ctx.lr_cls]),
                 Arg::F32(&[self.momentum]),
                 Arg::F32(&[loss_scale]),

@@ -20,7 +20,7 @@ use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
 use crate::store::{BufferSpec, WeightStore};
 use crate::util::Rng;
 
-use super::{ChunkExec, Precision, StepCtx, StepOutcome, UpdatePolicy};
+use super::{ChunkExec, ChunkInputs, Precision, StepCtx, StepOutcome, UpdatePolicy};
 
 /// Build the step's shortlist: the batch's distinct positives (in
 /// first-seen order, truncated to `lc - 1`) followed by up to
@@ -99,12 +99,16 @@ impl UpdatePolicy for SampledPolicy {
         vec![self.artifact(self.shortlist)]
     }
 
+    // not chunk-shaped: `run_step` below is a single shortlist kernel, so
+    // there is nothing for the parallel chunk engine to fan out
+    fn chunk_shaped(&self) -> bool {
+        false
+    }
+
     fn exec_chunk(
         &self,
         _rt: &mut Runtime,
-        _store: &WeightStore,
-        _chunk: usize,
-        _y: &[f32],
+        _inp: &ChunkInputs,
         _ctx: &StepCtx,
         _loss_scale: f32,
     ) -> Result<ChunkExec> {

@@ -5,6 +5,7 @@
 //! `return_tuple=True`.
 
 pub mod manifest;
+pub mod pool;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -12,6 +13,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 pub use manifest::{ArtifactSpec, Dtype, Manifest, ModelConfig, TensorSpec};
+pub use pool::{OrderedReducer, RuntimePool};
 
 /// Owns the PJRT CPU client, the artifact registry, and an executable
 /// cache (compile once per artifact, reuse across the whole run).
@@ -79,7 +81,16 @@ impl Runtime {
     /// training runs — the buffer path is leak-free and skips one copy.
     pub fn exec(&mut self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
         self.prepare(name)?;
-        let spec = self.manifest.artifact(name).unwrap().clone();
+        // Borrow the spec — this is the hottest path in the crate, and the
+        // old `.clone()` here copied the spec's name/file strings and both
+        // TensorSpec vectors on every kernel invocation.  The borrow of
+        // `self.manifest` coexists with the uses of `self.client` /
+        // `self.exes` / `self.exec_counts` below because they are disjoint
+        // fields.
+        let spec = self
+            .manifest
+            .artifact(name)
+            .expect("prepare() verified the artifact exists");
         if args.len() != spec.inputs.len() {
             return Err(anyhow!(
                 "`{name}` expects {} inputs, got {}",
@@ -154,13 +165,52 @@ impl Runtime {
                 spec.outputs.len()
             ));
         }
-        *self.exec_counts.entry(name.to_string()).or_default() += 1;
+        // `get_mut` first so the steady state allocates no counter key
+        if let Some(c) = self.exec_counts.get_mut(name) {
+            *c += 1;
+        } else {
+            self.exec_counts.insert(name.to_string(), 1);
+        }
         Ok(outs)
     }
 
     /// True if the manifest contains this artifact.
     pub fn has(&self, name: &str) -> bool {
         self.manifest.artifact(name).is_some()
+    }
+
+    /// Compiled executables currently cached (per-worker accounting for
+    /// the parallel chunk engine: each pool worker holds its own cache).
+    pub fn cached_executables(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+/// A runtime execution context: the caller's own `Runtime` plus an
+/// optional `RuntimePool` for fanning data-independent label chunks out to
+/// worker threads.  `pool: None` (or `--workers 1`) is the serial path —
+/// exactly the pre-pool behavior.  Encoder kernels and non-chunk-shaped
+/// work always run on `rt`; only the chunk loops (`policy::run_step`,
+/// `infer::ChunkScanner`) consult `pool`.
+pub struct ExecCtx<'a> {
+    pub rt: &'a mut Runtime,
+    pub pool: Option<&'a RuntimePool>,
+}
+
+impl<'a> ExecCtx<'a> {
+    /// Serial execution on the caller's runtime (no pool).
+    pub fn serial(rt: &'a mut Runtime) -> Self {
+        ExecCtx { rt, pool: None }
+    }
+
+    /// Execution with an optional pool (`None` == `serial`).
+    pub fn of(rt: &'a mut Runtime, pool: Option<&'a RuntimePool>) -> Self {
+        ExecCtx { rt, pool }
+    }
+
+    /// Effective chunk-loop parallelism.
+    pub fn workers(&self) -> usize {
+        self.pool.map_or(1, |p| p.workers())
     }
 }
 

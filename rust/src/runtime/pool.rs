@@ -1,0 +1,261 @@
+//! The parallel chunk execution engine: a pool of worker threads, each
+//! owning its **own** `Runtime` (PJRT client + executable cache) over the
+//! same artifacts directory, plus the deterministic ordered reduction that
+//! makes parallel execution bit-identical to the serial chunk loop.
+//!
+//! Label chunks are data-independent — the only cross-chunk state is the
+//! *ordered* fold of xgrad / loss / gmax and the store commit (see
+//! `store.rs`).  The design exploits that:
+//!
+//! * `RuntimePool` fans jobs out to N persistent workers.  Each worker
+//!   constructs its `Runtime` inside its own thread and the client never
+//!   crosses a thread boundary, sidestepping any `Send`/`Sync` question on
+//!   the underlying xla handles.  Executable caches persist across steps,
+//!   so each worker compiles an artifact once per run, exactly like the
+//!   serial path.
+//! * Jobs are `'static` closures over *owned* chunk inputs; results come
+//!   back on a caller-owned channel in completion order.
+//! * `OrderedReducer` re-serializes completion order into strict chunk
+//!   order, so the coordinating thread folds results 0, 1, 2, ... no
+//!   matter which worker finished first — f32 accumulation order, store
+//!   commit order, and Renee's staged-chunk indexing are all preserved
+//!   bit-for-bit.  `rust/tests/parallel_parity.rs` pins this.
+//!
+//! Consumers: `policy::run_step_pooled` (training), `ChunkScanner::scan_ex`
+//! (eval + serving), both behind the `--workers N` CLI flag (default 1 =
+//! the serial path, no pool constructed).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::Runtime;
+
+/// A unit of work executed on a worker's own `Runtime`.  Jobs report
+/// results through whatever channel they captured at submission.
+pub type Job = Box<dyn FnOnce(&mut Runtime) + Send + 'static>;
+
+struct WorkerHandle {
+    /// `None` once the pool starts shutting down.
+    tx: Option<Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// N worker threads, each with a private `Runtime` over one artifacts dir.
+pub struct RuntimePool {
+    workers: Vec<WorkerHandle>,
+    dir: PathBuf,
+}
+
+impl RuntimePool {
+    /// Spawn `workers` threads; each constructs its own PJRT runtime over
+    /// `dir` and reports readiness before `new` returns, so a missing or
+    /// corrupt artifacts dir fails here rather than mid-step.
+    pub fn new(dir: impl AsRef<Path>, workers: usize) -> Result<Self> {
+        if workers == 0 {
+            bail!("runtime pool needs at least one worker");
+        }
+        let dir = dir.as_ref().to_path_buf();
+        let (boot_tx, boot_rx) = channel::<Result<()>>();
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let worker_dir = dir.clone();
+            let boot = boot_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("elmo-chunk-worker-{i}"))
+                .spawn(move || {
+                    // the Runtime is born and dies on this thread
+                    let mut rt = match Runtime::new(&worker_dir) {
+                        Ok(rt) => {
+                            let _ = boot.send(Ok(()));
+                            rt
+                        }
+                        Err(e) => {
+                            let _ = boot.send(Err(e));
+                            return;
+                        }
+                    };
+                    drop(boot);
+                    while let Ok(job) = rx.recv() {
+                        job(&mut rt);
+                    }
+                })
+                .map_err(|e| anyhow!("spawning chunk worker {i}: {e}"))?;
+            handles.push(WorkerHandle { tx: Some(tx), handle: Some(handle) });
+        }
+        drop(boot_tx);
+        let pool = RuntimePool { workers: handles, dir };
+        for _ in 0..workers {
+            match boot_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    return Err(e.context("initializing a pool worker's PJRT runtime"))
+                }
+                Err(_) => bail!("a pool worker exited before reporting readiness"),
+            }
+        }
+        Ok(pool)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The artifacts directory every worker loaded.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Queue `job` on worker `worker % workers()`.  Chunk loops use a
+    /// stable `chunk % workers` assignment so each worker sees the same
+    /// artifacts every step (one compilation per worker per artifact).
+    pub fn submit(&self, worker: usize, job: Job) -> Result<()> {
+        let idx = worker % self.workers.len();
+        self.workers[idx]
+            .tx
+            .as_ref()
+            .expect("pool senders live until drop")
+            .send(job)
+            .map_err(|_| anyhow!("runtime pool worker {idx} has shut down"))
+    }
+
+    /// Precompile `names` on every worker (parallel warmup), surfacing the
+    /// first failure.  Optional — workers also compile lazily on first use.
+    pub fn prepare(&self, names: &[String]) -> Result<()> {
+        let (tx, rx) = channel::<Result<()>>();
+        for w in 0..self.workers.len() {
+            let names = names.to_vec();
+            let tx = tx.clone();
+            self.submit(
+                w,
+                Box::new(move |rt| {
+                    let mut r = Ok(());
+                    for n in &names {
+                        if let Err(e) = rt.prepare(n) {
+                            r = Err(e);
+                            break;
+                        }
+                    }
+                    let _ = tx.send(r);
+                }),
+            )?;
+        }
+        drop(tx);
+        for _ in 0..self.workers.len() {
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(_) => bail!("a pool worker hung up during warmup"),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for RuntimePool {
+    fn drop(&mut self) {
+        // close every job channel first so workers drain and exit ...
+        for w in &mut self.workers {
+            w.tx = None;
+        }
+        // ... then join them (PJRT teardown happens on the worker thread)
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Re-serializes out-of-order completions into strict index order.
+///
+/// `push` buffers `(idx, item)` pairs arriving in ANY order and invokes
+/// the apply callback for every contiguously-available index in 0, 1, 2,
+/// ... order.  The fold a caller runs inside `apply` is therefore
+/// *identical* to a serial loop's, regardless of worker completion order —
+/// this is the whole determinism argument of the parallel engine, and it
+/// is unit-tested host-side with shuffled arrival orders (no artifacts
+/// needed).
+pub struct OrderedReducer<T> {
+    next: usize,
+    pending: BTreeMap<usize, T>,
+}
+
+impl<T> OrderedReducer<T> {
+    pub fn new() -> Self {
+        OrderedReducer { next: 0, pending: BTreeMap::new() }
+    }
+
+    /// Accept one completed item; `apply(idx, item)` fires zero or more
+    /// times, always at the current fold frontier and in index order.
+    pub fn push(&mut self, idx: usize, item: T, mut apply: impl FnMut(usize, T)) {
+        debug_assert!(
+            idx >= self.next && !self.pending.contains_key(&idx),
+            "duplicate or stale chunk index {idx}"
+        );
+        self.pending.insert(idx, item);
+        while let Some(item) = self.pending.remove(&self.next) {
+            apply(self.next, item);
+            self.next += 1;
+        }
+    }
+
+    /// Indices folded so far (== n when every item 0..n has been applied).
+    pub fn emitted(&self) -> usize {
+        self.next
+    }
+
+    /// True when nothing is buffered waiting for an earlier index.
+    pub fn is_drained(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+impl<T> Default for OrderedReducer<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn reducer_emits_in_index_order_for_any_arrival_order() {
+        for case in 0..50u64 {
+            let mut rng = Rng::new(0xC0FFEE + case);
+            let n = 1 + rng.below(24);
+            let mut arrival: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut arrival);
+            let mut red = OrderedReducer::new();
+            let mut seen: Vec<(usize, usize)> = Vec::new();
+            for &idx in &arrival {
+                red.push(idx, idx * 10, |i, v| seen.push((i, v)));
+            }
+            assert_eq!(red.emitted(), n);
+            assert!(red.is_drained());
+            let want: Vec<(usize, usize)> = (0..n).map(|i| (i, i * 10)).collect();
+            assert_eq!(seen, want, "arrival {arrival:?}");
+        }
+    }
+
+    #[test]
+    fn reducer_holds_back_until_the_frontier_arrives() {
+        let mut red = OrderedReducer::new();
+        let mut seen = Vec::new();
+        red.push(2, "c", |i, v| seen.push((i, v)));
+        red.push(1, "b", |i, v| seen.push((i, v)));
+        assert!(seen.is_empty(), "nothing emits before index 0");
+        assert!(!red.is_drained());
+        red.push(0, "a", |i, v| seen.push((i, v)));
+        assert_eq!(seen, vec![(0, "a"), (1, "b"), (2, "c")]);
+        assert!(red.is_drained());
+        assert_eq!(red.emitted(), 3);
+    }
+}

@@ -157,6 +157,37 @@ impl WeightStore {
         self.l_pad / self.chunk_size
     }
 
+    /// Padded rows past the real label count (training filler in the last
+    /// chunk(s); the label permutation never maps onto them).
+    pub fn pad_rows(&self) -> usize {
+        self.l_pad - self.labels
+    }
+
+    /// Zero the padding rows of a staged chunk update before it commits.
+    ///
+    /// The per-chunk kernels update all `chunk_size` rows, padding
+    /// included — left alone, pad rows drift away from zero (each sees a
+    /// constant sigmoid(0) pull from its all-zero Y column), which (a)
+    /// leaks a nonzero pad contribution into the input gradient and (b)
+    /// makes the summed BCE loss depend on `l_pad`.  Pinning pad weights
+    /// at zero keeps their xgrad contribution exactly 0 and their loss
+    /// contribution the constant softplus(0) = ln 2 per (row, batch
+    /// element) that `policy::padded_mean_loss` subtracts host-side.
+    pub fn zero_staged_padding(&self, chunk: usize, staged: &mut StagedChunk) {
+        let lo = chunk * self.chunk_size;
+        if lo + self.chunk_size <= self.labels {
+            return; // chunk holds only real labels
+        }
+        let start = (self.labels.max(lo) - lo) * self.d;
+        staged.w[start..].fill(0.0);
+        if let Some(k) = staged.kahan.as_mut() {
+            k[start..].fill(0.0);
+        }
+        if let Some(m) = staged.mom.as_mut() {
+            m[start..].fill(0.0);
+        }
+    }
+
     /// Flat index range of one chunk in `w`/`mom`/`kahan`.
     pub fn chunk_span(&self, chunk: usize) -> std::ops::Range<usize> {
         chunk * self.chunk_size * self.d..(chunk + 1) * self.chunk_size * self.d
@@ -386,6 +417,45 @@ mod tests {
         assert!(s.chunk_w(0).iter().all(|&v| v == 0.0));
         assert!(s.chunk_w(1).iter().all(|&v| v == 1.5));
         assert!(s.chunk_mom(1).iter().all(|&v| v == -2.0));
+    }
+
+    #[test]
+    fn zero_staged_padding_pins_only_pad_rows() {
+        // 90 labels, Lc=32 -> l_pad=96: chunk 2 holds rows 64..96, of
+        // which 90..96 are padding (6 rows)
+        let s = mk(90, 2, 32, BufferSpec { momentum: true, ..Default::default() });
+        assert_eq!(s.pad_rows(), 6);
+        let mut full = StagedChunk {
+            w: vec![1.0; 32 * 2],
+            kahan: None,
+            mom: Some(vec![2.0; 32 * 2]),
+        };
+        // chunks 0/1 are all real labels: untouched
+        let before = full.clone();
+        s.zero_staged_padding(0, &mut full);
+        s.zero_staged_padding(1, &mut full);
+        assert_eq!(full.w, before.w);
+        assert_eq!(full.mom, before.mom);
+        // chunk 2: rows 26.. of the chunk (labels 90..96) zeroed
+        s.zero_staged_padding(2, &mut full);
+        let real = 26 * 2;
+        assert!(full.w[..real].iter().all(|&v| v == 1.0));
+        assert!(full.w[real..].iter().all(|&v| v == 0.0));
+        let mom = full.mom.as_ref().unwrap();
+        assert!(mom[..real].iter().all(|&v| v == 2.0));
+        assert!(mom[real..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_staged_padding_clears_a_mostly_pad_chunk() {
+        // 20 labels, Lc=16 -> l_pad=32: chunk 1 is rows 16..32 with only
+        // rows 16..20 real
+        let s = mk(20, 3, 16, BufferSpec::default());
+        assert_eq!(s.pad_rows(), 12);
+        let mut st = StagedChunk { w: vec![7.0; 16 * 3], kahan: None, mom: None };
+        s.zero_staged_padding(1, &mut st);
+        assert!(st.w[..4 * 3].iter().all(|&v| v == 7.0));
+        assert!(st.w[4 * 3..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

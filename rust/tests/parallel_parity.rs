@@ -1,0 +1,356 @@
+//! Parallel-engine parity: `--workers N` must change nothing numerically.
+//!
+//! Two layers:
+//!
+//! * **Host-side scheduler tests (always run, no artifacts)** — feed
+//!   synthetic `ChunkExec` results through `OrderedReducer` + `StepAccum`
+//!   in shuffled "worker completion" orders and assert the reduction
+//!   (store commits, xgrad accumulation, loss sum, gmax fold, Renee's
+//!   staged commit-on-clean-step) is bit-identical to the in-order fold.
+//!   This pins the determinism argument without needing PJRT.
+//! * **Artifact-gated end-to-end parity** — for each chunk-shaped policy,
+//!   drive a serial trainer and a pooled trainer (`workers ∈ {2, 4}`)
+//!   over identical batches and assert bit-identical per-step losses,
+//!   overflow decisions, final weights/momentum/Kahan/encoder state, gmax
+//!   traces, and P@k/PSP@k; same for the chunked top-k scanner.
+
+use std::sync::Arc;
+
+use elmo::coordinator::{evaluate, evaluate_ex, Precision, TrainConfig, Trainer};
+use elmo::data;
+use elmo::infer::{ChunkScanner, ClassifierView};
+use elmo::policy::{
+    padded_mean_loss, ChunkExec, Fp32Policy, ReneePolicy, StepAccum, StepCtx, UpdatePolicy,
+};
+use elmo::runtime::{ExecCtx, OrderedReducer, Runtime, RuntimePool};
+use elmo::store::{BufferSpec, StagedChunk, WeightStore};
+use elmo::util::Rng;
+
+fn art_dir() -> Option<String> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt")
+        .exists()
+        .then(|| p.to_str().unwrap().to_string())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match art_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---- host-side scheduler tests (no artifacts needed) ----
+
+const D: usize = 4;
+const BATCH: usize = 8;
+const LC: usize = 32;
+const LABELS: usize = 90; // l_pad = 96 -> 3 chunks, 6 pad rows
+
+/// Deterministic synthetic kernel result for one chunk.
+fn synth_exec(chunk: usize, with_mom: bool, seed: u64) -> ChunkExec {
+    let mut rng = Rng::new(seed.wrapping_mul(31).wrapping_add(chunk as u64));
+    let wlen = LC * D;
+    ChunkExec {
+        staged: StagedChunk {
+            w: (0..wlen).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+            kahan: None,
+            mom: if with_mom {
+                Some((0..wlen).map(|_| rng.normal_f32(0.0, 0.5)).collect())
+            } else {
+                None
+            },
+        },
+        xgrad: (0..BATCH * D).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+        loss: rng.normal_f32(40.0, 3.0).abs(),
+        gmax: rng.normal_f32(0.0, 1.0).abs(),
+        overflow: false,
+    }
+}
+
+fn mk_store(momentum: bool) -> WeightStore {
+    let order: Vec<u32> = (0..LABELS as u32).collect();
+    let spec = BufferSpec { momentum, ..Default::default() };
+    WeightStore::new(LABELS, D, LC, order, 0, spec).unwrap()
+}
+
+fn dummy_ctx<'a>() -> StepCtx<'a> {
+    StepCtx {
+        emb: &[],
+        arts: &[],
+        lr_cls: 0.05,
+        dropout_cls: 0.0,
+        seed: 7,
+        batch: BATCH,
+        step_count: 1,
+    }
+}
+
+/// Fold every chunk in the given arrival order through OrderedReducer +
+/// StepAccum and close the step with `policy`; returns the final store
+/// plus (loss, gmax, xgrad, overflow, loss_scale).
+fn fold_in_order(
+    policy: &dyn UpdatePolicy,
+    arrival: &[usize],
+    seed: u64,
+) -> (WeightStore, f64, f32, Vec<f32>, bool, f32) {
+    let with_mom = policy.precision() == Precision::Renee;
+    let mut store = mk_store(with_mom);
+    let n_chunks = store.chunks();
+    assert_eq!(arrival.len(), n_chunks);
+    let mut acc = StepAccum::new(BATCH, D, policy.commit_per_chunk(), n_chunks);
+    let mut red = OrderedReducer::new();
+    for &chunk in arrival {
+        red.push(chunk, synth_exec(chunk, with_mom, seed), |c, ex| {
+            acc.fold(&mut store, c, ex);
+        });
+    }
+    assert!(red.is_drained() && red.emitted() == n_chunks);
+    let ctx = dummy_ctx();
+    let mut loss_scale = 512.0f32;
+    let out = acc.finish(policy, &mut store, &ctx, &mut loss_scale).unwrap();
+    (store, out.loss, out.gmax, out.xgrad, out.overflow, loss_scale)
+}
+
+fn assert_order_invariant(policy: &dyn UpdatePolicy, seed: u64) {
+    let serial: Vec<usize> = (0..3).collect();
+    let (s0, l0, g0, x0, o0, ls0) = fold_in_order(policy, &serial, seed);
+    let mut rng = Rng::new(seed ^ 0xD15C);
+    for _ in 0..20 {
+        let mut arrival = serial.clone();
+        rng.shuffle(&mut arrival);
+        let (s1, l1, g1, x1, o1, ls1) = fold_in_order(policy, &arrival, seed);
+        assert_eq!(bits32(s0.w()), bits32(s1.w()), "weights diverged for {arrival:?}");
+        assert_eq!(bits32(s0.mom()), bits32(s1.mom()), "momentum diverged for {arrival:?}");
+        assert_eq!(l0.to_bits(), l1.to_bits(), "loss diverged for {arrival:?}");
+        assert_eq!(g0.to_bits(), g1.to_bits(), "gmax diverged for {arrival:?}");
+        assert_eq!(bits32(&x0), bits32(&x1), "xgrad diverged for {arrival:?}");
+        assert_eq!(o0, o1);
+        assert_eq!(ls0.to_bits(), ls1.to_bits());
+    }
+}
+
+#[test]
+fn shuffled_completion_is_bit_identical_commit_per_chunk() {
+    assert_order_invariant(&Fp32Policy, 11);
+}
+
+#[test]
+fn shuffled_completion_is_bit_identical_staged_commits() {
+    // Renee: staged chunks must commit in chunk order inside finalize
+    assert_order_invariant(&ReneePolicy { momentum: 0.0 }, 12);
+}
+
+#[test]
+fn fold_pins_pad_rows_and_corrects_the_loss() {
+    let policy = Fp32Policy;
+    let (store, loss, _, _, _, _) = fold_in_order(&policy, &[0, 1, 2], 33);
+    // rows 90..96 (the padding) were zeroed before commit even though the
+    // synthetic kernel wrote nonzero values there
+    assert_eq!(store.pad_rows(), 6);
+    for row in LABELS..96 {
+        assert!(store.row(row).iter().all(|&v| v == 0.0), "pad row {row} drifted");
+    }
+    for row in [0, 42, LABELS - 1] {
+        assert!(store.row(row).iter().any(|&v| v != 0.0), "real row {row} not committed");
+    }
+    // the reported loss is the padding-corrected mean of the raw sums
+    let raw: f64 = (0..3).map(|c| synth_exec(c, false, 33).loss as f64).sum();
+    let want = padded_mean_loss(raw, BATCH, LABELS, 6);
+    assert_eq!(loss.to_bits(), want.to_bits());
+}
+
+#[test]
+fn reported_loss_is_invariant_to_chunk_padding() {
+    // the same "true" per-label loss summed under two geometries: 90
+    // labels at Lc=30 (no padding) vs Lc=32 (6 pad rows, each adding
+    // softplus(0) = ln 2 per batch element to the kernel sum)
+    let real_sum = 512.75_f64;
+    let no_pad = padded_mean_loss(real_sum, BATCH, LABELS, 0);
+    let pad_sum = real_sum + (6 * BATCH) as f64 * std::f32::consts::LN_2 as f64;
+    let padded = padded_mean_loss(pad_sum, BATCH, LABELS, 6);
+    assert!(
+        (no_pad - padded).abs() < 1e-12,
+        "padding leaked into the reported loss: {no_pad} vs {padded}"
+    );
+}
+
+// ---- artifact-gated end-to-end parity ----
+
+/// Drive a serial and a pooled trainer over identical batches; everything
+/// observable must be bit-identical.
+fn assert_parallel_step_parity(precision: Precision, chunk: usize, steps: usize, workers: usize) {
+    let Some(art) = art_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 1);
+    let mut rt_a = Runtime::new(&art).unwrap();
+    let mut rt_b = Runtime::new(&art).unwrap();
+    let pool = RuntimePool::new(&art, workers).unwrap();
+    let cfg = TrainConfig {
+        precision,
+        chunk_size: chunk,
+        epochs: 1,
+        ..TrainConfig::default()
+    };
+    let mut tr_a = Trainer::new(&rt_a, &ds, cfg.clone(), &art).unwrap();
+    let mut tr_b = Trainer::new(&rt_b, &ds, cfg, &art).unwrap();
+
+    let mut batcher = data::Batcher::new(ds.train.n, tr_a.batch, 0);
+    for step in 0..steps {
+        let (rows, _) = batcher.next_batch().unwrap();
+        let (loss_a, over_a) = tr_a.step(&mut rt_a, &ds, &rows).unwrap();
+        let (loss_b, over_b) = tr_b
+            .step_ex(&mut ExecCtx::of(&mut rt_b, Some(&pool)), &ds, &rows)
+            .unwrap();
+        assert_eq!(
+            loss_a.to_bits(),
+            loss_b.to_bits(),
+            "{precision:?} x{workers} step {step}: loss {loss_a} != {loss_b}"
+        );
+        assert_eq!(over_a, over_b, "{precision:?} x{workers} step {step}: overflow");
+    }
+    assert_eq!(bits32(tr_a.store.w()), bits32(tr_b.store.w()), "{precision:?}: weights");
+    assert_eq!(bits32(tr_a.store.mom()), bits32(tr_b.store.mom()), "{precision:?}: momentum");
+    assert_eq!(bits32(tr_a.store.kahan()), bits32(tr_b.store.kahan()), "{precision:?}: kahan");
+    assert_eq!(bits32(&tr_a.enc_p), bits32(&tr_b.enc_p), "{precision:?}: encoder");
+    assert_eq!(tr_a.loss_scale.to_bits(), tr_b.loss_scale.to_bits());
+    assert_eq!(
+        bits32(tr_a.gmax_history.values()),
+        bits32(tr_b.gmax_history.values()),
+        "{precision:?}: gmax trace"
+    );
+
+    // eval through the pooled scanner must match the serial protocol
+    let rep_a = evaluate(&mut rt_a, &tr_a, &ds, 96).unwrap();
+    let rep_b = evaluate_ex(&mut ExecCtx::of(&mut rt_b, Some(&pool)), &tr_b, &ds, 96).unwrap();
+    assert_eq!(rep_a.p, rep_b.p, "{precision:?} x{workers}: P@k diverged");
+    assert_eq!(rep_a.psp, rep_b.psp, "{precision:?} x{workers}: PSP@k diverged");
+}
+
+#[test]
+fn pooled_parity_fp32_w2() {
+    assert_parallel_step_parity(Precision::Fp32, 512, 6, 2);
+}
+
+#[test]
+fn pooled_parity_bf16_w2() {
+    assert_parallel_step_parity(Precision::Bf16, 512, 6, 2);
+}
+
+#[test]
+fn pooled_parity_bf16_w4() {
+    assert_parallel_step_parity(Precision::Bf16, 256, 6, 4);
+}
+
+#[test]
+fn pooled_parity_fp8_w2() {
+    assert_parallel_step_parity(Precision::Fp8, 512, 6, 2);
+}
+
+#[test]
+fn pooled_parity_renee_w2() {
+    assert_parallel_step_parity(Precision::Renee, 1024, 6, 2);
+}
+
+#[test]
+fn pooled_parity_fp8_head_kahan_w2() {
+    assert_parallel_step_parity(Precision::Fp8HeadKahan, 512, 6, 2);
+}
+
+#[test]
+fn pooled_parity_sampled_falls_back_to_serial() {
+    // Sampled is not chunk-shaped: a pool must be a no-op, not a crash
+    assert_parallel_step_parity(Precision::Sampled, 512, 4, 2);
+}
+
+#[test]
+fn pooled_parity_renee_forced_overflow() {
+    let art = require_artifacts!();
+    let prof = data::profile("quickstart").unwrap();
+    let ds = data::generate(&prof, 1);
+    let mut rt_a = Runtime::new(&art).unwrap();
+    let mut rt_b = Runtime::new(&art).unwrap();
+    let pool = RuntimePool::new(&art, 2).unwrap();
+    let cfg = TrainConfig {
+        precision: Precision::Renee,
+        chunk_size: 1024,
+        epochs: 1,
+        ..TrainConfig::default()
+    };
+    let mut tr_a = Trainer::new(&rt_a, &ds, cfg.clone(), &art).unwrap();
+    let mut tr_b = Trainer::new(&rt_b, &ds, cfg, &art).unwrap();
+    let rows: Vec<u32> = (0..tr_a.batch as u32).collect();
+    // clean step, forced overflow (rollback on the coordinator), recovery
+    for scale in [None, Some(1e9f32), None] {
+        if let Some(s) = scale {
+            tr_a.loss_scale = s;
+            tr_b.loss_scale = s;
+        }
+        let (la, oa) = tr_a.step(&mut rt_a, &ds, &rows).unwrap();
+        let (lb, ob) = tr_b
+            .step_ex(&mut ExecCtx::of(&mut rt_b, Some(&pool)), &ds, &rows)
+            .unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits());
+        assert_eq!(oa, ob);
+        assert_eq!(tr_a.loss_scale.to_bits(), tr_b.loss_scale.to_bits());
+    }
+    assert_eq!(bits32(tr_a.store.w()), bits32(tr_b.store.w()));
+    assert_eq!(bits32(tr_a.store.mom()), bits32(tr_b.store.mom()));
+}
+
+#[test]
+fn pooled_scan_matches_serial_scan_across_chunks() {
+    let art = require_artifacts!();
+    let mut rt = Runtime::new(&art).unwrap();
+    let pool = RuntimePool::new(&art, 3).unwrap();
+    let d = rt.config().d;
+    let b = rt.config().batch;
+    // 4096 rows -> 4 scoring chunks; deterministic pseudo-random weights
+    // (ties included: coarse grid) stress the insertion-order tie-breaking
+    let labels = 4000usize;
+    let order: Vec<u32> = (0..labels as u32).collect();
+    let mut store =
+        WeightStore::new(labels, d, 1024, order, 0, BufferSpec::default()).unwrap();
+    let mut rng = Rng::new(99);
+    for v in store.w_mut().iter_mut() {
+        *v = (rng.below(64) as f32) * 0.03125 - 1.0;
+    }
+    let emb: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let view = ClassifierView::of_store(&store);
+    let scanner = ChunkScanner::new(5);
+    let serial = scanner.scan(&mut rt, &view, &emb, b).unwrap();
+    let pooled = scanner
+        .scan_ex(&mut ExecCtx::of(&mut rt, Some(&pool)), &view, &emb, b)
+        .unwrap();
+    assert_eq!(serial.len(), pooled.len());
+    for (bi, (s, p)) in serial.iter().zip(pooled.iter()).enumerate() {
+        assert_eq!(s.items(), p.items(), "row {bi}: pooled top-k diverged");
+    }
+}
+
+#[test]
+fn pool_construction_fails_loudly_without_artifacts_dir() {
+    let err = RuntimePool::new("/nonexistent/elmo-artifacts", 2);
+    assert!(err.is_err(), "bogus artifacts dir must fail pool construction");
+}
+
+#[test]
+fn policies_are_shareable_with_worker_threads() {
+    // the engine's type contract: policies cross thread boundaries behind
+    // an Arc (compile-time guarantee, asserted here for documentation)
+    fn takes_sendable(_: Arc<dyn UpdatePolicy>) {}
+    takes_sendable(Arc::new(Fp32Policy));
+    takes_sendable(Arc::new(ReneePolicy { momentum: 0.9 }));
+}

@@ -478,6 +478,18 @@ fn bits32(v: &[f32]) -> Vec<u32> {
 
 /// Drive the legacy and refactored trainers over identical batches and
 /// assert bit-identical trajectories, then checkpoint-reload parity.
+///
+/// Padded-loss rebaseline note: the chunk loop now pins padding rows at
+/// zero and reports a padding-corrected mean loss
+/// (`policy::padded_mean_loss`), where the legacy reference both lets pad
+/// rows drift and divides the padded sum by the real label count.  Every
+/// config below runs quickstart (1024 labels) at chunk sizes 512/1024, so
+/// `l_pad == labels`, the correction is exactly zero, and the legacy
+/// comparison stays bit-identical — no pinned values changed.  The
+/// padded-geometry behavior (where legacy IS wrong, the satellite bugfix)
+/// is pinned separately in `rust/tests/parallel_parity.rs`
+/// (`fold_pins_pad_rows_and_corrects_the_loss`,
+/// `reported_loss_is_invariant_to_chunk_padding`).
 fn assert_policy_parity(precision: Precision, chunk: usize, steps: usize) {
     let Some(art) = art_dir() else {
         eprintln!("skipping: run `make artifacts`");
