@@ -12,8 +12,8 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::{Precision, TrainConfig};
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     }
     let epochs = epochs_or(4);
     let ds = dataset("lf-amazontitles131k", 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
 
     println!("== Ablation A: encoder state precision (classifier fixed BF16+SR) ==\n");
     let mut rows = Vec::new();
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             dropout_emb: 0.3,
             ..TrainConfig::default()
         };
-        let res = run_training_cfg(&mut rt, &ds, cfg, 512)?;
+        let res = run_training_cfg(&mut sess, &ds, cfg, 512)?;
         let [p1, p3, p5] = fmt_p(&res.report);
         rows.push(vec![
             label.to_string(), p1, p3, p5,
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
             dropout_cls: p,
             ..TrainConfig::default()
         };
-        let res = run_training_cfg(&mut rt, &ds, cfg, 512)?;
+        let res = run_training_cfg(&mut sess, &ds, cfg, 512)?;
         let [p1, p3, p5] = fmt_p(&res.report);
         rows.push(vec![
             format!("{p:.1}"), p1, p3, p5,

@@ -9,10 +9,10 @@
 
 #![allow(dead_code)]
 
-use elmo::coordinator::{evaluate, EvalReport, Precision, TrainConfig, Trainer};
+use elmo::coordinator::{evaluate, EvalReport, Precision, TrainConfig};
 use elmo::data::{self, Dataset, Profile};
 use elmo::memmodel::{self, MemParams, Method};
-use elmo::runtime::Runtime;
+use elmo::Session;
 
 pub const ART: &str = "artifacts";
 
@@ -38,7 +38,7 @@ pub struct RunResult {
 
 /// Train `epochs` on a profile with a precision policy, return final eval.
 pub fn run_training(
-    rt: &mut Runtime,
+    sess: &mut Session,
     ds: &Dataset,
     precision: Precision,
     chunk: usize,
@@ -52,28 +52,29 @@ pub fn run_training(
         dropout_emb: 0.3,
         ..TrainConfig::default()
     };
-    run_training_cfg(rt, ds, cfg, eval_rows)
+    run_training_cfg(sess, ds, cfg, eval_rows)
 }
 
 pub fn run_training_cfg(
-    rt: &mut Runtime,
+    sess: &mut Session,
     ds: &Dataset,
     cfg: TrainConfig,
     eval_rows: usize,
 ) -> anyhow::Result<RunResult> {
     let epochs = cfg.epochs;
-    let mut tr = Trainer::new(rt, ds, cfg, ART)?;
-    tr.warmup(rt)?; // compile executables outside the timed epochs
+    let mut tr = sess.trainer(ds, cfg)?;
+    // compile executables outside the timed epochs
+    sess.prepare(&tr.required_kernels())?;
     let mut secs = 0.0;
     let mut loss = 0.0;
     let mut oflow = 0;
     for epoch in 0..epochs {
-        let st = tr.run_epoch(rt, ds, epoch)?;
+        let st = tr.run_epoch(sess, ds, epoch)?;
         secs += st.secs;
         loss = st.mean_loss;
         oflow += st.overflow_steps;
     }
-    let report = evaluate(rt, &tr, ds, eval_rows)?;
+    let report = evaluate(sess, &tr, ds, eval_rows)?;
     Ok(RunResult {
         report,
         epoch_secs: secs / epochs.max(1) as f64,

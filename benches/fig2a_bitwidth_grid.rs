@@ -13,9 +13,9 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data::Batcher;
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("== Figure 2a: P@1 across (E, M) classifier-weight formats ==\n");
     let ds = dataset("lf-amazontitles131k", 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let epochs = epochs_or(2);
     let e_grid = [2u32, 3, 4, 5];
     let m_grid = [1u32, 2, 3, 5, 7];
@@ -41,15 +41,15 @@ fn main() -> anyhow::Result<()> {
                     dropout_emb: 0.3,
                     ..TrainConfig::default()
                 };
-                let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
+                let mut tr = Trainer::new(&sess, &ds, cfg)?;
                 for epoch in 0..epochs {
                     let mut b = Batcher::new(ds.train.n, tr.batch, epoch as u64);
                     while let Some((rows, _)) = b.next_batch() {
-                        tr.step(&mut rt, &ds, &rows)?;
+                        tr.step(&mut sess, &ds, &rows)?;
                         tr.quantize_classifier(e, m, sr);
                     }
                 }
-                let rep = evaluate(&mut rt, &tr, &ds, 256)?;
+                let rep = evaluate(&mut sess, &tr, &ds, 256)?;
                 row.push(format!("{:.1}", rep.p[0]));
             }
             table.push(row);

@@ -6,10 +6,10 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::eval::diagnostics_hist;
 use elmo::coordinator::{Precision, TrainConfig, Trainer};
 use elmo::data::Batcher;
-use elmo::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     if skip_banner("fig2b_grad_hist") {
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("== Figure 2b: classifier gradient exponent histogram ==\n");
     let ds = dataset("lf-amazontitles131k", 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let cfg = TrainConfig {
         precision: Precision::Bf16,
         chunk_size: 512,
@@ -25,15 +25,15 @@ fn main() -> anyhow::Result<()> {
         dropout_emb: 0.3,
         ..TrainConfig::default()
     };
-    let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
+    let mut tr = Trainer::new(&sess, &ds, cfg)?;
     // short warmup so gradients are taken mid-training like the paper
     let mut b = Batcher::new(ds.train.n, tr.batch, 0);
     for _ in 0..24 {
         let (rows, _) = b.next_batch().unwrap();
-        tr.step(&mut rt, &ds, &rows)?;
+        tr.step(&mut sess, &ds, &rows)?;
     }
-    let (hg, _, _) = diagnostics_hist(&mut rt, &tr, &ds)?;
-    let lo = rt.config().hist_lo;
+    let (hg, _, _) = diagnostics_hist(&mut sess, &tr, &ds)?;
+    let lo = sess.config().hist_lo;
     let total: f32 = hg.iter().sum();
 
     println!("exp2 bucket | count | share");

@@ -5,10 +5,10 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::eval::diagnostics_hist;
 use elmo::coordinator::{Precision, TrainConfig, Trainer};
 use elmo::data::Batcher;
-use elmo::runtime::Runtime;
 
 fn print_hist(name: &str, h: &[f32], lo: i32, lo_edge: i32, hi_edge: i32) {
     let total: f32 = h.iter().sum();
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("== Figure 5: weight / input exponents vs E4M3 range ==\n");
     let ds = dataset("lf-amazontitles131k", 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let cfg = TrainConfig {
         precision: Precision::Fp8,
         chunk_size: 512,
@@ -47,14 +47,14 @@ fn main() -> anyhow::Result<()> {
         dropout_emb: 0.3,
         ..TrainConfig::default()
     };
-    let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
+    let mut tr = Trainer::new(&sess, &ds, cfg)?;
     let mut b = Batcher::new(ds.train.n, tr.batch, 0);
     for _ in 0..32 {
         let (rows, _) = b.next_batch().unwrap();
-        tr.step(&mut rt, &ds, &rows)?;
+        tr.step(&mut sess, &ds, &rows)?;
     }
-    let (_, hw, hx) = diagnostics_hist(&mut rt, &tr, &ds)?;
-    let lo = rt.config().hist_lo;
+    let (_, hw, hx) = diagnostics_hist(&mut sess, &tr, &ds)?;
+    let lo = sess.config().hist_lo;
     // E4M3: subnormal floor 2^-9, max exponent 2^8
     print_hist("Fig 5a: classifier weights", &hw, lo, -9, 8);
     print_hist("Fig 5b: classifier inputs (embeddings)", &hx, lo, -9, 8);

@@ -2,20 +2,21 @@
 //! path individually, then the composed step, and prints a breakdown.
 //! This is the measurement side of the L3 optimization loop.
 
+use elmo::Session;
 use elmo::coordinator::{Precision, TrainConfig, Trainer};
 use elmo::data;
 use elmo::memmodel;
-use elmo::runtime::{Arg, ExecCtx, Runtime, RuntimePool};
+use elmo::runtime::Arg;
 use elmo::util::{bench_secs, print_table, Rng};
 
 fn main() -> anyhow::Result<()> {
     let art = "artifacts";
-    if elmo::coordinator::trainer::require_artifacts(art).is_err() {
+    if elmo::session::require_artifacts(art).is_err() {
         println!("perf_hotpath: artifacts missing, skipping");
         return Ok(());
     }
-    let mut rt = Runtime::new(art)?;
-    let mc = rt.config().clone();
+    let mut sess = Session::open(art)?;
+    let mc = sess.config().clone();
     let (b, d, s, p) = (mc.batch, mc.d, mc.seq, mc.psize);
     let mut rng = Rng::new(1);
 
@@ -30,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     for prec in ["fp32", "bf16", "fp8"] {
         let name = format!("enc_fwd_{prec}");
         let secs = {
-            let rt = &mut rt;
+            let rt = sess.runtime();
             bench_secs(1.0, 50, || {
                 rt.exec(
                     &name,
@@ -42,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(vec![name, format!("{:.2}", secs * 1e3), format!("{:.1}/s", 1.0 / secs)]);
         let name = format!("enc_bwd_{prec}");
         let secs = {
-            let rt = &mut rt;
+            let rt = sess.runtime();
             bench_secs(1.5, 30, || {
                 rt.exec(
                     &name,
@@ -78,7 +79,7 @@ fn main() -> anyhow::Result<()> {
         let w: Vec<f32> = (0..lc * d).map(|_| rng.normal_f32(0.0, 0.05)).collect();
         let y = vec![0.0f32; b * lc];
         let secs = {
-            let rt = &mut rt;
+            let rt = sess.runtime();
             bench_secs(1.0, 50, || {
                 rt.exec(
                     &name,
@@ -106,7 +107,7 @@ fn main() -> anyhow::Result<()> {
         let lc = 1024;
         let w: Vec<f32> = (0..lc * d).map(|_| rng.normal_f32(0.0, 0.05)).collect();
         let secs = {
-            let rt = &mut rt;
+            let rt = sess.runtime();
             bench_secs(1.0, 100, || {
                 rt.exec("cls_fwd_1024", &[Arg::F32(&w), Arg::F32(&emb)])
                     .unwrap();
@@ -128,13 +129,13 @@ fn main() -> anyhow::Result<()> {
         (Precision::Renee, 1024),
     ] {
         let cfg = TrainConfig { precision: prec, chunk_size: chunk, ..TrainConfig::default() };
-        let mut tr = Trainer::new(&rt, &ds, cfg, art)?;
+        let mut tr = Trainer::new(&sess, &ds, cfg)?;
         let rows_b: Vec<u32> = (0..tr.batch as u32).collect();
         let secs = {
-            let rt = &mut rt;
+            let sess = &mut sess;
             let ds = &ds;
             bench_secs(2.0, 20, || {
-                tr.step(rt, ds, &rows_b).unwrap();
+                tr.step(sess, ds, &rows_b).unwrap();
             })
         };
         println!(
@@ -147,7 +148,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // parallel chunk engine: the same composed step with label chunks
-    // fanned out to a RuntimePool (bit-identical results — see
+    // fanned out to the session's pool (bit-identical results — see
     // rust/tests/parallel_parity.rs; this measures the speedup side)
     println!("\n== parallel chunk engine (bf16, Lc=256 -> 4 chunks/step) ==");
     let cfg = TrainConfig {
@@ -157,22 +158,18 @@ fn main() -> anyhow::Result<()> {
     };
     let mut serial_secs = 0.0f64;
     for workers in [1usize, 2, 4] {
-        let mut tr = Trainer::new(&rt, &ds, cfg.clone(), art)?;
-        let pool = if workers > 1 {
-            let p = RuntimePool::new(art, workers)?;
-            p.prepare(&tr.policy.artifacts(cfg.chunk_size))?;
-            Some(p)
-        } else {
-            None
-        };
+        // one Session per worker count: the same unified API serves the
+        // serial (workers = 1, pool-less) and pooled configurations
+        let mut wsess = Session::builder().artifacts(art).workers(workers).build()?;
+        let mut tr = Trainer::new(&wsess, &ds, cfg.clone())?;
+        wsess.prepare(&tr.required_kernels())?;
         let rows_b: Vec<u32> = (0..tr.batch as u32).collect();
         let staging = memmodel::pool_bytes(&tr.store, tr.batch, workers);
         let secs = {
-            let rt = &mut rt;
+            let wsess = &mut wsess;
             let ds = &ds;
-            let pool = pool.as_ref();
             bench_secs(2.0, 20, || {
-                tr.step_ex(&mut ExecCtx::of(rt, pool), ds, &rows_b).unwrap();
+                tr.step(wsess, ds, &rows_b).unwrap();
             })
         };
         if workers == 1 {

@@ -5,10 +5,10 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::Precision;
 use elmo::data;
 use elmo::memmodel::{peak_gib, MemParams, Method};
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     println!("== Table 10: chunk count vs latency vs peak memory (Amazon-3M, BF16) ==\n");
     let prof = data::profile("amazon3m").unwrap(); // L=8192 scaled
     let ds = data::generate(&prof, 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let epochs = epochs_or(1);
     // paper rows (chunk count k): epoch time, peak GiB
     let paper: &[(u64, &str, f64)] = &[
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for &(k, ptime, pmem) in paper {
         let lc = (l as u64 / k) as usize;
-        let res = run_training(&mut rt, &ds, Precision::Bf16, lc, epochs, 256)?;
+        let res = run_training(&mut sess, &ds, Precision::Bf16, lc, epochs, 256)?;
         let mem = peak_gib(Method::ElmoBf16, &MemParams::from_profile(&prof, k));
         rows.push(vec![
             k.to_string(),

@@ -12,8 +12,8 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::Precision;
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 struct PaperRow {
@@ -74,14 +74,14 @@ fn main() -> anyhow::Result<()> {
         Precision::Fp8,
     ];
 
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     for (name, paper_rows) in datasets {
         let ds = dataset(name, 0);
         println!("\n--- {} ({}) ---", ds.profile.paper_name, name);
         let mut rows = Vec::new();
         for (pr, paper) in precisions.iter().zip(paper_rows.iter()) {
             let chunk = if *pr == Precision::Renee { 2048 } else { 1024 };
-            let res = run_training(&mut rt, &ds, *pr, chunk, epochs, 512)?;
+            let res = run_training(&mut sess, &ds, *pr, chunk, epochs, 512)?;
             let [p1, p3, p5] = fmt_p(&res.report);
             let mem = paper_mem_gib(&ds.profile, method_of(*pr), res.trainer_chunks as u64);
             rows.push(vec![

@@ -5,8 +5,8 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::Precision;
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("== Table 3: LF-Paper2Keywords-8.6M (scaled stand-in, L=16384) ==\n");
     let ds = dataset("lf-paper2kw8.6m", 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let epochs = epochs_or(4);
 
     // paper rows: (method, P@1, P@3, P@5, M_tr)
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for &(pname, pr, pp1, pp3, pp5, pmtr) in paper {
         let chunk = if pr == Precision::Renee { 2048 } else { 2048 };
-        let res = run_training(&mut rt, &ds, pr, chunk, epochs, 512)?;
+        let res = run_training(&mut sess, &ds, pr, chunk, epochs, 512)?;
         let [p1, p3, p5] = fmt_p(&res.report);
         let mem = paper_mem_gib(&ds.profile, method_of(pr), res.trainer_chunks as u64);
         rows.push(vec![

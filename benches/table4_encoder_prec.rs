@@ -4,10 +4,10 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::{Precision, TrainConfig};
 use elmo::data;
 use elmo::memmodel::{peak_gib, MemParams, Method};
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     println!("== Table 4: encoder precision with FP8 classifier ==\n");
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let epochs = epochs_or(4);
     // paper rows: (profile, enc, P@1, M_tr GB, epoch)
     let paper: &[(&str, &str, f64, f64, &str)] = &[
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             dropout_emb: 0.3,
             ..TrainConfig::default()
         };
-        let res = run_training_cfg(&mut rt, &ds, cfg, 512)?;
+        let res = run_training_cfg(&mut sess, &ds, cfg, 512)?;
         let method = if enc == "bf16" { Method::Fp8ClsBf16Enc } else { Method::ElmoFp8 };
         let mem = peak_gib(method, &MemParams::from_profile(&prof, res.trainer_chunks as u64));
         let [p1, p3, p5] = fmt_p(&res.report);

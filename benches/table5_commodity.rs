@@ -5,10 +5,10 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::{Precision, TrainConfig};
 use elmo::data;
 use elmo::memmodel::{peak_gib, MemParams, Method};
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         ("amazon3m", "121:17", 8.46),
         ("lf-paper2kw8.6m", "229:24", 10.49),
     ];
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let epochs = epochs_or(1);
     let mut rows = Vec::new();
     for &(name, paper_time, paper_mem) in paper {
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             dropout_emb: 0.3,
             ..TrainConfig::default()
         };
-        let res = run_training_cfg(&mut rt, &ds, cfg, 256)?;
+        let res = run_training_cfg(&mut sess, &ds, cfg, 256)?;
         let mem = peak_gib(
             Method::Fp8ClsBf16Enc,
             &MemParams::from_profile(&prof, res.trainer_chunks as u64),

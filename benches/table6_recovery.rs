@@ -5,9 +5,9 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data::Batcher;
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("== Table 6: post-hoc refinement & head-label Kahan (LF-AT-1.3M scaled) ==\n");
     let ds = dataset("lf-amazontitles1.3m", 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let epochs = epochs_or(4);
 
     let mut rows = Vec::new();
@@ -41,11 +41,11 @@ fn main() -> anyhow::Result<()> {
             dropout_emb: 0.3,
             ..TrainConfig::default()
         };
-        let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
+        let mut tr = Trainer::new(&sess, &ds, cfg)?;
         for epoch in 0..epochs {
-            tr.run_epoch(&mut rt, &ds, epoch)?;
+            tr.run_epoch(&mut sess, &ds, epoch)?;
         }
-        let rep = evaluate(&mut rt, &tr, &ds, 512)?;
+        let rep = evaluate(&mut sess, &tr, &ds, 512)?;
         let [p1, p3, p5] = fmt_p(&rep);
         let (pn, pp1, pp3, pp5, pmtr) = paper[i];
         rows.push(vec![
@@ -72,14 +72,14 @@ fn main() -> anyhow::Result<()> {
             dropout_emb: 0.0,
             ..TrainConfig::default()
         };
-        let mut tr = Trainer::new(&rt, &ds, cfg, ART)?;
+        let mut tr = Trainer::new(&sess, &ds, cfg)?;
         tr.store.w_mut().copy_from_slice(fp8.store.w());
         tr.enc_p.copy_from_slice(&fp8.enc_p);
         let mut b = Batcher::new(ds.train.n, tr.batch, 9);
         while let Some((rws, _)) = b.next_batch() {
-            tr.step(&mut rt, &ds, &rws)?;
+            tr.step(&mut sess, &ds, &rws)?;
         }
-        let rep = evaluate(&mut rt, &tr, &ds, 512)?;
+        let rep = evaluate(&mut sess, &tr, &ds, 512)?;
         let [p1, p3, p5] = fmt_p(&rep);
         let (pn, pp1, pp3, pp5, pmtr) = paper[3];
         rows.push(vec![pn.to_string(), p1, p3, p5, format!("{pp1}/{pp3}/{pp5} @ {pmtr} GiB")]);
@@ -95,7 +95,7 @@ fn main() -> anyhow::Result<()> {
             dropout_emb: 0.3,
             ..TrainConfig::default()
         };
-        let res = run_training_cfg(&mut rt, &ds, cfg, 512)?;
+        let res = run_training_cfg(&mut sess, &ds, cfg, 512)?;
         let [p1, p3, p5] = fmt_p(&res.report);
         let (pn, pp1, pp3, pp5, pmtr) = paper[4];
         rows.push(vec![pn.to_string(), p1, p3, p5, format!("{pp1}/{pp3}/{pp5} @ {pmtr} GiB")]);

@@ -5,8 +5,8 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::Precision;
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -24,14 +24,14 @@ fn main() -> anyhow::Result<()> {
         ("lf-amazontitles1.3m", [[28.54, 33.38, 36.14], [30.38, 34.59, 37.09], [26.72, 31.58, 34.46]]),
     ];
     let precisions = [Precision::Renee, Precision::Bf16, Precision::Fp8];
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     for (name, paper) in datasets {
         let ds = dataset(name, 0);
         println!("\n--- {} ---", ds.profile.paper_name);
         let mut rows = Vec::new();
         for (pr, pvals) in precisions.iter().zip(paper.iter()) {
             let chunk = if *pr == Precision::Renee { 2048 } else { 1024 };
-            let res = run_training(&mut rt, &ds, *pr, chunk, epochs, 512)?;
+            let res = run_training(&mut sess, &ds, *pr, chunk, epochs, 512)?;
             let [s1, s3, s5] = fmt_psp(&res.report);
             rows.push(vec![
                 pr.label().to_string(),

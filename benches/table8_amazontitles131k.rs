@@ -4,8 +4,8 @@
 mod common;
 
 use common::*;
+use elmo::Session;
 use elmo::coordinator::Precision;
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("== Table 8: LF-AmazonTitles-131K ==\n");
     let ds = dataset("lf-amazontitles131k", 0);
-    let mut rt = Runtime::new(ART)?;
+    let mut sess = Session::open(ART)?;
     let epochs = epochs_or(5);
     // paper rows: (label, P@1, PSP@1, M_tr, epoch)
     let paper: &[(&str, Precision, f64, f64, f64, &str)] = &[
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for &(pname, pr, pp1, ppsp1, pmtr, ptime) in paper {
         let chunk = if pr == Precision::Renee { 2048 } else { 1024 };
-        let res = run_training(&mut rt, &ds, pr, chunk, epochs, 768)?;
+        let res = run_training(&mut sess, &ds, pr, chunk, epochs, 768)?;
         let [p1, p3, p5] = fmt_p(&res.report);
         let [s1, _, s5] = fmt_psp(&res.report);
         let mem = paper_mem_gib(&ds.profile, method_of(pr), res.trainer_chunks as u64);

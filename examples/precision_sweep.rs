@@ -6,17 +6,15 @@
 //! make artifacts && cargo run --release --example precision_sweep
 //! ```
 
-use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::Session;
+use elmo::coordinator::{evaluate, Precision, TrainConfig};
 use elmo::data::{self, Batcher};
-use elmo::runtime::Runtime;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
-    let art = "artifacts";
-    elmo::coordinator::trainer::require_artifacts(art)?;
     let profile = data::profile("quickstart").unwrap();
     let ds = data::generate(&profile, 3);
-    let mut rt = Runtime::new(art)?;
+    let mut sess = Session::open("artifacts")?;
 
     let mut rows = Vec::new();
     for (e, m) in [(8u32, 7u32), (4, 3), (4, 2), (3, 2)] {
@@ -27,17 +25,17 @@ fn main() -> anyhow::Result<()> {
                 epochs: 2,
                 ..TrainConfig::default()
             };
-            let mut tr = Trainer::new(&rt, &ds, cfg, art)?;
+            let mut tr = sess.trainer(&ds, cfg)?;
             for epoch in 0..2usize {
                 let mut b = Batcher::new(ds.train.n, tr.batch, epoch as u64);
                 while let Some((r, _)) = b.next_batch() {
-                    tr.step(&mut rt, &ds, &r)?;
+                    tr.step(&mut sess, &ds, &r)?;
                     // store the classifier in (E, M): quantize after every
                     // step, exactly like keeping the weights in that format
                     tr.quantize_classifier(e, m, sr);
                 }
             }
-            let rep = evaluate(&mut rt, &tr, &ds, 192)?;
+            let rep = evaluate(&mut sess, &tr, &ds, 192)?;
             rows.push(vec![
                 format!("E{e}M{m}"),
                 if sr { "SR" } else { "RNE" }.to_string(),

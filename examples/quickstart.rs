@@ -5,22 +5,20 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::Session;
+use elmo::coordinator::{evaluate, Precision, TrainConfig};
 use elmo::data;
-use elmo::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let art = "artifacts";
-    elmo::coordinator::trainer::require_artifacts(art)?;
-
     // 1. a dataset: synthetic XMC problem with Zipf label popularity
     let profile = data::profile("quickstart").unwrap();
     let ds = data::generate(&profile, 42);
     let (n, l, _, lbar, _) = ds.stats();
     println!("dataset: {n} instances, {l} labels, {lbar:.1} labels/instance");
 
-    // 2. the runtime: loads AOT-compiled HLO artifacts once
-    let mut rt = Runtime::new(art)?;
+    // 2. the session: owns the PJRT runtime (and, with `.workers(N)`, the
+    //    parallel chunk engine) over the AOT-compiled HLO artifacts
+    let mut sess = Session::open("artifacts")?;
 
     // 3. the trainer: ELMO BF16 policy — SR classifier updates, Kahan
     //    AdamW encoder, chunked classifier pass
@@ -31,11 +29,11 @@ fn main() -> anyhow::Result<()> {
         dropout_emb: 0.3,
         ..TrainConfig::default()
     };
-    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), art)?;
+    let mut tr = sess.trainer(&ds, cfg.clone())?;
     println!("chunks per step: {}", tr.chunks());
 
     for epoch in 0..cfg.epochs {
-        let st = tr.run_epoch(&mut rt, &ds, epoch)?;
+        let st = tr.run_epoch(&mut sess, &ds, epoch)?;
         println!(
             "epoch {epoch}: loss {:.5} ({} steps, {:.1}s)",
             st.mean_loss, st.steps, st.secs
@@ -43,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 4. evaluation: chunked scoring + P@k / PSP@k
-    let rep = evaluate(&mut rt, &tr, &ds, 256)?;
+    let rep = evaluate(&mut sess, &tr, &ds, 256)?;
     println!("{}", rep.summary());
     assert!(rep.p[0] > 5.0, "quickstart should beat chance by >10x");
     println!("quickstart OK");

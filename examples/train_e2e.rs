@@ -10,10 +10,10 @@
 //! make artifacts && cargo run --release --example train_e2e [profile] [epochs]
 //! ```
 
-use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
+use elmo::Session;
+use elmo::coordinator::{evaluate, Precision, TrainConfig};
 use elmo::data::{self, Batcher};
 use elmo::memmodel::{self, MemParams, Method};
-use elmo::runtime::Runtime;
 use elmo::util::gib;
 
 fn main() -> anyhow::Result<()> {
@@ -21,15 +21,13 @@ fn main() -> anyhow::Result<()> {
     let profile_name = args.first().map(|s| s.as_str()).unwrap_or("amazon3m");
     let epochs: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(3);
 
-    let art = "artifacts";
-    elmo::coordinator::trainer::require_artifacts(art)?;
     let profile = data::profile(profile_name).expect("unknown profile");
     let ds = data::generate(&profile, 7);
     let (n, l, nt, lbar, lhat) = ds.stats();
     println!("# end-to-end run: {} (paper: {})", profile.name, profile.paper_name);
     println!("# N={n} L={l} N'={nt} Lbar={lbar:.2} Lhat={lhat:.2}");
 
-    let mut rt = Runtime::new(art)?;
+    let mut sess = Session::open("artifacts")?;
     let cfg = TrainConfig {
         precision: Precision::Bf16,
         chunk_size: 1024,
@@ -39,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         lr_enc: 1e-3,
         ..TrainConfig::default()
     };
-    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), art)?;
+    let mut tr = sess.trainer(&ds, cfg.clone())?;
     println!("# precision={} chunks={} steps/epoch={}",
         cfg.precision.label(), tr.chunks(), ds.train.n / tr.batch);
 
@@ -50,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         let mut batcher = Batcher::new(ds.train.n, tr.batch, epoch as u64);
         let mut window = Vec::new();
         while let Some((rows, _)) = batcher.next_batch() {
-            let (loss, _) = tr.step(&mut rt, &ds, &rows)?;
+            let (loss, _) = tr.step(&mut sess, &ds, &rows)?;
             window.push(loss);
             total_steps += 1;
             if window.len() == 8 {
@@ -64,11 +62,11 @@ fn main() -> anyhow::Result<()> {
                 window.clear();
             }
         }
-        let rep = evaluate(&mut rt, &tr, &ds, 256)?;
+        let rep = evaluate(&mut sess, &tr, &ds, 256)?;
         println!("# epoch {epoch} eval: {}", rep.summary());
     }
 
-    let rep = evaluate(&mut rt, &tr, &ds, 0)?;
+    let rep = evaluate(&mut sess, &tr, &ds, 0)?;
     println!("# final eval ({} rows): {}", rep.n, rep.summary());
 
     // paper-scale memory picture for this dataset

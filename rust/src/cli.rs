@@ -3,13 +3,150 @@
 //! rules are unit-testable: every malformed invocation must produce a
 //! clear error naming the offending flag, never a panic or a silently
 //! ignored argument.
+//!
+//! This module also owns the *subcommand registry* (`SUBCOMMANDS`): one
+//! table naming each subcommand, its summary, and its full flag set.
+//! `main.rs` consumes the table for `reject_unknown`, `elmo help
+//! <subcommand>` renders from it, and a unit test pins the `USAGE` text
+//! to it — so the usage screen can never silently drift from what the
+//! parser actually accepts.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Result};
+use crate::err_config;
+use crate::error::Result;
 
 /// Parsed `--key value` pairs.
 pub type Flags = HashMap<String, String>;
+
+/// One subcommand's registry entry: its name, a one-line summary, and the
+/// exact flag set `reject_unknown` enforces for it.
+pub struct Subcommand {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: &'static [&'static str],
+}
+
+/// The subcommand registry — the single source of truth for flag sets.
+pub const SUBCOMMANDS: &[Subcommand] = &[
+    Subcommand {
+        name: "train",
+        summary: "train one (dataset, precision) config, print loss + P@k",
+        flags: &[
+            "profile",
+            "precision",
+            "epochs",
+            "chunk",
+            "lr-cls",
+            "lr-enc",
+            "dropout-emb",
+            "dropout-cls",
+            "seed",
+            "momentum",
+            "loss-scale",
+            "warmup-steps",
+            "eval-rows",
+            "artifacts",
+            "save",
+            "workers",
+            "config",
+        ],
+    },
+    Subcommand {
+        name: "predict",
+        summary: "load a checkpoint and evaluate P@k through the serving path",
+        flags: &["checkpoint", "profile", "eval-rows", "artifacts", "workers", "config"],
+    },
+    Subcommand {
+        name: "serve-bench",
+        summary: "micro-batched inference throughput/latency benchmark",
+        flags: &["checkpoint", "queries", "max-burst", "k", "seed", "artifacts", "workers", "config"],
+    },
+    Subcommand {
+        name: "datasets",
+        summary: "print Table-1-style statistics of the synthetic profiles",
+        flags: &[],
+    },
+    Subcommand {
+        name: "memtrace",
+        summary: "print the Fig-3-style memory timeline for a method",
+        flags: &["method", "labels", "chunks"],
+    },
+    Subcommand {
+        name: "sweep",
+        summary: "Fig-2a (E, M) bit-width sweep on a small profile",
+        flags: &["profile", "epochs", "artifacts"],
+    },
+];
+
+/// Registry lookup by name.
+pub fn subcommand(name: &str) -> Option<&'static Subcommand> {
+    SUBCOMMANDS.iter().find(|s| s.name == name)
+}
+
+/// `elmo help <subcommand>`: summary + the exact accepted flag set,
+/// rendered from the registry (in sync by construction).
+pub fn help_for(name: &str) -> Option<String> {
+    let sc = subcommand(name)?;
+    let mut out = format!("elmo {} — {}\n\nFLAGS:\n", sc.name, sc.summary);
+    if sc.flags.is_empty() {
+        out.push_str("  (none)\n");
+    } else {
+        for f in sc.flags {
+            out.push_str(&format!("  --{f} VALUE\n"));
+        }
+    }
+    out.push_str("\nSee `elmo help` for the full usage screen.\n");
+    Some(out)
+}
+
+/// `elmo --version`.
+pub fn version() -> String {
+    format!("elmo {}", env!("CARGO_PKG_VERSION"))
+}
+
+/// The full usage screen.  A unit test below pins every `--flag` token in
+/// this text to the `SUBCOMMANDS` registry (both directions), so edits to
+/// one without the other fail the build's test gate.
+pub const USAGE: &str = "\
+elmo — ELMO (ICML 2025) reproduction CLI
+
+USAGE:
+  elmo train   [--config FILE] [--profile NAME]
+               [--precision fp32|bf16|fp8|renee|sampled|fp8-headkahan]
+               [--epochs N] [--chunk LC] [--lr-cls F] [--lr-enc F]
+               [--dropout-emb F] [--dropout-cls F] [--seed N]
+               [--momentum F] [--loss-scale F] [--warmup-steps N]
+               [--eval-rows N] [--artifacts DIR] [--save PATH] [--workers N]
+  elmo predict     --checkpoint PATH [--config FILE] [--profile NAME]
+                   [--eval-rows N] [--artifacts DIR] [--workers N]
+  elmo serve-bench --checkpoint PATH [--config FILE] [--queries N]
+                   [--max-burst N] [--k N] [--seed N] [--artifacts DIR]
+                   [--workers N]
+  elmo datasets
+  elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
+  elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
+  elmo help [SUBCOMMAND]
+  elmo --version
+
+TRAIN FLAGS:
+  --config FILE     declarative RunSpec (`key = value`, docs/CONFIG.md);
+                    explicit CLI flags override file values, so a config
+                    run and its equivalent flag invocation are identical
+  --momentum F      Renee momentum coefficient (default 0; the memory
+                    model charges Renee's momentum buffer regardless)
+  --loss-scale F    Renee initial loss scale (default 512)
+  --warmup-steps N  linear LR warmup steps, encoder + classifier
+                    (default 0; paper Table 9 uses 500-15000 at full scale)
+  --save PATH       write a versioned checkpoint (weights, label
+                    permutation, encoder + optimizer state) after training;
+                    serve it with `elmo predict` / `elmo serve-bench`.
+                    Format: docs/INFERENCE.md
+  --workers N       parallel chunk execution: fan label chunks out to N
+                    worker threads (each with its own PJRT runtime) with a
+                    deterministic in-order reduction — results are
+                    bit-identical to --workers 1 (the serial default)
+";
 
 /// Parse an alternating `--flag value` list.  Rejects non-`--` arguments
 /// (including single-dash and bare words) and flags missing their value.
@@ -20,16 +157,16 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
         let a = &args[i];
         let key = a
             .strip_prefix("--")
-            .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?;
+            .ok_or_else(|| err_config!("expected --flag, got `{a}`"))?;
         if key.is_empty() {
-            return Err(anyhow!("expected --flag, got bare `--`"));
+            return Err(err_config!("expected --flag, got bare `--`"));
         }
         let val = args
             .get(i + 1)
             // a following `--flag` is the next flag, not this one's value
             // (no flag in this CLI takes a `--`-prefixed value)
             .filter(|v| !v.starts_with("--"))
-            .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            .ok_or_else(|| err_config!("--{key} needs a value"))?;
         out.insert(key.to_string(), val.clone());
         i += 2;
     }
@@ -41,13 +178,15 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
 pub fn flag<T: std::str::FromStr>(f: &Flags, k: &str, default: T) -> Result<T> {
     match f.get(k) {
         None => Ok(default),
-        Some(v) => v.parse().map_err(|_| anyhow!("bad value `{v}` for --{k}")),
+        Some(v) => v.parse().map_err(|_| err_config!("bad value `{v}` for --{k}")),
     }
 }
 
 /// A flag that must be present (e.g. `--checkpoint`).
 pub fn require(f: &Flags, k: &str) -> Result<String> {
-    f.get(k).cloned().ok_or_else(|| anyhow!("--{k} is required"))
+    f.get(k)
+        .cloned()
+        .ok_or_else(|| err_config!("--{k} is required"))
 }
 
 /// Reject any flag outside a subcommand's known set — catches typos like
@@ -57,7 +196,7 @@ pub fn reject_unknown(f: &Flags, known: &[&str]) -> Result<()> {
         if !known.contains(&k.as_str()) {
             let mut hint: Vec<&str> = known.to_vec();
             hint.sort_unstable();
-            return Err(anyhow!(
+            return Err(err_config!(
                 "unknown flag --{k} (expected one of: --{})",
                 hint.join(", --")
             ));
@@ -69,6 +208,7 @@ pub fn reject_unknown(f: &Flags, known: &[&str]) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeSet;
 
     fn argv(args: &[&str]) -> Vec<String> {
         args.iter().map(|s| s.to_string()).collect()
@@ -144,5 +284,69 @@ mod tests {
         assert_eq!(require(&f, "k").unwrap(), "5");
         let err = require(&f, "checkpoint").unwrap_err();
         assert!(format!("{err}").contains("--checkpoint is required"));
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let names: BTreeSet<&str> = SUBCOMMANDS.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), SUBCOMMANDS.len(), "duplicate subcommand names");
+        for sc in SUBCOMMANDS {
+            assert_eq!(subcommand(sc.name).unwrap().name, sc.name);
+        }
+        assert!(subcommand("no-such").is_none());
+    }
+
+    /// The doc-drift gate: USAGE must mention exactly the flags the
+    /// registry's `reject_unknown` sets accept (plus the global
+    /// `--version`), and every subcommand by name.
+    #[test]
+    fn usage_stays_in_sync_with_the_subcommand_registry() {
+        let mut known: BTreeSet<&str> = BTreeSet::new();
+        for sc in SUBCOMMANDS {
+            assert!(
+                USAGE.contains(&format!("elmo {}", sc.name)),
+                "USAGE drifted: subcommand `{}` missing",
+                sc.name
+            );
+            for f in sc.flags {
+                known.insert(f);
+                assert!(
+                    USAGE.contains(&format!("--{f}")),
+                    "USAGE drifted: `{}` accepts --{f} but USAGE never mentions it",
+                    sc.name
+                );
+            }
+        }
+        known.insert("version"); // global, not a subcommand flag
+        let mut mentioned: BTreeSet<&str> = BTreeSet::new();
+        for tok in USAGE.split(|c: char| !(c.is_ascii_alphanumeric() || c == '-')) {
+            if let Some(f) = tok.strip_prefix("--") {
+                if !f.is_empty() {
+                    mentioned.insert(f);
+                }
+            }
+        }
+        for f in &mentioned {
+            assert!(
+                known.contains(f),
+                "USAGE drifted: it mentions --{f}, which no subcommand accepts"
+            );
+        }
+    }
+
+    #[test]
+    fn help_renders_from_the_registry() {
+        let h = help_for("predict").unwrap();
+        for f in subcommand("predict").unwrap().flags {
+            assert!(h.contains(&format!("--{f}")), "help missing --{f}:\n{h}");
+        }
+        let h = help_for("datasets").unwrap();
+        assert!(h.contains("(none)"), "flagless subcommand help: {h}");
+        assert!(help_for("bogus").is_none());
+    }
+
+    #[test]
+    fn version_carries_the_crate_version() {
+        assert_eq!(version(), format!("elmo {}", env!("CARGO_PKG_VERSION")));
     }
 }

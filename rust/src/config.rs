@@ -1,0 +1,587 @@
+//! `RunSpec`: a declarative run description parsed from a `key = value`
+//! file — the config-driven front door for experiments.
+//!
+//! Large-label experiments are defined by hyperparameter grids, not
+//! imperative scripts (both ELMO and its Renee precursor ship config-
+//! driven runners); `RunSpec` gives this reproduction the same shape:
+//!
+//! * a hand-rolled **TOML-subset parser** (`key = value` lines, `#`
+//!   comments, optional double quotes around strings — no serde in the
+//!   offline image, see DESIGN.md Substitutions);
+//! * `validate()` centralizes the hyperparameter checks that used to be
+//!   scattered across entrypoints (chunk > 0, finite positive lrs,
+//!   epochs >= 1, dropout ranges, workers >= 1);
+//! * `to_string()` round-trips (`parse(spec.to_string()) == spec`), so a
+//!   run can always serialize the exact config that produced it;
+//! * `apply_flags` layers CLI `--flag value` overrides on top of file
+//!   values — `elmo train --config run.toml --epochs 2` means "the file,
+//!   with epochs forced to 2", and a flag-only invocation is just the
+//!   default spec plus overrides, so `--config` and flags can never
+//!   drift into separate code paths.
+//!
+//! Format documentation and a runnable example live in `docs/CONFIG.md`
+//! and `examples/quickstart.runspec`.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::cli::Flags;
+use crate::coordinator::{Precision, TrainConfig};
+use crate::err_config;
+use crate::error::{Result, ResultExt};
+
+/// Every key a `RunSpec` file (or the matching CLI flag) may set, in the
+/// canonical serialization order.
+pub const KEYS: [&str; 15] = [
+    "profile",
+    "precision",
+    "chunk",
+    "lr_cls",
+    "lr_enc",
+    "dropout_emb",
+    "dropout_cls",
+    "epochs",
+    "seed",
+    "momentum",
+    "loss_scale",
+    "warmup_steps",
+    "eval_rows",
+    "save",
+    "workers",
+];
+
+/// CLI flag name -> RunSpec key (flags are dashed, keys underscored).
+const FLAG_KEYS: [(&str, &str); 15] = [
+    ("profile", "profile"),
+    ("precision", "precision"),
+    ("chunk", "chunk"),
+    ("lr-cls", "lr_cls"),
+    ("lr-enc", "lr_enc"),
+    ("dropout-emb", "dropout_emb"),
+    ("dropout-cls", "dropout_cls"),
+    ("epochs", "epochs"),
+    ("seed", "seed"),
+    ("momentum", "momentum"),
+    ("loss-scale", "loss_scale"),
+    ("warmup-steps", "warmup_steps"),
+    ("eval-rows", "eval_rows"),
+    ("save", "save"),
+    ("workers", "workers"),
+];
+
+/// A declarative run description.  Defaults match the CLI flag defaults,
+/// so "no config file, no flags" and "empty config file" are the same run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub profile: String,
+    pub precision: Precision,
+    /// Label-chunk size Lc (must match a lowered artifact).
+    pub chunk: usize,
+    pub lr_cls: f32,
+    pub lr_enc: f32,
+    pub dropout_emb: f32,
+    pub dropout_cls: f32,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Renee momentum coefficient.
+    pub momentum: f32,
+    /// Renee initial loss scale.
+    pub loss_scale: f32,
+    pub warmup_steps: u64,
+    /// Eval rows after training (0 = the full test split).
+    pub eval_rows: usize,
+    /// Checkpoint path written after training ("" = don't save).
+    pub save: String,
+    /// Chunk-execution parallelism (1 = serial).
+    pub workers: usize,
+    /// Keys explicitly set by a file or flag (drives decisions like
+    /// `elmo predict` preferring the checkpoint's stored profile unless
+    /// one was explicitly chosen).  Not part of equality.
+    explicit: BTreeSet<&'static str>,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            profile: "quickstart".to_string(),
+            precision: Precision::Bf16,
+            chunk: 1024,
+            lr_cls: 0.05,
+            lr_enc: 1e-3,
+            dropout_emb: 0.3,
+            dropout_cls: 0.0,
+            epochs: 5,
+            seed: 0,
+            momentum: 0.0,
+            loss_scale: 512.0,
+            warmup_steps: 0,
+            eval_rows: 512,
+            save: String::new(),
+            workers: 1,
+            explicit: BTreeSet::new(),
+        }
+    }
+}
+
+impl PartialEq for RunSpec {
+    /// Equality over the run-defining fields only — which keys arrived
+    /// explicitly is provenance, not configuration.  Compared through the
+    /// canonical serialization (which `serialization_covers_every_key`
+    /// proves covers every key), so a future field cannot be silently
+    /// forgotten in a hand-maintained comparison list.
+    fn eq(&self, other: &Self) -> bool {
+        self.to_string() == other.to_string()
+    }
+}
+
+/// Strip a trailing comment.  A `#` starts a comment only at the start
+/// of the line or after whitespace (the TOML rule adapted to unquoted
+/// values), so `save = model#v2.ckpt` keeps its `#` while
+/// `chunk = 512  # note` is stripped.  Slicing at `i` is safe: `#` is
+/// ASCII, so it always sits on a char boundary.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'#' && (i == 0 || b[i - 1] == b' ' || b[i - 1] == b'\t') {
+            return &line[..i];
+        }
+    }
+    line
+}
+
+/// Strip optional double quotes around a string value.  A value that
+/// starts or ends with a quote but isn't fully quoted is an error, not a
+/// silent pass-through — the classic cause is a whitespace-then-`#`
+/// sequence inside a quoted string (`save = "model #v2"`), which the
+/// comment stripper truncated.
+fn unquote(v: &str) -> Result<&str> {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(&v[1..v.len() - 1])
+    } else if v.starts_with('"') || v.ends_with('"') {
+        Err(err_config!(
+            "unterminated quoted value `{v}` (note: a `#` preceded by whitespace \
+             starts a comment and may have truncated it; see docs/CONFIG.md)"
+        ))
+    } else {
+        Ok(v)
+    }
+}
+
+fn num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T> {
+    val.parse()
+        .map_err(|_| err_config!("bad value `{val}` for `{key}`"))
+}
+
+impl RunSpec {
+    /// Parse the TOML-subset text.  Unknown keys, duplicate keys, and
+    /// unparsable values are errors naming the offending line.
+    pub fn parse(text: &str) -> Result<RunSpec> {
+        let mut spec = RunSpec::default();
+        let mut seen: BTreeSet<&'static str> = BTreeSet::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                err_config!("config line {}: expected `key = value`, got `{line}`", ln + 1)
+            })?;
+            let key = k.trim();
+            let val = unquote(v.trim())
+                .with_context(|| format!("config line {}", ln + 1))?;
+            let canon = KEYS.iter().copied().find(|&s| s == key).ok_or_else(|| {
+                err_config!(
+                    "config line {}: unknown key `{key}` (expected one of: {})",
+                    ln + 1,
+                    KEYS.join(", ")
+                )
+            })?;
+            if !seen.insert(canon) {
+                return Err(err_config!("config line {}: duplicate key `{key}`", ln + 1));
+            }
+            spec.set(canon, val)
+                .with_context(|| format!("config line {}", ln + 1))?;
+        }
+        Ok(spec)
+    }
+
+    /// Read and parse a config file.
+    pub fn load(path: &str) -> Result<RunSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err_config!("reading config `{path}`: {e}"))?;
+        Self::parse(&text).with_context(|| format!("config `{path}`"))
+    }
+
+    /// Set one field from its string form; `key` must be canonical
+    /// (a member of `KEYS`).
+    fn set(&mut self, key: &'static str, val: &str) -> Result<()> {
+        match key {
+            "profile" => self.profile = val.to_string(),
+            "precision" => self.precision = Precision::parse(val)?,
+            "chunk" => self.chunk = num(key, val)?,
+            "lr_cls" => self.lr_cls = num(key, val)?,
+            "lr_enc" => self.lr_enc = num(key, val)?,
+            "dropout_emb" => self.dropout_emb = num(key, val)?,
+            "dropout_cls" => self.dropout_cls = num(key, val)?,
+            "epochs" => self.epochs = num(key, val)?,
+            "seed" => self.seed = num(key, val)?,
+            "momentum" => self.momentum = num(key, val)?,
+            "loss_scale" => self.loss_scale = num(key, val)?,
+            "warmup_steps" => self.warmup_steps = num(key, val)?,
+            "eval_rows" => self.eval_rows = num(key, val)?,
+            "save" => self.save = val.to_string(),
+            "workers" => self.workers = num(key, val)?,
+            other => return Err(err_config!("unknown key `{other}`")),
+        }
+        self.explicit.insert(key);
+        Ok(())
+    }
+
+    /// True when `key` was set by a config file or CLI flag (rather than
+    /// left at its default).
+    pub fn is_explicit(&self, key: &str) -> bool {
+        self.explicit.contains(key)
+    }
+
+    /// Layer CLI flag values over this spec (flags win over file values).
+    /// Non-RunSpec flags (`--checkpoint`, `--artifacts`, `--config`, ...)
+    /// are ignored here; `cli::reject_unknown` has already vetted them.
+    pub fn apply_flags(&mut self, f: &Flags) -> Result<()> {
+        for (flag, key) in FLAG_KEYS {
+            if let Some(v) = f.get(flag) {
+                self.set(key, v).with_context(|| format!("flag --{flag}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The centralized hyperparameter validation (formerly scattered
+    /// across `main.rs` and the bench harnesses).
+    pub fn validate(&self) -> Result<()> {
+        if self.profile.is_empty() {
+            return Err(err_config!("`profile` must not be empty"));
+        }
+        if self.chunk == 0 {
+            return Err(err_config!("`chunk` must be > 0 (got 0)"));
+        }
+        if self.epochs == 0 {
+            return Err(err_config!("`epochs` must be >= 1 (got 0)"));
+        }
+        if self.workers == 0 {
+            return Err(err_config!("`workers` must be >= 1 (1 = serial)"));
+        }
+        // zero is a legitimate learning rate (lr_enc = 0 is the paper's
+        // Table-6 frozen-encoder refinement protocol); negatives and
+        // non-finite values are not
+        for (key, v) in [("lr_cls", self.lr_cls), ("lr_enc", self.lr_enc)] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(err_config!("`{key}` must be finite and >= 0 (got {v})"));
+            }
+        }
+        for (key, v) in [
+            ("dropout_emb", self.dropout_emb),
+            ("dropout_cls", self.dropout_cls),
+        ] {
+            if !(0.0..1.0).contains(&v) {
+                return Err(err_config!("`{key}` must be in [0, 1) (got {v})"));
+            }
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            return Err(err_config!("`momentum` must be in [0, 1) (got {})", self.momentum));
+        }
+        if !self.loss_scale.is_finite() || self.loss_scale <= 0.0 {
+            return Err(err_config!(
+                "`loss_scale` must be finite and > 0 (got {})",
+                self.loss_scale
+            ));
+        }
+        Ok(())
+    }
+
+    /// Project the training-relevant fields into a `TrainConfig` (the
+    /// remaining `TrainConfig` knobs keep their defaults).
+    pub fn to_train_config(&self) -> TrainConfig {
+        TrainConfig {
+            precision: self.precision,
+            chunk_size: self.chunk,
+            lr_cls: self.lr_cls,
+            lr_enc: self.lr_enc,
+            dropout_emb: self.dropout_emb,
+            dropout_cls: self.dropout_cls,
+            epochs: self.epochs,
+            seed: self.seed,
+            momentum: self.momentum,
+            init_loss_scale: self.loss_scale,
+            warmup_steps: self.warmup_steps,
+            ..TrainConfig::default()
+        }
+    }
+}
+
+impl fmt::Display for RunSpec {
+    /// Canonical serialization: every key, in `KEYS` order, one per line.
+    /// `RunSpec::parse(spec.to_string())` reproduces `spec` exactly.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "# ELMO RunSpec (format: docs/CONFIG.md)")?;
+        writeln!(f, "profile = \"{}\"", self.profile)?;
+        writeln!(f, "precision = \"{}\"", self.precision.key())?;
+        writeln!(f, "chunk = {}", self.chunk)?;
+        writeln!(f, "lr_cls = {}", self.lr_cls)?;
+        writeln!(f, "lr_enc = {}", self.lr_enc)?;
+        writeln!(f, "dropout_emb = {}", self.dropout_emb)?;
+        writeln!(f, "dropout_cls = {}", self.dropout_cls)?;
+        writeln!(f, "epochs = {}", self.epochs)?;
+        writeln!(f, "seed = {}", self.seed)?;
+        writeln!(f, "momentum = {}", self.momentum)?;
+        writeln!(f, "loss_scale = {}", self.loss_scale)?;
+        writeln!(f, "warmup_steps = {}", self.warmup_steps)?;
+        writeln!(f, "eval_rows = {}", self.eval_rows)?;
+        writeln!(f, "save = \"{}\"", self.save)?;
+        writeln!(f, "workers = {}", self.workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::parse_flags;
+    use crate::error::Error;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn empty_text_is_the_default_spec() {
+        assert_eq!(RunSpec::parse("").unwrap(), RunSpec::default());
+        assert_eq!(RunSpec::parse("\n\n").unwrap(), RunSpec::default());
+    }
+
+    #[test]
+    fn parses_comments_whitespace_and_quotes() {
+        let text = "\
+# full-line comment
+  profile = \"eurlex4k\"   # trailing comment
+
+precision=fp8
+  chunk   =  512
+lr_cls = 0.1
+";
+        let spec = RunSpec::parse(text).unwrap();
+        assert_eq!(spec.profile, "eurlex4k");
+        assert_eq!(spec.precision, Precision::Fp8);
+        assert_eq!(spec.chunk, 512);
+        assert_eq!(spec.lr_cls, 0.1);
+        // untouched keys keep their defaults
+        assert_eq!(spec.epochs, RunSpec::default().epochs);
+        assert!(spec.is_explicit("chunk"));
+        assert!(!spec.is_explicit("epochs"));
+    }
+
+    #[test]
+    fn duplicate_keys_are_an_error_naming_the_line() {
+        let err = RunSpec::parse("epochs = 2\nepochs = 3\n").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let msg = format!("{err}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("duplicate key `epochs`"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_keys_are_an_error_with_the_known_set() {
+        let err = RunSpec::parse("epoch = 2\n").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown key `epoch`"), "{msg}");
+        assert!(msg.contains("epochs"), "hint should list valid keys: {msg}");
+    }
+
+    #[test]
+    fn bad_numerics_are_an_error_naming_key_and_value() {
+        for (line, key) in [
+            ("chunk = twelve", "chunk"),
+            ("lr_cls = 0.05x", "lr_cls"),
+            ("epochs = -1", "epochs"),
+            ("seed = 1.5", "seed"),
+            ("precision = int4", "int4"),
+        ] {
+            let err = RunSpec::parse(line).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{line}: {err}");
+            assert!(format!("{err}").contains(key), "{line}: {err}");
+        }
+    }
+
+    #[test]
+    fn missing_equals_is_an_error() {
+        let err = RunSpec::parse("just some words\n").unwrap_err();
+        assert!(format!("{err}").contains("expected `key = value`"), "{err}");
+    }
+
+    #[test]
+    fn hash_attached_to_a_value_is_part_of_the_value() {
+        // `#` starts a comment only after whitespace (TOML rule), so
+        // paths and names containing `#` survive, quoted or not
+        let spec = RunSpec::parse("save = \"model#v2.ckpt\"\n").unwrap();
+        assert_eq!(spec.save, "model#v2.ckpt");
+        let spec = RunSpec::parse("save = model#v2.ckpt\n").unwrap();
+        assert_eq!(spec.save, "model#v2.ckpt");
+        let spec = RunSpec::parse("profile = \"eurlex#1\"\n").unwrap();
+        assert_eq!(spec.profile, "eurlex#1");
+    }
+
+    #[test]
+    fn comment_truncation_inside_quotes_errors_instead_of_corrupting() {
+        // ` #` inside a quoted value IS stripped as a comment, leaving an
+        // unterminated quote — this must be a loud error, never a save
+        // path of `"model`
+        let err = RunSpec::parse("save = \"model #v2.ckpt\"\n").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unterminated quoted value"), "{msg}");
+        assert!(msg.contains("line 1"), "{msg}");
+    }
+
+    #[test]
+    fn train_subcommand_registry_accepts_every_runspec_flag() {
+        // pins cli::SUBCOMMANDS["train"] to FLAG_KEYS so a new RunSpec key
+        // can never work via --config but fail reject_unknown as a flag
+        let train = crate::cli::subcommand("train").unwrap();
+        for (flag, _) in FLAG_KEYS {
+            assert!(
+                train.flags.contains(&flag),
+                "cli registry drifted: RunSpec flag --{flag} is not accepted by `elmo train`"
+            );
+        }
+    }
+
+    #[test]
+    fn cli_flags_override_file_values() {
+        let mut spec = RunSpec::parse("epochs = 9\nchunk = 256\nprofile = \"wiki500k\"\n").unwrap();
+        let f = parse_flags(&argv(&["--epochs", "2", "--lr-cls", "0.2"])).unwrap();
+        spec.apply_flags(&f).unwrap();
+        assert_eq!(spec.epochs, 2, "flag wins over file");
+        assert_eq!(spec.chunk, 256, "file value survives when no flag is given");
+        assert_eq!(spec.profile, "wiki500k");
+        assert_eq!(spec.lr_cls, 0.2, "flag sets keys the file never mentioned");
+        assert!(spec.is_explicit("lr_cls"));
+        // a config-equivalent flag invocation produces the identical spec
+        let mut flag_only = RunSpec::default();
+        let f = parse_flags(&argv(&[
+            "--epochs", "2", "--chunk", "256", "--profile", "wiki500k", "--lr-cls", "0.2",
+        ]))
+        .unwrap();
+        flag_only.apply_flags(&f).unwrap();
+        assert_eq!(spec, flag_only);
+    }
+
+    #[test]
+    fn bad_flag_values_name_the_flag() {
+        let mut spec = RunSpec::default();
+        let f = parse_flags(&argv(&["--loss-scale", "huge"])).unwrap();
+        let err = spec.apply_flags(&f).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--loss-scale"), "{msg}");
+    }
+
+    #[test]
+    fn to_string_round_trips() {
+        let mut spec = RunSpec::default();
+        spec.profile = "amazon670k".to_string();
+        spec.precision = Precision::Fp8HeadKahan;
+        spec.chunk = 2048;
+        spec.lr_cls = 0.025;
+        spec.lr_enc = 3e-4;
+        spec.dropout_emb = 0.4;
+        spec.epochs = 7;
+        spec.seed = 1234;
+        spec.momentum = 0.9;
+        spec.loss_scale = 1024.0;
+        spec.warmup_steps = 500;
+        spec.eval_rows = 0;
+        spec.save = "out/model.ckpt".to_string();
+        spec.workers = 4;
+        let text = spec.to_string();
+        let back = RunSpec::parse(&text).unwrap();
+        assert_eq!(back, spec, "round-trip drifted:\n{text}");
+        // every precision round-trips through its key
+        for p in [
+            Precision::Fp32,
+            Precision::Bf16,
+            Precision::Fp8,
+            Precision::Renee,
+            Precision::Sampled,
+            Precision::Fp8HeadKahan,
+        ] {
+            spec.precision = p;
+            assert_eq!(RunSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn serialization_covers_every_key() {
+        let text = RunSpec::default().to_string();
+        for key in KEYS {
+            assert!(
+                text.lines().any(|l| l.starts_with(&format!("{key} = "))),
+                "to_string lost key `{key}`:\n{text}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_learning_rates_stay_valid() {
+        // lr_enc = 0 is the Table-6 frozen-encoder refinement protocol
+        // (benches/table6_recovery.rs); it must not be rejected
+        let spec = RunSpec::parse("lr_enc = 0\nlr_cls = 0.01\n").unwrap();
+        assert!(spec.validate().is_ok());
+        let spec = RunSpec::parse("lr_cls = 0\n").unwrap();
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_centralizes_the_hyperparameter_checks() {
+        assert!(RunSpec::default().validate().is_ok());
+        for (line, needle) in [
+            ("chunk = 0", "`chunk`"),
+            ("epochs = 0", "`epochs`"),
+            ("workers = 0", "`workers`"),
+            ("lr_cls = inf", "`lr_cls`"),
+            ("lr_cls = NaN", "`lr_cls`"),
+            ("lr_enc = -0.001", "`lr_enc`"),
+            ("dropout_emb = 1.0", "`dropout_emb`"),
+            ("dropout_cls = -0.1", "`dropout_cls`"),
+            ("momentum = 1.5", "`momentum`"),
+            ("loss_scale = 0", "`loss_scale`"),
+            ("profile = \"\"", "`profile`"),
+        ] {
+            let spec = RunSpec::parse(line).unwrap();
+            let err = spec.validate().unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{line}: {err}");
+            assert!(format!("{err}").contains(needle), "{line}: {err}");
+        }
+    }
+
+    #[test]
+    fn train_config_projection_maps_every_shared_knob() {
+        let spec = RunSpec::parse(
+            "precision = renee\nchunk = 2048\nlr_cls = 0.2\nlr_enc = 0.002\n\
+             dropout_emb = 0.1\ndropout_cls = 0.05\nepochs = 3\nseed = 42\n\
+             momentum = 0.9\nloss_scale = 256\nwarmup_steps = 100\n",
+        )
+        .unwrap();
+        let cfg = spec.to_train_config();
+        assert_eq!(cfg.precision, Precision::Renee);
+        assert_eq!(cfg.chunk_size, 2048);
+        assert_eq!(cfg.lr_cls, 0.2);
+        assert_eq!(cfg.lr_enc, 0.002);
+        assert_eq!(cfg.dropout_emb, 0.1);
+        assert_eq!(cfg.dropout_cls, 0.05);
+        assert_eq!(cfg.epochs, 3);
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.momentum, 0.9);
+        assert_eq!(cfg.init_loss_scale, 256.0);
+        assert_eq!(cfg.warmup_steps, 100);
+        // unshared knobs stay at TrainConfig defaults
+        let d = TrainConfig::default();
+        assert_eq!(cfg.shortlist, d.shortlist);
+        assert_eq!(cfg.wd_enc, d.wd_enc);
+    }
+}

@@ -7,13 +7,14 @@
 //! `Predictor` are two callers of one scoring code path, so a model
 //! reloaded from a checkpoint scores bit-identically to the in-memory one.
 
-use anyhow::{bail, Result};
-
 use crate::data::{propensity::propensities, Dataset, SEQ_LEN};
+use crate::err_shape;
+use crate::error::Result;
 use crate::infer::predict::embed_inference;
 use crate::infer::scanner::{ChunkScanner, ClassifierView};
 use crate::metrics::EvalAccum;
-use crate::runtime::{to_vec_f32, Arg, ExecCtx, Runtime};
+use crate::runtime::{to_vec_f32, Arg};
+use crate::session::Session;
 
 use super::trainer::Trainer;
 
@@ -52,20 +53,11 @@ pub struct EvalModel<'a> {
 }
 
 /// Evaluate the trainer's classifier on the test split.
-/// `max_rows` bounds eval cost for inner-loop sweeps (0 = all).
+/// `max_rows` bounds eval cost for inner-loop sweeps (0 = all).  The
+/// chunk scan fans out to the session's pool when one exists
+/// (bit-identical fold order).
 pub fn evaluate(
-    rt: &mut Runtime,
-    tr: &Trainer,
-    ds: &Dataset,
-    max_rows: usize,
-) -> Result<EvalReport> {
-    evaluate_ex(&mut ExecCtx::serial(rt), tr, ds, max_rows)
-}
-
-/// `evaluate` with an explicit execution context: the chunk scan fans out
-/// to `ex.pool` when one is present (bit-identical fold order).
-pub fn evaluate_ex(
-    ex: &mut ExecCtx,
+    sess: &mut Session,
     tr: &Trainer,
     ds: &Dataset,
     max_rows: usize,
@@ -75,36 +67,29 @@ pub fn evaluate_ex(
         enc_art: format!("enc_fwd_{}", tr.enc_cfg()),
         cls: ClassifierView::of_store(&tr.store),
     };
-    evaluate_model_ex(ex, &m, ds, max_rows)
+    evaluate_model(sess, &m, ds, max_rows)
 }
 
 /// Evaluate any `EvalModel` on a dataset's test split: embed batches with
 /// dropout off, scan label chunks through the shared `ChunkScanner`, fold
-/// P@{1,3,5} / PSP@{1,3,5} over the valid rows.
+/// P@{1,3,5} / PSP@{1,3,5} over the valid rows.  One code path: the
+/// session's worker count decides whether the chunk scan is pooled.
 pub fn evaluate_model(
-    rt: &mut Runtime,
+    sess: &mut Session,
     m: &EvalModel,
     ds: &Dataset,
     max_rows: usize,
 ) -> Result<EvalReport> {
-    evaluate_model_ex(&mut ExecCtx::serial(rt), m, ds, max_rows)
-}
-
-/// `evaluate_model` with an explicit execution context (chunk pool).
-pub fn evaluate_model_ex(
-    ex: &mut ExecCtx,
-    m: &EvalModel,
-    ds: &Dataset,
-    max_rows: usize,
-) -> Result<EvalReport> {
+    let mut ctx = sess.ctx();
+    let ex = &mut ctx;
     let t0 = std::time::Instant::now();
     let b = ex.rt.config().batch;
     if ds.profile.labels != m.cls.labels {
-        bail!(
+        return Err(err_shape!(
             "model scores {} labels but the dataset has {}",
             m.cls.labels,
             ds.profile.labels
-        );
+        ));
     }
     let prop = propensities(&ds.label_freq, ds.train.n);
     let scanner = ChunkScanner::new(5);
@@ -124,8 +109,8 @@ pub fn evaluate_model_ex(
         let emb = embed_inference(ex.rt, &m.enc_art, m.enc_p, &tokens)?;
 
         // stream label chunks through the shared scanner (pooled when the
-        // caller supplied workers)
-        let topks = scanner.scan_ex(ex, &m.cls, &emb, b)?;
+        // session has workers)
+        let topks = scanner.scan(ex, &m.cls, &emb, b)?;
 
         for bi in 0..valid {
             let r = rows[bi];
@@ -148,18 +133,19 @@ pub fn evaluate_model_ex(
 /// diagnostic executable (Fig 2b / Fig 5).  Uses the first 2048 classifier
 /// rows and one training batch.
 pub fn diagnostics_hist(
-    rt: &mut Runtime,
+    sess: &mut Session,
     tr: &Trainer,
     ds: &Dataset,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let rt = sess.runtime();
     let b = tr.batch;
     let d = tr.store.d;
     let lc = 2048.min(tr.store.l_pad);
     if lc != 2048 {
-        bail!(
+        return Err(err_shape!(
             "grad_hist artifact needs >= 2048 labels (have {})",
             tr.store.l_pad
-        );
+        ));
     }
     let rows: Vec<u32> = (0..b as u32).collect();
     let tokens = tr.batch_tokens(ds, &rows);

@@ -31,6 +31,6 @@ pub mod eval;
 pub mod schedule;
 pub mod trainer;
 
-pub use eval::{evaluate, evaluate_ex, evaluate_model, evaluate_model_ex, EvalModel, EvalReport};
+pub use eval::{evaluate, evaluate_model, EvalModel, EvalReport};
 pub use schedule::LrSchedule;
 pub use trainer::{EpochStats, Precision, TrainConfig, Trainer};

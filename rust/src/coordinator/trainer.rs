@@ -10,15 +10,16 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::data::{Dataset, SEQ_LEN};
+use crate::err_shape;
+use crate::error::{Result, ResultExt};
 use crate::numerics::{self, quantize_param, quantize_rne, BF16, E4M3};
 use crate::policy::{
     self, Bf16Policy, Fp32Policy, Fp8HeadKahanPolicy, Fp8Policy, ReneePolicy, SampledPolicy,
     StepCtx, UpdatePolicy,
 };
-use crate::runtime::{to_vec_f32, Arg, ExecCtx, Runtime};
+use crate::runtime::{to_vec_f32, Arg};
+use crate::session::Session;
 use crate::store::WeightStore;
 use crate::util::RingF32;
 
@@ -152,8 +153,11 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(rt: &Runtime, ds: &Dataset, cfg: TrainConfig, art_dir: &str) -> Result<Self> {
-        let mc = rt.config();
+    /// Construct a trainer bound to `sess`'s manifest and artifacts
+    /// directory (also reachable as `Session::trainer`).
+    pub fn new(sess: &Session, ds: &Dataset, cfg: TrainConfig) -> Result<Self> {
+        let mc = sess.config();
+        let art_dir = sess.artifacts_dir();
         let d = mc.d;
         let batch = mc.batch;
         let l = ds.profile.labels;
@@ -166,7 +170,7 @@ impl Trainer {
         let enc_p = crate::runtime::load_f32_bin(format!("{art_dir}/{init_file}"))
             .context("loading encoder init (run `make artifacts`)")?;
         if enc_p.len() != mc.psize {
-            bail!("encoder init size {} != psize {}", enc_p.len(), mc.psize);
+            return Err(err_shape!("encoder init size {} != psize {}", enc_p.len(), mc.psize));
         }
 
         // classifier zero-init (Renee-style); zeros are on every grid.
@@ -210,16 +214,22 @@ impl Trainer {
         self.cfg.enc_override.unwrap_or(self.cfg.precision.enc_cfg())
     }
 
-    /// Compile every executable this config will touch, so epoch timings
-    /// measure steady-state steps rather than first-use PJRT compilation.
-    pub fn warmup(&self, rt: &mut Runtime) -> Result<()> {
+    /// Every executable this config will touch, split into the encoder
+    /// pair (runtime-only) and the policy's classifier kernels (pooled
+    /// when the policy is chunk-shaped).  Feed to `Session::prepare` so
+    /// epoch timings measure steady-state steps rather than first-use
+    /// PJRT compilation — workers compile only the chunk kernels they
+    /// actually execute.
+    pub fn required_kernels(&self) -> crate::session::KernelSet {
         let enc = self.enc_cfg();
-        rt.prepare(&format!("enc_fwd_{enc}"))?;
-        rt.prepare(&format!("enc_bwd_{enc}"))?;
-        for art in self.policy.artifacts(self.cfg.chunk_size) {
-            rt.prepare(&art)?;
+        let mut host = vec![format!("enc_fwd_{enc}"), format!("enc_bwd_{enc}")];
+        let mut chunk = self.policy.artifacts(self.cfg.chunk_size);
+        if !self.policy.chunk_shaped() {
+            // Sampled runs its kernel once per step on the coordinator
+            // runtime; nothing ever fans out to pool workers
+            host.append(&mut chunk);
         }
-        Ok(())
+        crate::session::KernelSet { host, chunk }
     }
 
     /// Gather a batch's tokens into the [b, s] i32 layout.
@@ -252,21 +262,16 @@ impl Trainer {
     }
 
     /// One training step over `rows`; returns (mean BCE loss, overflowed).
-    /// Serial wrapper over `step_ex` (no chunk pool).
-    pub fn step(&mut self, rt: &mut Runtime, ds: &Dataset, rows: &[u32]) -> Result<(f64, bool)> {
-        self.step_ex(&mut ExecCtx::serial(rt), ds, rows)
-    }
-
-    /// One training step with an explicit execution context: the chunk
-    /// loop fans out to `ex.pool` when present (bit-identical to serial —
-    /// see `policy::run_step_pooled`), while the encoder forward/backward
-    /// and any non-chunk-shaped policy stay on `ex.rt`.
-    pub fn step_ex(
-        &mut self,
-        ex: &mut ExecCtx,
-        ds: &Dataset,
-        rows: &[u32],
-    ) -> Result<(f64, bool)> {
+    ///
+    /// One code path for serial and pooled execution: the chunk loop fans
+    /// out to the session's pool when one exists (bit-identical to a
+    /// pool-less session — see `policy::run_step_pooled` and
+    /// `rust/tests/parallel_parity.rs`), while the encoder
+    /// forward/backward and any non-chunk-shaped policy stay on the
+    /// session runtime.
+    pub fn step(&mut self, sess: &mut Session, ds: &Dataset, rows: &[u32]) -> Result<(f64, bool)> {
+        let mut ectx = sess.ctx();
+        let ex = &mut ectx;
         debug_assert_eq!(rows.len(), self.batch);
         let seed = self.step_seed();
         self.step_count += 1;
@@ -352,15 +357,12 @@ impl Trainer {
         Ok((out.loss, false))
     }
 
-    /// One full epoch; shuffles, steps every batch, returns stats.
-    pub fn run_epoch(&mut self, rt: &mut Runtime, ds: &Dataset, epoch: usize) -> Result<EpochStats> {
-        self.run_epoch_ex(&mut ExecCtx::serial(rt), ds, epoch)
-    }
-
-    /// One full epoch with an explicit execution context (chunk pool).
-    pub fn run_epoch_ex(
+    /// One full epoch; shuffles, steps every batch, returns stats.  Like
+    /// `step`, one code path: the session's worker count decides whether
+    /// chunks fan out.
+    pub fn run_epoch(
         &mut self,
-        ex: &mut ExecCtx,
+        sess: &mut Session,
         ds: &Dataset,
         epoch: usize,
     ) -> Result<EpochStats> {
@@ -371,7 +373,7 @@ impl Trainer {
         let mut loss_sum = 0.0;
         let trunc0 = self.truncated_positives;
         while let Some((rows, _valid)) = batcher.next_batch() {
-            let (loss, overflowed) = self.step_ex(ex, ds, &rows)?;
+            let (loss, overflowed) = self.step(sess, ds, &rows)?;
             loss_sum += loss;
             stats.steps += 1;
             if overflowed {
@@ -442,12 +444,3 @@ impl Trainer {
     }
 }
 
-/// Error helper shared by the bin/bench frontends.
-pub fn require_artifacts(dir: &str) -> Result<()> {
-    if !std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
-        return Err(anyhow!(
-            "artifacts not found in `{dir}` — run `make artifacts` first"
-        ));
-    }
-    Ok(())
-}

@@ -1,0 +1,183 @@
+//! Typed error taxonomy for the elmo library crate.
+//!
+//! Every fallible library path returns `elmo::Error` (via the crate-wide
+//! `elmo::Result` alias) instead of `anyhow::Error`, so callers can match
+//! on *what went wrong* — a bad hyperparameter vs. a missing artifacts
+//! directory vs. a corrupt checkpoint — rather than string-scraping.  The
+//! binary and the test/bench harnesses may still use `anyhow` as
+//! consumers: `Error` implements `std::error::Error + Send + Sync`, so it
+//! flows through `?` into `anyhow::Result` unchanged.
+//!
+//! Variants (one per failure domain, each carrying a human-readable
+//! message with context):
+//!
+//! * `Config`     — invalid configuration: hyperparameters, `RunSpec`
+//!   files, CLI flag values (`cli`, `config`, `SessionBuilder` knobs);
+//! * `Artifacts`  — artifact registry problems: missing directory, bad
+//!   manifest, unknown kernel names, unreadable init binaries;
+//! * `Checkpoint` — checkpoint serialization, IO, and validation;
+//! * `Runtime`    — PJRT/execution-engine failures: client construction,
+//!   compilation, upload/execute/fetch, worker-pool channels;
+//! * `Shape`      — host-side geometry mismatches: tensor lengths, chunk
+//!   coverage, label permutations, batch widths.
+
+use std::fmt;
+
+/// Crate-wide result alias (`elmo::Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// The library's typed error.  See the module docs for the taxonomy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// Invalid configuration (hyperparameters, RunSpec, CLI values).
+    Config(String),
+    /// Artifact registry problems (missing dir, manifest, kernel lookup).
+    Artifacts(String),
+    /// Checkpoint serialization / IO / validation failures.
+    Checkpoint(String),
+    /// PJRT / execution-engine failures (compile, execute, pool).
+    Runtime(String),
+    /// Host-side geometry mismatches (lengths, shapes, permutations).
+    Shape(String),
+}
+
+impl Error {
+    /// Stable lowercase tag for the variant (used by `Display` and logs).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::Config(_) => "config",
+            Error::Artifacts(_) => "artifacts",
+            Error::Checkpoint(_) => "checkpoint",
+            Error::Runtime(_) => "runtime",
+            Error::Shape(_) => "shape",
+        }
+    }
+
+    /// The message carried by the variant.
+    pub fn message(&self) -> &str {
+        match self {
+            Error::Config(m)
+            | Error::Artifacts(m)
+            | Error::Checkpoint(m)
+            | Error::Runtime(m)
+            | Error::Shape(m) => m,
+        }
+    }
+
+    /// Prepend context to the message, preserving the variant — the typed
+    /// sibling of `anyhow::Context`.
+    pub fn context(self, ctx: impl AsRef<str>) -> Error {
+        let msg = format!("{}: {}", ctx.as_ref(), self.message());
+        match self {
+            Error::Config(_) => Error::Config(msg),
+            Error::Artifacts(_) => Error::Artifacts(msg),
+            Error::Checkpoint(_) => Error::Checkpoint(msg),
+            Error::Runtime(_) => Error::Runtime(msg),
+            Error::Shape(_) => Error::Shape(msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.kind(), self.message())
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Context helpers on `elmo::Result`, mirroring the `anyhow` idiom so the
+/// de-anyhow migration stays a local substitution at each call site.
+pub trait ResultExt<T> {
+    /// Prepend static context to an error, preserving its variant.
+    fn context(self, ctx: impl AsRef<str>) -> Result<T>;
+    /// Prepend lazily-built context to an error, preserving its variant.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T> ResultExt<T> for Result<T> {
+    fn context(self, ctx: impl AsRef<str>) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// `Error::Config` with `format!` arguments.
+#[macro_export]
+macro_rules! err_config {
+    ($($arg:tt)*) => { $crate::error::Error::Config(format!($($arg)*)) };
+}
+
+/// `Error::Artifacts` with `format!` arguments.
+#[macro_export]
+macro_rules! err_artifacts {
+    ($($arg:tt)*) => { $crate::error::Error::Artifacts(format!($($arg)*)) };
+}
+
+/// `Error::Checkpoint` with `format!` arguments.
+#[macro_export]
+macro_rules! err_checkpoint {
+    ($($arg:tt)*) => { $crate::error::Error::Checkpoint(format!($($arg)*)) };
+}
+
+/// `Error::Runtime` with `format!` arguments.
+#[macro_export]
+macro_rules! err_runtime {
+    ($($arg:tt)*) => { $crate::error::Error::Runtime(format!($($arg)*)) };
+}
+
+/// `Error::Shape` with `format!` arguments.
+#[macro_export]
+macro_rules! err_shape {
+    ($($arg:tt)*) => { $crate::error::Error::Shape(format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_kind_and_message() {
+        let e = Error::Config("chunk must be > 0".into());
+        assert_eq!(format!("{e}"), "config: chunk must be > 0");
+        assert_eq!(e.kind(), "config");
+        assert_eq!(e.message(), "chunk must be > 0");
+    }
+
+    #[test]
+    fn context_preserves_the_variant() {
+        let e = Error::Checkpoint("bad magic".into()).context("loading model.bin");
+        assert!(matches!(e, Error::Checkpoint(_)));
+        assert_eq!(format!("{e}"), "checkpoint: loading model.bin: bad magic");
+    }
+
+    #[test]
+    fn result_ext_contexts_compose() {
+        let r: Result<()> = Err(err_shape!("{} != {}", 3, 4));
+        let r = r.with_context(|| "validating view".to_string());
+        let e = r.unwrap_err();
+        assert_eq!(e.kind(), "shape");
+        assert_eq!(e.message(), "validating view: 3 != 4");
+    }
+
+    #[test]
+    fn macros_build_each_variant() {
+        assert!(matches!(err_config!("x"), Error::Config(_)));
+        assert!(matches!(err_artifacts!("x"), Error::Artifacts(_)));
+        assert!(matches!(err_checkpoint!("x"), Error::Checkpoint(_)));
+        assert!(matches!(err_runtime!("x"), Error::Runtime(_)));
+        assert!(matches!(err_shape!("x"), Error::Shape(_)));
+    }
+
+    #[test]
+    fn error_is_a_std_error_for_anyhow_consumers() {
+        // the binary and test harnesses keep anyhow; the blanket
+        // `From<E: std::error::Error + Send + Sync>` conversion is what
+        // lets `?` cross the boundary — pin the bound here
+        fn takes_std_error<E: std::error::Error + Send + Sync + 'static>(_: E) {}
+        takes_std_error(err_runtime!("boom"));
+    }
+}

@@ -15,7 +15,8 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use crate::err_shape;
+use crate::error::Result;
 
 use crate::data::SEQ_LEN;
 use crate::metrics::TopK;
@@ -157,10 +158,10 @@ impl MicroBatcher {
     /// back-to-back.  Returns the assigned query ids, in row order.
     pub fn submit(&mut self, tokens: &[i32]) -> Result<Vec<u64>> {
         if tokens.is_empty() || tokens.len() % SEQ_LEN != 0 {
-            bail!(
+            return Err(err_shape!(
                 "query set must be a non-empty multiple of {SEQ_LEN} tokens, got {}",
                 tokens.len()
-            );
+            ));
         }
         self.stats.mark();
         let now = Instant::now();
@@ -201,7 +202,7 @@ impl MicroBatcher {
         }
         let topks = score(&tokens)?;
         if topks.len() < valid {
-            bail!("scorer returned {} rows for a {valid}-query batch", topks.len());
+            return Err(err_shape!("scorer returned {} rows for a {valid}-query batch", topks.len()));
         }
         let done = Instant::now();
         for (q, tk) in batch.into_iter().zip(topks.into_iter()) {
@@ -339,7 +340,10 @@ mod tests {
         let mut mb = MicroBatcher::new(2);
         let mut out = Vec::new();
         mb.submit(&queries(2, 0)).unwrap();
-        let err = mb.run_ready(|_| bail!("kernel exploded"), &mut out);
+        let err = mb.run_ready(
+            |_| Err(crate::error::Error::Runtime("kernel exploded".into())),
+            &mut out,
+        );
         assert!(err.is_err());
     }
 

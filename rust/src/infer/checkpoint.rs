@@ -19,7 +19,8 @@
 //! payload is trusted; every read is bounds-checked so a hostile file can
 //! produce an error but never a panic.
 
-use anyhow::{bail, Context, Result};
+use crate::err_checkpoint;
+use crate::error::{Result, ResultExt};
 
 use crate::coordinator::{Precision, Trainer};
 
@@ -56,7 +57,7 @@ fn precision_of(tag: u32) -> Result<Precision> {
         3 => Precision::Renee,
         4 => Precision::Sampled,
         5 => Precision::Fp8HeadKahan,
-        other => bail!("unknown precision tag {other} in checkpoint"),
+        other => return Err(err_checkpoint!("unknown precision tag {other} in checkpoint")),
     })
 }
 
@@ -65,7 +66,7 @@ fn enc_tag(cfg: &str) -> Result<u32> {
         "fp32" => 0,
         "bf16" => 1,
         "fp8" => 2,
-        other => bail!("unknown encoder config `{other}`"),
+        other => return Err(err_checkpoint!("unknown encoder config `{other}`")),
     })
 }
 
@@ -74,7 +75,7 @@ fn enc_of(tag: u32) -> Result<&'static str> {
         0 => "fp32",
         1 => "bf16",
         2 => "fp8",
-        other => bail!("unknown encoder tag {other} in checkpoint"),
+        other => return Err(err_checkpoint!("unknown encoder tag {other} in checkpoint")),
     })
 }
 
@@ -125,12 +126,12 @@ impl<'a> Rd<'a> {
         // (rather than checking `off + n`) cannot overflow on a hostile
         // section length
         if n > self.b.len() - self.off {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint truncated: wanted {} bytes at offset {}, have {}",
                 n,
                 self.off,
                 self.b.len()
-            );
+            ));
         }
         let s = &self.b[self.off..self.off + n];
         self.off += n;
@@ -152,7 +153,8 @@ impl<'a> Rd<'a> {
     /// A u64-length-prefixed f32 section.
     fn f32_section(&mut self) -> Result<Vec<f32>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n.checked_mul(4).context("section length overflow")?)?;
+        let raw = self
+            .take(n.checked_mul(4).ok_or_else(|| err_checkpoint!("section length overflow"))?)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -161,7 +163,8 @@ impl<'a> Rd<'a> {
 
     fn u32_section(&mut self) -> Result<Vec<u32>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n.checked_mul(4).context("section length overflow")?)?;
+        let raw = self
+            .take(n.checked_mul(4).ok_or_else(|| err_checkpoint!("section length overflow"))?)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -247,29 +250,29 @@ impl Checkpoint {
 
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         if bytes.len() < MAGIC.len() {
-            bail!("checkpoint truncated: {} bytes is too short even for the magic", bytes.len());
+            return Err(err_checkpoint!("checkpoint truncated: {} bytes is too short even for the magic", bytes.len()));
         }
         if &bytes[..MAGIC.len()] != MAGIC {
-            bail!("not an ELMO checkpoint (bad magic)");
+            return Err(err_checkpoint!("not an ELMO checkpoint (bad magic)"));
         }
         if bytes.len() < MAGIC.len() + 4 {
-            bail!("checkpoint truncated before the version field");
+            return Err(err_checkpoint!("checkpoint truncated before the version field"));
         }
         let ver = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
         if ver != VERSION {
-            bail!("unsupported checkpoint version {ver} (this build reads version {VERSION})");
+            return Err(err_checkpoint!("unsupported checkpoint version {ver} (this build reads version {VERSION})"));
         }
         if bytes.len() < 12 + 8 {
-            bail!("checkpoint truncated before the checksum trailer");
+            return Err(err_checkpoint!("checkpoint truncated before the checksum trailer"));
         }
         let body = &bytes[..bytes.len() - 8];
         let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
         let computed = fnv1a(body);
         if stored != computed {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint corrupt: checksum {computed:016x} != stored {stored:016x} \
                  (truncated or bit-flipped)"
-            );
+            ));
         }
         let mut rd = Rd { b: body, off: 12 };
         let precision = precision_of(rd.u32()?)?;
@@ -284,7 +287,7 @@ impl Checkpoint {
         let seed = rd.u64()?;
         let plen = rd.u32()? as usize;
         let profile = String::from_utf8(rd.take(plen)?.to_vec())
-            .context("checkpoint profile name is not UTF-8")?;
+            .map_err(|_| err_checkpoint!("checkpoint profile name is not UTF-8"))?;
         let label_order = rd.u32_section()?;
         let w = rd.f32_section()?;
         let mom = rd.f32_section()?;
@@ -294,43 +297,43 @@ impl Checkpoint {
         let enc_v = rd.f32_section()?;
         let enc_c = rd.f32_section()?;
         if rd.off != body.len() {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint has {} trailing bytes after the last section",
                 body.len() - rd.off
-            );
+            ));
         }
         // structural sanity: sizes must agree with the header before any
         // consumer indexes into them
         if chunk_size == 0 || d == 0 {
-            bail!("checkpoint header has zero chunk_size or d");
+            return Err(err_checkpoint!("checkpoint header has zero chunk_size or d"));
         }
         if labels > l_pad || l_pad % chunk_size != 0 {
-            bail!("checkpoint header inconsistent: labels={labels} l_pad={l_pad} Lc={chunk_size}");
+            return Err(err_checkpoint!("checkpoint header inconsistent: labels={labels} l_pad={l_pad} Lc={chunk_size}"));
         }
         if label_order.len() != labels {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint label_order has {} entries for {labels} labels",
                 label_order.len()
-            );
+            ));
         }
         let mut seen = vec![false; labels];
         for &l in &label_order {
             if (l as usize) >= labels || seen[l as usize] {
-                bail!("checkpoint label_order is not a permutation of 0..{labels}");
+                return Err(err_checkpoint!("checkpoint label_order is not a permutation of 0..{labels}"));
             }
             seen[l as usize] = true;
         }
         let wd = l_pad
             .checked_mul(d)
-            .with_context(|| format!("checkpoint header overflows: l_pad={l_pad} x d={d}"))?;
+            .ok_or_else(|| err_checkpoint!("checkpoint header overflows: l_pad={l_pad} x d={d}"))?;
         if w.len() != wd {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint w has {} values, header says {wd} ({l_pad} x {d})",
                 w.len()
-            );
+            ));
         }
         if enc_m.len() != enc_p.len() || enc_v.len() != enc_p.len() || enc_c.len() != enc_p.len() {
-            bail!("checkpoint encoder state sections disagree in length");
+            return Err(err_checkpoint!("checkpoint encoder state sections disagree in length"));
         }
         Ok(Checkpoint {
             precision,
@@ -356,11 +359,12 @@ impl Checkpoint {
     }
 
     pub fn save(&self, path: &str) -> Result<()> {
-        std::fs::write(path, self.to_bytes()?).with_context(|| format!("writing {path}"))
+        std::fs::write(path, self.to_bytes()?).map_err(|e| err_checkpoint!("writing {path}: {e}"))
     }
 
     pub fn load(path: &str) -> Result<Self> {
-        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        let bytes =
+            std::fs::read(path).map_err(|e| err_checkpoint!("reading {path}: {e}"))?;
         Self::from_bytes(&bytes).with_context(|| format!("loading checkpoint {path}"))
     }
 
@@ -381,36 +385,36 @@ impl Checkpoint {
     /// error, not a silent resize or a silent policy switch.
     pub fn restore(&self, tr: &mut Trainer) -> Result<()> {
         if self.precision != tr.cfg.precision {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint trained as {} but the trainer is configured as {}",
                 self.precision.label(),
                 tr.cfg.precision.label()
-            );
+            ));
         }
         if self.enc_cfg != tr.enc_cfg() {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint encoder is {} but the trainer's is {}",
                 self.enc_cfg,
                 tr.enc_cfg()
-            );
+            ));
         }
         if self.chunk_size != tr.store.chunk_size || self.head_chunks != tr.store.head_chunks {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint chunking (Lc={}, head_chunks={}) != trainer (Lc={}, head_chunks={})",
                 self.chunk_size,
                 self.head_chunks,
                 tr.store.chunk_size,
                 tr.store.head_chunks
-            );
+            ));
         }
         if self.d != tr.store.d || self.l_pad != tr.store.l_pad {
-            bail!(
+            return Err(err_checkpoint!(
                 "checkpoint geometry ({} x {}) != trainer ({} x {})",
                 self.l_pad,
                 self.d,
                 tr.store.l_pad,
                 tr.store.d
-            );
+            ));
         }
         // validate every section length (a hand-built or
         // optimizer-stripped Checkpoint never went through `from_bytes`)
@@ -429,7 +433,7 @@ impl Checkpoint {
             ),
         ] {
             if got != want {
-                bail!("checkpoint {name} len {got} != expected {want}");
+                return Err(err_checkpoint!("checkpoint {name} len {got} != expected {want}"));
             }
         }
         tr.store

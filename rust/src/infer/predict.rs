@@ -7,17 +7,19 @@
 //! shared `ChunkScanner` — the same code path `coordinator::evaluate`
 //! uses, so a reloaded model scores bit-identically to the in-memory one.
 
-use anyhow::{bail, Result};
+use crate::err_shape;
+use crate::error::Result;
 
-use crate::coordinator::eval::{evaluate_model_ex, EvalModel, EvalReport};
+use crate::coordinator::eval::{evaluate_model, EvalModel, EvalReport};
 use crate::coordinator::Precision;
 use crate::data::{Dataset, SEQ_LEN};
 use crate::metrics::TopK;
-use crate::runtime::{to_vec_f32, Arg, ExecCtx, Runtime};
+use crate::runtime::{to_vec_f32, Arg, Runtime};
+use crate::session::{KernelSet, Session};
 use crate::store::WeightStore;
 
 use super::checkpoint::Checkpoint;
-use super::scanner::{ChunkScanner, ClassifierView};
+use super::scanner::{ChunkScanner, ClassifierView, SCORE_LC};
 
 /// Inference-mode encoder forward (dropout off, fixed seed 0) — the one
 /// embed invocation shared by `coordinator::evaluate_model` and the
@@ -125,16 +127,29 @@ impl Predictor {
         format!("enc_fwd_{}", self.enc_cfg)
     }
 
+    /// Every executable the serving path runs: the inference encoder
+    /// (runtime-only) plus the chunked scoring kernel (also compiled on
+    /// pool workers).  The single source of the predictor's
+    /// kernel-prepare plan — `Session::predictor` feeds it to
+    /// `Session::prepare` before the first query (`cmd_predict` and
+    /// `cmd_serve_bench` used to duplicate this list by hand).
+    pub fn required_kernels(&self) -> KernelSet {
+        KernelSet {
+            host: vec![self.enc_artifact()],
+            chunk: vec![format!("cls_fwd_{SCORE_LC}")],
+        }
+    }
+
     /// Pooled embeddings for one full token batch [batch, SEQ_LEN]
     /// (inference: dropout off, fixed seed).
     pub fn embed(&self, rt: &mut Runtime, tokens: &[i32]) -> Result<Vec<f32>> {
         let b = rt.config().batch;
         if tokens.len() != b * SEQ_LEN {
-            bail!(
+            return Err(err_shape!(
                 "token batch has {} ids, the artifact batch is {} x {SEQ_LEN}",
                 tokens.len(),
                 b
-            );
+            ));
         }
         embed_inference(rt, &self.enc_artifact(), &self.enc_p, tokens)
     }
@@ -142,34 +157,28 @@ impl Predictor {
     /// Batched top-k prediction over one full token batch.  Returns one
     /// running `TopK` per row, labels already mapped through the stored
     /// permutation.
-    pub fn predict_batch(&self, rt: &mut Runtime, tokens: &[i32], k: usize) -> Result<Vec<TopK>> {
-        self.predict_batch_ex(&mut ExecCtx::serial(rt), tokens, k)
-    }
-
-    /// `predict_batch` with an explicit execution context: the label-chunk
-    /// scan fans out to `ex.pool` when serving with `--workers N` (the
-    /// encoder forward stays on `ex.rt`).
-    pub fn predict_batch_ex(
+    ///
+    /// One code path for serial and pooled serving: the label-chunk scan
+    /// fans out to the session's pool when serving with `--workers N`
+    /// (the encoder forward stays on the session runtime).
+    pub fn predict_batch(
         &self,
-        ex: &mut ExecCtx,
+        sess: &mut Session,
         tokens: &[i32],
         k: usize,
     ) -> Result<Vec<TopK>> {
+        let mut ctx = sess.ctx();
+        let ex = &mut ctx;
         let b = ex.rt.config().batch;
         let emb = self.embed(ex.rt, tokens)?;
-        ChunkScanner::new(k).scan_ex(ex, &self.view(), &emb, b)
+        ChunkScanner::new(k).scan(ex, &self.view(), &emb, b)
     }
 
     /// Evaluate the stored model on a dataset's test split with the exact
     /// protocol (and code) of `coordinator::evaluate`.
-    pub fn evaluate(&self, rt: &mut Runtime, ds: &Dataset, max_rows: usize) -> Result<EvalReport> {
-        self.evaluate_ex(&mut ExecCtx::serial(rt), ds, max_rows)
-    }
-
-    /// `evaluate` with an explicit execution context (chunk pool).
-    pub fn evaluate_ex(
+    pub fn evaluate(
         &self,
-        ex: &mut ExecCtx,
+        sess: &mut Session,
         ds: &Dataset,
         max_rows: usize,
     ) -> Result<EvalReport> {
@@ -178,6 +187,6 @@ impl Predictor {
             enc_art: self.enc_artifact(),
             cls: self.view(),
         };
-        evaluate_model_ex(ex, &m, ds, max_rows)
+        evaluate_model(sess, &m, ds, max_rows)
     }
 }

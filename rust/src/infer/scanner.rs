@@ -7,16 +7,18 @@
 //! (the paper's Appendix A protocol, chunked exactly like training so no
 //! full [n, L] logit matrix ever exists).
 //!
-//! Scoring chunks are data-independent, so `scan_ex` fans them out to a
-//! `runtime::RuntimePool` when one is supplied: workers execute `cls_fwd`
-//! on cloned chunk weights, and the per-chunk logits fold into the running
-//! `TopK`s **in chunk order** (`OrderedReducer`), which keeps tie-breaking
-//! — and therefore P@k — bit-identical to the serial scan.
+//! Scoring chunks are data-independent, so `scan` fans them out to the
+//! execution context's `runtime::RuntimePool` when one is present (a
+//! pooled `Session`): workers execute `cls_fwd` on cloned chunk weights,
+//! and the per-chunk logits fold into the running `TopK`s **in chunk
+//! order** (`OrderedReducer`), which keeps tie-breaking — and therefore
+//! P@k — bit-identical to the serial scan.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::Result;
+use crate::{err_runtime, err_shape};
 
 use crate::metrics::TopK;
 use crate::runtime::{to_vec_f32, Arg, ExecCtx, OrderedReducer, Runtime, RuntimePool};
@@ -58,43 +60,43 @@ impl<'a> ClassifierView<'a> {
 
     fn validate(&self) -> Result<()> {
         if self.l_pad % SCORE_LC != 0 {
-            bail!(
+            return Err(err_shape!(
                 "l_pad {} not a multiple of scoring chunk {SCORE_LC}",
                 self.l_pad
-            );
+            ));
         }
         let wd = self
             .l_pad
             .checked_mul(self.d)
-            .ok_or_else(|| anyhow!("view geometry overflows: {} rows x d={}", self.l_pad, self.d))?;
+            .ok_or_else(|| err_shape!("view geometry overflows: {} rows x d={}", self.l_pad, self.d))?;
         if self.w.len() != wd {
-            bail!(
+            return Err(err_shape!(
                 "weight store has {} values, expected {wd} ({} rows x d={})",
                 self.w.len(),
                 self.l_pad,
                 self.d
-            );
+            ));
         }
         if self.label_order.len() != self.labels || self.labels > self.l_pad {
-            bail!(
+            return Err(err_shape!(
                 "label_order len {} inconsistent with labels={} l_pad={}",
                 self.label_order.len(),
                 self.labels,
                 self.l_pad
-            );
+            ));
         }
         Ok(())
     }
 
     fn validate_emb(&self, emb: &[f32], batch: usize) -> Result<()> {
         if emb.len() != batch * self.d {
-            bail!(
+            return Err(err_shape!(
                 "embedding batch has {} values, expected {} ({} x d={})",
                 emb.len(),
                 batch * self.d,
                 batch,
                 self.d
-            );
+            ));
         }
         Ok(())
     }
@@ -129,8 +131,31 @@ impl ChunkScanner {
 
     /// Score one batch of pooled embeddings `emb` ([batch, d] row-major)
     /// against every label chunk of `view`, returning a running top-k per
-    /// row.  Serial path (see `scan_ex` for the pooled one).
+    /// row.
+    ///
+    /// One entrypoint for serial and pooled execution: label chunks fan
+    /// out to `ex.pool` when one is present, bit-identical to the serial
+    /// scan by construction (the fold runs on the calling thread in
+    /// strict chunk order).
+    ///
+    /// A single-chunk view (`l_pad == SCORE_LC`) always takes the serial
+    /// path: there is nothing to overlap, and the pooled path's per-call
+    /// weight/embedding clones are pure overhead in the serving hot loop.
     pub fn scan(
+        &self,
+        ex: &mut ExecCtx,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<TopK>> {
+        match ex.pool {
+            Some(pool) if view.l_pad > SCORE_LC => self.scan_pooled(pool, view, emb, batch),
+            _ => self.scan_serial(ex.rt, view, emb, batch),
+        }
+    }
+
+    /// The serial chunk loop (also the pooled path's semantics oracle).
+    fn scan_serial(
         &self,
         rt: &mut Runtime,
         view: &ClassifierView,
@@ -148,26 +173,6 @@ impl ChunkScanner {
             fold_chunk(&mut topks, view, chunk, &logits);
         }
         Ok(topks)
-    }
-
-    /// Like `scan`, but fans the label chunks out to `ex.pool` when one is
-    /// present.  Bit-identical to `scan` by construction: the fold runs on
-    /// the calling thread in strict chunk order.
-    ///
-    /// A single-chunk view (`l_pad == SCORE_LC`) always takes the serial
-    /// path: there is nothing to overlap, and the pooled path's per-call
-    /// weight/embedding clones are pure overhead in the serving hot loop.
-    pub fn scan_ex(
-        &self,
-        ex: &mut ExecCtx,
-        view: &ClassifierView,
-        emb: &[f32],
-        batch: usize,
-    ) -> Result<Vec<TopK>> {
-        match ex.pool {
-            Some(pool) if view.l_pad > SCORE_LC => self.scan_pooled(pool, view, emb, batch),
-            _ => self.scan(ex.rt, view, emb, batch),
-        }
     }
 
     fn scan_pooled(
@@ -210,7 +215,7 @@ impl ChunkScanner {
         for _ in 0..n_chunks {
             let (chunk, res) = rx
                 .recv()
-                .map_err(|_| anyhow!("runtime pool workers hung up mid-scan"))?;
+                .map_err(|_| err_runtime!("runtime pool workers hung up mid-scan"))?;
             if next < n_chunks {
                 submit(next)?;
                 next += 1;

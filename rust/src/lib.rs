@@ -21,15 +21,29 @@
 //! checkpoint format, a read-only `Predictor` over the shared chunked
 //! top-k scanner, and a micro-batching request queue (`elmo predict` /
 //! `elmo serve-bench`).
+//!
+//! The public execution API is the `session` facade: a `Session` owns the
+//! runtime and the optional chunk-execution pool, every training / eval /
+//! serving entrypoint takes `&mut Session`, and `config::RunSpec` is the
+//! declarative run description behind `--config`.  All library errors are
+//! the typed `elmo::Error` (`error` module) — `anyhow` is a consumer-side
+//! convenience for the binary and the test/bench harnesses only.
 
 pub mod cli;
+pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod infer;
 pub mod memmodel;
 pub mod metrics;
 pub mod numerics;
 pub mod policy;
 pub mod runtime;
+pub mod session;
 pub mod store;
 pub mod util;
+
+pub use config::RunSpec;
+pub use error::{Error, Result};
+pub use session::{KernelSet, Session, SessionBuilder};

@@ -10,52 +10,23 @@
 //!   memtrace     print the Fig-3-style memory timeline for a method
 //!   sweep        Fig-2a (E, M) bit-width sweep on a small profile
 //!
-//! Flag parsing lives in `elmo::cli` (hand-rolled; no clap offline — see
-//! DESIGN.md Substitutions).
+//! Flag parsing and the subcommand registry live in `elmo::cli`
+//! (hand-rolled; no clap offline — see DESIGN.md Substitutions).  Run
+//! wiring goes through `elmo::Session` (one execution facade, serial and
+//! pooled alike) and `elmo::RunSpec` (`--config FILE`, with CLI flags
+//! overriding file values).  The binary consumes the library's typed
+//! `elmo::Error` through `anyhow` (allowed here; the library itself is
+//! anyhow-free).
 
 use anyhow::{anyhow, bail, Result};
 
-use elmo::cli::{flag, parse_flags, reject_unknown, require, Flags};
-use elmo::coordinator::{evaluate, evaluate_ex, Precision, TrainConfig, Trainer};
+use elmo::cli::{self, flag, parse_flags, reject_unknown, require, Flags};
+use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data::{self, SEQ_LEN, VOCAB};
-use elmo::infer::{Checkpoint, MicroBatcher, Predictor, SCORE_LC};
+use elmo::infer::{Checkpoint, MicroBatcher};
 use elmo::memmodel::{self, MemParams, Method};
-use elmo::runtime::{ExecCtx, Runtime, RuntimePool};
 use elmo::util::{gib, mmss, print_table, Rng};
-
-const USAGE: &str = "\
-elmo — ELMO (ICML 2025) reproduction CLI
-
-USAGE:
-  elmo train   [--profile NAME] [--precision fp32|bf16|fp8|renee|sampled|fp8-headkahan]
-               [--epochs N] [--chunk LC] [--lr-cls F] [--lr-enc F]
-               [--dropout-emb F] [--dropout-cls F] [--seed N]
-               [--momentum F] [--loss-scale F] [--warmup-steps N]
-               [--eval-rows N] [--artifacts DIR] [--save PATH] [--workers N]
-  elmo predict     --checkpoint PATH [--profile NAME] [--eval-rows N]
-                   [--artifacts DIR] [--workers N]
-  elmo serve-bench --checkpoint PATH [--queries N] [--max-burst N] [--k N]
-                   [--seed N] [--artifacts DIR] [--workers N]
-  elmo datasets
-  elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
-  elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
-  elmo help
-
-TRAIN FLAGS:
-  --momentum F      Renee momentum coefficient (default 0; the memory
-                    model charges Renee's momentum buffer regardless)
-  --loss-scale F    Renee initial loss scale (default 512)
-  --warmup-steps N  linear LR warmup steps, encoder + classifier
-                    (default 0; paper Table 9 uses 500-15000 at full scale)
-  --save PATH       write a versioned checkpoint (weights, label
-                    permutation, encoder + optimizer state) after training;
-                    serve it with `elmo predict` / `elmo serve-bench`.
-                    Format: docs/INFERENCE.md
-  --workers N       parallel chunk execution: fan label chunks out to N
-                    worker threads (each with its own PJRT runtime) with a
-                    deterministic in-order reduction — results are
-                    bit-identical to --workers 1 (the serial default)
-";
+use elmo::{RunSpec, Session};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -69,70 +40,76 @@ fn main() {
     std::process::exit(code);
 }
 
-/// `--workers N` -> an optional chunk-execution pool (N >= 2; 1 = serial).
-fn build_pool(art: &str, workers: usize) -> Result<Option<RuntimePool>> {
-    if workers == 0 {
-        bail!("--workers must be >= 1");
-    }
-    if workers == 1 {
-        return Ok(None);
-    }
-    Ok(Some(RuntimePool::new(art, workers)?))
-}
-
 fn run(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
-        Some("train") => cmd_train(&parse_flags(&args[1..])?),
-        Some("predict") => cmd_predict(&parse_flags(&args[1..])?),
-        Some("serve-bench") => cmd_serve_bench(&parse_flags(&args[1..])?),
-        Some("datasets") => cmd_datasets(),
-        Some("memtrace") => cmd_memtrace(&parse_flags(&args[1..])?),
-        Some("sweep") => cmd_sweep(&parse_flags(&args[1..])?),
-        Some("help") | None => {
-            print!("{USAGE}");
+        Some("train") => cmd_train(&parse_cmd_flags("train", &args[1..])?),
+        Some("predict") => cmd_predict(&parse_cmd_flags("predict", &args[1..])?),
+        Some("serve-bench") => cmd_serve_bench(&parse_cmd_flags("serve-bench", &args[1..])?),
+        Some("datasets") => {
+            // no flags, but a typo'd invocation must still error loudly
+            parse_cmd_flags("datasets", &args[1..])?;
+            cmd_datasets()
+        }
+        Some("memtrace") => cmd_memtrace(&parse_cmd_flags("memtrace", &args[1..])?),
+        Some("sweep") => cmd_sweep(&parse_cmd_flags("sweep", &args[1..])?),
+        Some("--version" | "version") => {
+            println!("{}", cli::version());
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand `{other}`\n{USAGE}"),
+        Some("help") => match args.get(1) {
+            None => {
+                print!("{}", cli::USAGE);
+                Ok(())
+            }
+            Some(sub) => match cli::help_for(sub) {
+                Some(h) => {
+                    print!("{h}");
+                    Ok(())
+                }
+                None => bail!("unknown subcommand `{sub}`\n{}", cli::USAGE),
+            },
+        },
+        None => {
+            print!("{}", cli::USAGE);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}`\n{}", cli::USAGE),
     }
+}
+
+/// Parse flags and reject anything outside the subcommand's registry set.
+fn parse_cmd_flags(name: &str, args: &[String]) -> Result<Flags> {
+    let spec = cli::subcommand(name).expect("registered subcommand");
+    let f = parse_flags(args)?;
+    reject_unknown(&f, spec.flags)?;
+    Ok(f)
+}
+
+/// The declarative run description: `--config FILE` when given (else
+/// defaults), with explicit CLI flags layered on top, then validated.
+/// Both entry modes converge on one `RunSpec`, so a config run and its
+/// equivalent flag invocation are the same run by construction.
+fn load_spec(f: &Flags) -> Result<RunSpec> {
+    let mut spec = match f.get("config") {
+        Some(path) => RunSpec::load(path)?,
+        None => RunSpec::default(),
+    };
+    spec.apply_flags(f)?;
+    spec.validate()?;
+    Ok(spec)
 }
 
 fn cmd_train(f: &Flags) -> Result<()> {
-    reject_unknown(
-        f,
-        &[
-            "profile", "precision", "epochs", "chunk", "lr-cls", "lr-enc", "dropout-emb",
-            "dropout-cls", "seed", "momentum", "loss-scale", "warmup-steps", "eval-rows",
-            "artifacts", "save", "workers",
-        ],
-    )?;
+    let spec = load_spec(f)?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
-    elmo::coordinator::trainer::require_artifacts(&art)?;
-    let profile_name: String = flag(f, "profile", "quickstart".to_string())?;
-    let prof = data::profile(&profile_name)
-        .ok_or_else(|| anyhow!("unknown profile `{profile_name}` (see `elmo datasets`)"))?;
-    let precision = Precision::parse(&flag(f, "precision", "bf16".to_string())?)?;
-    let cfg = TrainConfig {
-        precision,
-        chunk_size: flag(f, "chunk", 1024usize)?,
-        lr_cls: flag(f, "lr-cls", 0.05f32)?,
-        lr_enc: flag(f, "lr-enc", 1e-3f32)?,
-        dropout_emb: flag(f, "dropout-emb", 0.3f32)?,
-        dropout_cls: flag(f, "dropout-cls", 0.0f32)?,
-        epochs: flag(f, "epochs", 5usize)?,
-        seed: flag(f, "seed", 0u64)?,
-        momentum: flag(f, "momentum", 0.0f32)?,
-        init_loss_scale: flag(f, "loss-scale", 512.0f32)?,
-        warmup_steps: flag(f, "warmup-steps", 0u64)?,
-        ..TrainConfig::default()
-    };
-    let eval_rows: usize = flag(f, "eval-rows", 512usize)?;
-    let save_path: String = flag(f, "save", String::new())?;
-    let workers: usize = flag(f, "workers", 1usize)?;
+    let prof = data::profile(&spec.profile)
+        .ok_or_else(|| anyhow!("unknown profile `{}` (see `elmo datasets`)", spec.profile))?;
+    let cfg = spec.to_train_config();
 
     println!(
         "# ELMO train: profile={} precision={} chunk={} epochs={}",
         prof.name,
-        precision.label(),
+        cfg.precision.label(),
         cfg.chunk_size,
         cfg.epochs
     );
@@ -140,28 +117,27 @@ fn cmd_train(f: &Flags) -> Result<()> {
     let (n, l, nt, lbar, lhat) = ds.stats();
     println!("# data: N={n} L={l} N'={nt} Lbar={lbar:.2} Lhat={lhat:.2}");
 
-    let mut rt = Runtime::new(&art)?;
-    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), &art)?;
+    let mut sess = Session::builder().artifacts(art.as_str()).workers(spec.workers).build()?;
+    let mut tr = sess.trainer(&ds, cfg.clone())?;
     println!("# chunks per step: {}", tr.chunks());
-    let pool = build_pool(&art, workers)?;
-    if let Some(p) = &pool {
-        p.prepare(&tr.policy.artifacts(cfg.chunk_size))?;
+    sess.prepare(&tr.required_kernels())?;
+    if sess.workers() > 1 {
         println!(
             "# parallel chunk engine: {} workers (+{} MiB in-flight staging)",
-            p.workers(),
-            memmodel::pool_bytes(&tr.store, tr.batch, p.workers()) >> 20
+            sess.workers(),
+            memmodel::pool_bytes(&tr.store, tr.batch, sess.workers()) >> 20
         );
     }
 
     for epoch in 0..cfg.epochs {
-        let st = tr.run_epoch_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), &ds, epoch)?;
+        let st = tr.run_epoch(&mut sess, &ds, epoch)?;
         println!(
             "epoch {:>3}  loss {:.5}  steps {}  time {}  {}",
             epoch,
             st.mean_loss,
             st.steps,
             mmss(st.secs),
-            if precision == Precision::Renee {
+            if cfg.precision == Precision::Renee {
                 format!("oflow {} scale {}", st.overflow_steps, st.loss_scale)
             } else {
                 String::new()
@@ -175,20 +151,21 @@ fn cmd_train(f: &Flags) -> Result<()> {
             );
         }
     }
-    if !save_path.is_empty() {
-        let ckpt = Checkpoint::from_trainer(&tr, &profile_name);
-        ckpt.save(&save_path)?;
+    if !spec.save.is_empty() {
+        let ckpt = Checkpoint::from_trainer(&tr, &spec.profile);
+        ckpt.save(&spec.save)?;
         println!(
-            "# checkpoint: {} ({} weights + {} encoder params) -> {save_path}",
+            "# checkpoint: {} ({} weights + {} encoder params) -> {}",
             ckpt.precision.label(),
             ckpt.w.len(),
-            ckpt.enc_p.len()
+            ckpt.enc_p.len(),
+            spec.save
         );
     }
-    let rep = evaluate_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), &tr, &ds, eval_rows)?;
+    let rep = evaluate(&mut sess, &tr, &ds, spec.eval_rows)?;
     println!("eval: {}", rep.summary());
     // paper-scale memory for this (dataset, method) from the memory model
-    let method = match precision {
+    let method = match cfg.precision {
         Precision::Renee => Method::Renee,
         Precision::Bf16 => Method::ElmoBf16,
         Precision::Fp8 | Precision::Fp8HeadKahan => Method::ElmoFp8,
@@ -207,19 +184,25 @@ fn cmd_train(f: &Flags) -> Result<()> {
 }
 
 fn cmd_predict(f: &Flags) -> Result<()> {
-    reject_unknown(f, &["checkpoint", "profile", "eval-rows", "artifacts", "workers"])?;
+    let spec = load_spec(f)?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
-    elmo::coordinator::trainer::require_artifacts(&art)?;
     let ckpt_path = require(f, "checkpoint")?;
-    let p = Predictor::load(&ckpt_path)?;
-    let profile_name: String = flag(f, "profile", p.profile().to_string())?;
+    let mut sess = Session::builder().artifacts(art.as_str()).workers(spec.workers).build()?;
+    // loads the checkpoint and precompiles Predictor::required_kernels()
+    // on the runtime and every pool worker
+    let p = sess.predictor(&ckpt_path)?;
+    // the checkpoint's stored profile is the default; an explicit
+    // `profile` (flag or config file) overrides it
+    let profile_name = if spec.is_explicit("profile") {
+        spec.profile.clone()
+    } else {
+        p.profile().to_string()
+    };
     if profile_name.is_empty() {
         bail!("checkpoint carries no profile name; pass --profile NAME");
     }
     let prof = data::profile(&profile_name)
         .ok_or_else(|| anyhow!("unknown profile `{profile_name}` (see `elmo datasets`)"))?;
-    let eval_rows: usize = flag(f, "eval-rows", 512usize)?;
-    let workers: usize = flag(f, "workers", 1usize)?;
 
     println!(
         "# ELMO predict: checkpoint={ckpt_path} precision={} enc={} L={} step={}",
@@ -230,35 +213,21 @@ fn cmd_predict(f: &Flags) -> Result<()> {
     );
     // the stored seed regenerates the exact split the model trained on
     let ds = data::generate(&prof, p.seed());
-    let mut rt = Runtime::new(&art)?;
-    let pool = build_pool(&art, workers)?;
-    if let Some(pl) = &pool {
-        pl.prepare(&[format!("cls_fwd_{SCORE_LC}")])?;
-    }
-    let rep = p.evaluate_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), &ds, eval_rows)?;
+    let rep = p.evaluate(&mut sess, &ds, spec.eval_rows)?;
     println!("eval: {}", rep.summary());
     Ok(())
 }
 
 fn cmd_serve_bench(f: &Flags) -> Result<()> {
-    reject_unknown(
-        f,
-        &["checkpoint", "queries", "max-burst", "k", "seed", "artifacts", "workers"],
-    )?;
+    let spec = load_spec(f)?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
-    elmo::coordinator::trainer::require_artifacts(&art)?;
     let ckpt_path = require(f, "checkpoint")?;
-    let p = Predictor::load(&ckpt_path)?;
     let n_queries: usize = flag(f, "queries", 512usize)?;
     let k: usize = flag(f, "k", 5usize)?;
-    let seed: u64 = flag(f, "seed", 0u64)?;
-    let workers: usize = flag(f, "workers", 1usize)?;
-    let mut rt = Runtime::new(&art)?;
-    let pool = build_pool(&art, workers)?;
-    if let Some(pl) = &pool {
-        pl.prepare(&[format!("cls_fwd_{SCORE_LC}")])?;
-    }
-    let width = rt.config().batch;
+    let seed = spec.seed;
+    let mut sess = Session::builder().artifacts(art.as_str()).workers(spec.workers).build()?;
+    let p = sess.predictor(&ckpt_path)?;
+    let width = sess.config().batch;
     let max_burst: usize = flag(f, "max-burst", 2 * width)?;
     if n_queries == 0 || max_burst == 0 {
         bail!("--queries and --max-burst must be positive");
@@ -282,8 +251,9 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
 
     println!(
         "# ELMO serve-bench: {} queries, batch width {width}, bursts of 1..={max_burst}, \
-         top-{k}, {workers} worker(s)",
-        n_queries
+         top-{k}, {} worker(s)",
+        n_queries,
+        sess.workers()
     );
     let mut mb = MicroBatcher::new(width);
     let mut rng = Rng::new(seed);
@@ -299,15 +269,9 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
         }
         mb.submit(&toks)?;
         submitted += burst;
-        mb.run_ready(
-            |t| p.predict_batch_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), t, k),
-            &mut out,
-        )?;
+        mb.run_ready(|t| p.predict_batch(&mut sess, t, k), &mut out)?;
     }
-    mb.flush(
-        |t| p.predict_batch_ex(&mut ExecCtx::of(&mut rt, pool.as_ref()), t, k),
-        &mut out,
-    )?;
+    mb.flush(|t| p.predict_batch(&mut sess, t, k), &mut out)?;
 
     let s = &mb.stats;
     print_table(
@@ -357,7 +321,6 @@ fn cmd_datasets() -> Result<()> {
 }
 
 fn cmd_memtrace(f: &Flags) -> Result<()> {
-    reject_unknown(f, &["method", "labels", "chunks"])?;
     let method = match flag(f, "method", "renee".to_string())?.as_str() {
         "renee" => Method::Renee,
         "bf16" => Method::ElmoBf16,
@@ -387,15 +350,13 @@ fn cmd_memtrace(f: &Flags) -> Result<()> {
 }
 
 fn cmd_sweep(f: &Flags) -> Result<()> {
-    reject_unknown(f, &["profile", "epochs", "artifacts"])?;
     let art: String = flag(f, "artifacts", "artifacts".to_string())?;
-    elmo::coordinator::trainer::require_artifacts(&art)?;
     let profile_name: String = flag(f, "profile", "quickstart".to_string())?;
     let prof = data::profile(&profile_name)
         .ok_or_else(|| anyhow!("unknown profile `{profile_name}`"))?;
     let epochs: usize = flag(f, "epochs", 2usize)?;
     let ds = data::generate(&prof, 0);
-    let mut rt = Runtime::new(&art)?;
+    let mut sess = Session::open(art.as_str())?;
     let mut rows = Vec::new();
     for (e_bits, m_bits) in [(5u32, 7u32), (4, 3), (3, 3), (2, 3)] {
         for sr in [false, true] {
@@ -404,18 +365,18 @@ fn cmd_sweep(f: &Flags) -> Result<()> {
                 epochs,
                 ..TrainConfig::default()
             };
-            let mut tr = Trainer::new(&rt, &ds, cfg, &art)?;
+            let mut tr = Trainer::new(&sess, &ds, cfg)?;
             for epoch in 0..epochs {
                 // quantize after every epoch: emulate storing the
                 // classifier in (E, M) — the Fig 2a protocol at
                 // epoch granularity is refined per-step in the bench
                 let mut b = data::Batcher::new(ds.train.n, tr.batch, epoch as u64);
                 while let Some((rws, _)) = b.next_batch() {
-                    tr.step(&mut rt, &ds, &rws)?;
+                    tr.step(&mut sess, &ds, &rws)?;
                     tr.quantize_classifier(e_bits, m_bits, sr);
                 }
             }
-            let rep = evaluate(&mut rt, &tr, &ds, 256)?;
+            let rep = evaluate(&mut sess, &tr, &ds, 256)?;
             rows.push(vec![
                 format!("E{e_bits}M{m_bits}"),
                 if sr { "SR" } else { "RNE" }.into(),

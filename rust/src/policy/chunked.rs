@@ -5,7 +5,7 @@
 //! loss, gmax) and commit each chunk as soon as it executes; they differ
 //! only in which lowered artifact (and hence weight grid) they bind.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
 use crate::store::{BufferSpec, StagedChunk};

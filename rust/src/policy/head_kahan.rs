@@ -6,7 +6,8 @@
 //! here: `exec_chunk` picks the Kahan kernel for `chunk < head_chunks`
 //! (carried in `ChunkInputs`) and the plain FP8 kernel otherwise.
 
-use anyhow::{anyhow, Result};
+use crate::err_shape;
+use crate::error::Result;
 
 use crate::data::Dataset;
 use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
@@ -63,7 +64,7 @@ impl UpdatePolicy for Fp8HeadKahanPolicy {
         }
         let kahan = inp
             .kahan
-            .ok_or_else(|| anyhow!("head chunk {} is missing its kahan view", inp.chunk))?;
+            .ok_or_else(|| err_shape!("head chunk {} is missing its kahan view", inp.chunk))?;
         let lr = [ctx.lr_cls];
         let cseed = [ctx.seed ^ ((inp.chunk as i32) << 8)];
         let drop = [ctx.dropout_cls];

@@ -39,7 +39,8 @@ pub mod sampled;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::Result;
+use crate::{err_config, err_runtime};
 
 use crate::data::Dataset;
 use crate::runtime::{OrderedReducer, Runtime, RuntimePool};
@@ -79,8 +80,22 @@ impl Precision {
             "renee" => Precision::Renee,
             "sampled" => Precision::Sampled,
             "fp8-headkahan" => Precision::Fp8HeadKahan,
-            other => bail!("unknown precision `{other}`"),
+            other => return Err(err_config!("unknown precision `{other}`")),
         })
+    }
+
+    /// The CLI/RunSpec key this variant parses from — the exact inverse
+    /// of `parse` (`Precision::parse(p.key()) == Ok(p)`), which is what
+    /// lets `RunSpec::to_string` round-trip.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Bf16 => "bf16",
+            Precision::Fp8 => "fp8",
+            Precision::Renee => "renee",
+            Precision::Sampled => "sampled",
+            Precision::Fp8HeadKahan => "fp8-headkahan",
+        }
     }
 
     pub fn label(&self) -> &'static str {
@@ -483,7 +498,7 @@ pub fn run_step_pooled(
     for _ in 0..n_chunks {
         let (chunk, res) = rx
             .recv()
-            .map_err(|_| anyhow!("runtime pool workers hung up mid-step"))?;
+            .map_err(|_| err_runtime!("runtime pool workers hung up mid-step"))?;
         if next < n_chunks {
             submit_chunk(pool, policy, store, ds, rows, &sh, next, &tx)?;
             next += 1;
@@ -510,6 +525,8 @@ mod tests {
             ("fp8-headkahan", Precision::Fp8HeadKahan),
         ] {
             assert_eq!(Precision::parse(s).unwrap(), p);
+            assert_eq!(p.key(), s, "key() must be the exact inverse of parse");
+            assert_eq!(Precision::parse(p.key()).unwrap(), p);
         }
         assert!(Precision::parse("int4").is_err());
     }

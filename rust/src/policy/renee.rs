@@ -13,7 +13,8 @@
 //! * the loss scale halves on overflow (floor 1.0) and doubles every 200
 //!   clean steps (cap 65536) — `update_loss_scale`, unit-tested below.
 
-use anyhow::{anyhow, Result};
+use crate::err_shape;
+use crate::error::Result;
 
 use crate::numerics::{quantize_rne, FP16};
 use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
@@ -66,7 +67,7 @@ impl UpdatePolicy for ReneePolicy {
     ) -> Result<ChunkExec> {
         let mom = inp
             .mom
-            .ok_or_else(|| anyhow!("renee chunk {} is missing its momentum view", inp.chunk))?;
+            .ok_or_else(|| err_shape!("renee chunk {} is missing its momentum view", inp.chunk))?;
         let outs = rt.exec(
             &ctx.arts[0],
             &[

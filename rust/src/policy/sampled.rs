@@ -13,7 +13,8 @@
 
 use std::collections::{HashMap, HashSet};
 
-use anyhow::{bail, Result};
+use crate::error::Result;
+use crate::{err_artifacts, err_runtime};
 
 use crate::data::{Csr, Dataset};
 use crate::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
@@ -112,7 +113,7 @@ impl UpdatePolicy for SampledPolicy {
         _ctx: &StepCtx,
         _loss_scale: f32,
     ) -> Result<ChunkExec> {
-        bail!("the sampled policy updates a shortlist, not label chunks")
+        Err(err_runtime!("the sampled policy updates a shortlist, not label chunks"))
     }
 
     fn run_step(
@@ -128,7 +129,7 @@ impl UpdatePolicy for SampledPolicy {
         let d = store.d;
         let art = &ctx.arts[0]; // our artifacts(): the shortlist kernel
         if !rt.has(art) {
-            bail!("no fp32 artifact for shortlist size {lc}");
+            return Err(err_artifacts!("no fp32 artifact for shortlist size {lc}"));
         }
         // shortlist: batch positives + a SMALL uniform negative budget
         // (emulating the paper-scale ~0.1% label coverage of sampling

@@ -13,7 +13,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::err_artifacts;
+use crate::error::Result;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
@@ -26,7 +27,7 @@ impl Dtype {
         match s {
             "f32" => Ok(Dtype::F32),
             "i32" => Ok(Dtype::I32),
-            other => bail!("unknown dtype `{other}`"),
+            other => Err(err_artifacts!("unknown dtype `{other}`")),
         }
     }
 }
@@ -80,7 +81,7 @@ impl Manifest {
 
     pub fn parse(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {path:?}"))?;
+            .map_err(|e| err_artifacts!("reading {path:?}: {e}"))?;
         Self::parse_str(&text)
     }
 
@@ -88,7 +89,7 @@ impl Manifest {
         let mut m = Manifest::default();
         for (ln, line) in text.lines().enumerate() {
             let toks: Vec<&str> = line.split_whitespace().collect();
-            let err = |msg: &str| anyhow!("manifest line {}: {msg}", ln + 1);
+            let err = |msg: &str| err_artifacts!("manifest line {}: {msg}", ln + 1);
             match toks.first().copied() {
                 None => {}
                 Some("config") => {
@@ -98,16 +99,16 @@ impl Manifest {
                             .ok_or_else(|| err("bad config kv"))?;
                         let c = &mut m.config;
                         match k {
-                            "vocab" => c.vocab = v.parse()?,
-                            "d" => c.d = v.parse()?,
-                            "seq" => c.seq = v.parse()?,
-                            "layers" => c.layers = v.parse()?,
-                            "heads" => c.heads = v.parse()?,
-                            "ffn" => c.ffn = v.parse()?,
-                            "batch" => c.batch = v.parse()?,
-                            "psize" => c.psize = v.parse()?,
-                            "hist_bins" => c.hist_bins = v.parse()?,
-                            "hist_lo" => c.hist_lo = v.parse()?,
+                            "vocab" => c.vocab = parse_num(v, &err)?,
+                            "d" => c.d = parse_num(v, &err)?,
+                            "seq" => c.seq = parse_num(v, &err)?,
+                            "layers" => c.layers = parse_num(v, &err)?,
+                            "heads" => c.heads = parse_num(v, &err)?,
+                            "ffn" => c.ffn = parse_num(v, &err)?,
+                            "batch" => c.batch = parse_num(v, &err)?,
+                            "psize" => c.psize = parse_num(v, &err)?,
+                            "hist_bins" => c.hist_bins = parse_num(v, &err)?,
+                            "hist_lo" => c.hist_lo = parse_num(v, &err)?,
                             _ => {} // forward-compatible
                         }
                     }
@@ -156,10 +157,20 @@ impl Manifest {
             }
         }
         if m.config.d == 0 || m.config.batch == 0 {
-            bail!("manifest missing config line");
+            return Err(err_artifacts!("manifest missing config line"));
         }
         Ok(m)
     }
+}
+
+/// Parse one config value with the line-scoped error constructor (the
+/// config fields mix `usize` and `i32`, hence the generic).
+fn parse_num<T: std::str::FromStr>(
+    v: &str,
+    err: &impl Fn(&str) -> crate::error::Error,
+) -> Result<T> {
+    v.parse()
+        .map_err(|_| err(&format!("bad config value `{v}`")))
 }
 
 #[cfg(test)]

@@ -10,7 +10,8 @@ pub mod pool;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::error::{Result, ResultExt};
+use crate::{err_artifacts, err_runtime, err_shape};
 
 pub use manifest::{ArtifactSpec, Dtype, Manifest, ModelConfig, TensorSpec};
 pub use pool::{OrderedReducer, RuntimePool};
@@ -33,7 +34,7 @@ impl Runtime {
         let manifest = Manifest::parse(&dir.join("manifest.txt"))
             .context("parsing artifacts/manifest.txt (run `make artifacts`)")?;
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+            .map_err(|e| err_runtime!("PjRtClient::cpu: {e:?}"))?;
         Ok(Runtime {
             client,
             manifest,
@@ -55,17 +56,17 @@ impl Runtime {
         let spec = self
             .manifest
             .artifact(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+            .ok_or_else(|| err_artifacts!("unknown artifact `{name}`"))?;
         let path = self.dir.join(&spec.file);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            path.to_str().ok_or_else(|| err_artifacts!("bad path"))?,
         )
-        .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        .map_err(|e| err_runtime!("loading {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling `{name}`: {e:?}"))?;
+            .map_err(|e| err_runtime!("compiling `{name}`: {e:?}"))?;
         self.exes.insert(name.to_string(), exe);
         Ok(())
     }
@@ -92,7 +93,7 @@ impl Runtime {
             .artifact(name)
             .expect("prepare() verified the artifact exists");
         if args.len() != spec.inputs.len() {
-            return Err(anyhow!(
+            return Err(err_shape!(
                 "`{name}` expects {} inputs, got {}",
                 spec.inputs.len(),
                 args.len()
@@ -103,7 +104,7 @@ impl Runtime {
             let buf = match (arg, tspec.dtype) {
                 (Arg::F32(data), Dtype::F32) => {
                     if data.len() != tspec.numel() {
-                        return Err(anyhow!(
+                        return Err(err_shape!(
                             "`{name}` input `{}`: {} elems for shape {:?}",
                             tspec.name, data.len(), tspec.dims
                         ));
@@ -113,7 +114,7 @@ impl Runtime {
                 }
                 (Arg::I32(data), Dtype::I32) => {
                     if data.len() != tspec.numel() {
-                        return Err(anyhow!(
+                        return Err(err_shape!(
                             "`{name}` input `{}`: {} elems for shape {:?}",
                             tspec.name, data.len(), tspec.dims
                         ));
@@ -122,19 +123,19 @@ impl Runtime {
                         .buffer_from_host_buffer(data, &tspec.dims, None)
                 }
                 _ => {
-                    return Err(anyhow!(
+                    return Err(err_shape!(
                         "`{name}` input `{}`: dtype mismatch (manifest {:?})",
                         tspec.name, tspec.dtype
                     ))
                 }
             }
-            .map_err(|e| anyhow!("uploading `{}`: {e:?}", tspec.name))?;
+            .map_err(|e| err_runtime!("uploading `{}`: {e:?}", tspec.name))?;
             bufs.push(buf);
         }
         let exe = self.exes.get(name).unwrap();
         let result = exe
             .execute_b(&bufs)
-            .map_err(|e| anyhow!("executing `{name}`: {e:?}"))?;
+            .map_err(|e| err_runtime!("executing `{name}`: {e:?}"))?;
         let row = &result[0];
         let outs: Vec<xla::Literal> = if row.len() == spec.outputs.len() && row.len() != 1 {
             // runtime untupled the result for us
@@ -142,7 +143,7 @@ impl Runtime {
             for b in row {
                 v.push(
                     b.to_literal_sync()
-                        .map_err(|e| anyhow!("fetching `{name}`: {e:?}"))?,
+                        .map_err(|e| err_runtime!("fetching `{name}`: {e:?}"))?,
                 );
             }
             v
@@ -150,16 +151,16 @@ impl Runtime {
             // single (possibly tuple) output literal
             let lit = row[0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("fetching `{name}`: {e:?}"))?;
+                .map_err(|e| err_runtime!("fetching `{name}`: {e:?}"))?;
             if spec.outputs.len() == 1 && !matches!(lit.shape(), Ok(xla::Shape::Tuple(_))) {
                 vec![lit]
             } else {
                 lit.to_tuple()
-                    .map_err(|e| anyhow!("decomposing `{name}` tuple: {e:?}"))?
+                    .map_err(|e| err_runtime!("decomposing `{name}` tuple: {e:?}"))?
             }
         };
         if outs.len() != spec.outputs.len() {
-            return Err(anyhow!(
+            return Err(err_shape!(
                 "`{name}` returned {} outputs, manifest says {}",
                 outs.len(),
                 spec.outputs.len()
@@ -186,12 +187,16 @@ impl Runtime {
     }
 }
 
-/// A runtime execution context: the caller's own `Runtime` plus an
-/// optional `RuntimePool` for fanning data-independent label chunks out to
-/// worker threads.  `pool: None` (or `--workers 1`) is the serial path —
-/// exactly the pre-pool behavior.  Encoder kernels and non-chunk-shaped
-/// work always run on `rt`; only the chunk loops (`policy::run_step`,
-/// `infer::ChunkScanner`) consult `pool`.
+/// A runtime execution context: a `Runtime` plus an optional
+/// `RuntimePool` for fanning data-independent label chunks out to worker
+/// threads.  `pool: None` is the serial path — exactly the pre-pool
+/// behavior.  Encoder kernels and non-chunk-shaped work always run on
+/// `rt`; only the chunk loops (`policy::run_step`, `infer::ChunkScanner`)
+/// consult `pool`.
+///
+/// This is internal plumbing: `session::Session` owns both pieces and
+/// builds an `ExecCtx` per call (`Session::ctx`); public entrypoints take
+/// `&mut Session`, never an `ExecCtx`.
 pub struct ExecCtx<'a> {
     pub rt: &'a mut Runtime,
     pub pool: Option<&'a RuntimePool>,
@@ -223,7 +228,8 @@ pub enum Arg<'a> {
 
 /// Copy a literal's f32 payload out to a Vec.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    lit.to_vec::<f32>()
+        .map_err(|e| err_runtime!("to_vec f32: {e:?}"))
 }
 
 /// Read a shape-(1,) scalar.
@@ -234,9 +240,9 @@ pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
 /// Load a raw little-endian f32 binary (enc_init_*.bin).
 pub fn load_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path.as_ref())
-        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        .map_err(|e| err_artifacts!("reading {:?}: {e}", path.as_ref()))?;
     if bytes.len() % 4 != 0 {
-        return Err(anyhow!("file size not a multiple of 4"));
+        return Err(err_artifacts!("file size not a multiple of 4"));
     }
     Ok(bytes
         .chunks_exact(4)

@@ -21,16 +21,18 @@
 //!   commit order, and Renee's staged-chunk indexing are all preserved
 //!   bit-for-bit.  `rust/tests/parallel_parity.rs` pins this.
 //!
-//! Consumers: `policy::run_step_pooled` (training), `ChunkScanner::scan_ex`
-//! (eval + serving), both behind the `--workers N` CLI flag (default 1 =
-//! the serial path, no pool constructed).
+//! Consumers: `policy::run_step_pooled` (training) and
+//! `ChunkScanner::scan` (eval + serving), both reached through a pooled
+//! `session::Session` (`--workers N` on the CLI; the default 1 is a
+//! pool-less session, i.e. the serial path).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, bail, Result};
+use crate::err_runtime;
+use crate::error::Result;
 
 use super::Runtime;
 
@@ -56,7 +58,7 @@ impl RuntimePool {
     /// corrupt artifacts dir fails here rather than mid-step.
     pub fn new(dir: impl AsRef<Path>, workers: usize) -> Result<Self> {
         if workers == 0 {
-            bail!("runtime pool needs at least one worker");
+            return Err(err_runtime!("runtime pool needs at least one worker"));
         }
         let dir = dir.as_ref().to_path_buf();
         let (boot_tx, boot_rx) = channel::<Result<()>>();
@@ -84,7 +86,7 @@ impl RuntimePool {
                         job(&mut rt);
                     }
                 })
-                .map_err(|e| anyhow!("spawning chunk worker {i}: {e}"))?;
+                .map_err(|e| err_runtime!("spawning chunk worker {i}: {e}"))?;
             handles.push(WorkerHandle { tx: Some(tx), handle: Some(handle) });
         }
         drop(boot_tx);
@@ -95,7 +97,9 @@ impl RuntimePool {
                 Ok(Err(e)) => {
                     return Err(e.context("initializing a pool worker's PJRT runtime"))
                 }
-                Err(_) => bail!("a pool worker exited before reporting readiness"),
+                Err(_) => {
+                    return Err(err_runtime!("a pool worker exited before reporting readiness"))
+                }
             }
         }
         Ok(pool)
@@ -120,7 +124,7 @@ impl RuntimePool {
             .as_ref()
             .expect("pool senders live until drop")
             .send(job)
-            .map_err(|_| anyhow!("runtime pool worker {idx} has shut down"))
+            .map_err(|_| err_runtime!("runtime pool worker {idx} has shut down"))
     }
 
     /// Precompile `names` on every worker (parallel warmup), surfacing the
@@ -149,7 +153,7 @@ impl RuntimePool {
             match rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => return Err(e),
-                Err(_) => bail!("a pool worker hung up during warmup"),
+                Err(_) => return Err(err_runtime!("a pool worker hung up during warmup")),
             }
         }
         Ok(())

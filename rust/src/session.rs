@@ -1,0 +1,235 @@
+//! `Session`: the single owning facade over the execution stack.
+//!
+//! Before this layer existed, every entrypoint — the CLI, 17 bench
+//! harnesses, 4 examples — hand-wired the same four pieces: a `Runtime`,
+//! an optional `RuntimePool`, an `ExecCtx` glue struct per call, and a
+//! kernel-prepare list per workload.  The public API had forked into
+//! serial/pooled twins (`step`/`step_ex`, `evaluate`/`evaluate_ex`, ...).
+//!
+//! `Session` collapses all of that into one object:
+//!
+//! * it owns the `Runtime` (PJRT client + executable cache) **and** the
+//!   optional chunk-execution `RuntimePool` (`workers >= 2`);
+//! * `workers(1)` is simply a pool-less session — the serial and pooled
+//!   code paths are the same methods, dispatching internally exactly as
+//!   the old `*_ex` twins did (bit-identical by construction; see
+//!   `rust/tests/parallel_parity.rs`);
+//! * `prepare` compiles a workload's `KernelSet` plan — host kernels on
+//!   the session runtime, chunk-shaped kernels also on every pool worker
+//!   — so workloads declare what they run (`Trainer::required_kernels`,
+//!   `Predictor::required_kernels`) instead of hand-formatting artifact
+//!   names;
+//! * construction goes through `SessionBuilder`, which validates the
+//!   worker count and the artifacts directory *before* touching PJRT, so
+//!   misconfiguration fails fast with a typed `elmo::Error`.
+//!
+//! Training, evaluation, scanning, and serving entrypoints all take
+//! `&mut Session`:
+//!
+//! ```ignore
+//! let mut sess = Session::builder().artifacts("artifacts").workers(4).build()?;
+//! let mut tr = sess.trainer(&ds, cfg)?;
+//! sess.prepare(&tr.required_kernels())?;
+//! let stats = tr.run_epoch(&mut sess, &ds, 0)?;
+//! let report = coordinator::evaluate(&mut sess, &tr, &ds, 512)?;
+//! ```
+
+use crate::coordinator::{TrainConfig, Trainer};
+use crate::data::Dataset;
+use crate::err_artifacts;
+use crate::err_config;
+use crate::error::Result;
+use crate::infer::Predictor;
+use crate::runtime::{ExecCtx, ModelConfig, Runtime, RuntimePool};
+
+/// Validated constructor for `Session`.  All checks that can fail without
+/// PJRT run in `build()` before any client is created, which is what
+/// makes the error paths unit-testable host-side.
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    artifacts: String,
+    workers: usize,
+}
+
+impl SessionBuilder {
+    /// Artifacts directory (default `"artifacts"`).
+    pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Chunk-execution parallelism (default 1 = serial, no pool).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Validate, then construct the runtime (and the pool for
+    /// `workers >= 2`).  Fails with `Error::Config` on `workers == 0` and
+    /// `Error::Artifacts` when the directory holds no manifest — both
+    /// before any PJRT state exists.
+    pub fn build(self) -> Result<Session> {
+        if self.workers == 0 {
+            return Err(err_config!("session workers must be >= 1 (1 = serial, no pool)"));
+        }
+        require_artifacts(&self.artifacts)?;
+        let rt = Runtime::new(&self.artifacts)?;
+        let pool = if self.workers >= 2 {
+            Some(RuntimePool::new(&self.artifacts, self.workers)?)
+        } else {
+            None
+        };
+        Ok(Session { rt, pool, dir: self.artifacts })
+    }
+}
+
+/// The owning execution facade: one `Runtime`, an optional `RuntimePool`,
+/// and the artifacts directory they both load.  See the module docs.
+pub struct Session {
+    rt: Runtime,
+    pool: Option<RuntimePool>,
+    dir: String,
+}
+
+impl Session {
+    /// Start a builder with the defaults (`artifacts` dir, 1 worker).
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder { artifacts: "artifacts".to_string(), workers: 1 }
+    }
+
+    /// Shorthand: a serial (pool-less) session over `dir`.
+    pub fn open(dir: impl Into<String>) -> Result<Session> {
+        Session::builder().artifacts(dir).build()
+    }
+
+    /// The manifest's model constants (batch width, d, psize, ...).
+    pub fn config(&self) -> &ModelConfig {
+        self.rt.config()
+    }
+
+    /// The artifacts directory this session loaded.
+    pub fn artifacts_dir(&self) -> &str {
+        &self.dir
+    }
+
+    /// Effective chunk-loop parallelism (1 = serial).
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.workers())
+    }
+
+    /// Direct access to the session runtime — the escape hatch for
+    /// kernel-level work (micro-benchmarks, diagnostics executables) that
+    /// has no chunk fan-out.  High-level entrypoints take `&mut Session`.
+    pub fn runtime(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    /// The execution context the chunk loops consume: the runtime plus
+    /// the optional pool.  Internal plumbing — entrypoint methods build
+    /// this themselves; callers only see `&mut Session`.
+    pub fn ctx(&mut self) -> ExecCtx<'_> {
+        ExecCtx { rt: &mut self.rt, pool: self.pool.as_ref() }
+    }
+
+    /// Compile a workload's kernel plan so timed/serving loops never pay
+    /// first-use compilation: every kernel on the session runtime, and
+    /// only the chunk-shaped ones on the pool workers (workers never
+    /// execute encoder kernels — compiling the largest HLO modules N
+    /// extra times would be pure startup waste).  Workloads name their
+    /// own plans: `Trainer::required_kernels`,
+    /// `Predictor::required_kernels`.
+    pub fn prepare(&mut self, kernels: &KernelSet) -> Result<()> {
+        for k in kernels.host.iter().chain(kernels.chunk.iter()) {
+            self.rt.prepare(k)?;
+        }
+        if let Some(p) = &self.pool {
+            if !kernels.chunk.is_empty() {
+                p.prepare(&kernels.chunk)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Construct a trainer bound to this session's manifest and artifacts
+    /// directory.  (The trainer holds no session borrow; pass the session
+    /// back into `step`/`run_epoch`.)
+    pub fn trainer(&self, ds: &Dataset, cfg: TrainConfig) -> Result<Trainer> {
+        Trainer::new(self, ds, cfg)
+    }
+
+    /// Load a checkpoint into a `Predictor` and precompile its serving
+    /// kernels on the runtime and every pool worker.
+    pub fn predictor(&mut self, checkpoint_path: &str) -> Result<Predictor> {
+        let p = Predictor::load(checkpoint_path)?;
+        self.prepare(&p.required_kernels())?;
+        Ok(p)
+    }
+}
+
+/// A workload's kernel-prepare plan.  `host` kernels run only on the
+/// session runtime (encoder forward/backward, non-chunk-shaped work);
+/// `chunk` kernels are the chunk-shaped classifier/scoring executables
+/// that pool workers also run.  `Session::prepare` compiles both lists
+/// on the runtime and only `chunk` on the pool.
+#[derive(Clone, Debug, Default)]
+pub struct KernelSet {
+    pub host: Vec<String>,
+    pub chunk: Vec<String>,
+}
+
+/// Artifact-presence check shared by `SessionBuilder::build` and the
+/// harnesses that want to *skip* (rather than fail) without artifacts.
+pub fn require_artifacts(dir: &str) -> Result<()> {
+    if !std::path::Path::new(dir).join("manifest.txt").exists() {
+        return Err(err_artifacts!(
+            "artifacts not found in `{dir}` — run `make artifacts` first"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    #[test]
+    fn builder_rejects_zero_workers_before_touching_pjrt() {
+        let err = Session::builder()
+            .artifacts("/nonexistent/elmo-artifacts")
+            .workers(0)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(format!("{err}").contains("workers"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_missing_artifacts_dir() {
+        let err = Session::builder()
+            .artifacts("/nonexistent/elmo-artifacts")
+            .workers(1)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::Artifacts(_)), "{err}");
+        assert!(format!("{err}").contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn open_shares_the_builder_validation() {
+        let err = Session::open("/nonexistent/elmo-artifacts").unwrap_err();
+        assert!(matches!(err, Error::Artifacts(_)), "{err}");
+    }
+
+    #[test]
+    fn require_artifacts_is_the_skip_probe() {
+        assert!(require_artifacts("/nonexistent/elmo-artifacts").is_err());
+    }
+
+    #[test]
+    fn builder_defaults_are_the_cli_defaults() {
+        let b = Session::builder();
+        assert_eq!(b.artifacts, "artifacts");
+        assert_eq!(b.workers, 1);
+    }
+}

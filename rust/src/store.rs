@@ -18,9 +18,9 @@
 //! later PRs reshape the storage (per-chunk precision mixes, sharding,
 //! parallel chunk execution) without touching the training loop.
 
-use anyhow::{bail, Result};
-
 use crate::data::Csr;
+use crate::err_shape;
+use crate::error::Result;
 
 /// Which optional buffers a precision policy asks the store to allocate
 /// (see `policy::UpdatePolicy::buffers`).
@@ -86,7 +86,7 @@ impl WeightStore {
         spec: BufferSpec,
     ) -> Result<Self> {
         if labels == 0 || d == 0 || chunk_size == 0 {
-            bail!("weight store needs labels, d, chunk_size > 0");
+            return Err(err_shape!("weight store needs labels, d, chunk_size > 0"));
         }
         let l_pad = labels.div_ceil(chunk_size) * chunk_size;
         let mut store = WeightStore {
@@ -125,15 +125,15 @@ impl WeightStore {
         w: Vec<f32>,
     ) -> Result<Self> {
         if labels == 0 || d == 0 || chunk_size == 0 {
-            bail!("weight store needs labels, d, chunk_size > 0");
+            return Err(err_shape!("weight store needs labels, d, chunk_size > 0"));
         }
         let l_pad = labels.div_ceil(chunk_size) * chunk_size;
         if w.len() != l_pad * d {
-            bail!(
+            return Err(err_shape!(
                 "weight section has {} values, store geometry wants {} ({l_pad} x {d})",
                 w.len(),
                 l_pad * d
-            );
+            ));
         }
         let mut store = WeightStore {
             w,
@@ -285,16 +285,16 @@ impl WeightStore {
     /// Install a new label permutation and rebuild the inverse map.
     pub fn set_label_order(&mut self, order: &[u32]) -> Result<()> {
         if order.len() != self.labels {
-            bail!(
+            return Err(err_shape!(
                 "label order has {} entries for {} labels",
                 order.len(),
                 self.labels
-            );
+            ));
         }
         let mut seen = vec![false; self.labels];
         for &lab in order {
             if lab as usize >= self.labels || seen[lab as usize] {
-                bail!("label order is not a permutation of 0..{}", self.labels);
+                return Err(err_shape!("label order is not a permutation of 0..{}", self.labels));
             }
             seen[lab as usize] = true;
         }
@@ -337,20 +337,20 @@ impl WeightStore {
         label_order: &[u32],
     ) -> Result<()> {
         if w_scored.len() != self.l_pad * self.d {
-            bail!(
+            return Err(err_shape!(
                 "restore: w has {} values, store wants {}",
                 w_scored.len(),
                 self.l_pad * self.d
-            );
+            ));
         }
         if mom.len() != self.mom.len() || kahan.len() != self.kahan_c.len() {
-            bail!(
+            return Err(err_shape!(
                 "restore: optimizer sections ({}, {}) don't match store ({}, {})",
                 mom.len(),
                 kahan.len(),
                 self.mom.len(),
                 self.kahan_c.len()
-            );
+            ));
         }
         self.set_label_order(label_order)?;
         self.w[..w_scored.len()].copy_from_slice(w_scored);

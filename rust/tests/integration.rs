@@ -4,6 +4,7 @@
 //! These need `make artifacts`; they skip gracefully when absent so
 //! `cargo test` stays usable on a fresh clone.
 
+use elmo::Session;
 use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data;
 use elmo::infer::{Checkpoint, Predictor};
@@ -29,19 +30,19 @@ macro_rules! require_artifacts {
     };
 }
 
-fn mk_trainer(precision: Precision, chunk: usize) -> (Runtime, data::Dataset, Trainer, String) {
+fn mk_trainer(precision: Precision, chunk: usize) -> (Session, data::Dataset, Trainer, String) {
     let art = art_dir().unwrap();
     let prof = data::profile("quickstart").unwrap();
     let ds = data::generate(&prof, 1);
-    let rt = Runtime::new(&art).unwrap();
+    let sess = Session::open(art.as_str()).unwrap();
     let cfg = TrainConfig {
         precision,
         chunk_size: chunk,
         epochs: 1,
         ..TrainConfig::default()
     };
-    let tr = Trainer::new(&rt, &ds, cfg, &art).unwrap();
-    (rt, ds, tr, art)
+    let tr = Trainer::new(&sess, &ds, cfg).unwrap();
+    (sess, ds, tr, art)
 }
 
 #[test]
@@ -128,13 +129,13 @@ fn quant_sweep_artifact_matches_rust_softfloat() {
 #[test]
 fn train_step_decreases_loss() {
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
     let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
     let mut first = None;
     let mut last = 0.0;
     for _ in 0..12 {
         let (rows, _) = batcher.next_batch().unwrap();
-        let (loss, overflow) = tr.step(&mut rt, &ds, &rows).unwrap();
+        let (loss, overflow) = tr.step(&mut sess, &ds, &rows).unwrap();
         assert!(!overflow);
         first.get_or_insert(loss);
         last = loss;
@@ -150,11 +151,11 @@ fn train_step_decreases_loss() {
 fn weights_stay_on_grid_per_policy() {
     require_artifacts!();
     for (prec, fmt) in [(Precision::Bf16, &BF16), (Precision::Fp8, &E4M3)] {
-        let (mut rt, ds, mut tr, _) = mk_trainer(prec, 512);
+        let (mut sess, ds, mut tr, _) = mk_trainer(prec, 512);
         let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
         for _ in 0..3 {
             let (rows, _) = batcher.next_batch().unwrap();
-            tr.step(&mut rt, &ds, &rows).unwrap();
+            tr.step(&mut sess, &ds, &rows).unwrap();
         }
         assert!(tr.weights_on_grid(), "{prec:?} weights left the grid");
         // and they moved
@@ -169,12 +170,12 @@ fn chunked_equals_unchunked_fp32() {
     // chunking is a memory optimization, not a numerics change (paper
     // Table 10's "no accuracy impact").
     require_artifacts!();
-    let (mut rt, ds, mut tr_a, _) = mk_trainer(Precision::Fp32, 512);
-    let (_, _, mut tr_b, _) = mk_trainer(Precision::Fp32, 1024);
+    let (mut sess, ds, mut tr_a, _) = mk_trainer(Precision::Fp32, 512);
+    let (mut sess_b, _, mut tr_b, _) = mk_trainer(Precision::Fp32, 1024);
     // same dropout seed usage requires same step seeds: both start at 0
     let rows: Vec<u32> = (0..tr_a.batch as u32).collect();
-    tr_a.step(&mut rt, &ds, &rows).unwrap();
-    tr_b.step(&mut rt, &ds, &rows).unwrap();
+    tr_a.step(&mut sess, &ds, &rows).unwrap();
+    tr_b.step(&mut sess_b, &ds, &rows).unwrap();
     let max_diff = tr_a
         .store
         .w()
@@ -199,17 +200,17 @@ fn chunked_equals_unchunked_fp32() {
 #[test]
 fn renee_runs_and_manages_loss_scale() {
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Renee, 1024);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Renee, 1024);
     tr.loss_scale = 1e9; // force overflow on the first step
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
     let w_before = tr.store.w().to_vec();
-    let (_, overflowed) = tr.step(&mut rt, &ds, &rows).unwrap();
+    let (_, overflowed) = tr.step(&mut sess, &ds, &rows).unwrap();
     assert!(overflowed, "1e9 scale must overflow fp16");
     assert_eq!(tr.store.w(), &w_before[..], "overflowed step must not commit updates");
     assert!(tr.loss_scale < 1e9, "scale must halve after overflow");
     // a sane scale trains
     tr.loss_scale = 1024.0;
-    let (_, overflowed) = tr.step(&mut rt, &ds, &rows).unwrap();
+    let (_, overflowed) = tr.step(&mut sess, &ds, &rows).unwrap();
     assert!(!overflowed);
     assert!(tr.store.w().iter().any(|&v| v != 0.0));
 }
@@ -221,17 +222,17 @@ fn renee_overflow_rollback_is_byte_identical_and_scale_regrows() {
     // scale halves (floored at 1.0 — unit-tested in policy::renee), and
     // regrows on the 200th clean step
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Renee, 1024);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Renee, 1024);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
     // one clean step so w / mom / enc_p are all nonzero
-    let (_, o) = tr.step(&mut rt, &ds, &rows).unwrap();
+    let (_, o) = tr.step(&mut sess, &ds, &rows).unwrap();
     assert!(!o);
     let w0: Vec<u32> = tr.store.w().iter().map(|v| v.to_bits()).collect();
     let m0: Vec<u32> = tr.store.mom().iter().map(|v| v.to_bits()).collect();
     let e0: Vec<u32> = tr.enc_p.iter().map(|v| v.to_bits()).collect();
 
     tr.loss_scale = 1e9; // force FP16 overflow
-    let (_, o) = tr.step(&mut rt, &ds, &rows).unwrap();
+    let (_, o) = tr.step(&mut sess, &ds, &rows).unwrap();
     assert!(o, "1e9 scale must overflow");
     let w1: Vec<u32> = tr.store.w().iter().map(|v| v.to_bits()).collect();
     let m1: Vec<u32> = tr.store.mom().iter().map(|v| v.to_bits()).collect();
@@ -244,7 +245,7 @@ fn renee_overflow_rollback_is_byte_identical_and_scale_regrows() {
     // regrowth: the 200th clean step doubles the scale (cap 65536)
     tr.loss_scale = 512.0;
     tr.step_count = 199;
-    let (_, o) = tr.step(&mut rt, &ds, &rows).unwrap();
+    let (_, o) = tr.step(&mut sess, &ds, &rows).unwrap();
     assert!(!o);
     assert_eq!(tr.loss_scale, 1024.0, "scale doubles at step 200");
 }
@@ -252,9 +253,9 @@ fn renee_overflow_rollback_is_byte_identical_and_scale_regrows() {
 #[test]
 fn sampled_policy_touches_only_shortlist() {
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Sampled, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Sampled, 512);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
-    tr.step(&mut rt, &ds, &rows).unwrap();
+    tr.step(&mut sess, &ds, &rows).unwrap();
     let moved = tr.store.w().chunks(tr.store.d).filter(|c| c.iter().any(|&v| v != 0.0)).count();
     assert!(moved > 0, "some rows must move");
     assert!(
@@ -267,7 +268,7 @@ fn sampled_policy_touches_only_shortlist() {
 #[test]
 fn head_kahan_policy_partitions_and_reorders() {
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Fp8HeadKahan, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Fp8HeadKahan, 512);
     assert!(tr.store.head_chunks >= 1);
     // label permutation is a bijection
     let mut seen = vec![false; ds.profile.labels];
@@ -281,7 +282,7 @@ fn head_kahan_policy_partitions_and_reorders() {
     let flast = ds.label_freq[*tr.store.label_order().last().unwrap() as usize];
     assert!(f0 >= flast);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
-    tr.step(&mut rt, &ds, &rows).unwrap();
+    tr.step(&mut sess, &ds, &rows).unwrap();
     // head rows live on the BF16 grid, tail rows on E4M3
     let lc = tr.store.chunk_size * tr.store.d;
     let head = &tr.store.w()[..tr.store.head_chunks * lc];
@@ -293,13 +294,13 @@ fn head_kahan_policy_partitions_and_reorders() {
 #[test]
 fn evaluate_streams_chunks() {
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
     let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
     for _ in 0..8 {
         let (rows, _) = batcher.next_batch().unwrap();
-        tr.step(&mut rt, &ds, &rows).unwrap();
+        tr.step(&mut sess, &ds, &rows).unwrap();
     }
-    let rep = evaluate(&mut rt, &tr, &ds, 96).unwrap();
+    let rep = evaluate(&mut sess, &tr, &ds, 96).unwrap();
     assert_eq!(rep.n, 96);
     for v in rep.p.iter().chain(rep.psp.iter()) {
         assert!((0.0..=100.0).contains(v));
@@ -309,14 +310,14 @@ fn evaluate_streams_chunks() {
 #[test]
 fn checkpoint_roundtrip() {
     require_artifacts!();
-    let (mut rt, ds, mut tr, art) = mk_trainer(Precision::Bf16, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
-    tr.step(&mut rt, &ds, &rows).unwrap();
+    tr.step(&mut sess, &ds, &rows).unwrap();
     let path = std::env::temp_dir().join("elmo_ckpt_test.bin");
     let path = path.to_str().unwrap();
     tr.save_checkpoint(path).unwrap();
     let cfg = tr.cfg.clone();
-    let mut tr2 = Trainer::new(&rt, &ds, cfg, &art).unwrap();
+    let mut tr2 = Trainer::new(&sess, &ds, cfg).unwrap();
     assert_ne!(tr2.store.w(), tr.store.w());
     tr2.load_checkpoint(path).unwrap();
     assert_eq!(tr2.store.w(), tr.store.w());
@@ -334,13 +335,13 @@ fn predictor_reproduces_in_memory_eval_exactly() {
     // bit-exact and P@k / PSP@k identical (not merely close) to the
     // in-memory evaluate(), because both drive the same ChunkScanner.
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Bf16, 512);
     let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
     for _ in 0..6 {
         let (rows, _) = batcher.next_batch().unwrap();
-        tr.step(&mut rt, &ds, &rows).unwrap();
+        tr.step(&mut sess, &ds, &rows).unwrap();
     }
-    let rep_mem = evaluate(&mut rt, &tr, &ds, 96).unwrap();
+    let rep_mem = evaluate(&mut sess, &tr, &ds, 96).unwrap();
 
     let path = std::env::temp_dir().join("elmo_predictor_parity.bin");
     let path = path.to_str().unwrap();
@@ -353,7 +354,7 @@ fn predictor_reproduces_in_memory_eval_exactly() {
     assert_eq!(p.profile(), "quickstart");
     assert_eq!(p.seed(), tr.cfg.seed);
 
-    let rep_srv = p.evaluate(&mut rt, &ds, 96).unwrap();
+    let rep_srv = p.evaluate(&mut sess, &ds, 96).unwrap();
     assert_eq!(rep_srv.n, rep_mem.n);
     assert_eq!(rep_srv.p, rep_mem.p, "P@k must match the in-memory eval exactly");
     assert_eq!(rep_srv.psp, rep_mem.psp, "PSP@k must match exactly");
@@ -365,10 +366,10 @@ fn head_kahan_checkpoint_preserves_permutation() {
     // the label permutation is part of the model: a head-Kahan checkpoint
     // served without it would score the wrong labels
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Fp8HeadKahan, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Fp8HeadKahan, 512);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
-    tr.step(&mut rt, &ds, &rows).unwrap();
-    let rep_mem = evaluate(&mut rt, &tr, &ds, 64).unwrap();
+    tr.step(&mut sess, &ds, &rows).unwrap();
+    let rep_mem = evaluate(&mut sess, &tr, &ds, 64).unwrap();
     let path = std::env::temp_dir().join("elmo_headkahan_ckpt.bin");
     let path = path.to_str().unwrap();
     Checkpoint::from_trainer(&tr, "quickstart").save(path).unwrap();
@@ -378,7 +379,7 @@ fn head_kahan_checkpoint_preserves_permutation() {
         &(0..ds.profile.labels as u32).collect::<Vec<_>>()[..],
         "head-Kahan must have permuted rows"
     );
-    let rep_srv = p.evaluate(&mut rt, &ds, 64).unwrap();
+    let rep_srv = p.evaluate(&mut sess, &ds, 64).unwrap();
     assert_eq!(rep_srv.p, rep_mem.p);
     let _ = std::fs::remove_file(path);
 }
@@ -386,9 +387,9 @@ fn head_kahan_checkpoint_preserves_permutation() {
 #[test]
 fn fig2a_host_quantization_moves_weights_onto_grid() {
     require_artifacts!();
-    let (mut rt, ds, mut tr, _) = mk_trainer(Precision::Fp32, 512);
+    let (mut sess, ds, mut tr, _) = mk_trainer(Precision::Fp32, 512);
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
-    tr.step(&mut rt, &ds, &rows).unwrap();
+    tr.step(&mut sess, &ds, &rows).unwrap();
     tr.quantize_classifier(4, 3, false);
     for &v in tr.store.w().iter() {
         let q = elmo::numerics::quantize_param(v, 4.0, 3.0, None);

@@ -9,20 +9,22 @@
 //!   staged commit-on-clean-step) is bit-identical to the in-order fold.
 //!   This pins the determinism argument without needing PJRT.
 //! * **Artifact-gated end-to-end parity** — for each chunk-shaped policy,
-//!   drive a serial trainer and a pooled trainer (`workers ∈ {2, 4}`)
-//!   over identical batches and assert bit-identical per-step losses,
+//!   drive a serial session (`workers = 1`) and a pooled session
+//!   (`workers ∈ {2, 4}`) through the unified `Session` API over
+//!   identical batches and assert bit-identical per-step losses,
 //!   overflow decisions, final weights/momentum/Kahan/encoder state, gmax
 //!   traces, and P@k/PSP@k; same for the chunked top-k scanner.
 
 use std::sync::Arc;
 
-use elmo::coordinator::{evaluate, evaluate_ex, Precision, TrainConfig, Trainer};
+use elmo::Session;
+use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data;
 use elmo::infer::{ChunkScanner, ClassifierView};
 use elmo::policy::{
     padded_mean_loss, ChunkExec, Fp32Policy, ReneePolicy, StepAccum, StepCtx, UpdatePolicy,
 };
-use elmo::runtime::{ExecCtx, OrderedReducer, Runtime, RuntimePool};
+use elmo::runtime::{OrderedReducer, RuntimePool};
 use elmo::store::{BufferSpec, StagedChunk, WeightStore};
 use elmo::util::Rng;
 
@@ -186,8 +188,9 @@ fn reported_loss_is_invariant_to_chunk_padding() {
 
 // ---- artifact-gated end-to-end parity ----
 
-/// Drive a serial and a pooled trainer over identical batches; everything
-/// observable must be bit-identical.
+/// Drive a serial (`workers = 1`) and a pooled session through the one
+/// unified `Session` API over identical batches; everything observable
+/// must be bit-identical.
 fn assert_parallel_step_parity(precision: Precision, chunk: usize, steps: usize, workers: usize) {
     let Some(art) = art_dir() else {
         eprintln!("skipping: run `make artifacts`");
@@ -195,25 +198,28 @@ fn assert_parallel_step_parity(precision: Precision, chunk: usize, steps: usize,
     };
     let prof = data::profile("quickstart").unwrap();
     let ds = data::generate(&prof, 1);
-    let mut rt_a = Runtime::new(&art).unwrap();
-    let mut rt_b = Runtime::new(&art).unwrap();
-    let pool = RuntimePool::new(&art, workers).unwrap();
+    let mut sess_a = Session::open(art.as_str()).unwrap();
+    let mut sess_b = Session::builder()
+        .artifacts(art.as_str())
+        .workers(workers)
+        .build()
+        .unwrap();
+    assert_eq!(sess_a.workers(), 1);
+    assert_eq!(sess_b.workers(), workers);
     let cfg = TrainConfig {
         precision,
         chunk_size: chunk,
         epochs: 1,
         ..TrainConfig::default()
     };
-    let mut tr_a = Trainer::new(&rt_a, &ds, cfg.clone(), &art).unwrap();
-    let mut tr_b = Trainer::new(&rt_b, &ds, cfg, &art).unwrap();
+    let mut tr_a = Trainer::new(&sess_a, &ds, cfg.clone()).unwrap();
+    let mut tr_b = Trainer::new(&sess_b, &ds, cfg).unwrap();
 
     let mut batcher = data::Batcher::new(ds.train.n, tr_a.batch, 0);
     for step in 0..steps {
         let (rows, _) = batcher.next_batch().unwrap();
-        let (loss_a, over_a) = tr_a.step(&mut rt_a, &ds, &rows).unwrap();
-        let (loss_b, over_b) = tr_b
-            .step_ex(&mut ExecCtx::of(&mut rt_b, Some(&pool)), &ds, &rows)
-            .unwrap();
+        let (loss_a, over_a) = tr_a.step(&mut sess_a, &ds, &rows).unwrap();
+        let (loss_b, over_b) = tr_b.step(&mut sess_b, &ds, &rows).unwrap();
         assert_eq!(
             loss_a.to_bits(),
             loss_b.to_bits(),
@@ -233,8 +239,8 @@ fn assert_parallel_step_parity(precision: Precision, chunk: usize, steps: usize,
     );
 
     // eval through the pooled scanner must match the serial protocol
-    let rep_a = evaluate(&mut rt_a, &tr_a, &ds, 96).unwrap();
-    let rep_b = evaluate_ex(&mut ExecCtx::of(&mut rt_b, Some(&pool)), &tr_b, &ds, 96).unwrap();
+    let rep_a = evaluate(&mut sess_a, &tr_a, &ds, 96).unwrap();
+    let rep_b = evaluate(&mut sess_b, &tr_b, &ds, 96).unwrap();
     assert_eq!(rep_a.p, rep_b.p, "{precision:?} x{workers}: P@k diverged");
     assert_eq!(rep_a.psp, rep_b.psp, "{precision:?} x{workers}: PSP@k diverged");
 }
@@ -280,17 +286,20 @@ fn pooled_parity_renee_forced_overflow() {
     let art = require_artifacts!();
     let prof = data::profile("quickstart").unwrap();
     let ds = data::generate(&prof, 1);
-    let mut rt_a = Runtime::new(&art).unwrap();
-    let mut rt_b = Runtime::new(&art).unwrap();
-    let pool = RuntimePool::new(&art, 2).unwrap();
+    let mut sess_a = Session::open(art.as_str()).unwrap();
+    let mut sess_b = Session::builder()
+        .artifacts(art.as_str())
+        .workers(2)
+        .build()
+        .unwrap();
     let cfg = TrainConfig {
         precision: Precision::Renee,
         chunk_size: 1024,
         epochs: 1,
         ..TrainConfig::default()
     };
-    let mut tr_a = Trainer::new(&rt_a, &ds, cfg.clone(), &art).unwrap();
-    let mut tr_b = Trainer::new(&rt_b, &ds, cfg, &art).unwrap();
+    let mut tr_a = Trainer::new(&sess_a, &ds, cfg.clone()).unwrap();
+    let mut tr_b = Trainer::new(&sess_b, &ds, cfg).unwrap();
     let rows: Vec<u32> = (0..tr_a.batch as u32).collect();
     // clean step, forced overflow (rollback on the coordinator), recovery
     for scale in [None, Some(1e9f32), None] {
@@ -298,10 +307,8 @@ fn pooled_parity_renee_forced_overflow() {
             tr_a.loss_scale = s;
             tr_b.loss_scale = s;
         }
-        let (la, oa) = tr_a.step(&mut rt_a, &ds, &rows).unwrap();
-        let (lb, ob) = tr_b
-            .step_ex(&mut ExecCtx::of(&mut rt_b, Some(&pool)), &ds, &rows)
-            .unwrap();
+        let (la, oa) = tr_a.step(&mut sess_a, &ds, &rows).unwrap();
+        let (lb, ob) = tr_b.step(&mut sess_b, &ds, &rows).unwrap();
         assert_eq!(la.to_bits(), lb.to_bits());
         assert_eq!(oa, ob);
         assert_eq!(tr_a.loss_scale.to_bits(), tr_b.loss_scale.to_bits());
@@ -313,10 +320,14 @@ fn pooled_parity_renee_forced_overflow() {
 #[test]
 fn pooled_scan_matches_serial_scan_across_chunks() {
     let art = require_artifacts!();
-    let mut rt = Runtime::new(&art).unwrap();
-    let pool = RuntimePool::new(&art, 3).unwrap();
-    let d = rt.config().d;
-    let b = rt.config().batch;
+    let mut sess_serial = Session::open(art.as_str()).unwrap();
+    let mut sess_pooled = Session::builder()
+        .artifacts(art.as_str())
+        .workers(3)
+        .build()
+        .unwrap();
+    let d = sess_serial.config().d;
+    let b = sess_serial.config().batch;
     // 4096 rows -> 4 scoring chunks; deterministic pseudo-random weights
     // (ties included: coarse grid) stress the insertion-order tie-breaking
     let labels = 4000usize;
@@ -330,10 +341,8 @@ fn pooled_scan_matches_serial_scan_across_chunks() {
     let emb: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let view = ClassifierView::of_store(&store);
     let scanner = ChunkScanner::new(5);
-    let serial = scanner.scan(&mut rt, &view, &emb, b).unwrap();
-    let pooled = scanner
-        .scan_ex(&mut ExecCtx::of(&mut rt, Some(&pool)), &view, &emb, b)
-        .unwrap();
+    let serial = scanner.scan(&mut sess_serial.ctx(), &view, &emb, b).unwrap();
+    let pooled = scanner.scan(&mut sess_pooled.ctx(), &view, &emb, b).unwrap();
     assert_eq!(serial.len(), pooled.len());
     for (bi, (s, p)) in serial.iter().zip(pooled.iter()).enumerate() {
         assert_eq!(s.items(), p.items(), "row {bi}: pooled top-k diverged");
@@ -344,6 +353,12 @@ fn pooled_scan_matches_serial_scan_across_chunks() {
 fn pool_construction_fails_loudly_without_artifacts_dir() {
     let err = RuntimePool::new("/nonexistent/elmo-artifacts", 2);
     assert!(err.is_err(), "bogus artifacts dir must fail pool construction");
+    // ... and the Session builder refuses even earlier (host-side check)
+    let err = Session::builder()
+        .artifacts("/nonexistent/elmo-artifacts")
+        .workers(2)
+        .build();
+    assert!(matches!(err, Err(elmo::Error::Artifacts(_))));
 }
 
 #[test]

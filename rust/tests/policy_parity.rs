@@ -19,7 +19,10 @@
 // the legacy reference below is kept byte-for-byte, old idioms included
 #![allow(clippy::manual_range_contains)]
 
-use elmo::coordinator::{evaluate, evaluate_model, EvalModel, LrSchedule, Precision, TrainConfig, Trainer};
+use elmo::Session;
+use elmo::coordinator::{
+    evaluate, evaluate_model, EvalModel, LrSchedule, Precision, TrainConfig, Trainer,
+};
 use elmo::data::{self, Dataset, SEQ_LEN};
 use elmo::infer::{Checkpoint, ClassifierView, Predictor};
 use elmo::numerics::{quantize_rne, FP16};
@@ -497,21 +500,21 @@ fn assert_policy_parity(precision: Precision, chunk: usize, steps: usize) {
     };
     let prof = data::profile("quickstart").unwrap();
     let ds = data::generate(&prof, 1);
-    let mut rt = Runtime::new(&art).unwrap();
+    let mut sess = Session::open(art.as_str()).unwrap();
     let cfg = TrainConfig {
         precision,
         chunk_size: chunk,
         epochs: 1,
         ..TrainConfig::default()
     };
-    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), &art).unwrap();
-    let mut leg = LegacyTrainer::new(&rt, &ds, cfg, &art).unwrap();
+    let mut tr = Trainer::new(&sess, &ds, cfg.clone()).unwrap();
+    let mut leg = LegacyTrainer::new(sess.runtime(), &ds, cfg, &art).unwrap();
 
     let mut batcher = data::Batcher::new(ds.train.n, tr.batch, 0);
     for step in 0..steps {
         let (rows, _) = batcher.next_batch().unwrap();
-        let (loss_new, over_new) = tr.step(&mut rt, &ds, &rows).unwrap();
-        let (loss_old, over_old) = leg.step(&mut rt, &ds, &rows).unwrap();
+        let (loss_new, over_new) = tr.step(&mut sess, &ds, &rows).unwrap();
+        let (loss_old, over_old) = leg.step(sess.runtime(), &ds, &rows).unwrap();
         assert_eq!(
             loss_new.to_bits(),
             loss_old.to_bits(),
@@ -549,7 +552,7 @@ fn assert_policy_parity(precision: Precision, chunk: usize, steps: usize) {
 
     // final P@k / PSP@k: refactored eval vs the legacy weight vectors
     // through the same protocol
-    let rep_new = evaluate(&mut rt, &tr, &ds, 96).unwrap();
+    let rep_new = evaluate(&mut sess, &tr, &ds, 96).unwrap();
     let m_old = EvalModel {
         enc_p: &leg.enc_p,
         enc_art: format!("enc_fwd_{}", leg.enc_cfg()),
@@ -561,7 +564,7 @@ fn assert_policy_parity(precision: Precision, chunk: usize, steps: usize) {
             label_order: &leg.label_order,
         },
     };
-    let rep_old = evaluate_model(&mut rt, &m_old, &ds, 96).unwrap();
+    let rep_old = evaluate_model(&mut sess, &m_old, &ds, 96).unwrap();
     assert_eq!(rep_new.p, rep_old.p, "{precision:?}: P@k diverged");
     assert_eq!(rep_new.psp, rep_old.psp, "{precision:?}: PSP@k diverged");
 
@@ -572,7 +575,7 @@ fn assert_policy_parity(precision: Precision, chunk: usize, steps: usize) {
     Checkpoint::from_trainer(&tr, "quickstart").save(path).unwrap();
     let p = Predictor::load(path).unwrap();
     assert_eq!(p.store().w_scored(), tr.store.w_scored());
-    let rep_srv = p.evaluate(&mut rt, &ds, 96).unwrap();
+    let rep_srv = p.evaluate(&mut sess, &ds, 96).unwrap();
     assert_eq!(rep_srv.p, rep_new.p, "{precision:?}: reload P@k diverged");
     assert_eq!(rep_srv.psp, rep_new.psp, "{precision:?}: reload PSP@k diverged");
     let _ = std::fs::remove_file(path);
@@ -616,15 +619,15 @@ fn parity_renee_forced_overflow() {
     let art = require_artifacts!();
     let prof = data::profile("quickstart").unwrap();
     let ds = data::generate(&prof, 1);
-    let mut rt = Runtime::new(&art).unwrap();
+    let mut sess = Session::open(art.as_str()).unwrap();
     let cfg = TrainConfig {
         precision: Precision::Renee,
         chunk_size: 1024,
         epochs: 1,
         ..TrainConfig::default()
     };
-    let mut tr = Trainer::new(&rt, &ds, cfg.clone(), &art).unwrap();
-    let mut leg = LegacyTrainer::new(&rt, &ds, cfg, &art).unwrap();
+    let mut tr = Trainer::new(&sess, &ds, cfg.clone()).unwrap();
+    let mut leg = LegacyTrainer::new(sess.runtime(), &ds, cfg, &art).unwrap();
     let rows: Vec<u32> = (0..tr.batch as u32).collect();
     // one clean step, then a forced overflow, then a recovery step
     for scale in [None, Some(1e9f32), None] {
@@ -632,8 +635,8 @@ fn parity_renee_forced_overflow() {
             tr.loss_scale = s;
             leg.loss_scale = s;
         }
-        let (ln, on) = tr.step(&mut rt, &ds, &rows).unwrap();
-        let (lo, oo) = leg.step(&mut rt, &ds, &rows).unwrap();
+        let (ln, on) = tr.step(&mut sess, &ds, &rows).unwrap();
+        let (lo, oo) = leg.step(sess.runtime(), &ds, &rows).unwrap();
         assert_eq!(ln.to_bits(), lo.to_bits());
         assert_eq!(on, oo);
         assert_eq!(tr.loss_scale.to_bits(), leg.loss_scale.to_bits());
