@@ -63,6 +63,24 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
         flags: &["checkpoint", "queries", "max-burst", "k", "seed", "artifacts", "workers", "config"],
     },
     Subcommand {
+        name: "serve",
+        summary: "label-sharded online serving under a deterministic open-loop load",
+        flags: &[
+            "checkpoint",
+            "queries",
+            "k",
+            "shards",
+            "queue-cap",
+            "max-delay-ms",
+            "rate",
+            "burst",
+            "arrival-seed",
+            "artifacts",
+            "workers",
+            "config",
+        ],
+    },
+    Subcommand {
         name: "datasets",
         summary: "print Table-1-style statistics of the synthetic profiles",
         flags: &[],
@@ -123,6 +141,10 @@ USAGE:
   elmo serve-bench --checkpoint PATH [--config FILE] [--queries N]
                    [--max-burst N] [--k N] [--seed N] [--artifacts DIR]
                    [--workers N]
+  elmo serve       --checkpoint PATH [--config FILE] [--queries N] [--k N]
+                   [--shards R] [--queue-cap N] [--max-delay-ms F]
+                   [--rate QPS] [--burst N] [--arrival-seed N]
+                   [--artifacts DIR] [--workers N]
   elmo datasets
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
@@ -146,6 +168,19 @@ TRAIN FLAGS:
                     worker threads (each with its own PJRT runtime) with a
                     deterministic in-order reduction — results are
                     bit-identical to --workers 1 (the serial default)
+
+SERVE FLAGS (docs/SERVING.md):
+  --shards R        split the label range into R shards, one scoring job
+                    per shard per batch on the session pool; the merged
+                    top-k is bit-identical to an unsharded scan
+  --queue-cap N     bounded admission queue (rows); overflow is rejected
+                    with a counter, never blocked or silently dropped
+  --max-delay-ms F  flush a partial batch once its oldest query is F ms
+                    old instead of waiting for a full batch
+  --rate QPS        open-loop arrival rate of the load harness
+  --burst N         each arrival carries 1..=N rows
+  --arrival-seed N  arrival-process seed: the same seed replays the exact
+                    packing decisions (reported as a packing digest)
 ";
 
 /// Parse an alternating `--flag value` list.  Rejects non-`--` arguments
@@ -331,6 +366,35 @@ mod tests {
                 known.contains(f),
                 "USAGE drifted: it mentions --{f}, which no subcommand accepts"
             );
+        }
+    }
+
+    /// `elmo help serve` pinned to the registry, both directions: help
+    /// and USAGE must mention exactly the flags `reject_unknown` accepts
+    /// for `serve`, and nothing the registry doesn't know.
+    #[test]
+    fn serve_help_and_usage_match_the_registry_flag_set() {
+        let sc = subcommand("serve").expect("`serve` is registered");
+        let h = help_for("serve").unwrap();
+        for f in sc.flags {
+            assert!(h.contains(&format!("--{f}")), "help serve missing --{f}:\n{h}");
+            assert!(
+                USAGE.contains(&format!("--{f}")),
+                "USAGE drifted: `serve` accepts --{f} but USAGE never mentions it"
+            );
+        }
+        assert!(USAGE.contains("elmo serve "), "USAGE must show the serve invocation");
+        // reverse direction: every --flag the help text mentions is one
+        // reject_unknown will actually accept for `serve`
+        for tok in h.split(|c: char| !(c.is_ascii_alphanumeric() || c == '-')) {
+            if let Some(f) = tok.strip_prefix("--") {
+                if !f.is_empty() {
+                    assert!(
+                        sc.flags.contains(&f),
+                        "help serve mentions --{f}, which `serve` rejects"
+                    );
+                }
+            }
         }
     }
 

@@ -32,7 +32,7 @@ use crate::error::{Result, ResultExt};
 
 /// Every key a `RunSpec` file (or the matching CLI flag) may set, in the
 /// canonical serialization order.
-pub const KEYS: [&str; 15] = [
+pub const KEYS: [&str; 21] = [
     "profile",
     "precision",
     "chunk",
@@ -48,9 +48,16 @@ pub const KEYS: [&str; 15] = [
     "eval_rows",
     "save",
     "workers",
+    "serve.shards",
+    "serve.queue_cap",
+    "serve.max_delay_ms",
+    "serve.rate",
+    "serve.burst",
+    "serve.arrival_seed",
 ];
 
-/// CLI flag name -> RunSpec key (flags are dashed, keys underscored).
+/// CLI flag name -> RunSpec key (flags are dashed, keys underscored) for
+/// the training-facing keys every subcommand shares.
 const FLAG_KEYS: [(&str, &str); 15] = [
     ("profile", "profile"),
     ("precision", "precision"),
@@ -67,6 +74,17 @@ const FLAG_KEYS: [(&str, &str); 15] = [
     ("eval-rows", "eval_rows"),
     ("save", "save"),
     ("workers", "workers"),
+];
+
+/// Serving-only CLI flags (`elmo serve`) -> `serve.*` RunSpec keys,
+/// layered by `apply_flags` exactly like `FLAG_KEYS`.
+const SERVE_FLAG_KEYS: [(&str, &str); 6] = [
+    ("shards", "serve.shards"),
+    ("queue-cap", "serve.queue_cap"),
+    ("max-delay-ms", "serve.max_delay_ms"),
+    ("rate", "serve.rate"),
+    ("burst", "serve.burst"),
+    ("arrival-seed", "serve.arrival_seed"),
 ];
 
 /// A declarative run description.  Defaults match the CLI flag defaults,
@@ -94,6 +112,20 @@ pub struct RunSpec {
     pub save: String,
     /// Chunk-execution parallelism (1 = serial).
     pub workers: usize,
+    /// `elmo serve`: label-range shards (1 = unsharded).
+    pub serve_shards: usize,
+    /// `elmo serve`: bounded admission queue capacity, in rows.
+    pub serve_queue_cap: usize,
+    /// `elmo serve`: flush a partial batch once its oldest query is this
+    /// many milliseconds old.
+    pub serve_max_delay_ms: f64,
+    /// `elmo serve`: open-loop arrival rate, rows (queries) per second.
+    pub serve_rate: f64,
+    /// `elmo serve`: max rows per arrival burst.
+    pub serve_burst: usize,
+    /// `elmo serve`: arrival-process seed (identical seed => identical
+    /// packing decisions).
+    pub serve_arrival_seed: u64,
     /// Keys explicitly set by a file or flag (drives decisions like
     /// `elmo predict` preferring the checkpoint's stored profile unless
     /// one was explicitly chosen).  Not part of equality.
@@ -118,6 +150,12 @@ impl Default for RunSpec {
             eval_rows: 512,
             save: String::new(),
             workers: 1,
+            serve_shards: 1,
+            serve_queue_cap: 256,
+            serve_max_delay_ms: 5.0,
+            serve_rate: 2000.0,
+            serve_burst: 4,
+            serve_arrival_seed: 0,
             explicit: BTreeSet::new(),
         }
     }
@@ -231,6 +269,12 @@ impl RunSpec {
             "eval_rows" => self.eval_rows = num(key, val)?,
             "save" => self.save = val.to_string(),
             "workers" => self.workers = num(key, val)?,
+            "serve.shards" => self.serve_shards = num(key, val)?,
+            "serve.queue_cap" => self.serve_queue_cap = num(key, val)?,
+            "serve.max_delay_ms" => self.serve_max_delay_ms = num(key, val)?,
+            "serve.rate" => self.serve_rate = num(key, val)?,
+            "serve.burst" => self.serve_burst = num(key, val)?,
+            "serve.arrival_seed" => self.serve_arrival_seed = num(key, val)?,
             other => return Err(err_config!("unknown key `{other}`")),
         }
         self.explicit.insert(key);
@@ -247,7 +291,7 @@ impl RunSpec {
     /// Non-RunSpec flags (`--checkpoint`, `--artifacts`, `--config`, ...)
     /// are ignored here; `cli::reject_unknown` has already vetted them.
     pub fn apply_flags(&mut self, f: &Flags) -> Result<()> {
-        for (flag, key) in FLAG_KEYS {
+        for (flag, key) in FLAG_KEYS.into_iter().chain(SERVE_FLAG_KEYS) {
             if let Some(v) = f.get(flag) {
                 self.set(key, v).with_context(|| format!("flag --{flag}"))?;
             }
@@ -295,6 +339,42 @@ impl RunSpec {
                 self.loss_scale
             ));
         }
+        if self.serve_shards == 0 {
+            return Err(err_config!("`serve.shards` must be >= 1 (1 = unsharded)"));
+        }
+        if self.serve_queue_cap == 0 {
+            return Err(err_config!("`serve.queue_cap` must be >= 1"));
+        }
+        if self.serve_burst == 0 {
+            return Err(err_config!("`serve.burst` must be >= 1"));
+        }
+        if !self.serve_max_delay_ms.is_finite() || self.serve_max_delay_ms < 0.0 {
+            return Err(err_config!(
+                "`serve.max_delay_ms` must be finite and >= 0 (got {})",
+                self.serve_max_delay_ms
+            ));
+        }
+        if !self.serve_rate.is_finite() || self.serve_rate <= 0.0 {
+            return Err(err_config!(
+                "`serve.rate` must be finite and > 0 (got {})",
+                self.serve_rate
+            ));
+        }
+        Ok(())
+    }
+
+    /// Serving checks that need the artifact batch width (known only once
+    /// a session is open): the bounded admission queue must hold at least
+    /// one full batch, or no full batch could ever form.  Runs the base
+    /// `validate()` first.
+    pub fn validate_serve(&self, batch_width: usize) -> Result<()> {
+        self.validate()?;
+        if self.serve_queue_cap < batch_width {
+            return Err(err_config!(
+                "`serve.queue_cap` ({}) must be >= the artifact batch width ({batch_width})",
+                self.serve_queue_cap
+            ));
+        }
         Ok(())
     }
 
@@ -337,7 +417,13 @@ impl fmt::Display for RunSpec {
         writeln!(f, "warmup_steps = {}", self.warmup_steps)?;
         writeln!(f, "eval_rows = {}", self.eval_rows)?;
         writeln!(f, "save = \"{}\"", self.save)?;
-        writeln!(f, "workers = {}", self.workers)
+        writeln!(f, "workers = {}", self.workers)?;
+        writeln!(f, "serve.shards = {}", self.serve_shards)?;
+        writeln!(f, "serve.queue_cap = {}", self.serve_queue_cap)?;
+        writeln!(f, "serve.max_delay_ms = {}", self.serve_max_delay_ms)?;
+        writeln!(f, "serve.rate = {}", self.serve_rate)?;
+        writeln!(f, "serve.burst = {}", self.serve_burst)?;
+        writeln!(f, "serve.arrival_seed = {}", self.serve_arrival_seed)
     }
 }
 
@@ -498,6 +584,12 @@ lr_cls = 0.1
         spec.eval_rows = 0;
         spec.save = "out/model.ckpt".to_string();
         spec.workers = 4;
+        spec.serve_shards = 4;
+        spec.serve_queue_cap = 512;
+        spec.serve_max_delay_ms = 7.5;
+        spec.serve_rate = 1500.0;
+        spec.serve_burst = 8;
+        spec.serve_arrival_seed = 99;
         let text = spec.to_string();
         let back = RunSpec::parse(&text).unwrap();
         assert_eq!(back, spec, "round-trip drifted:\n{text}");
@@ -551,12 +643,120 @@ lr_cls = 0.1
             ("momentum = 1.5", "`momentum`"),
             ("loss_scale = 0", "`loss_scale`"),
             ("profile = \"\"", "`profile`"),
+            ("serve.shards = 0", "`serve.shards`"),
+            ("serve.queue_cap = 0", "`serve.queue_cap`"),
+            ("serve.burst = 0", "`serve.burst`"),
+            ("serve.max_delay_ms = -1", "`serve.max_delay_ms`"),
+            ("serve.max_delay_ms = inf", "`serve.max_delay_ms`"),
+            ("serve.rate = 0", "`serve.rate`"),
+            ("serve.rate = NaN", "`serve.rate`"),
         ] {
             let spec = RunSpec::parse(line).unwrap();
             let err = spec.validate().unwrap_err();
             assert!(matches!(err, Error::Config(_)), "{line}: {err}");
             assert!(format!("{err}").contains(needle), "{line}: {err}");
         }
+    }
+
+    #[test]
+    fn serve_keys_parse_with_comments_and_defaults() {
+        let text = "\
+# serving scenario
+serve.shards = 4      # one per pool worker
+serve.queue_cap = 128
+
+serve.max_delay_ms = 2.5
+";
+        let spec = RunSpec::parse(text).unwrap();
+        assert_eq!(spec.serve_shards, 4);
+        assert_eq!(spec.serve_queue_cap, 128);
+        assert_eq!(spec.serve_max_delay_ms, 2.5);
+        // untouched serve keys keep their defaults
+        let d = RunSpec::default();
+        assert_eq!(spec.serve_rate, d.serve_rate);
+        assert_eq!(spec.serve_burst, d.serve_burst);
+        assert_eq!(spec.serve_arrival_seed, d.serve_arrival_seed);
+        assert!(spec.is_explicit("serve.shards"));
+        assert!(!spec.is_explicit("serve.rate"));
+    }
+
+    #[test]
+    fn serve_keys_reject_duplicates_unknowns_and_bad_numerics() {
+        let err = RunSpec::parse("serve.shards = 2\nserve.shards = 4\n").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("line 2") && msg.contains("duplicate key `serve.shards`"), "{msg}");
+        // a typo'd serve key errors and the hint lists the real ones
+        let err = RunSpec::parse("serve.shard = 2\n").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown key `serve.shard`"), "{msg}");
+        assert!(msg.contains("serve.shards"), "hint should list valid keys: {msg}");
+        for line in ["serve.shards = two", "serve.rate = fast", "serve.arrival_seed = -1"] {
+            let err = RunSpec::parse(line).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{line}: {err}");
+        }
+    }
+
+    #[test]
+    fn cli_flags_override_serve_file_values() {
+        let mut spec =
+            RunSpec::parse("serve.shards = 2\nserve.queue_cap = 64\nserve.rate = 500\n").unwrap();
+        let f = parse_flags(&argv(&["--shards", "8", "--max-delay-ms", "1.5"])).unwrap();
+        spec.apply_flags(&f).unwrap();
+        assert_eq!(spec.serve_shards, 8, "flag wins over file");
+        assert_eq!(spec.serve_queue_cap, 64, "file value survives when no flag is given");
+        assert_eq!(spec.serve_rate, 500.0);
+        assert_eq!(spec.serve_max_delay_ms, 1.5, "flag sets keys the file never mentioned");
+        assert!(spec.is_explicit("serve.max_delay_ms"));
+        // a config-equivalent flag invocation produces the identical spec
+        let mut flag_only = RunSpec::default();
+        let f = parse_flags(&argv(&[
+            "--shards",
+            "8",
+            "--queue-cap",
+            "64",
+            "--rate",
+            "500",
+            "--max-delay-ms",
+            "1.5",
+        ]))
+        .unwrap();
+        flag_only.apply_flags(&f).unwrap();
+        assert_eq!(spec, flag_only);
+        // bad serve flag values name the flag
+        let err = spec
+            .apply_flags(&parse_flags(&argv(&["--shards", "many"])).unwrap())
+            .unwrap_err();
+        assert!(format!("{err}").contains("--shards"), "{err}");
+    }
+
+    #[test]
+    fn serve_subcommand_registry_accepts_every_serve_flag() {
+        // pins cli::SUBCOMMANDS["serve"] to SERVE_FLAG_KEYS so a new
+        // serve.* key can never work via --config but fail reject_unknown
+        let serve = crate::cli::subcommand("serve").unwrap();
+        for (flag, _) in SERVE_FLAG_KEYS {
+            assert!(
+                serve.flags.contains(&flag),
+                "cli registry drifted: serve flag --{flag} is not accepted by `elmo serve`"
+            );
+        }
+        // ... and the shared execution knobs ride along
+        for flag in ["config", "workers", "checkpoint"] {
+            assert!(serve.flags.contains(&flag), "`elmo serve` must accept --{flag}");
+        }
+    }
+
+    #[test]
+    fn validate_serve_requires_the_queue_to_hold_one_batch() {
+        let spec = RunSpec::parse("serve.queue_cap = 16\n").unwrap();
+        assert!(spec.validate_serve(16).is_ok());
+        let err = spec.validate_serve(32).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let msg = format!("{err}");
+        assert!(msg.contains("serve.queue_cap") && msg.contains("32"), "{msg}");
+        // validate_serve folds in the base validation
+        let bad = RunSpec::parse("serve.shards = 0\n").unwrap();
+        assert!(bad.validate_serve(1).is_err());
     }
 
     #[test]

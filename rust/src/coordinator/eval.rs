@@ -15,6 +15,7 @@ use crate::infer::scanner::{ChunkScanner, ClassifierView};
 use crate::metrics::EvalAccum;
 use crate::runtime::{to_vec_f32, Arg};
 use crate::session::Session;
+use crate::util::pad_tail_rows;
 
 use super::trainer::Trainer;
 
@@ -99,13 +100,17 @@ pub fn evaluate_model(
 
     let mut row0 = 0;
     while row0 < n_eval {
-        let rows: Vec<usize> = (0..b).map(|i| (row0 + i).min(ds.test.n - 1)).collect();
         let valid = b.min(n_eval - row0);
-        // encoder forward (no dropout at eval)
+        // encoder forward (no dropout at eval); the wrapped tail batch
+        // pads by repeating the last valid row — shared helper with the
+        // micro-batcher and the serving queue, and the padded rows' top-k
+        // is dropped below, so padding content never reaches the metrics
         let mut tokens = Vec::with_capacity(b * SEQ_LEN);
-        for &r in &rows {
+        for i in 0..valid {
+            let r = row0 + i;
             tokens.extend_from_slice(&ds.test.tokens[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
         }
+        pad_tail_rows(&mut tokens, SEQ_LEN, b);
         let emb = embed_inference(ex.rt, &m.enc_art, m.enc_p, &tokens)?;
 
         // stream label chunks through the shared scanner (pooled when the
@@ -113,7 +118,7 @@ pub fn evaluate_model(
         let topks = scanner.scan(ex, &m.cls, &emb, b)?;
 
         for bi in 0..valid {
-            let r = rows[bi];
+            let r = row0 + bi;
             let mut rel: Vec<u32> = ds.test.labels.row(r).to_vec();
             rel.sort_unstable();
             accum.add(&topks[bi].labels(), &rel, &prop);

@@ -12,6 +12,7 @@
 //! accounting logic is unit-testable without PJRT.  `Predictor` +
 //! `Runtime` plug in via the same closure shape (see `elmo serve-bench`).
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -20,6 +21,7 @@ use crate::error::Result;
 
 use crate::data::SEQ_LEN;
 use crate::metrics::TopK;
+use crate::util::pad_tail_rows;
 
 /// One completed query: top-k (score, label) pairs, best first.
 #[derive(Clone, Debug)]
@@ -45,6 +47,11 @@ pub struct ServeStats {
     latencies_ms: Vec<f64>,
     /// Next ring slot to overwrite once the window is full.
     next_slot: usize,
+    /// Sorted copy of the window, built lazily on the first percentile
+    /// report and reused until the next `record` invalidates it — p50 +
+    /// p99 (and any repeated reports between completions) share one
+    /// O(cap log cap) sort instead of clone-sorting per call.
+    sorted_cache: RefCell<Option<Vec<f64>>>,
     pub completed: u64,
     pub batches: u64,
     /// Rows executed only as padding (capacity lost to partial batches).
@@ -54,13 +61,14 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    fn record(&mut self, ms: f64) {
+    pub(crate) fn record(&mut self, ms: f64) {
         if self.latencies_ms.len() < LATENCY_WINDOW_CAP {
             self.latencies_ms.push(ms);
         } else {
             self.latencies_ms[self.next_slot] = ms;
             self.next_slot = (self.next_slot + 1) % LATENCY_WINDOW_CAP;
         }
+        *self.sorted_cache.get_mut() = None;
         self.completed += 1;
     }
 
@@ -69,7 +77,7 @@ impl ServeStats {
         self.latencies_ms.len()
     }
 
-    fn mark(&mut self) {
+    pub(crate) fn mark(&mut self) {
         let t0 = *self.started.get_or_insert_with(Instant::now);
         self.wall_secs = t0.elapsed().as_secs_f64();
     }
@@ -86,10 +94,15 @@ impl ServeStats {
         if self.latencies_ms.is_empty() {
             return 0.0;
         }
-        // the sort is over the bounded window, so every report is
-        // O(cap log cap) with cap-bounded scratch, however long the run
-        let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cache = self.sorted_cache.borrow_mut();
+        let v = cache.get_or_insert_with(|| {
+            // the sort is over the bounded window, so a report burst is
+            // one O(cap log cap) pass with cap-bounded scratch, however
+            // long the run
+            let mut v = self.latencies_ms.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        });
         let idx = (q / 100.0 * (v.len() - 1) as f64).round() as usize;
         v[idx.min(v.len() - 1)]
     }
@@ -196,10 +209,7 @@ impl MicroBatcher {
         for q in &batch {
             tokens.extend_from_slice(&q.tokens);
         }
-        let pad_row = batch.last().unwrap().tokens.clone();
-        for _ in valid..self.width {
-            tokens.extend_from_slice(&pad_row);
-        }
+        pad_tail_rows(&mut tokens, SEQ_LEN, self.width);
         let topks = score(&tokens)?;
         if topks.len() < valid {
             return Err(err_shape!("scorer returned {} rows for a {valid}-query batch", topks.len()));
@@ -356,6 +366,19 @@ mod tests {
         assert!(s.p50_ms() <= s.p99_ms());
         assert_eq!(s.p99_ms(), 100.0);
         assert_eq!(ServeStats::default().p50_ms(), 0.0);
+    }
+
+    #[test]
+    fn percentile_cache_invalidates_on_record() {
+        let mut s = ServeStats::default();
+        s.record(10.0);
+        assert_eq!(s.p50_ms(), 10.0);
+        assert_eq!(s.p99_ms(), 10.0, "second report reads the cached sort");
+        s.record(20.0);
+        s.record(30.0);
+        // a record between reports must invalidate the cached sort
+        assert_eq!(s.p50_ms(), 20.0);
+        assert_eq!(s.p99_ms(), 30.0);
     }
 
     /// Reference percentile over ALL samples (what the unbounded

@@ -154,6 +154,21 @@ impl ChunkScanner {
         }
     }
 
+    /// Serial scan on an explicit runtime, in strict chunk order.  This is
+    /// the entrypoint the label-sharded serving layer uses: each
+    /// `serve::ShardExecutor` job runs its shard's slice of the label
+    /// space through `scan_on` on a pool worker's own runtime, and the
+    /// shard results merge back deterministically (`serve::merge`).
+    pub fn scan_on(
+        &self,
+        rt: &mut Runtime,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<TopK>> {
+        self.scan_serial(rt, view, emb, batch)
+    }
+
     /// The serial chunk loop (also the pooled path's semantics oracle).
     fn scan_serial(
         &self,

@@ -20,7 +20,10 @@
 //! Trained models outlive the process through `infer`: a versioned
 //! checkpoint format, a read-only `Predictor` over the shared chunked
 //! top-k scanner, and a micro-batching request queue (`elmo predict` /
-//! `elmo serve-bench`).
+//! `elmo serve-bench`).  The online layer on top is `serve`:
+//! label-sharded scoring with a deterministic cross-shard merge, a
+//! bounded admission queue with deadline-aware flushing, and a seeded
+//! open-loop load harness (`elmo serve`).
 //!
 //! The public execution API is the `session` facade: a `Session` owns the
 //! runtime and the optional chunk-execution pool, every training / eval /
@@ -40,6 +43,7 @@ pub mod metrics;
 pub mod numerics;
 pub mod policy;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod store;
 pub mod util;

@@ -6,6 +6,8 @@
 //!   predict      load a checkpoint and evaluate P@k on the profile's
 //!                test rows through the serving path
 //!   serve-bench  micro-batched inference throughput/latency benchmark
+//!   serve        label-sharded online serving under a deterministic
+//!                open-loop load (bounded queue, deadline flushing)
 //!   datasets     print Table-1-style statistics of the synthetic profiles
 //!   memtrace     print the Fig-3-style memory timeline for a method
 //!   sweep        Fig-2a (E, M) bit-width sweep on a small profile
@@ -18,13 +20,19 @@
 //! `elmo::Error` through `anyhow` (allowed here; the library itself is
 //! anyhow-free).
 
+use std::time::Instant;
+
 use anyhow::{anyhow, bail, Result};
 
 use elmo::cli::{self, flag, parse_flags, reject_unknown, require, Flags};
 use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data::{self, SEQ_LEN, VOCAB};
-use elmo::infer::{Checkpoint, MicroBatcher};
+use elmo::infer::{Checkpoint, MicroBatcher, Predictor, SCORE_LC};
 use elmo::memmodel::{self, MemParams, Method};
+use elmo::metrics::TopK;
+use elmo::serve::{
+    self, LoadGen, LoadGenConfig, Server, ServerConfig, ShardExecutor, ShardPlan, VirtualClock,
+};
 use elmo::util::{gib, mmss, print_table, Rng};
 use elmo::{RunSpec, Session};
 
@@ -45,6 +53,7 @@ fn run(args: &[String]) -> Result<()> {
         Some("train") => cmd_train(&parse_cmd_flags("train", &args[1..])?),
         Some("predict") => cmd_predict(&parse_cmd_flags("predict", &args[1..])?),
         Some("serve-bench") => cmd_serve_bench(&parse_cmd_flags("serve-bench", &args[1..])?),
+        Some("serve") => cmd_serve(&parse_cmd_flags("serve", &args[1..])?),
         Some("datasets") => {
             // no flags, but a typo'd invocation must still error loudly
             parse_cmd_flags("datasets", &args[1..])?;
@@ -233,20 +242,7 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
         bail!("--queries and --max-burst must be positive");
     }
 
-    // query stream: test rows of the checkpoint's profile when known,
-    // synthetic token rows otherwise
-    let query_rows: Vec<i32> = match data::profile(p.profile()) {
-        Some(prof) => {
-            let ds = data::generate(&prof, p.seed());
-            ds.test.tokens.clone()
-        }
-        None => {
-            let mut rng = Rng::new(seed ^ 0x5E57);
-            (0..256 * SEQ_LEN)
-                .map(|_| 1 + rng.below(VOCAB - 1) as i32)
-                .collect()
-        }
-    };
+    let query_rows = serving_query_rows(&p, seed);
     let rows_available = query_rows.len() / SEQ_LEN;
 
     println!(
@@ -291,6 +287,172 @@ fn cmd_serve_bench(f: &Flags) -> Result<()> {
             .topk
             .iter()
             .map(|&(s, l)| format!("{l}:{s:.3}"))
+            .collect();
+        println!("query {:>4}: [{}]", pred.id, labels.join(", "));
+    }
+    Ok(())
+}
+
+/// Query stream for the serving harnesses: the test rows of the
+/// checkpoint's profile when known, synthetic token rows otherwise.
+fn serving_query_rows(p: &Predictor, fallback_seed: u64) -> Vec<i32> {
+    match data::profile(p.profile()) {
+        Some(prof) => {
+            let ds = data::generate(&prof, p.seed());
+            ds.test.tokens.clone()
+        }
+        None => {
+            let mut rng = Rng::new(fallback_seed ^ 0x5E57);
+            (0..256 * SEQ_LEN)
+                .map(|_| 1 + rng.below(VOCAB - 1) as i32)
+                .collect()
+        }
+    }
+}
+
+/// `elmo serve`: the online serving harness — label-sharded scoring, a
+/// bounded admission queue with deadline flushing, and a seeded open-loop
+/// arrival schedule replayed over a virtual clock.  Packing decisions
+/// depend only on the arrival schedule (scoring wall time never feeds
+/// back into the virtual clock), so a repeated run with the same
+/// `--arrival-seed` reproduces identical packing — reported as a digest.
+fn cmd_serve(f: &Flags) -> Result<()> {
+    let spec = load_spec(f)?;
+    let art: String = flag(f, "artifacts", "artifacts".to_string())?;
+    let ckpt_path = require(f, "checkpoint")?;
+    let n_queries: usize = flag(f, "queries", 2048usize)?;
+    let k: usize = flag(f, "k", 5usize)?;
+    if n_queries == 0 {
+        bail!("--queries must be positive");
+    }
+    let mut sess = Session::builder().artifacts(art.as_str()).workers(spec.workers).build()?;
+    let p = sess.predictor(&ckpt_path)?;
+    let width = sess.config().batch;
+    spec.validate_serve(width)?;
+    let plan = ShardPlan::new(p.store().l_pad / SCORE_LC, spec.serve_shards)?;
+    let mut shard_exec = ShardExecutor::new(plan, k);
+    if spec.serve_shards > 1 && sess.workers() > 1 {
+        // snapshot the read-only shard weights once: the pooled per-batch
+        // hot loop ships Arc clones to workers instead of copying weight
+        // slices.  Unsharded or serial runs copy nothing either way, so
+        // pinning there would only duplicate the matrix (exactly the
+        // condition under which memmodel::serve_shard_bytes charges 0).
+        shard_exec.pin(&p.view())?;
+    }
+    let mut server = Server::new(
+        ServerConfig {
+            width,
+            queue_cap: spec.serve_queue_cap,
+            max_delay_ms: spec.serve_max_delay_ms,
+        },
+        VirtualClock::new(),
+    )?;
+    let schedule = LoadGen::new(LoadGenConfig {
+        rate_qps: spec.serve_rate,
+        burst_max: spec.serve_burst,
+        seed: spec.serve_arrival_seed,
+    })?
+    .schedule_rows(n_queries);
+    let query_rows = serving_query_rows(&p, spec.serve_arrival_seed);
+    let rows_available = query_rows.len() / SEQ_LEN;
+
+    println!(
+        "# ELMO serve: {} queries @ {} q/s (bursts 1..={}), batch {width}, top-{k}, \
+         {} shard(s) on {} worker(s), queue {} rows, deadline {} ms, arrival seed {}",
+        n_queries,
+        spec.serve_rate,
+        spec.serve_burst,
+        spec.serve_shards,
+        sess.workers(),
+        spec.serve_queue_cap,
+        spec.serve_max_delay_ms,
+        spec.serve_arrival_seed
+    );
+    let staging =
+        memmodel::serve_shard_bytes(p.store(), width, k, spec.serve_shards, sess.workers());
+    if staging > 0 {
+        println!(
+            "# shard staging: +{} MiB in-flight (+ one cls_fwd executable cache per worker)",
+            staging >> 20
+        );
+    }
+
+    let mut out = Vec::with_capacity(n_queries);
+    // scoring wall time, tracked outside the virtual clock (reporting
+    // only — it must never influence a packing decision)
+    let service_ms = std::cell::Cell::new(0.0f64);
+    let mut score = |t: &[i32]| -> elmo::Result<Vec<TopK>> {
+        let t0 = Instant::now();
+        let mut ctx = sess.ctx();
+        let ex = &mut ctx;
+        let emb = p.embed(ex.rt, t)?;
+        let r = shard_exec.score(ex, &p.view(), &emb, width);
+        service_ms.set(service_ms.get() + t0.elapsed().as_secs_f64() * 1e3);
+        r
+    };
+    let mut next_row = 0usize;
+    serve::replay(
+        &mut server,
+        &schedule,
+        |rows| {
+            let mut toks = Vec::with_capacity(rows * SEQ_LEN);
+            for i in 0..rows {
+                let r = (next_row + i) % rows_available;
+                toks.extend_from_slice(&query_rows[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
+            }
+            next_row += rows;
+            toks
+        },
+        &mut score,
+        &mut out,
+    )?;
+    server.stats.shard_chunks = shard_exec.shard_chunks.clone();
+
+    let s = &server.stats;
+    if !s.reconciles() {
+        bail!(
+            "serve counters failed to reconcile: {} completed + {} rejected != {} submitted",
+            s.completed(),
+            s.rejected,
+            s.submitted
+        );
+    }
+    println!("# latency columns are virtual queue-delay ms (deterministic under the seed);");
+    println!("# q/s and service ms are wall-clock");
+    print_table(
+        &[
+            "queries", "rejected", "batches", "deadline", "fill %", "q/s", "p50 ms", "p99 ms",
+            "svc ms/batch",
+        ],
+        &[vec![
+            s.completed().to_string(),
+            s.rejected.to_string(),
+            s.core.batches.to_string(),
+            s.deadline_flushes.to_string(),
+            format!("{:.0}", 100.0 * s.core.fill_ratio()),
+            format!("{:.1}", s.core.qps()),
+            format!("{:.2}", s.core.p50_ms()),
+            format!("{:.2}", s.core.p99_ms()),
+            format!("{:.2}", service_ms.get() / s.core.batches.max(1) as f64),
+        ]],
+    );
+    println!(
+        "packing digest: {:016x} (identical --arrival-seed => identical digest)",
+        s.packing_digest()
+    );
+    if spec.serve_shards > 1 {
+        let util: Vec<String> = s
+            .shard_utilization()
+            .iter()
+            .map(|u| format!("{:.0}%", 100.0 * u))
+            .collect();
+        println!("shard utilization (chunk execs): [{}]", util.join(", "));
+    }
+    for pred in out.iter().take(3) {
+        let labels: Vec<String> = pred
+            .topk
+            .iter()
+            .map(|&(sc, l)| format!("{l}:{sc:.3}"))
             .collect();
         println!("query {:>4}: [{}]", pred.id, labels.join(", "));
     }

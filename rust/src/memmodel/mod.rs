@@ -70,6 +70,39 @@ pub fn pool_bytes(store: &WeightStore, batch: usize, workers: usize) -> usize {
     (workers * POOL_WINDOW_PER_WORKER * per_job + shared) * 4
 }
 
+/// Extra host bytes the label-sharded serving path (`serve::ShardExecutor`
+/// over a pooled session) keeps resident: the pinned per-shard snapshot
+/// (`ShardExecutor::pin` clones every shard's weight slice + its slice of
+/// the label permutation exactly once, so the per-batch hot loop ships
+/// `Arc`s, never weight copies) plus the per-batch in-flight staging —
+/// per-row (score, label) results for each outstanding shard job (at most
+/// one per shard, capped at `2 * workers` overall) and one owned
+/// embedding copy shared across the batch's jobs.  As with `pool_bytes`,
+/// each worker additionally owns its own PJRT client and compiled
+/// `cls_fwd` executable cache — per-shard *executable* state is
+/// per-worker state, counted by `Runtime::cached_executables`, not
+/// charged in bytes here.
+///
+/// Returns 0 when serving is unsharded or serial (nothing is cloned).
+pub fn serve_shard_bytes(
+    store: &WeightStore,
+    batch: usize,
+    k: usize,
+    shards: usize,
+    workers: usize,
+) -> usize {
+    if shards <= 1 || workers <= 1 {
+        return 0;
+    }
+    // the pinned snapshot: shard slices tile the scored matrix exactly
+    // once, whatever the shard count
+    let pinned = store.l_pad * store.d * 4 // shard weight slices (f32)
+        + store.labels * 4; // label-permutation slices (u32)
+    let per_job = batch * k * 8; // per-row (f32 score, u32 label) results
+    let inflight = shards.min(POOL_WINDOW_PER_WORKER * workers);
+    pinned + inflight * per_job + batch * store.d * 4 // + shared embedding copy
+}
+
 /// Precision/method variants the model knows how to schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -553,6 +586,26 @@ mod tests {
         let spec = BufferSpec { momentum: true, ..Default::default() };
         let renee = WeightStore::new(128, 8, 32, order, 0, spec).unwrap();
         assert!(pool_bytes(&renee, 16, 2) > two, "momentum clones cost extra");
+    }
+
+    #[test]
+    fn serve_shard_bytes_charges_only_sharded_pooled_runs() {
+        use crate::store::BufferSpec;
+        let order: Vec<u32> = (0..4096u32).collect();
+        let store =
+            WeightStore::new(4096, 8, 1024, order, 0, BufferSpec::default()).unwrap();
+        assert_eq!(serve_shard_bytes(&store, 16, 5, 1, 4), 0, "unsharded clones nothing");
+        assert_eq!(serve_shard_bytes(&store, 16, 5, 4, 1), 0, "serial clones nothing");
+        let two = serve_shard_bytes(&store, 16, 5, 2, 4);
+        assert!(two > 0);
+        // exact arithmetic: the pinned snapshot tiles the whole scored
+        // matrix once, plus 2 in-flight result jobs and one shared emb
+        let pinned = 4096 * 8 * 4 + 4096 * 4;
+        assert_eq!(two, pinned + 2 * (16 * 5 * 8) + 16 * 8 * 4);
+        // the in-flight window caps outstanding jobs at 2 * workers
+        let narrow = serve_shard_bytes(&store, 16, 5, 8, 2);
+        let wide = serve_shard_bytes(&store, 16, 5, 8, 8);
+        assert!(narrow < wide, "window widens with workers until every shard is in flight");
     }
 
     #[test]

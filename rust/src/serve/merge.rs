@@ -1,0 +1,150 @@
+//! Cross-shard top-k merge, bit-identical to a single full scan.
+//!
+//! Why the merge is exact, not approximate:
+//!
+//! * **Scores** — a shard scores its chunks with the same `cls_fwd_*`
+//!   kernel, the same weight slices, and the same embeddings the full
+//!   scan uses, so every surviving (score, label) pair carries the exact
+//!   f32 bits the full scan would produce.
+//! * **Candidate completeness** — `TopK` tie-breaking is stable (an
+//!   earlier-pushed item outranks an equal-scored later one), and within
+//!   a shard rows are pushed in ascending row order, exactly like the
+//!   full scan.  Therefore any label the *global* top-k would select is
+//!   also in its own shard's local top-k: if it were displaced locally,
+//!   the k displacing items (higher score, or equal score and earlier
+//!   row) would displace it globally too.
+//! * **Tie order** — shards cover ascending, disjoint row ranges, and
+//!   `merge_rows` re-pushes shard results in ascending shard order with
+//!   each shard's items in local rank order (which places equal scores in
+//!   ascending row order).  The merged insertion sequence therefore
+//!   presents equal-scored labels in ascending global row order — the
+//!   same order the full scan pushes them — so `TopK`'s insertion-order
+//!   tie rule picks identical labels in identical positions.
+//!
+//! `rust/tests/serve_parity.rs` pins this twice: a host-side property
+//! test against a reference single fold (always runs), and an
+//! artifact-gated test against a real `ChunkScanner::scan` for
+//! shards ∈ {1, 2, 4}.
+
+use crate::err_shape;
+use crate::error::Result;
+use crate::metrics::TopK;
+
+/// Merge per-shard, per-row top-k results into the global per-row top-k.
+/// `per_shard[s][row]` is shard s's top-k for `row`; shards must be in
+/// ascending label order (as produced by `ShardPlan`) and agree on the
+/// row count.
+pub fn merge_rows(k: usize, per_shard: &[Vec<TopK>]) -> Result<Vec<TopK>> {
+    let rows = per_shard.first().map_or(0, |v| v.len());
+    for (s, v) in per_shard.iter().enumerate() {
+        if v.len() != rows {
+            return Err(err_shape!(
+                "shard {s} returned {} rows, shard 0 returned {rows}",
+                v.len()
+            ));
+        }
+    }
+    let mut out = Vec::with_capacity(rows);
+    for row in 0..rows {
+        let mut tk = TopK::new(k);
+        for shard in per_shard {
+            for &(score, label) in shard[row].items() {
+                tk.push(score, label);
+            }
+        }
+        out.push(tk);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop_check, Rng};
+
+    /// The reference: one fold over the whole label space in row order —
+    /// what a single `ChunkScanner::scan` does per batch row.
+    fn full_fold(k: usize, scores: &[f32], labels: &[u32]) -> TopK {
+        let mut tk = TopK::new(k);
+        for (&s, &l) in scores.iter().zip(labels.iter()) {
+            tk.push(s, l);
+        }
+        tk
+    }
+
+    /// Shard folds over contiguous row ranges, merged.
+    fn sharded_fold(k: usize, scores: &[f32], labels: &[u32], cuts: &[usize]) -> TopK {
+        let mut per_shard = Vec::new();
+        let mut lo = 0;
+        for &hi in cuts.iter().chain(std::iter::once(&scores.len())) {
+            per_shard.push(vec![full_fold(k, &scores[lo..hi], &labels[lo..hi])]);
+            lo = hi;
+        }
+        merge_rows(k, &per_shard).unwrap().pop().unwrap()
+    }
+
+    #[test]
+    fn merge_is_bit_identical_to_a_single_fold_with_ties() {
+        prop_check("shard_merge_vs_full_fold", 300, |rng| {
+            let n = 1 + rng.below(400);
+            let k = 1 + rng.below(10);
+            // coarse score grid makes cross-shard ties common — the case
+            // where a wrong merge order would silently reorder labels
+            let scores: Vec<f32> =
+                (0..n).map(|_| (rng.below(12) as f32) * 0.25 - 1.0).collect();
+            let labels: Vec<u32> = (0..n as u32).collect();
+            let reference = full_fold(k, &scores, &labels);
+            // every shard count from 1 up to a handful, random cut points
+            for shards in 1..=4.min(n) {
+                let mut cuts: Vec<usize> =
+                    (0..shards - 1).map(|_| rng.below(n + 1)).collect();
+                cuts.sort_unstable();
+                let merged = sharded_fold(k, &scores, &labels, &cuts);
+                if merged.items() != reference.items() {
+                    return Err(format!(
+                        "n={n} k={k} cuts={cuts:?}: {:?} != {:?}",
+                        merged.items(),
+                        reference.items()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_handles_empty_shards_and_short_rows() {
+        // one shard empty (all-padding tail shard), one with fewer than k
+        let mut a = TopK::new(3);
+        a.push(1.0, 10);
+        let b = TopK::new(3); // empty
+        let mut c = TopK::new(3);
+        c.push(1.0, 20);
+        c.push(0.5, 21);
+        let merged = merge_rows(3, &[vec![a], vec![b], vec![c]]).unwrap();
+        assert_eq!(merged.len(), 1);
+        // tie at 1.0: shard order (== ascending label-range order) wins
+        assert_eq!(merged[0].items(), &[(1.0, 10), (1.0, 20), (0.5, 21)]);
+    }
+
+    #[test]
+    fn merge_of_a_single_shard_is_identity() {
+        let mut rng = Rng::new(5);
+        let scores: Vec<f32> = (0..100).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let labels: Vec<u32> = (0..100).collect();
+        let one = full_fold(5, &scores, &labels);
+        let merged = merge_rows(5, &[vec![one.clone()]]).unwrap();
+        assert_eq!(merged[0].items(), one.items());
+    }
+
+    #[test]
+    fn merge_rejects_row_count_disagreement() {
+        let err = merge_rows(2, &[vec![TopK::new(2)], vec![]]).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Shape(_)), "{err}");
+    }
+
+    #[test]
+    fn merge_of_no_shards_is_no_rows() {
+        assert!(merge_rows(5, &[]).unwrap().is_empty());
+    }
+}

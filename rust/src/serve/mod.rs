@@ -1,0 +1,46 @@
+//! Online serving subsystem: label-sharded replicas, deadline-aware
+//! micro-batching, and a deterministic load harness.
+//!
+//! The offline `serve-bench` loop (one `Predictor`, full-batch-only
+//! flushing, no admission control) cannot be the front door of a system
+//! serving heavy traffic.  This module is the online layer on top of the
+//! `Session`/`RuntimePool` machinery:
+//!
+//! * `shard` — a `ShardPlan` partitions the scoring-chunk range into R
+//!   contiguous label-range shards; each shard owns a `ClassifierView`
+//!   over its slice of the checkpoint `WeightStore` and scores on its own
+//!   session pool worker (`ShardExecutor`).  The label dimension is the
+//!   natural sharding axis: ELMO's chunked classifier already makes every
+//!   chunk an independent scoring unit, and PECOS-style XMC systems serve
+//!   exactly this shard-then-merge shape;
+//! * `merge` — the cross-shard top-k merge, provably bit-identical to a
+//!   single full `ChunkScanner::scan` (global label ids come from the
+//!   sliced label permutation; tie-breaking matches `TopK`'s
+//!   insertion-order rule because shards merge in ascending label order);
+//! * `server` — a std-thread `Server` with a bounded admission queue
+//!   (reject-with-counter backpressure, never blocking), deadline-aware
+//!   micro-batching (a partial batch flushes once its oldest query is
+//!   `max_delay_ms` old, not only when `b` rows accumulate), and an
+//!   injectable `Clock` so every decision is host-testable;
+//! * `loadgen` — a deterministic open-loop generator (seeded `util::Rng`,
+//!   exponential inter-arrivals, bounded bursts) so traffic scenarios
+//!   replay exactly: same arrival seed, same packing decisions;
+//! * `stats` — `ServingStats` extends the micro-batcher's `ServeStats`
+//!   with rejected / deadline-flush / shard-utilization counters and a
+//!   running packing digest that pins run-to-run determinism.
+//!
+//! Wired end to end as `elmo serve` (`cli`/`main`), configured by the
+//! `serve.*` RunSpec keys (`config`), and charged by
+//! `memmodel::serve_shard_bytes`.  See `docs/SERVING.md`.
+
+pub mod loadgen;
+pub mod merge;
+pub mod server;
+pub mod shard;
+pub mod stats;
+
+pub use loadgen::{Arrival, LoadGen, LoadGenConfig};
+pub use merge::merge_rows;
+pub use server::{replay, Admission, Clock, Server, ServerConfig, VirtualClock, WallClock};
+pub use shard::{ShardExecutor, ShardPlan};
+pub use stats::{ServingStats, PACKING_WINDOW_CAP};

@@ -1,0 +1,377 @@
+//! The online serving front door: a bounded admission queue with
+//! deadline-aware micro-batching.
+//!
+//! Differences from the offline `infer::MicroBatcher` (which stays the
+//! right tool for throughput benchmarks):
+//!
+//! * **Bounded admission** — the queue holds at most `queue_cap` rows;
+//!   rows offered beyond that are *rejected with a counter*, never
+//!   blocked on and never silently dropped.  After `drain`,
+//!   `completed + rejected == submitted` holds exactly
+//!   (`ServingStats::reconciles`).
+//! * **Deadline flushing** — a partial batch no longer waits for `width`
+//!   rows: once the oldest enqueued query is `max_delay_ms` old, the
+//!   partial batch flushes (padded by the shared repeat-last-row helper).
+//!   Full batches still flush immediately.
+//! * **Injectable clock** — every admission and flush decision reads an
+//!   abstract `Clock`, so the semantics are proven host-side on a
+//!   `VirtualClock` (`rust/tests/serve_queue.rs`) and the `elmo serve`
+//!   harness replays a seeded arrival schedule with bit-identical packing
+//!   (the virtual clock advances along the schedule; scoring wall time
+//!   never feeds back into packing decisions).
+//!
+//! Like the micro-batcher, the server is runtime-agnostic: flushing takes
+//! a scoring closure (`&[i32] padded tokens -> Vec<TopK>`), which is how
+//! the label-sharded scoring path (`ShardExecutor`) plugs in without the
+//! queue logic ever touching PJRT.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::{err_config, err_shape};
+
+use crate::data::SEQ_LEN;
+use crate::infer::Prediction;
+use crate::metrics::TopK;
+use crate::util::pad_tail_rows;
+
+use super::stats::ServingStats;
+
+/// Time source for admission and flush decisions, in milliseconds from an
+/// arbitrary origin.  Injectable so the server's semantics are
+/// deterministic under test and under the replayed load harness.
+pub trait Clock {
+    fn now_ms(&self) -> f64;
+}
+
+/// Wall clock: milliseconds since construction.
+pub struct WallClock(Instant);
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock(Instant::now())
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Deterministic, manually-advanced clock (interior mutability so the
+/// driver can advance it while the server holds it).
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    t_ms: Cell<f64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jump to an absolute time (must not move backwards).
+    pub fn set(&self, t_ms: f64) {
+        debug_assert!(t_ms >= self.t_ms.get(), "virtual clock moved backwards");
+        self.t_ms.set(t_ms);
+    }
+
+    pub fn advance(&self, dt_ms: f64) {
+        debug_assert!(dt_ms >= 0.0);
+        self.t_ms.set(self.t_ms.get() + dt_ms);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> f64 {
+        self.t_ms.get()
+    }
+}
+
+/// Server knobs (the `serve.*` RunSpec keys resolve into this).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Fixed scoring batch width `b` (the artifact width).
+    pub width: usize,
+    /// Admission queue capacity in rows; must hold at least one full
+    /// batch or no full batch could ever form.
+    pub queue_cap: usize,
+    /// A partial batch flushes once its oldest query is this old.
+    pub max_delay_ms: f64,
+}
+
+struct PendingQuery {
+    id: u64,
+    tokens: Vec<i32>,
+    enqueued_ms: f64,
+}
+
+/// Outcome of one `submit`: which rows were admitted, how many bounced.
+#[derive(Clone, Debug, Default)]
+pub struct Admission {
+    /// Assigned query ids, in row order, for the admitted rows.
+    pub accepted: Vec<u64>,
+    /// Rows rejected by the full queue (also counted in the stats).
+    pub rejected: usize,
+}
+
+/// Bounded-queue, deadline-flushing micro-batch server.
+pub struct Server<C: Clock> {
+    cfg: ServerConfig,
+    clock: C,
+    queue: VecDeque<PendingQuery>,
+    next_id: u64,
+    pub stats: ServingStats,
+}
+
+impl<C: Clock> Server<C> {
+    pub fn new(cfg: ServerConfig, clock: C) -> Result<Self> {
+        if cfg.width == 0 {
+            return Err(err_config!("server batch width must be positive"));
+        }
+        if cfg.queue_cap < cfg.width {
+            return Err(err_config!(
+                "`serve.queue_cap` ({}) must be >= the batch width ({})",
+                cfg.queue_cap,
+                cfg.width
+            ));
+        }
+        if !cfg.max_delay_ms.is_finite() || cfg.max_delay_ms < 0.0 {
+            return Err(err_config!(
+                "`serve.max_delay_ms` must be finite and >= 0 (got {})",
+                cfg.max_delay_ms
+            ));
+        }
+        Ok(Server {
+            cfg,
+            clock,
+            queue: VecDeque::new(),
+            next_id: 0,
+            stats: ServingStats::default(),
+        })
+    }
+
+    /// The injected clock (the load harness advances a `VirtualClock`
+    /// through this handle while the server holds it).
+    pub fn clock(&self) -> &C {
+        &self.clock
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Rows currently queued.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Offer a query set (one or more [SEQ_LEN] rows back-to-back).  Rows
+    /// are admitted until the bounded queue fills; the remainder is
+    /// rejected-with-counter.  Shape errors reject the whole set without
+    /// enqueueing anything.
+    pub fn submit(&mut self, tokens: &[i32]) -> Result<Admission> {
+        if tokens.is_empty() || tokens.len() % SEQ_LEN != 0 {
+            return Err(err_shape!(
+                "query set must be a non-empty multiple of {SEQ_LEN} tokens, got {}",
+                tokens.len()
+            ));
+        }
+        self.stats.mark_wall();
+        let now = self.clock.now_ms();
+        let mut adm = Admission::default();
+        for row in tokens.chunks_exact(SEQ_LEN) {
+            self.stats.submitted += 1;
+            if self.queue.len() >= self.cfg.queue_cap {
+                self.stats.rejected += 1;
+                adm.rejected += 1;
+                continue;
+            }
+            let id = self.next_id;
+            self.next_id += 1;
+            self.queue.push_back(PendingQuery { id, tokens: row.to_vec(), enqueued_ms: now });
+            adm.accepted.push(id);
+        }
+        Ok(adm)
+    }
+
+    /// Absolute time at which the oldest queued query's deadline expires
+    /// (`None` when the queue is empty).  The driver uses this to advance
+    /// a virtual clock event-by-event.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.queue.front().map(|q| q.enqueued_ms + self.cfg.max_delay_ms)
+    }
+
+    /// Pop `valid` rows, pad to `width`, score, record latencies.
+    fn run_batch<F>(
+        &mut self,
+        score: &mut F,
+        out: &mut Vec<Prediction>,
+        valid: usize,
+        deadline: bool,
+    ) -> Result<()>
+    where
+        F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+    {
+        debug_assert!(valid > 0 && valid <= self.cfg.width && valid <= self.queue.len());
+        let batch: Vec<PendingQuery> = self.queue.drain(..valid).collect();
+        let mut tokens = Vec::with_capacity(self.cfg.width * SEQ_LEN);
+        for q in &batch {
+            tokens.extend_from_slice(&q.tokens);
+        }
+        pad_tail_rows(&mut tokens, SEQ_LEN, self.cfg.width);
+        let topks = score(&tokens)?;
+        if topks.len() < valid {
+            return Err(err_shape!(
+                "scorer returned {} rows for a {valid}-query batch",
+                topks.len()
+            ));
+        }
+        let done = self.clock.now_ms();
+        for (q, tk) in batch.into_iter().zip(topks.into_iter()) {
+            let ms = done - q.enqueued_ms;
+            self.stats.record_completion(ms);
+            out.push(Prediction { id: q.id, topk: tk.items().to_vec(), latency_ms: ms });
+        }
+        self.stats.note_batch(valid, self.cfg.width, deadline);
+        Ok(())
+    }
+
+    /// Flush every currently-full batch (partial remainders stay queued
+    /// for their deadline).  Returns the number of batches executed.
+    pub fn run_full<F>(&mut self, mut score: F, out: &mut Vec<Prediction>) -> Result<usize>
+    where
+        F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+    {
+        let mut n = 0;
+        while self.queue.len() >= self.cfg.width {
+            self.run_batch(&mut score, out, self.cfg.width, false)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Deadline check: if the oldest queued query has aged past
+    /// `max_delay_ms`, flush one (possibly partial) batch and return
+    /// true.  Call after advancing the clock; full batches should already
+    /// have been flushed by `run_full` at submit time.
+    pub fn poll_deadline<F>(&mut self, mut score: F, out: &mut Vec<Prediction>) -> Result<bool>
+    where
+        F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+    {
+        let now = self.clock.now_ms();
+        match self.queue.front() {
+            Some(q) if now - q.enqueued_ms >= self.cfg.max_delay_ms => {
+                let valid = self.queue.len().min(self.cfg.width);
+                self.run_batch(&mut score, out, valid, true)?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// Flush everything still queued (shutdown path; the final partial
+    /// batch counts as a deadline flush — it left before filling).
+    /// Returns the number of batches executed.
+    pub fn drain<F>(&mut self, mut score: F, out: &mut Vec<Prediction>) -> Result<usize>
+    where
+        F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+    {
+        let mut n = self.run_full(&mut score, out)?;
+        if !self.queue.is_empty() {
+            let valid = self.queue.len();
+            self.run_batch(&mut score, out, valid, true)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+/// Replay a seeded arrival schedule through a virtual-clock server —
+/// THE event loop of `elmo serve`, shared with the host-side tests so
+/// they pin the production driver, not a hand-kept copy.  Per arrival:
+/// deadlines due at or before the arrival fire first (in time order),
+/// then the clock advances to the arrival, the burst is admitted
+/// (`take_rows(n)` supplies its token rows), and full batches flush.
+/// After the last arrival the queue drains deadline-by-deadline.
+/// Packing therefore depends only on the schedule: scoring wall time
+/// never touches the virtual clock.
+pub fn replay<F>(
+    server: &mut Server<VirtualClock>,
+    schedule: &[super::loadgen::Arrival],
+    mut take_rows: impl FnMut(usize) -> Vec<i32>,
+    mut score: F,
+    out: &mut Vec<Prediction>,
+) -> Result<()>
+where
+    F: FnMut(&[i32]) -> Result<Vec<TopK>>,
+{
+    for arr in schedule {
+        while let Some(d) = server.next_deadline() {
+            if d > arr.t_ms {
+                break;
+            }
+            server.clock().set(d);
+            server.poll_deadline(&mut score, out)?;
+        }
+        server.clock().set(arr.t_ms);
+        let toks = take_rows(arr.rows);
+        server.submit(&toks)?;
+        server.run_full(&mut score, out)?;
+    }
+    while let Some(d) = server.next_deadline() {
+        let now = server.clock().now_ms();
+        server.clock().set(d.max(now));
+        server.poll_deadline(&mut score, out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn virtual_clock_sets_and_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance(2.5);
+        assert_eq!(c.now_ms(), 2.5);
+        c.set(10.0);
+        assert_eq!(c.now_ms(), 10.0);
+    }
+
+    #[test]
+    fn config_validation_names_the_knob() {
+        let bad = |cfg: ServerConfig| {
+            Server::new(cfg, VirtualClock::new()).unwrap_err().to_string()
+        };
+        let base = ServerConfig { width: 8, queue_cap: 32, max_delay_ms: 5.0 };
+        assert!(bad(ServerConfig { width: 0, ..base.clone() }).contains("width"));
+        assert!(
+            bad(ServerConfig { queue_cap: 7, ..base.clone() }).contains("serve.queue_cap")
+        );
+        assert!(
+            bad(ServerConfig { max_delay_ms: f64::NAN, ..base.clone() })
+                .contains("serve.max_delay_ms")
+        );
+        assert!(bad(ServerConfig { max_delay_ms: -1.0, ..base }).contains("serve.max_delay_ms"));
+    }
+}

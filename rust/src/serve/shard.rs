@@ -1,0 +1,473 @@
+//! Label-range sharding: partition the scoring-chunk range into R
+//! contiguous shards and score them on separate session pool workers.
+//!
+//! A `ShardPlan` is pure geometry: shard s owns chunks
+//! `ranges[s]` and therefore label rows `ranges[s].start * SCORE_LC ..
+//! ranges[s].end * SCORE_LC` of the (permuted) weight store.  Its `view`
+//! method projects the full `ClassifierView` into a shard-local view whose
+//! `label_order` slice still carries **global** label ids — that slice is
+//! how global ids are reconstructed from shard-local row offsets, so a
+//! shard's scan emits exactly the (score, global label) pairs the full
+//! scan would for those rows.
+//!
+//! `ShardExecutor` drives one batch through every shard.  With a pooled
+//! session, shard s submits to worker `s % workers` (stable assignment:
+//! each worker compiles/executes the same artifacts every batch) under a
+//! bounded in-flight window — at most one outstanding scan per shard,
+//! `2 * workers` shard jobs in flight overall — and the per-shard results
+//! merge on the calling thread in ascending shard order
+//! (`merge::merge_rows`), which is what makes the sharded result
+//! bit-identical to a single `ChunkScanner::scan`
+//! (`rust/tests/serve_parity.rs`).
+//!
+//! Serving weights are read-only, so the hot loop should never copy
+//! them: `ShardExecutor::pin` snapshots each shard's weight slice once
+//! into `Arc`s, and every subsequent batch ships `Arc` clones to the
+//! workers.  Unpinned executors still work (one slice copy per shard per
+//! batch) — the right mode for one-off scans over a live store.
+
+use std::ops::Range;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::{err_config, err_runtime, err_shape};
+
+use crate::infer::scanner::{ChunkScanner, ClassifierView, SCORE_LC};
+use crate::metrics::TopK;
+use crate::runtime::{ExecCtx, Runtime, RuntimePool};
+
+use super::merge::merge_rows;
+
+/// Contiguous partition of the scoring-chunk range into label shards.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Chunk ranges, contiguous and ascending: shard s owns
+    /// `ranges[s].start .. ranges[s].end`.
+    ranges: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Split `n_chunks` scoring chunks across `shards` shards as evenly as
+    /// possible (the first `n_chunks % shards` shards take one extra
+    /// chunk).  Every shard owns at least one chunk, so `shards` may not
+    /// exceed `n_chunks`.
+    pub fn new(n_chunks: usize, shards: usize) -> Result<Self> {
+        if shards == 0 {
+            return Err(err_config!("shard plan needs shards >= 1"));
+        }
+        if n_chunks == 0 {
+            return Err(err_config!("shard plan needs at least one scoring chunk"));
+        }
+        if shards > n_chunks {
+            return Err(err_config!(
+                "cannot split {n_chunks} scoring chunk(s) across {shards} shards \
+                 (`serve.shards` must be <= the model's chunk count)"
+            ));
+        }
+        let base = n_chunks / shards;
+        let extra = n_chunks % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut lo = 0;
+        for s in 0..shards {
+            let len = base + usize::from(s < extra);
+            ranges.push(lo..lo + len);
+            lo += len;
+        }
+        debug_assert_eq!(lo, n_chunks);
+        Ok(ShardPlan { ranges })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The chunk range shard `shard` owns.
+    pub fn chunk_range(&self, shard: usize) -> Range<usize> {
+        self.ranges[shard].clone()
+    }
+
+    /// Total chunks covered by the plan.
+    pub fn n_chunks(&self) -> usize {
+        self.ranges.last().map_or(0, |r| r.end)
+    }
+
+    /// Project the full classifier view into shard `shard`'s slice.  The
+    /// sliced `label_order` still maps shard-local rows to **global**
+    /// label ids, so shard scans score global labels directly; rows past
+    /// the real label count fall out of the slice (`labels` clamps), so a
+    /// tail shard scores only its real labels and an all-padding shard
+    /// scores nothing.
+    pub fn view<'a>(&self, full: &ClassifierView<'a>, shard: usize) -> ClassifierView<'a> {
+        let r = &self.ranges[shard];
+        let lo = r.start * SCORE_LC;
+        let hi = r.end * SCORE_LC;
+        let labels = full.labels.clamp(lo, hi) - lo;
+        // clamp the permutation slice start too: an all-padding shard has
+        // lo past the end of label_order, and even an empty range panics
+        // when its bounds exceed the slice
+        let lo_lab = lo.min(full.labels);
+        ClassifierView {
+            w: &full.w[lo * full.d..hi * full.d],
+            d: full.d,
+            labels,
+            l_pad: hi - lo,
+            label_order: &full.label_order[lo_lab..lo_lab + labels],
+        }
+    }
+}
+
+/// One shard's snapshot of the (read-only) serving weights: owned,
+/// `Arc`-shared with pool workers so the scoring hot loop never re-clones
+/// the weight matrix per batch.
+struct PinnedShard {
+    w: Arc<Vec<f32>>,
+    order: Arc<Vec<u32>>,
+    labels: usize,
+    l_pad: usize,
+    d: usize,
+}
+
+impl PinnedShard {
+    fn view(&self) -> ClassifierView<'_> {
+        ClassifierView {
+            w: self.w.as_slice(),
+            d: self.d,
+            labels: self.labels,
+            l_pad: self.l_pad,
+            label_order: self.order.as_slice(),
+        }
+    }
+}
+
+/// Scores batches through a `ShardPlan`: every shard scans its label
+/// slice (on its own pool worker when the session has one), and the
+/// shard results merge into the global per-row top-k.
+pub struct ShardExecutor {
+    plan: ShardPlan,
+    scanner: ChunkScanner,
+    /// Per-shard weight snapshots (`pin`); while empty (unpinned),
+    /// `score` clones each shard's slice per call instead.
+    pinned: Vec<PinnedShard>,
+    /// Chunk executions per shard (utilization accounting; a balanced
+    /// plan keeps these within one chunk of each other per batch).
+    pub shard_chunks: Vec<u64>,
+}
+
+impl ShardExecutor {
+    pub fn new(plan: ShardPlan, k: usize) -> Self {
+        let shards = plan.shards();
+        ShardExecutor {
+            plan,
+            scanner: ChunkScanner::new(k),
+            pinned: Vec::new(),
+            shard_chunks: vec![0; shards],
+        }
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn k(&self) -> usize {
+        self.scanner.k
+    }
+
+    /// Snapshot every shard's weight slice + permutation slice once, so
+    /// the per-batch hot loop ships `Arc` clones to workers instead of
+    /// copying the shard's weights on every scored batch.  Serving
+    /// weights are read-only (`Predictor`), so one snapshot stays valid
+    /// for the whole run; a caller that does mutate its store must
+    /// re-`pin` (or never pin, paying the per-batch clone) — `score`
+    /// reads the pinned snapshot, not the live view, once pinned.
+    pub fn pin(&mut self, view: &ClassifierView) -> Result<()> {
+        self.check_geometry(view)?;
+        self.pinned = (0..self.plan.shards())
+            .map(|s| {
+                let v = self.plan.view(view, s);
+                PinnedShard {
+                    w: Arc::new(v.w.to_vec()),
+                    order: Arc::new(v.label_order.to_vec()),
+                    labels: v.labels,
+                    l_pad: v.l_pad,
+                    d: v.d,
+                }
+            })
+            .collect();
+        Ok(())
+    }
+
+    /// True once `pin` has snapshotted the shard weights.
+    pub fn is_pinned(&self) -> bool {
+        !self.pinned.is_empty()
+    }
+
+    fn check_geometry(&self, view: &ClassifierView) -> Result<()> {
+        if view.l_pad != self.plan.n_chunks() * SCORE_LC {
+            return Err(err_shape!(
+                "shard plan covers {} chunks but the view has {} rows ({} chunks)",
+                self.plan.n_chunks(),
+                view.l_pad,
+                view.l_pad / SCORE_LC
+            ));
+        }
+        Ok(())
+    }
+
+    /// Shard `s` as the scan will see it: the pinned snapshot when one
+    /// exists, the live view's slice otherwise.
+    fn shard_view<'a>(&'a self, full: &ClassifierView<'a>, s: usize) -> ClassifierView<'a> {
+        match self.pinned.get(s) {
+            Some(pin) => pin.view(),
+            None => self.plan.view(full, s),
+        }
+    }
+
+    /// Score one [batch, d] embedding block across every shard and merge.
+    /// Bit-identical to `ChunkScanner::scan` over the unsharded view for
+    /// any shard count (scores and label order; see `merge`).
+    pub fn score(
+        &mut self,
+        ex: &mut ExecCtx,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<TopK>> {
+        self.check_geometry(view)?;
+        let shards = self.plan.shards();
+        let per_shard = match ex.pool {
+            Some(pool) if shards > 1 => self.score_pooled(pool, view, emb, batch)?,
+            // a single shard is the plain predict path: delegate to the
+            // scanner, which fans chunks to the pool when one exists
+            _ if shards == 1 => {
+                vec![self.scanner.scan(ex, &self.shard_view(view, 0), emb, batch)?]
+            }
+            _ => self.score_serial(ex.rt, view, emb, batch)?,
+        };
+        for s in 0..shards {
+            self.shard_chunks[s] += self.plan.chunk_range(s).len() as u64;
+        }
+        merge_rows(self.scanner.k, &per_shard)
+    }
+
+    /// Pool-less fallback: every shard scans serially on the session
+    /// runtime, in shard order (the pooled path's semantics oracle).
+    fn score_serial(
+        &self,
+        rt: &mut Runtime,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<Vec<TopK>>> {
+        let mut per_shard = Vec::with_capacity(self.plan.shards());
+        for s in 0..self.plan.shards() {
+            let shard_view = self.shard_view(view, s);
+            per_shard.push(self.scanner.scan_on(rt, &shard_view, emb, batch)?);
+        }
+        Ok(per_shard)
+    }
+
+    /// One job per shard on worker `shard % workers`, bounded in-flight
+    /// window (one outstanding scan per shard, at most `2 * workers` shard
+    /// jobs overall); results land in shard order before merging.
+    fn score_pooled(
+        &self,
+        pool: &RuntimePool,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+    ) -> Result<Vec<Vec<TopK>>> {
+        let shards = self.plan.shards();
+        let k = self.scanner.k;
+        let plan = &self.plan;
+        let pinned = &self.pinned;
+        let emb_sh = Arc::new(emb.to_vec());
+        let (tx, rx) = channel::<(usize, Result<Vec<TopK>>)>();
+        let submit = |s: usize| -> Result<()> {
+            // owned data crosses the thread boundary: `Arc` clones of the
+            // pinned snapshot on the hot path, a one-off copy of the live
+            // slices otherwise — identical inputs to the serial path by
+            // construction either way
+            let (w, order, d, labels, l_pad) = match pinned.get(s) {
+                Some(pin) => {
+                    (Arc::clone(&pin.w), Arc::clone(&pin.order), pin.d, pin.labels, pin.l_pad)
+                }
+                None => {
+                    let v = plan.view(view, s);
+                    (
+                        Arc::new(v.w.to_vec()),
+                        Arc::new(v.label_order.to_vec()),
+                        v.d,
+                        v.labels,
+                        v.l_pad,
+                    )
+                }
+            };
+            let emb = Arc::clone(&emb_sh);
+            let tx = tx.clone();
+            pool.submit(
+                s,
+                Box::new(move |rt| {
+                    let view = ClassifierView {
+                        w: w.as_slice(),
+                        d,
+                        labels,
+                        l_pad,
+                        label_order: order.as_slice(),
+                    };
+                    let r = ChunkScanner::new(k).scan_on(rt, &view, &emb, batch);
+                    let _ = tx.send((s, r));
+                }),
+            )
+        };
+        let window = (2 * pool.workers()).clamp(1, shards);
+        let mut next = 0;
+        while next < window {
+            submit(next)?;
+            next += 1;
+        }
+        let mut per_shard: Vec<Option<Vec<TopK>>> = (0..shards).map(|_| None).collect();
+        for _ in 0..shards {
+            let (s, res) = rx
+                .recv()
+                .map_err(|_| err_runtime!("runtime pool workers hung up mid-shard-scan"))?;
+            if next < shards {
+                submit(next)?;
+                next += 1;
+            }
+            per_shard[s] = Some(res?);
+        }
+        Ok(per_shard
+            .into_iter()
+            .map(|r| r.expect("every shard reported exactly once"))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_partitions_evenly_with_remainder_up_front() {
+        let p = ShardPlan::new(10, 4).unwrap();
+        assert_eq!(p.shards(), 4);
+        assert_eq!(p.n_chunks(), 10);
+        let lens: Vec<usize> = (0..4).map(|s| p.chunk_range(s).len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+        // contiguous, ascending, covering
+        let mut covered = 0;
+        for s in 0..p.shards() {
+            let r = p.chunk_range(s);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, 10);
+    }
+
+    #[test]
+    fn plan_single_shard_owns_everything() {
+        let p = ShardPlan::new(7, 1).unwrap();
+        assert_eq!(p.chunk_range(0), 0..7);
+    }
+
+    #[test]
+    fn plan_rejects_degenerate_geometry() {
+        assert!(ShardPlan::new(4, 0).is_err());
+        assert!(ShardPlan::new(0, 1).is_err());
+        let err = ShardPlan::new(2, 3).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+        assert!(format!("{err}").contains("serve.shards"), "{err}");
+    }
+
+    #[test]
+    fn shard_views_slice_rows_and_keep_global_label_ids() {
+        // 3 chunks, labels stop mid-chunk-2: 2*SCORE_LC + 100 real labels
+        let d = 2;
+        let n_chunks = 3;
+        let labels = 2 * SCORE_LC + 100;
+        let l_pad = n_chunks * SCORE_LC;
+        let w: Vec<f32> = (0..l_pad * d).map(|i| i as f32).collect();
+        // a non-identity permutation: global id = row + 7
+        let order: Vec<u32> = (0..labels as u32).map(|r| r + 7).collect();
+        let full = ClassifierView { w: &w, d, labels, l_pad, label_order: &order };
+        let plan = ShardPlan::new(n_chunks, 3).unwrap();
+        for s in 0..3 {
+            let v = plan.view(&full, s);
+            assert_eq!(v.l_pad, SCORE_LC, "each shard owns one chunk");
+            assert_eq!(v.d, d);
+            let lo = s * SCORE_LC;
+            assert_eq!(v.w, &w[lo * d..(lo + SCORE_LC) * d], "shard {s} weight slice");
+            let want_labels = if s < 2 { SCORE_LC } else { 100 };
+            assert_eq!(v.labels, want_labels, "shard {s} real labels");
+            // global ids reconstructed from the shard-local offset
+            for (local, &lab) in v.label_order.iter().enumerate() {
+                assert_eq!(lab, (lo + local) as u32 + 7, "shard {s} row {local}");
+            }
+        }
+        // label count conserved across shards
+        let total: usize = (0..3).map(|s| plan.view(&full, s).labels).sum();
+        assert_eq!(total, labels);
+    }
+
+    #[test]
+    fn shard_view_of_an_all_padding_shard_is_empty() {
+        // labels fit entirely in chunk 0; chunk 1 is pure padding
+        let d = 1;
+        let labels = 10;
+        let l_pad = 2 * SCORE_LC;
+        let w = vec![0.0f32; l_pad * d];
+        let order: Vec<u32> = (0..labels as u32).collect();
+        let full = ClassifierView { w: &w, d, labels, l_pad, label_order: &order };
+        let plan = ShardPlan::new(2, 2).unwrap();
+        let tail = plan.view(&full, 1);
+        assert_eq!(tail.labels, 0);
+        assert!(tail.label_order.is_empty());
+        assert_eq!(tail.l_pad, SCORE_LC);
+    }
+
+    #[test]
+    fn executor_counts_chunk_executions_per_shard() {
+        let plan = ShardPlan::new(5, 2).unwrap();
+        let ex = ShardExecutor::new(plan, 5);
+        assert_eq!(ex.k(), 5);
+        assert_eq!(ex.shard_chunks, vec![0, 0]);
+        assert_eq!(ex.plan().shards(), 2);
+    }
+
+    #[test]
+    fn pin_snapshots_every_shard_and_validates_geometry() {
+        // labels end inside chunk 1; chunk 2 is pure padding — pinning
+        // must survive the empty tail shard (the all-padding slice case)
+        let d = 2;
+        let labels = SCORE_LC + 100;
+        let l_pad = 3 * SCORE_LC;
+        let w: Vec<f32> = (0..l_pad * d).map(|i| i as f32).collect();
+        let order: Vec<u32> = (0..labels as u32).collect();
+        let full = ClassifierView { w: &w, d, labels, l_pad, label_order: &order };
+        let mut ex = ShardExecutor::new(ShardPlan::new(3, 3).unwrap(), 5);
+        assert!(!ex.is_pinned());
+        ex.pin(&full).unwrap();
+        assert!(ex.is_pinned());
+        for s in 0..3 {
+            let live = ex.plan.view(&full, s);
+            let pin = ex.pinned[s].view();
+            assert_eq!(pin.w, live.w, "shard {s}: pinned weights");
+            assert_eq!(pin.label_order, live.label_order, "shard {s}: pinned permutation");
+            assert_eq!(pin.labels, live.labels);
+            assert_eq!(pin.l_pad, live.l_pad);
+            assert_eq!(pin.d, live.d);
+        }
+        assert_eq!(ex.pinned[2].labels, 0, "tail shard is all padding");
+        // a mismatched view is rejected before any snapshotting
+        let short = ClassifierView {
+            w: &w[..SCORE_LC * d],
+            d,
+            labels: 10,
+            l_pad: SCORE_LC,
+            label_order: &order[..10],
+        };
+        let err = ShardExecutor::new(ShardPlan::new(3, 3).unwrap(), 5).pin(&short).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Shape(_)), "{err}");
+    }
+}

@@ -1,0 +1,201 @@
+//! Serving-layer statistics: the micro-batcher's `ServeStats` (latency
+//! window, qps, fill) extended with admission/deadline/shard counters and
+//! a running packing digest.
+//!
+//! The digest is the determinism witness for the load harness: every
+//! flush folds its (valid-row count, deadline-triggered) decision into a
+//! running FNV-1a hash, so two runs with the same arrival seed — and
+//! therefore the same packing decisions — print the same digest, and any
+//! divergence in packing shows up as a one-line diff.
+
+use crate::infer::ServeStats;
+
+/// The run's **first** packing decisions, retained verbatim for
+/// inspection and tests; the digest covers the whole run.
+pub const PACKING_WINDOW_CAP: usize = 4096;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1_0000_0001_b3;
+
+/// Counters for the online serving path (`serve::Server`).
+#[derive(Clone, Debug)]
+pub struct ServingStats {
+    /// Latency window / completed / batches / padded_rows / wall qps —
+    /// shared with the offline micro-batcher.
+    pub core: ServeStats,
+    /// Rows offered to the admission queue (accepted + rejected).
+    pub submitted: u64,
+    /// Rows turned away by the bounded queue (backpressure, counted —
+    /// never blocked, never silently dropped).
+    pub rejected: u64,
+    /// Batches flushed because the oldest query aged past the deadline.
+    pub deadline_flushes: u64,
+    /// Batches flushed because `width` rows accumulated.
+    pub full_flushes: u64,
+    /// The first `PACKING_WINDOW_CAP` (valid rows, deadline-triggered)
+    /// flush decisions; later decisions live only in the digest.
+    packing: Vec<(u32, bool)>,
+    /// Order-sensitive FNV-1a over every packing decision of the run.
+    packing_digest: u64,
+    /// Chunk executions per shard (copied from
+    /// `ShardExecutor::shard_chunks` by the driver before reporting).
+    pub shard_chunks: Vec<u64>,
+}
+
+impl Default for ServingStats {
+    fn default() -> Self {
+        ServingStats {
+            core: ServeStats::default(),
+            submitted: 0,
+            rejected: 0,
+            deadline_flushes: 0,
+            full_flushes: 0,
+            packing: Vec::new(),
+            packing_digest: FNV_OFFSET,
+            shard_chunks: Vec::new(),
+        }
+    }
+}
+
+impl ServingStats {
+    pub(crate) fn record_completion(&mut self, latency_ms: f64) {
+        self.core.record(latency_ms);
+    }
+
+    pub(crate) fn mark_wall(&mut self) {
+        self.core.mark();
+    }
+
+    /// Fold one flush decision into the counters and the digest.
+    pub(crate) fn note_batch(&mut self, valid: usize, width: usize, deadline: bool) {
+        self.core.batches += 1;
+        self.core.padded_rows += (width - valid) as u64;
+        if deadline {
+            self.deadline_flushes += 1;
+        } else {
+            self.full_flushes += 1;
+        }
+        let mut h = self.packing_digest;
+        for b in (valid as u32)
+            .to_le_bytes()
+            .into_iter()
+            .chain(std::iter::once(deadline as u8))
+        {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self.packing_digest = h;
+        if self.packing.len() < PACKING_WINDOW_CAP {
+            self.packing.push((valid as u32, deadline));
+        }
+        self.core.mark();
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.core.completed
+    }
+
+    /// The conservation law of the admission queue: every submitted row
+    /// is either completed or rejected once the server has drained.
+    pub fn reconciles(&self) -> bool {
+        self.core.completed + self.rejected == self.submitted
+    }
+
+    /// The first `PACKING_WINDOW_CAP` (valid rows, deadline) decisions.
+    pub fn packing(&self) -> &[(u32, bool)] {
+        &self.packing
+    }
+
+    /// Order-sensitive digest over every packing decision of the run —
+    /// identical arrival seed implies identical digest.
+    pub fn packing_digest(&self) -> u64 {
+        self.packing_digest
+    }
+
+    /// Per-shard share of chunk executions, normalized to sum to 1
+    /// (empty when the driver never populated `shard_chunks`).
+    pub fn shard_utilization(&self) -> Vec<f64> {
+        let total: u64 = self.shard_chunks.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.shard_chunks.len()];
+        }
+        self.shard_chunks.iter().map(|&c| c as f64 / total as f64).collect()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} completed / {} rejected of {} | {} batches ({} deadline) | \
+             {:.1} q/s | p50 {:.2} ms  p99 {:.2} ms | fill {:.0}% | packing {:016x}",
+            self.core.completed,
+            self.rejected,
+            self.submitted,
+            self.core.batches,
+            self.deadline_flushes,
+            self.core.qps(),
+            self.core.p50_ms(),
+            self.core.p99_ms(),
+            100.0 * self.core.fill_ratio(),
+            self.packing_digest
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_digest_track_flush_decisions() {
+        let mut s = ServingStats::default();
+        let d0 = s.packing_digest();
+        s.note_batch(8, 8, false);
+        s.note_batch(3, 8, true);
+        assert_eq!(s.core.batches, 2);
+        assert_eq!(s.core.padded_rows, 5);
+        assert_eq!(s.full_flushes, 1);
+        assert_eq!(s.deadline_flushes, 1);
+        assert_eq!(s.packing(), &[(8, false), (3, true)]);
+        assert_ne!(s.packing_digest(), d0, "decisions fold into the digest");
+    }
+
+    #[test]
+    fn digest_is_order_sensitive_and_replayable() {
+        let mut a = ServingStats::default();
+        a.note_batch(8, 8, false);
+        a.note_batch(3, 8, true);
+        let mut b = ServingStats::default();
+        b.note_batch(8, 8, false);
+        b.note_batch(3, 8, true);
+        assert_eq!(a.packing_digest(), b.packing_digest(), "same decisions, same digest");
+        let mut c = ServingStats::default();
+        c.note_batch(3, 8, true);
+        c.note_batch(8, 8, false);
+        assert_ne!(a.packing_digest(), c.packing_digest(), "order matters");
+        let mut d = ServingStats::default();
+        d.note_batch(8, 8, false);
+        d.note_batch(3, 8, false); // same sizes, different trigger
+        assert_ne!(a.packing_digest(), d.packing_digest(), "trigger matters");
+    }
+
+    #[test]
+    fn reconciliation_is_completed_plus_rejected() {
+        let mut s = ServingStats::default();
+        s.submitted = 10;
+        s.rejected = 3;
+        for _ in 0..7 {
+            s.record_completion(1.0);
+        }
+        assert!(s.reconciles());
+        s.submitted += 1;
+        assert!(!s.reconciles());
+    }
+
+    #[test]
+    fn shard_utilization_normalizes() {
+        let mut s = ServingStats::default();
+        assert!(s.shard_utilization().is_empty());
+        s.shard_chunks = vec![0, 0];
+        assert_eq!(s.shard_utilization(), vec![0.0, 0.0]);
+        s.shard_chunks = vec![3, 1];
+        assert_eq!(s.shard_utilization(), vec![0.75, 0.25]);
+    }
+}

@@ -133,6 +133,34 @@ impl RingF32 {
     }
 }
 
+/// Repeat-last-row tail padding, shared by eval's wrapped tail batch
+/// (`coordinator::eval`), the micro-batching queue
+/// (`infer::MicroBatcher::flush`), and the serving `serve::Server`: extend
+/// `buf` (row-major, `row_len` values per row) to exactly `rows` rows by
+/// repeating its final row.  Every caller scores the padded rows and then
+/// drops them, so the *content* of the padding can never change results —
+/// one helper keeps the three paths from drifting.
+///
+/// Panics on ragged input (`buf` not whole rows), an empty buffer (there
+/// is no row to repeat), or a target below the current row count — all
+/// caller bugs, not data conditions.
+pub fn pad_tail_rows<T: Clone>(buf: &mut Vec<T>, row_len: usize, rows: usize) {
+    assert!(row_len > 0, "row length must be positive");
+    assert!(
+        !buf.is_empty() && buf.len() % row_len == 0,
+        "padding needs at least one whole row ({} values, row_len {row_len})",
+        buf.len()
+    );
+    let have = buf.len() / row_len;
+    assert!(have <= rows, "buffer already holds {have} rows, target {rows}");
+    // the source range keeps pointing at the original last row — every
+    // appended copy is identical to it by construction
+    let last = buf.len() - row_len;
+    for _ in have..rows {
+        buf.extend_from_within(last..last + row_len);
+    }
+}
+
 /// Minimal property-testing harness (offline substitute for `proptest`):
 /// runs `cases` random cases; on failure reports the failing case seed so
 /// the case can be replayed with `Rng::new(seed)`.
@@ -286,6 +314,42 @@ mod tests {
         assert_eq!(r.max(), 0.5, "old peak aged out of the window");
         assert_eq!(r.capacity(), 3);
         assert_eq!(r.values().len(), 3);
+    }
+
+    #[test]
+    fn pad_tail_rows_repeats_the_last_row() {
+        let mut buf = vec![1, 2, 3, 4, 5, 6];
+        pad_tail_rows(&mut buf, 3, 4);
+        assert_eq!(buf, vec![1, 2, 3, 4, 5, 6, 4, 5, 6, 4, 5, 6]);
+        // already at the target: a no-op
+        let mut full = vec![7.0f32, 8.0];
+        pad_tail_rows(&mut full, 1, 2);
+        assert_eq!(full, vec![7.0, 8.0]);
+        // single row padded to width
+        let mut one = vec![9u32];
+        pad_tail_rows(&mut one, 1, 3);
+        assert_eq!(one, vec![9, 9, 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole row")]
+    fn pad_tail_rows_rejects_ragged_input() {
+        let mut buf = vec![1, 2, 3];
+        pad_tail_rows(&mut buf, 2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole row")]
+    fn pad_tail_rows_rejects_an_empty_buffer() {
+        let mut buf: Vec<i32> = Vec::new();
+        pad_tail_rows(&mut buf, 4, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "target")]
+    fn pad_tail_rows_rejects_shrinking() {
+        let mut buf = vec![1, 2, 3, 4];
+        pad_tail_rows(&mut buf, 2, 1);
     }
 
     #[test]

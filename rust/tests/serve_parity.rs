@@ -1,0 +1,228 @@
+//! Shard-merge parity: label-sharded serving must change nothing
+//! numerically.
+//!
+//! Two layers, mirroring `parallel_parity.rs`:
+//!
+//! * **Host-side merge tests (always run, no artifacts)** — synthesize
+//!   per-shard scan outputs from a `ShardPlan`'s views over a synthetic
+//!   classifier and assert the cross-shard merge is bit-identical to a
+//!   single reference fold over the whole (permuted) label space,
+//!   including tie cases and shard-boundary labels.
+//! * **Artifact-gated end-to-end parity** — for shards ∈ {1, 2, 4}, a
+//!   `ShardExecutor` over a real checkpoint-shaped `WeightStore` must
+//!   return exactly what a single `ChunkScanner::scan` returns (scores
+//!   and label order), on a serial session and on a pooled one.
+
+use elmo::infer::{ChunkScanner, ClassifierView, SCORE_LC};
+use elmo::metrics::TopK;
+use elmo::serve::{merge_rows, ShardExecutor, ShardPlan};
+use elmo::store::{BufferSpec, WeightStore};
+use elmo::util::Rng;
+use elmo::Session;
+
+fn art_dir() -> Option<String> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt")
+        .exists()
+        .then(|| p.to_str().unwrap().to_string())
+}
+
+// ---- host-side merge parity (no artifacts needed) ----
+
+/// Reference scan of one row: fold every real label of `view` in row
+/// order — exactly what `ChunkScanner`'s chunk loop does per batch row.
+fn reference_fold(k: usize, view: &ClassifierView, scores: &[f32]) -> TopK {
+    let mut tk = TopK::new(k);
+    for row in 0..view.labels {
+        tk.push(scores[row], view.label_order[row]);
+    }
+    tk
+}
+
+/// Synthetic shard outputs: each shard folds its view's slice of the
+/// score vector (global row = shard offset + local row), like a shard
+/// job folding its own chunks.
+fn shard_folds(
+    k: usize,
+    plan: &ShardPlan,
+    full: &ClassifierView,
+    scores: &[f32],
+) -> Vec<Vec<TopK>> {
+    (0..plan.shards())
+        .map(|s| {
+            let v = plan.view(full, s);
+            let offset = plan.chunk_range(s).start * SCORE_LC;
+            let mut tk = TopK::new(k);
+            for local in 0..v.labels {
+                tk.push(scores[offset + local], v.label_order[local]);
+            }
+            vec![tk]
+        })
+        .collect()
+}
+
+#[test]
+fn host_side_shard_merge_matches_the_reference_fold() {
+    // labels end mid-chunk so the tail shard is partially padding; the
+    // permutation is non-identity so merged ids must come through the
+    // sliced label_order, not from row arithmetic
+    let n_chunks = 4;
+    let labels = 3 * SCORE_LC + 257;
+    let l_pad = n_chunks * SCORE_LC;
+    let d = 1;
+    let w = vec![0.0f32; l_pad * d]; // geometry only; scores are synthetic
+    let mut order: Vec<u32> = (0..labels as u32).collect();
+    let mut rng = Rng::new(0x5EED);
+    rng.shuffle(&mut order);
+    let full = ClassifierView { w: &w, d, labels, l_pad, label_order: &order };
+    for case in 0..20u64 {
+        let mut rng = Rng::new(0xACE + case);
+        // coarse grid: ties across shard boundaries are the hard case
+        let scores: Vec<f32> =
+            (0..labels).map(|_| (rng.below(16) as f32) * 0.125 - 1.0).collect();
+        for shards in [1usize, 2, 3, 4] {
+            let plan = ShardPlan::new(n_chunks, shards).unwrap();
+            for k in [1usize, 5, 64] {
+                let reference = reference_fold(k, &full, &scores);
+                let merged =
+                    merge_rows(k, &shard_folds(k, &plan, &full, &scores)).unwrap();
+                assert_eq!(merged.len(), 1);
+                assert_eq!(
+                    merged[0].items(),
+                    reference.items(),
+                    "case {case}, shards {shards}, k {k}: merge diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn host_side_merge_handles_multi_row_batches() {
+    // per-row independence: merging a batch must merge each row on its own
+    let n_chunks = 2;
+    let labels = 2 * SCORE_LC;
+    let d = 1;
+    let w = vec![0.0f32; labels * d];
+    let order: Vec<u32> = (0..labels as u32).collect();
+    let full = ClassifierView { w: &w, d, labels, l_pad: labels, label_order: &order };
+    let plan = ShardPlan::new(n_chunks, 2).unwrap();
+    let mut rng = Rng::new(9);
+    let batch = 3;
+    let per_row_scores: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..labels).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let per_shard: Vec<Vec<TopK>> = (0..2)
+        .map(|s| {
+            per_row_scores
+                .iter()
+                .map(|scores| {
+                    let v = plan.view(&full, s);
+                    let offset = plan.chunk_range(s).start * SCORE_LC;
+                    let mut tk = TopK::new(5);
+                    for local in 0..v.labels {
+                        tk.push(scores[offset + local], v.label_order[local]);
+                    }
+                    tk
+                })
+                .collect()
+        })
+        .collect();
+    let merged = merge_rows(5, &per_shard).unwrap();
+    assert_eq!(merged.len(), batch);
+    for (bi, scores) in per_row_scores.iter().enumerate() {
+        let reference = reference_fold(5, &full, scores);
+        assert_eq!(merged[bi].items(), reference.items(), "row {bi} diverged");
+    }
+}
+
+// ---- artifact-gated end-to-end parity ----
+
+/// A deterministic pseudo-random store with deliberate score ties
+/// (coarse weight grid) — the same construction the pooled-scan parity
+/// test uses to stress insertion-order tie-breaking.
+fn synthetic_store(labels: usize, d: usize) -> WeightStore {
+    let order: Vec<u32> = (0..labels as u32).collect();
+    let mut store =
+        WeightStore::new(labels, d, SCORE_LC, order, 0, BufferSpec::default()).unwrap();
+    let mut rng = Rng::new(99);
+    for v in store.w_mut().iter_mut() {
+        *v = (rng.below(64) as f32) * 0.03125 - 1.0;
+    }
+    store
+}
+
+#[test]
+fn sharded_scan_matches_single_scan_bit_for_bit() {
+    let Some(art) = art_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut sess_serial = Session::open(art.as_str()).unwrap();
+    let mut sess_pooled = Session::builder()
+        .artifacts(art.as_str())
+        .workers(3)
+        .build()
+        .unwrap();
+    let d = sess_serial.config().d;
+    let b = sess_serial.config().batch;
+    // 4000 labels -> l_pad 4096 -> 4 scoring chunks
+    let store = synthetic_store(4000, d);
+    let mut rng = Rng::new(7);
+    let emb: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let view = ClassifierView::of_store(&store);
+    let n_chunks = store.l_pad / SCORE_LC;
+    let k = 5;
+
+    // the oracle: one unsharded serial scan
+    let single = ChunkScanner::new(k)
+        .scan(&mut sess_serial.ctx(), &view, &emb, b)
+        .unwrap();
+
+    for shards in [1usize, 2, 4] {
+        for sess in [&mut sess_serial, &mut sess_pooled] {
+            // both executor modes: per-batch slice clones (unpinned) and
+            // the Arc-snapshot hot path (pinned, what `elmo serve` runs)
+            for pin in [false, true] {
+                let plan = ShardPlan::new(n_chunks, shards).unwrap();
+                let mut exec = ShardExecutor::new(plan, k);
+                if pin {
+                    exec.pin(&view).unwrap();
+                }
+                let merged = exec.score(&mut sess.ctx(), &view, &emb, b).unwrap();
+                assert_eq!(merged.len(), single.len());
+                for (bi, (m, s)) in merged.iter().zip(single.iter()).enumerate() {
+                    assert_eq!(
+                        m.items(),
+                        s.items(),
+                        "shards {shards}, workers {}, pinned {pin}, row {bi}: \
+                         sharded top-k diverged",
+                        sess.workers()
+                    );
+                }
+                // utilization accounting covers every chunk exactly once
+                let total: u64 = exec.shard_chunks.iter().sum();
+                assert_eq!(total, n_chunks as u64, "one batch scores every chunk once");
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_executor_rejects_a_mismatched_plan() {
+    let Some(art) = art_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut sess = Session::open(art.as_str()).unwrap();
+    let d = sess.config().d;
+    let b = sess.config().batch;
+    let store = synthetic_store(4000, d);
+    let view = ClassifierView::of_store(&store);
+    let emb = vec![0.0f32; b * d];
+    // plan over half the chunks: a geometry bug, not a scoring request
+    let plan = ShardPlan::new(2, 2).unwrap();
+    let mut exec = ShardExecutor::new(plan, 5);
+    let err = exec.score(&mut sess.ctx(), &view, &emb, b).unwrap_err();
+    assert!(matches!(err, elmo::Error::Shape(_)), "{err}");
+}
