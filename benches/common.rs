@@ -21,11 +21,20 @@ pub fn have_artifacts() -> bool {
 }
 
 /// Epoch override for quick runs: ELMO_EPOCHS=1 cargo bench ...
+///
+/// Absent means the default; present-but-unparsable is a loud failure,
+/// never a silent fallback — `ELMO_EPOCHS=ten` running the full default
+/// epoch count would silently invalidate the quick run it asked for.
 pub fn epochs_or(default: usize) -> usize {
-    std::env::var("ELMO_EPOCHS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    match std::env::var("ELMO_EPOCHS") {
+        Err(std::env::VarError::NotPresent) => default,
+        Err(std::env::VarError::NotUnicode(v)) => {
+            panic!("ELMO_EPOCHS is not valid unicode: {v:?}")
+        }
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            panic!("ELMO_EPOCHS=`{v}` is not a valid epoch count (expected an unsigned integer)")
+        }),
+    }
 }
 
 pub struct RunResult {
@@ -123,10 +132,29 @@ pub fn mmss(secs: f64) -> String {
     elmo::util::mmss(secs)
 }
 
+/// Artifact gate for benches that need compiled HLO: prints the banner
+/// AND drops a `"status": "skipped"` `BENCH_<name>.json`, so the CI perf
+/// gate can tell a bench that could not run from one that ran clean —
+/// a silent exit-0 skip is indistinguishable from a pass (ISSUE 6).
 pub fn skip_banner(name: &str) -> bool {
     if !have_artifacts() {
         println!("{name}: artifacts missing — run `make artifacts` first");
+        emit_skipped_report(name);
         return true;
     }
     false
+}
+
+/// Write the skipped-status report for an artifact-gated bench.  Report
+/// IO failure must not mask the (successful, deliberately skipped) bench
+/// run, so it only warns.
+pub fn emit_skipped_report(name: &str) {
+    let rep =
+        elmo::bench::BenchReport::skipped(name, &format!("{name} artifact-gated harness v1"));
+    let path = format!("BENCH_{name}.json");
+    if let Err(e) = rep.save(&path) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("{name}: wrote {path} (status: skipped)");
+    }
 }

@@ -1,20 +1,46 @@
 //! Perf harness (EXPERIMENTS.md §Perf): times every executable on the hot
 //! path individually, then the composed step, and prints a breakdown.
 //! This is the measurement side of the L3 optimization loop.
+//!
+//! Besides the printed tables, the run renders into `BENCH_hotpath.json`
+//! (docs/BENCHMARKS.md): wall-clock kernel/step timings as ungated
+//! trajectory, plus the deterministic side — `memmodel` peak bytes per
+//! method, `pool_bytes` staging per worker count, and (under `--features
+//! count-alloc`) Rust-side allocation counts for a fixed step sequence.
+//! When artifacts are missing the report still lands, with
+//! `"status": "skipped"` — the CI gate must never mistake a skipped
+//! bench for a passing one.
+
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static ALLOC: elmo::bench::CountingAlloc = elmo::bench::CountingAlloc;
 
 use elmo::Session;
+use elmo::bench::{alloc_since, alloc_snapshot, counting_enabled, BenchReport};
 use elmo::coordinator::{Precision, TrainConfig, Trainer};
 use elmo::data;
-use elmo::memmodel;
+use elmo::memmodel::{self, MemParams};
 use elmo::runtime::Arg;
 use elmo::util::{bench_secs, print_table, Rng};
+
+const BENCH_NAME: &str = "hotpath";
+const REPORT_PATH: &str = "BENCH_hotpath.json";
+
+/// Fingerprint input: every knob that shapes a deterministic metric.
+/// Shared verbatim between the skipped and measured paths so an ok
+/// baseline and an ok re-run always compare.
+const CONFIG: &str = "hotpath v1 steps=bf16:512,fp8:512,fp32:512,renee:1024 \
+                      pool=bf16:256 workers=1,2,4 alloc_steps=4";
 
 fn main() -> anyhow::Result<()> {
     let art = "artifacts";
     if elmo::session::require_artifacts(art).is_err() {
         println!("perf_hotpath: artifacts missing, skipping");
+        BenchReport::skipped(BENCH_NAME, CONFIG).save(REPORT_PATH)?;
+        println!("perf_hotpath: wrote {REPORT_PATH} (status: skipped)");
         return Ok(());
     }
+    let mut rep = BenchReport::new(BENCH_NAME, CONFIG);
     let mut sess = Session::open(art)?;
     let mc = sess.config().clone();
     let (b, d, s, p) = (mc.batch, mc.d, mc.seq, mc.psize);
@@ -40,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                 .unwrap();
             })
         };
+        rep.wall_f64(&format!("kernel/{name}/ms"), secs * 1e3)?;
         rows.push(vec![name, format!("{:.2}", secs * 1e3), format!("{:.1}/s", 1.0 / secs)]);
         let name = format!("enc_bwd_{prec}");
         let secs = {
@@ -64,6 +91,7 @@ fn main() -> anyhow::Result<()> {
                 .unwrap();
             })
         };
+        rep.wall_f64(&format!("kernel/{name}/ms"), secs * 1e3)?;
         rows.push(vec![name, format!("{:.2}", secs * 1e3), format!("{:.1}/s", 1.0 / secs)]);
     }
 
@@ -95,6 +123,7 @@ fn main() -> anyhow::Result<()> {
                 .unwrap();
             })
         };
+        rep.wall_f64(&format!("kernel/{name}/ms"), secs * 1e3)?;
         rows.push(vec![
             name,
             format!("{:.2}", secs * 1e3),
@@ -113,20 +142,30 @@ fn main() -> anyhow::Result<()> {
                     .unwrap();
             })
         };
+        rep.wall_f64("kernel/cls_fwd_1024/ms", secs * 1e3)?;
         rows.push(vec!["cls_fwd_1024".into(), format!("{:.2}", secs * 1e3), format!("{:.1}/s", 1.0 / secs)]);
     }
 
     println!("\n== executable-level hot path ==");
     print_table(&["executable", "ms/call", "rate"], &rows);
 
+    // memmodel peak bytes per method at the paper's Sec 4.4 walkthrough:
+    // the analytic side of the hot path, exact integers, gated exactly
+    for (method, tag) in elmo::bench::scenario::MEM_METHODS {
+        rep.det_u64(
+            &format!("memmodel/{tag}/peak_bytes"),
+            memmodel::peak_bytes(method, &MemParams::paper_example()),
+        )?;
+    }
+
     // composed training step on the quickstart profile
     let prof = data::profile("quickstart").unwrap();
     let ds = data::generate(&prof, 1);
-    for (prec, chunk) in [
-        (Precision::Bf16, 512usize),
-        (Precision::Fp8, 512),
-        (Precision::Fp32, 512),
-        (Precision::Renee, 1024),
+    for (prec, chunk, tag) in [
+        (Precision::Bf16, 512usize, "bf16"),
+        (Precision::Fp8, 512, "fp8"),
+        (Precision::Fp32, 512, "fp32"),
+        (Precision::Renee, 1024, "renee"),
     ] {
         let cfg = TrainConfig { precision: prec, chunk_size: chunk, ..TrainConfig::default() };
         let mut tr = Trainer::new(&sess, &ds, cfg)?;
@@ -138,6 +177,7 @@ fn main() -> anyhow::Result<()> {
                 tr.step(sess, ds, &rows_b).unwrap();
             })
         };
+        rep.wall_f64(&format!("step/{tag}/steps_per_s"), 1.0 / secs)?;
         println!(
             "step[{:22}] {:6.1} ms  ({:.2} steps/s, {:.0} labels/s)",
             prec.label(),
@@ -165,6 +205,7 @@ fn main() -> anyhow::Result<()> {
         wsess.prepare(&tr.required_kernels())?;
         let rows_b: Vec<u32> = (0..tr.batch as u32).collect();
         let staging = memmodel::pool_bytes(&tr.store, tr.batch, workers);
+        rep.det_u64(&format!("pool/workers{workers}/staging_bytes"), staging as u64)?;
         let secs = {
             let wsess = &mut wsess;
             let ds = &ds;
@@ -172,6 +213,7 @@ fn main() -> anyhow::Result<()> {
                 tr.step(wsess, ds, &rows_b).unwrap();
             })
         };
+        rep.wall_f64(&format!("pool/workers{workers}/steps_per_s"), 1.0 / secs)?;
         if workers == 1 {
             serial_secs = secs;
         }
@@ -183,5 +225,33 @@ fn main() -> anyhow::Result<()> {
             staging >> 10
         );
     }
+
+    // allocation counts over a FIXED step sequence (bench_secs adapts its
+    // iteration count to wall time, which would make counts substrate-
+    // dependent; a pinned 4-step window replays)
+    if counting_enabled() {
+        let cfg = TrainConfig {
+            precision: Precision::Bf16,
+            chunk_size: 512,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(&sess, &ds, cfg)?;
+        let rows_b: Vec<u32> = (0..tr.batch as u32).collect();
+        tr.step(&mut sess, &ds, &rows_b)?; // warm caches/capacities
+        let a0 = alloc_snapshot();
+        for _ in 0..4 {
+            tr.step(&mut sess, &ds, &rows_b)?;
+        }
+        let da = alloc_since(a0);
+        rep.det_u64_pct("alloc/step4_calls", da.calls, 20.0)?;
+        rep.det_u64_pct("alloc/step4_bytes", da.bytes, 20.0)?;
+        println!(
+            "\nalloc[bf16 step x4] {} calls, {} bytes (rust-side only)",
+            da.calls, da.bytes
+        );
+    }
+
+    rep.save(REPORT_PATH)?;
+    println!("\nperf_hotpath: wrote {REPORT_PATH}");
     Ok(())
 }

@@ -1,0 +1,62 @@
+//! Seeded serve-throughput bench: the artifact-free perf trajectory.
+//!
+//! Replays the `elmo::bench::scenario` grid — `LoadGen` arrivals through
+//! the production `serve::replay` event loop on the `VirtualClock`, per
+//! rate {500, 4000} x burst {1, 6} x label shards {1, 2, 4} — and renders
+//! it into `BENCH_serve_throughput.json`.  No PJRT, no artifacts, no
+//! wall-clock sleeps: every packing digest, results digest, and counter
+//! in the report replays bit-identically on any machine, which is what
+//! lets the CI perf gate diff this report against the committed baseline
+//! on every push (rust/tests/serve_queue.rs pins the contract).
+//!
+//! Build with `--features count-alloc` to add Rust-side allocation counts
+//! for the grid (deterministic, pct-gated — see docs/BENCHMARKS.md).
+
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static ALLOC: elmo::bench::CountingAlloc = elmo::bench::CountingAlloc;
+
+use elmo::bench::{self, ARRIVAL_SEED, BURSTS, RATES, SHARDS};
+use elmo::util::print_table;
+
+fn main() -> anyhow::Result<()> {
+    // warm one cell first so allocator/lazy-init noise stays out of the
+    // counted grid
+    let _ = bench::run_cell(RATES[0] as f64, BURSTS[0], SHARDS[0], ARRIVAL_SEED)?;
+
+    let rep = bench::serve_throughput_report(ARRIVAL_SEED)?;
+
+    let mut rows = Vec::new();
+    for rate in RATES {
+        for burst in BURSTS {
+            for sh in SHARDS {
+                let cell = bench::run_cell(rate as f64, burst, sh, ARRIVAL_SEED)?;
+                let s = &cell.stats;
+                rows.push(vec![
+                    format!("r{rate}/b{burst}/s{sh}"),
+                    s.completed().to_string(),
+                    s.rejected.to_string(),
+                    s.core.batches.to_string(),
+                    s.deadline_flushes.to_string(),
+                    format!("{:.2}", cell.virt_p50_ms),
+                    format!("{:.2}", cell.virt_p99_ms),
+                    format!("{:016x}", s.packing_digest()),
+                ]);
+            }
+        }
+    }
+    println!("== serve throughput grid (seed {ARRIVAL_SEED}, virtual clock) ==");
+    print_table(
+        &["cell", "done", "rej", "batches", "deadline", "p50 ms", "p99 ms", "packing digest"],
+        &rows,
+    );
+
+    rep.save("BENCH_serve_throughput.json")?;
+    println!(
+        "serve_throughput: wrote BENCH_serve_throughput.json \
+         ({} metrics, fingerprint {})",
+        rep.metrics.len(),
+        rep.fingerprint
+    );
+    Ok(())
+}

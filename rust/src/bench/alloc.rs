@@ -1,0 +1,83 @@
+//! Counting global allocator behind the `count-alloc` feature.
+//!
+//! Allocation counts on the serving hot path are *almost* deterministic:
+//! the sequence of Rust-side allocations replays with the scenario, but
+//! exact byte totals can shift with toolchain container-growth strategy.
+//! They are therefore reported as deterministic metrics under a `pct`
+//! gate rather than an exact one (docs/BENCHMARKS.md).
+//!
+//! The type always exists so benches can name it unconditionally; the
+//! `GlobalAlloc` impl (and thus any counting overhead) only compiles
+//! under `--features count-alloc`.  Benches opt in themselves:
+//!
+//! ```ignore
+//! #[cfg(feature = "count-alloc")]
+//! #[global_allocator]
+//! static ALLOC: elmo::bench::CountingAlloc = elmo::bench::CountingAlloc;
+//! ```
+//!
+//! With the feature off, `counting_enabled()` is false and snapshots stay
+//! at zero — report emitters skip the alloc metrics entirely, so a
+//! feature-off run never fabricates a zero count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through `System` allocator that counts calls and requested bytes.
+pub struct CountingAlloc;
+
+#[cfg(feature = "count-alloc")]
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        std::alloc::System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: std::alloc::Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Running totals since process start (both zero when the feature is off
+/// or no bench registered the allocator).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub calls: u64,
+    pub bytes: u64,
+}
+
+/// Was the crate built with `--features count-alloc`?
+pub fn counting_enabled() -> bool {
+    cfg!(feature = "count-alloc")
+}
+
+pub fn alloc_snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        calls: ALLOC_CALLS.load(Ordering::Relaxed),
+        bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// Deltas since `start` (wrapping, so interleaved snapshots stay sane).
+pub fn alloc_since(start: AllocSnapshot) -> AllocSnapshot {
+    let now = alloc_snapshot();
+    AllocSnapshot {
+        calls: now.calls.wrapping_sub(start.calls),
+        bytes: now.bytes.wrapping_sub(start.bytes),
+    }
+}

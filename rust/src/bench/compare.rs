@@ -1,0 +1,312 @@
+//! Fail-closed comparator over two `BenchReport`s — the engine behind
+//! `elmo bench-diff`.
+//!
+//! The contract (docs/BENCHMARKS.md "How the gate decides"):
+//!
+//! * only **deterministic** metrics gate; wall-clock metrics produce
+//!   trajectory notes, never violations (except corruption: a non-finite
+//!   value anywhere is a violation — a bench that emits NaN is broken);
+//! * `exact` gates fail on any drift, bit-for-bit for f64;
+//! * `pct:X` gates fail when the regression is **X% or more** (the
+//!   boundary itself fails — ties go to the gate, never to the bench);
+//! * anything that prevents a trustworthy comparison fails closed:
+//!   schema-version mismatch, bench-name mismatch, config-fingerprint
+//!   drift, a deterministic metric missing from either side (dropped *or*
+//!   newly added — both demand an explicit rebaseline), gate/type
+//!   reclassification, a zero baseline under a pct gate (the percentage
+//!   is undefined, so any regression on it is a violation).
+//!
+//! The one deliberately-soft edge: a `skipped` baseline against an `ok`
+//! current run passes with a rebaseline note — that is the bootstrap path
+//! for a bench whose baseline could not be measured yet.  The reverse
+//! (ok baseline, skipped current) is a violation: the bench stopped
+//! running, which is exactly the silent-skip failure this subsystem
+//! exists to catch.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::report::{BenchReport, Gate, Kind, Status, Value, SCHEMA_VERSION};
+
+/// One reason the comparison fails.  `metric` is the metric name, or a
+/// `<bracketed>` pseudo-name for report-level problems.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub metric: String,
+    pub why: String,
+}
+
+/// Outcome of `compare`: empty `violations` means the gate passes.
+#[derive(Clone, Debug, Default)]
+pub struct Comparison {
+    pub violations: Vec<Violation>,
+    /// Informational lines: wall-clock trajectory, improvements,
+    /// rebaseline hints.  Never affect pass/fail.
+    pub notes: Vec<String>,
+    /// Deterministic metrics actually checked against a gate.
+    pub gated: usize,
+}
+
+impl Comparison {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    fn fail(&mut self, metric: &str, why: impl Into<String>) {
+        self.violations.push(Violation { metric: metric.to_string(), why: why.into() });
+    }
+
+    fn note(&mut self, line: impl Into<String>) {
+        self.notes.push(line.into());
+    }
+
+    /// Human-readable rendering: notes first, then violations.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        for v in &self.violations {
+            let _ = writeln!(out, "VIOLATION {}: {}", v.metric, v.why);
+        }
+        out
+    }
+}
+
+/// Compare `current` against `baseline`.  `threshold_override`, when
+/// set, replaces X in every `pct:X` gate (the `--threshold` flag);
+/// `exact` gates are never loosened.
+pub fn compare(
+    baseline: &BenchReport,
+    current: &BenchReport,
+    threshold_override: Option<f64>,
+) -> Comparison {
+    let mut c = Comparison::default();
+
+    if baseline.schema != SCHEMA_VERSION {
+        c.fail(
+            "<schema>",
+            format!("baseline schema {} != supported {SCHEMA_VERSION}", baseline.schema),
+        );
+    }
+    if current.schema != SCHEMA_VERSION {
+        c.fail(
+            "<schema>",
+            format!("current schema {} != supported {SCHEMA_VERSION}", current.schema),
+        );
+    }
+    if baseline.name != current.name {
+        c.fail(
+            "<report>",
+            format!("bench name mismatch: baseline `{}` vs current `{}`", baseline.name, current.name),
+        );
+    }
+    if !c.violations.is_empty() {
+        // schema/name problems make every further judgment untrustworthy
+        return c;
+    }
+
+    match (baseline.status, current.status) {
+        (Status::Ok, Status::Skipped) => {
+            c.fail(
+                "<status>",
+                "current run is skipped while the baseline is ok — the bench stopped running \
+                 (missing artifacts?); a skipped bench must not pass the gate",
+            );
+            c
+        }
+        (Status::Skipped, Status::Ok) => {
+            c.note(
+                "baseline is a skipped report: nothing to gate against; commit the fresh \
+                 report as the new baseline to start gating (see docs/BENCHMARKS.md)",
+            );
+            c
+        }
+        (Status::Skipped, Status::Skipped) => {
+            c.note("both reports are skipped — nothing measured, nothing gated");
+            c
+        }
+        (Status::Ok, Status::Ok) => {
+            if baseline.fingerprint != current.fingerprint {
+                c.fail(
+                    "<fingerprint>",
+                    format!(
+                        "config fingerprint drifted ({} -> {}): the benches measured different \
+                         scenarios and cannot be compared; rebaseline",
+                        baseline.fingerprint, current.fingerprint
+                    ),
+                );
+            }
+            compare_metrics(baseline, current, threshold_override, &mut c);
+            c
+        }
+    }
+}
+
+fn compare_metrics(
+    baseline: &BenchReport,
+    current: &BenchReport,
+    threshold_override: Option<f64>,
+    c: &mut Comparison,
+) {
+    let cur: BTreeMap<&str, usize> =
+        current.metrics.iter().enumerate().map(|(i, m)| (m.name.as_str(), i)).collect();
+    let base: BTreeMap<&str, usize> =
+        baseline.metrics.iter().enumerate().map(|(i, m)| (m.name.as_str(), i)).collect();
+
+    for bm in &baseline.metrics {
+        let Some(&ci) = cur.get(bm.name.as_str()) else {
+            match bm.kind {
+                Kind::Deterministic => c.fail(
+                    &bm.name,
+                    "deterministic metric missing from current report — a gated measurement \
+                     silently disappeared; rebaseline explicitly if it was removed on purpose",
+                ),
+                Kind::WallClock => {
+                    c.note(format!("wall-clock metric `{}` missing from current report", bm.name));
+                }
+            }
+            continue;
+        };
+        let cm = &current.metrics[ci];
+
+        if bm.kind != cm.kind {
+            c.fail(
+                &bm.name,
+                format!(
+                    "metric reclassified: {} in baseline, {} in current — rebaseline",
+                    bm.kind.as_str(),
+                    cm.kind.as_str()
+                ),
+            );
+            continue;
+        }
+        if bm.value.type_str() != cm.value.type_str() {
+            c.fail(
+                &bm.name,
+                format!(
+                    "value type changed: {} in baseline, {} in current",
+                    bm.value.type_str(),
+                    cm.value.type_str()
+                ),
+            );
+            continue;
+        }
+        // corruption fails closed regardless of kind: a bench emitting
+        // non-finite numbers is not measuring
+        if !bm.value.is_finite() || !cm.value.is_finite() {
+            c.fail(
+                &bm.name,
+                format!(
+                    "non-finite value (baseline {}, current {}) — corrupt report",
+                    bm.value.render(),
+                    cm.value.render()
+                ),
+            );
+            continue;
+        }
+
+        match bm.kind {
+            Kind::WallClock => {
+                let (b, n) = (bm.value.as_f64(), cm.value.as_f64());
+                let delta = if b != 0.0 { format!(" ({:+.2}%)", (n - b) / b * 100.0) } else { String::new() };
+                c.note(format!("trajectory {}: {} -> {}{delta}", bm.name, bm.value.render(), cm.value.render()));
+            }
+            Kind::Deterministic => {
+                if bm.gate != cm.gate {
+                    c.fail(
+                        &bm.name,
+                        format!(
+                            "gate changed: {} in baseline, {} in current — rebaseline",
+                            bm.gate.render(),
+                            cm.gate.render()
+                        ),
+                    );
+                    continue;
+                }
+                c.gated += 1;
+                match bm.gate {
+                    Gate::RecordOnly => unreachable!("push/parse reject ungated deterministic metrics"),
+                    Gate::Exact => {
+                        if !bm.value.bits_eq(cm.value) {
+                            c.fail(
+                                &bm.name,
+                                format!(
+                                    "deterministic drift: baseline {} != current {}",
+                                    bm.value.render(),
+                                    cm.value.render()
+                                ),
+                            );
+                        }
+                    }
+                    Gate::Pct(x) => {
+                        let x = threshold_override.unwrap_or(x);
+                        gate_pct(bm.name.as_str(), bm.value, cm.value, x, c);
+                    }
+                }
+            }
+        }
+    }
+
+    for cm in &current.metrics {
+        if base.contains_key(cm.name.as_str()) {
+            continue;
+        }
+        match cm.kind {
+            Kind::Deterministic => c.fail(
+                &cm.name,
+                "new deterministic metric absent from baseline — it cannot be gated until the \
+                 baseline is regenerated; rebaseline",
+            ),
+            Kind::WallClock => {
+                c.note(format!("new wall-clock metric `{}` = {}", cm.name, cm.value.render()));
+            }
+        }
+    }
+}
+
+/// Pct gate: higher is worse (counts/bytes).  Regression >= x% fails;
+/// a regression on a zero baseline is undefined-percentage and fails.
+fn gate_pct(name: &str, baseline: Value, current: Value, x: f64, c: &mut Comparison) {
+    let (b, n) = (baseline.as_f64(), current.as_f64());
+    if n <= b {
+        if n < b {
+            c.note(format!(
+                "{name}: improved {} -> {} ({:+.2}%) — consider rebaselining to ratchet",
+                baseline.render(),
+                current.render(),
+                (n - b) / b * 100.0
+            ));
+        }
+        return;
+    }
+    if b == 0.0 {
+        c.fail(
+            name,
+            format!(
+                "regression on a zero baseline (0 -> {}): percentage undefined, failing closed",
+                current.render()
+            ),
+        );
+        return;
+    }
+    let pct = (n - b) / b * 100.0;
+    if pct >= x {
+        c.fail(
+            name,
+            format!(
+                "regression {:+.2}% >= gate {x}% ({} -> {})",
+                pct,
+                baseline.render(),
+                current.render()
+            ),
+        );
+    } else {
+        c.note(format!(
+            "{name}: {} -> {} ({:+.2}%) within the {x}% gate",
+            baseline.render(),
+            current.render(),
+            pct
+        ));
+    }
+}

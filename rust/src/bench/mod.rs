@@ -1,0 +1,44 @@
+//! Benchmark-report subsystem (ROADMAP item 5): machine-readable perf
+//! trajectory with CI-gateable deterministic components.
+//!
+//! The paper's headline claims are *measured* (6.6 GiB FP8 vs Renee's
+//! 39.7 GiB at 3M labels, Table 2's wall-clock columns); this subsystem
+//! gives the reproduction the same discipline.  Every bench renders a
+//! typed [`BenchReport`] into `BENCH_<name>.json` at the repo root, each
+//! metric tagged `deterministic` (digests, counters, byte models,
+//! allocation counts — a repeated run must reproduce them, and the CI
+//! perf gate fails when they drift) or `wall_clock` (steps/s, q/s,
+//! latency percentiles — recorded trajectory, never gated, because CI
+//! substrate varies).
+//!
+//! Pieces:
+//!
+//! * [`report`] — the `BenchReport` type and its hand-rolled JSON
+//!   emit/parse (no serde; pinned both directions by
+//!   `rust/tests/bench_report.rs`);
+//! * [`compare`] — the fail-closed comparator behind `elmo bench-diff`;
+//! * [`alloc`] — the counting global allocator behind the `count-alloc`
+//!   feature;
+//! * [`scenario`] — the seeded, artifact-free serve-throughput grid
+//!   (`LoadGen` + `serve::replay` on the `VirtualClock`) that
+//!   `benches/serve_throughput.rs` and the determinism-contract tests
+//!   share.
+//!
+//! Format, gating rules, and the rebaselining workflow are documented in
+//! docs/BENCHMARKS.md.
+
+pub mod alloc;
+pub mod compare;
+pub mod report;
+pub mod scenario;
+
+pub use alloc::{alloc_since, alloc_snapshot, counting_enabled, AllocSnapshot, CountingAlloc};
+pub use compare::{compare, Comparison, Violation};
+pub use report::{
+    fnv1a64, fnv1a64_fold, git_rev, BenchReport, Gate, Kind, Metric, Status, Value, FNV64_OFFSET,
+    SCHEMA_VERSION,
+};
+pub use scenario::{
+    run_cell, serve_throughput_config, serve_throughput_report, synth_score, CellOutcome,
+    ARRIVAL_SEED, BURSTS, RATES, SHARDS,
+};

@@ -1,0 +1,726 @@
+//! Typed benchmark reports: the `BENCH_*.json` format.
+//!
+//! A `BenchReport` is one bench run rendered machine-readable: the bench
+//! name, the git revision it ran at (informational, never gated), a
+//! fingerprint of the bench configuration (gated — two reports are only
+//! comparable when they measured the same scenario), and a list of
+//! metrics each tagged with a *kind* and a *gate*:
+//!
+//! * kind `deterministic` — packing digests, flush/reject counters,
+//!   `memmodel` byte arithmetic, allocation counts: values a repeated run
+//!   must reproduce.  Gated by the comparator (`compare`): `exact` gates
+//!   fail on any drift, `pct:X` gates fail on a regression of X% or more.
+//! * kind `wall_clock` — steps/s, queries/s, latency percentiles:
+//!   recorded trajectory, never gated (the CI substrate is not a fixed
+//!   testbed; see docs/BENCHMARKS.md).
+//!
+//! A report also carries a `status`: `"ok"` for a run that measured, or
+//! `"skipped"` for a bench that could not run (artifacts missing).  The
+//! CI gate can therefore tell a skipped bench from a passing one — a
+//! skipped report has no metrics, and the comparator fails closed when a
+//! previously-ok bench turns skipped.
+//!
+//! JSON emit/parse is hand-rolled in the house style (no serde offline —
+//! see DESIGN.md Substitutions; `config::RunSpec` is the `key = value`
+//! precedent).  The emitter is deterministic (insertion order, shortest
+//! round-trip f64 formatting), and `rust/tests/bench_report.rs` pins the
+//! rendered text and the parse in both directions, RunSpec-style.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::err_config;
+use crate::error::{Result, ResultExt};
+
+/// Format version; the comparator refuses to gate across versions.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// FNV-1a 64-bit offset basis (shared with `serve::stats`' digest).
+pub const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV64_PRIME: u64 = 0x1_0000_0001_b3;
+
+/// Fold bytes into a running FNV-1a 64-bit hash.
+pub fn fnv1a64_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash of a byte string (config fingerprints).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_fold(FNV64_OFFSET, bytes)
+}
+
+/// The current git revision, best effort: `ELMO_GIT_REV` when set (CI
+/// exports it), else `.git/HEAD` resolved one level, else "unknown".
+/// Informational only — the comparator never gates on it.
+pub fn git_rev() -> String {
+    if let Ok(v) = std::env::var("ELMO_GIT_REV") {
+        return v;
+    }
+    let head = match std::fs::read_to_string(".git/HEAD") {
+        Ok(h) => h,
+        Err(_) => return "unknown".into(),
+    };
+    let head = head.trim();
+    match head.strip_prefix("ref: ") {
+        Some(r) => match std::fs::read_to_string(format!(".git/{r}")) {
+            Ok(sha) => sha.trim().to_string(),
+            Err(_) => "unknown".into(),
+        },
+        None => head.to_string(),
+    }
+}
+
+/// Seconds since the unix epoch — stamped into reports as trajectory
+/// context (when was this measured), never gated.
+pub fn unix_secs() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+/// Metric classification: must a repeated run reproduce this value?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Replayable by contract; the comparator gates it.
+    Deterministic,
+    /// Substrate-dependent trajectory; recorded, never gated.
+    WallClock,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Deterministic => "deterministic",
+            Kind::WallClock => "wall_clock",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "deterministic" => Ok(Kind::Deterministic),
+            "wall_clock" => Ok(Kind::WallClock),
+            other => Err(err_config!("bench report: unknown metric kind `{other}`")),
+        }
+    }
+}
+
+/// How the comparator judges a deterministic metric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Gate {
+    /// Any drift is a violation (digests, counters, byte arithmetic).
+    Exact,
+    /// A regression of >= this percent is a violation (allocation counts,
+    /// where allocator growth strategy shifts across toolchains).
+    Pct(f64),
+    /// Never gated (the only gate a wall-clock metric may carry).
+    RecordOnly,
+}
+
+impl Gate {
+    pub fn render(self) -> String {
+        match self {
+            Gate::Exact => "exact".into(),
+            Gate::Pct(p) => format!("pct:{p}"),
+            Gate::RecordOnly => "none".into(),
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "exact" => Ok(Gate::Exact),
+            "none" => Ok(Gate::RecordOnly),
+            _ => match s.strip_prefix("pct:") {
+                Some(p) => {
+                    let v: f64 = p
+                        .parse()
+                        .map_err(|_| err_config!("bench report: bad pct gate `{s}`"))?;
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(err_config!(
+                            "bench report: pct gate must be finite and >= 0, got `{s}`"
+                        ));
+                    }
+                    Ok(Gate::Pct(v))
+                }
+                None => Err(err_config!("bench report: unknown gate `{s}`")),
+            },
+        }
+    }
+}
+
+/// A metric value.  `Digest` is a u64 hash rendered as 16 hex chars so
+/// digests read the same in reports as in `elmo serve` output.
+#[derive(Clone, Copy, Debug)]
+pub enum Value {
+    U64(u64),
+    F64(f64),
+    Digest(u64),
+}
+
+impl Value {
+    pub fn type_str(self) -> &'static str {
+        match self {
+            Value::U64(_) => "u64",
+            Value::F64(_) => "f64",
+            Value::Digest(_) => "digest",
+        }
+    }
+
+    /// Render the value as its JSON token.  f64 uses Rust's shortest
+    /// round-trip formatting, so emit -> parse is exact to the bit;
+    /// non-finite values render as the bare tokens `NaN`/`inf`/`-inf`
+    /// (accepted back by the parser, rejected by the comparator).
+    pub fn render(self) -> String {
+        match self {
+            Value::U64(v) => format!("{v}"),
+            Value::F64(v) => format!("{v:?}"),
+            Value::Digest(v) => format!("\"{v:016x}\""),
+        }
+    }
+
+    /// Bit-exact equality (NaN == NaN under its own bit pattern).
+    pub fn bits_eq(self, other: Value) -> bool {
+        match (self, other) {
+            (Value::U64(a), Value::U64(b)) => a == b,
+            (Value::Digest(a), Value::Digest(b)) => a == b,
+            (Value::F64(a), Value::F64(b)) => a.to_bits() == b.to_bits(),
+            _ => false,
+        }
+    }
+
+    /// Numeric view for pct gates and trajectory notes.
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Value::U64(v) => v as f64,
+            Value::F64(v) => v,
+            Value::Digest(v) => v as f64,
+        }
+    }
+
+    pub fn is_finite(self) -> bool {
+        match self {
+            Value::F64(v) => v.is_finite(),
+            _ => true,
+        }
+    }
+}
+
+/// One named measurement.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub name: String,
+    pub kind: Kind,
+    pub gate: Gate,
+    pub value: Value,
+}
+
+/// Did the bench measure, or did it bail out (artifacts missing)?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    Skipped,
+}
+
+impl Status {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Skipped => "skipped",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ok" => Ok(Status::Ok),
+            "skipped" => Ok(Status::Skipped),
+            other => Err(err_config!("bench report: unknown status `{other}`")),
+        }
+    }
+}
+
+/// One bench run, machine-readable.  Construct with `new` (status ok) or
+/// `skipped`, append metrics through the typed `det_*`/`wall_*` helpers
+/// (which enforce the kind<->gate contract), then `save`.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub schema: u64,
+    pub name: String,
+    pub status: Status,
+    /// Informational; never gated.
+    pub git_rev: String,
+    /// Unix seconds at emission; informational, never gated.
+    pub emitted_at: u64,
+    /// FNV-1a of the bench's configuration string, 16 hex chars.  Two
+    /// reports gate against each other only when fingerprints match.
+    pub fingerprint: String,
+    pub metrics: Vec<Metric>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str, config: &str) -> Self {
+        BenchReport {
+            schema: SCHEMA_VERSION,
+            name: name.to_string(),
+            status: Status::Ok,
+            git_rev: git_rev(),
+            emitted_at: unix_secs(),
+            fingerprint: format!("{:016x}", fnv1a64(config.as_bytes())),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// A bench that could not run (artifacts missing).  Distinguishable
+    /// from a passing report by `"status": "skipped"` — satisfying the
+    /// CI gate's need to tell "skipped" from "ok with no regressions".
+    pub fn skipped(name: &str, config: &str) -> Self {
+        BenchReport { status: Status::Skipped, ..BenchReport::new(name, config) }
+    }
+
+    fn push(&mut self, name: &str, kind: Kind, gate: Gate, value: Value) -> Result<()> {
+        // the kind<->gate contract: deterministic metrics are gated
+        // (exact, or pct for counts that legitimately shift across
+        // toolchains); wall-clock metrics are never gated; digests only
+        // ever gate exactly (a "percent drift" of a hash is meaningless)
+        match (kind, gate) {
+            (Kind::Deterministic, Gate::RecordOnly) => {
+                return Err(err_config!(
+                    "bench report: deterministic metric `{name}` must carry a gate"
+                ));
+            }
+            (Kind::WallClock, Gate::Exact | Gate::Pct(_)) => {
+                return Err(err_config!(
+                    "bench report: wall-clock metric `{name}` must not be gated"
+                ));
+            }
+            _ => {}
+        }
+        if matches!(value, Value::Digest(_)) && !matches!(gate, Gate::Exact) {
+            return Err(err_config!(
+                "bench report: digest metric `{name}` only gates exactly"
+            ));
+        }
+        if self.metrics.iter().any(|m| m.name == name) {
+            return Err(err_config!("bench report: duplicate metric `{name}`"));
+        }
+        self.metrics.push(Metric { name: name.to_string(), kind, gate, value });
+        Ok(())
+    }
+
+    /// Deterministic counter / byte count, gated exactly.
+    pub fn det_u64(&mut self, name: &str, v: u64) -> Result<()> {
+        self.push(name, Kind::Deterministic, Gate::Exact, Value::U64(v))
+    }
+
+    /// Deterministic digest (packing/results hashes), gated exactly.
+    pub fn det_digest(&mut self, name: &str, v: u64) -> Result<()> {
+        self.push(name, Kind::Deterministic, Gate::Exact, Value::Digest(v))
+    }
+
+    /// Deterministic count gated with a pct tolerance (allocation counts).
+    pub fn det_u64_pct(&mut self, name: &str, v: u64, pct: f64) -> Result<()> {
+        self.push(name, Kind::Deterministic, Gate::Pct(pct), Value::U64(v))
+    }
+
+    /// Wall-clock trajectory value; recorded, never gated.
+    pub fn wall_f64(&mut self, name: &str, v: f64) -> Result<()> {
+        self.push(name, Kind::WallClock, Gate::RecordOnly, Value::F64(v))
+    }
+
+    pub fn metric(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// The gated surface of the report as plain text, one line per
+    /// deterministic metric in insertion order, plus the identity header
+    /// (schema, name, status, fingerprint) — and nothing wall-clock or
+    /// informational.  Two runs honoring the determinism contract produce
+    /// byte-identical sections (`rust/tests/serve_queue.rs` pins this).
+    pub fn deterministic_section(&self) -> String {
+        let mut out = format!(
+            "schema {}\nname {}\nstatus {}\nfingerprint {}\n",
+            self.schema,
+            self.name,
+            self.status.as_str(),
+            self.fingerprint
+        );
+        for m in &self.metrics {
+            if m.kind == Kind::Deterministic {
+                out.push_str(&format!(
+                    "metric {} {} {} {}\n",
+                    m.name,
+                    m.gate.render(),
+                    m.value.type_str(),
+                    m.value.render()
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": {},\n", self.schema));
+        out.push_str(&format!("  \"name\": {},\n", json_str(&self.name)));
+        out.push_str(&format!("  \"status\": \"{}\",\n", self.status.as_str()));
+        out.push_str(&format!("  \"git_rev\": {},\n", json_str(&self.git_rev)));
+        out.push_str(&format!("  \"emitted_at\": {},\n", self.emitted_at));
+        out.push_str(&format!("  \"fingerprint\": \"{}\",\n", self.fingerprint));
+        out.push_str("  \"metrics\": [");
+        for (i, m) in self.metrics.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"kind\": \"{}\", \"gate\": \"{}\", \"type\": \"{}\", \"value\": {}}}",
+                json_str(&m.name),
+                m.kind.as_str(),
+                m.gate.render(),
+                m.value.type_str(),
+                m.value.render()
+            ));
+        }
+        out.push_str(if self.metrics.is_empty() { "]\n" } else { "\n  ]\n" });
+        out.push_str("}\n");
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let obj = v.as_obj("report")?;
+        let schema = obj_get(obj, "schema")?.as_u64("schema")?;
+        let name = obj_get(obj, "name")?.as_str("name")?.to_string();
+        let status = Status::parse(obj_get(obj, "status")?.as_str("status")?)?;
+        let git_rev = obj_get(obj, "git_rev")?.as_str("git_rev")?.to_string();
+        let emitted_at = obj_get(obj, "emitted_at")?.as_u64("emitted_at")?;
+        let fingerprint = obj_get(obj, "fingerprint")?.as_str("fingerprint")?.to_string();
+        if fingerprint.len() != 16 || !fingerprint.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(err_config!(
+                "bench report: fingerprint must be 16 hex chars, got `{fingerprint}`"
+            ));
+        }
+        let mut rep = BenchReport {
+            schema,
+            name,
+            status,
+            git_rev,
+            emitted_at,
+            fingerprint,
+            metrics: Vec::new(),
+        };
+        for (i, mv) in obj_get(obj, "metrics")?.as_arr("metrics")?.iter().enumerate() {
+            let mo = mv.as_obj(&format!("metrics[{i}]"))?;
+            let mname = obj_get(mo, "name")?.as_str("metric name")?.to_string();
+            let kind = Kind::parse(obj_get(mo, "kind")?.as_str("metric kind")?)?;
+            let gate = Gate::parse(obj_get(mo, "gate")?.as_str("metric gate")?)?;
+            let ty = obj_get(mo, "type")?.as_str("metric type")?;
+            let raw = obj_get(mo, "value")?;
+            let value = match ty {
+                "u64" => Value::U64(raw.as_u64(&format!("metric `{mname}` value"))?),
+                "f64" => Value::F64(raw.as_f64(&format!("metric `{mname}` value"))?),
+                "digest" => {
+                    let s = raw.as_str(&format!("metric `{mname}` value"))?;
+                    if s.len() != 16 {
+                        return Err(err_config!(
+                            "bench report: digest `{mname}` must be 16 hex chars, got `{s}`"
+                        ));
+                    }
+                    Value::Digest(u64::from_str_radix(s, 16).map_err(|_| {
+                        err_config!("bench report: digest `{mname}` is not hex: `{s}`")
+                    })?)
+                }
+                other => {
+                    return Err(err_config!(
+                        "bench report: metric `{mname}` has unknown type `{other}`"
+                    ));
+                }
+            };
+            rep.push(&mname, kind, gate, value)?;
+        }
+        Ok(rep)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| err_config!("cannot write bench report {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err_config!("cannot read bench report {path}: {e}"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path}"))
+    }
+}
+
+/// Quote + escape a string as a JSON token.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Minimal JSON tree for the report format: objects, arrays, strings, and
+/// raw number/word tokens (typed on extraction, so `NaN`/`inf` round-trip
+/// through `f64` while `u64` fields reject them).
+enum Json {
+    Obj(Vec<(String, Json)>),
+    Arr(Vec<Json>),
+    Str(String),
+    Num(String),
+}
+
+impl Json {
+    fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(err_config!(
+                "bench report: trailing data at byte {} of {}",
+                p.pos,
+                p.bytes.len()
+            ));
+        }
+        Ok(v)
+    }
+
+    fn as_obj(&self, what: &str) -> Result<&[(String, Json)]> {
+        match self {
+            Json::Obj(kv) => Ok(kv),
+            _ => Err(err_config!("bench report: {what} must be an object")),
+        }
+    }
+
+    fn as_arr(&self, what: &str) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => Err(err_config!("bench report: {what} must be an array")),
+        }
+    }
+
+    fn as_str(&self, what: &str) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(err_config!("bench report: {what} must be a string")),
+        }
+    }
+
+    fn as_u64(&self, what: &str) -> Result<u64> {
+        match self {
+            Json::Num(raw) => raw
+                .parse::<u64>()
+                .map_err(|_| err_config!("bench report: {what} must be a u64, got `{raw}`")),
+            _ => Err(err_config!("bench report: {what} must be a number")),
+        }
+    }
+
+    fn as_f64(&self, what: &str) -> Result<f64> {
+        match self {
+            Json::Num(raw) => raw
+                .parse::<f64>()
+                .map_err(|_| err_config!("bench report: {what} must be an f64, got `{raw}`")),
+            _ => Err(err_config!("bench report: {what} must be a number")),
+        }
+    }
+}
+
+fn obj_get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json> {
+    obj.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v)
+        .ok_or_else(|| err_config!("bench report: missing field `{key}`"))
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| err_config!("bench report: unexpected end of input"))
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            return Err(err_config!(
+                "bench report: expected `{}` at byte {}, got `{}`",
+                b as char,
+                self.pos,
+                got as char
+            ));
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            let val = self.value()?;
+            kv.push((key, val));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                other => {
+                    return Err(err_config!(
+                        "bench report: expected `,` or `}}` in object, got `{}`",
+                        other as char
+                    ));
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => {
+                    return Err(err_config!(
+                        "bench report: expected `,` or `]` in array, got `{}`",
+                        other as char
+                    ));
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self
+                .bytes
+                .get(self.pos)
+                .ok_or_else(|| err_config!("bench report: unterminated string"))?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self
+                        .bytes
+                        .get(self.pos)
+                        .ok_or_else(|| err_config!("bench report: unterminated escape"))?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| err_config!("bench report: truncated \\u"))?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex)
+                                    .map_err(|_| err_config!("bench report: bad \\u escape"))?,
+                                16,
+                            )
+                            .map_err(|_| err_config!("bench report: bad \\u escape"))?;
+                            self.pos += 4;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| err_config!("bench report: bad \\u code"))?,
+                            );
+                        }
+                        other => {
+                            return Err(err_config!(
+                                "bench report: unknown escape `\\{}`",
+                                other as char
+                            ));
+                        }
+                    }
+                }
+                _ => {
+                    // re-decode utf-8 from the byte stream: back up and
+                    // take the full char
+                    self.pos -= 1;
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| err_config!("bench report: invalid utf-8 in string"))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// A number or bare word token (`NaN`, `inf`, `-inf`): everything up
+    /// to the next delimiter, typed later by the caller.
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len() {
+            let b = self.bytes[self.pos];
+            if b.is_ascii_whitespace() || matches!(b, b',' | b'}' | b']' | b'{' | b'[' | b':' | b'"')
+            {
+                break;
+            }
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(err_config!("bench report: expected a value at byte {start}"));
+        }
+        Ok(Json::Num(
+            std::str::from_utf8(&self.bytes[start..self.pos])
+                .map_err(|_| err_config!("bench report: invalid utf-8 in number"))?
+                .to_string(),
+        ))
+    }
+}

@@ -95,6 +95,11 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
         summary: "Fig-2a (E, M) bit-width sweep on a small profile",
         flags: &["profile", "epochs", "artifacts"],
     },
+    Subcommand {
+        name: "bench-diff",
+        summary: "compare two BENCH_*.json reports; non-zero exit on deterministic drift",
+        flags: &["threshold"],
+    },
 ];
 
 /// Registry lookup by name.
@@ -148,6 +153,7 @@ USAGE:
   elmo datasets
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
+  elmo bench-diff BASELINE.json CURRENT.json [--threshold PCT]
   elmo help [SUBCOMMAND]
   elmo --version
 
@@ -181,6 +187,11 @@ SERVE FLAGS (docs/SERVING.md):
   --burst N         each arrival carries 1..=N rows
   --arrival-seed N  arrival-process seed: the same seed replays the exact
                     packing decisions (reported as a packing digest)
+
+BENCH-DIFF FLAGS (docs/BENCHMARKS.md):
+  --threshold PCT   override the pct-gate regression threshold for
+                    gateable deterministic metrics (exact gates and
+                    wall-clock trajectory are unaffected)
 ";
 
 /// Parse an alternating `--flag value` list.  Rejects non-`--` arguments

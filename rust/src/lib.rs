@@ -32,6 +32,7 @@
 //! the typed `elmo::Error` (`error` module) — `anyhow` is a consumer-side
 //! convenience for the binary and the test/bench harnesses only.
 
+pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -11,6 +11,8 @@
 //!   datasets     print Table-1-style statistics of the synthetic profiles
 //!   memtrace     print the Fig-3-style memory timeline for a method
 //!   sweep        Fig-2a (E, M) bit-width sweep on a small profile
+//!   bench-diff   compare two BENCH_*.json perf reports; non-zero exit on
+//!                any deterministic-metric drift (the CI perf gate)
 //!
 //! Flag parsing and the subcommand registry live in `elmo::cli`
 //! (hand-rolled; no clap offline — see DESIGN.md Substitutions).  Run
@@ -61,6 +63,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         Some("memtrace") => cmd_memtrace(&parse_cmd_flags("memtrace", &args[1..])?),
         Some("sweep") => cmd_sweep(&parse_cmd_flags("sweep", &args[1..])?),
+        Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("--version" | "version") => {
             println!("{}", cli::version());
             Ok(())
@@ -456,6 +459,57 @@ fn cmd_serve(f: &Flags) -> Result<()> {
             .collect();
         println!("query {:>4}: [{}]", pred.id, labels.join(", "));
     }
+    Ok(())
+}
+
+/// `elmo bench-diff BASELINE.json CURRENT.json [--threshold PCT]`: the CI
+/// perf gate.  Exit 0 when every deterministic metric holds its gate
+/// (wall-clock metrics print as trajectory notes); exit non-zero on any
+/// deterministic drift, pct-gate regression, or condition that prevents a
+/// trustworthy comparison (see docs/BENCHMARKS.md "How the gate decides").
+fn cmd_bench_diff(args: &[String]) -> Result<()> {
+    // two leading positionals (report paths), then registry-checked flags
+    // (`parse_flags` itself rejects bare words by design)
+    let split = args.iter().position(|a| a.starts_with("--")).unwrap_or(args.len());
+    let (pos, rest) = args.split_at(split);
+    let f = parse_cmd_flags("bench-diff", rest)?;
+    let [baseline_path, current_path] = pos else {
+        bail!("usage: elmo bench-diff BASELINE.json CURRENT.json [--threshold PCT]");
+    };
+    let threshold = match f.get("threshold") {
+        None => None,
+        Some(_) => {
+            let t: f64 = flag(&f, "threshold", 0.0)?;
+            if !t.is_finite() || t < 0.0 {
+                bail!("--threshold must be finite and >= 0");
+            }
+            Some(t)
+        }
+    };
+    let baseline = elmo::bench::BenchReport::load(baseline_path)?;
+    let current = elmo::bench::BenchReport::load(current_path)?;
+    println!(
+        "# bench-diff {}: baseline {} @ {} vs current {} @ {}",
+        baseline.name,
+        baseline.fingerprint,
+        baseline.git_rev,
+        current.fingerprint,
+        current.git_rev
+    );
+    let cmp = elmo::bench::compare(&baseline, &current, threshold);
+    print!("{}", cmp.render());
+    if !cmp.passed() {
+        bail!(
+            "bench-diff: {} violation(s) — deterministic perf contract drifted \
+             (rebaseline intentionally per docs/BENCHMARKS.md, never by re-recording blindly)",
+            cmp.violations.len()
+        );
+    }
+    println!(
+        "bench-diff: OK — {} deterministic metric(s) gated, {} note(s)",
+        cmp.gated,
+        cmp.notes.len()
+    );
     Ok(())
 }
 

@@ -389,6 +389,14 @@ pub fn peak_gib(method: Method, p: &MemParams) -> f64 {
     schedule(method, p).peak() as f64 / GIB
 }
 
+/// Peak memory in exact bytes — the gateable form `BENCH_*.json` records
+/// (integer arithmetic end to end, so it replays bit-identically and the
+/// perf gate can demand exact equality; `peak_gib` is the same number
+/// rounded for humans).
+pub fn peak_bytes(method: Method, p: &MemParams) -> u64 {
+    schedule(method, p).peak()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

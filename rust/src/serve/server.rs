@@ -270,7 +270,14 @@ impl<C: Clock> Server<C> {
     {
         let now = self.clock.now_ms();
         match self.queue.front() {
-            Some(q) if now - q.enqueued_ms >= self.cfg.max_delay_ms => {
+            // the guard must compute the deadline with the same expression
+            // `next_deadline` reports (enqueued + max_delay): a clock set
+            // exactly to that value then always fires.  Checking the
+            // rearranged `now - enqueued >= max_delay` instead can miss by
+            // one rounding step — `fl(enq + d) - enq` is exact (Sterbenz)
+            // yet below `d` whenever the addition rounded down — and a
+            // missed fire stalls `replay`'s deadline loop forever.
+            Some(q) if now >= q.enqueued_ms + self.cfg.max_delay_ms => {
                 let valid = self.queue.len().min(self.cfg.width);
                 self.run_batch(&mut score, out, valid, true)?;
                 Ok(true)

@@ -1,0 +1,333 @@
+//! Comparator edge cases for the CI perf gate (ISSUE 6 satellite): a
+//! metric missing from either side, NaN propagation, zero baselines,
+//! regressions landing exactly on the threshold, schema mismatches — all
+//! must fail closed, because every hole here is a regression that ships.
+//! The last tests drive the real `elmo bench-diff` binary end to end and
+//! assert on its exit codes, which is exactly what CI consumes.
+
+use elmo::bench::{compare, BenchReport, Comparison, Gate, Kind, Metric, Status, Value};
+
+/// A pair of ok reports with identical identity (name/config), ready to
+/// diverge metric-by-metric.
+fn pair() -> (BenchReport, BenchReport) {
+    (BenchReport::new("t", "t v1"), BenchReport::new("t", "t v1"))
+}
+
+fn assert_violates(c: &Comparison, metric: &str) {
+    assert!(!c.passed(), "expected a violation on `{metric}`, got: {}", c.render());
+    assert!(
+        c.violations.iter().any(|v| v.metric == metric),
+        "no violation names `{metric}`: {}",
+        c.render()
+    );
+}
+
+#[test]
+fn identical_reports_pass_and_count_gated_metrics() {
+    let (mut a, mut b) = pair();
+    for r in [&mut a, &mut b] {
+        r.det_u64("counter", 7).unwrap();
+        r.det_digest("digest", 0xabc).unwrap();
+        r.det_u64_pct("allocs", 100, 10.0).unwrap();
+        r.wall_f64("p50", 1.5).unwrap();
+    }
+    let c = compare(&a, &b, None);
+    assert!(c.passed(), "{}", c.render());
+    assert_eq!(c.gated, 3, "wall-clock must not count as gated");
+}
+
+#[test]
+fn exact_gates_fail_on_any_drift() {
+    let (mut a, mut b) = pair();
+    a.det_u64("counter", 7).unwrap();
+    b.det_u64("counter", 8).unwrap();
+    assert_violates(&compare(&a, &b, None), "counter");
+
+    let (mut a, mut b) = pair();
+    a.det_digest("digest", 0xabc).unwrap();
+    b.det_digest("digest", 0xabd).unwrap();
+    assert_violates(&compare(&a, &b, None), "digest");
+}
+
+#[test]
+fn deterministic_metric_missing_from_current_fails_closed() {
+    let (mut a, b) = pair();
+    a.det_u64("vanished", 1).unwrap();
+    assert_violates(&compare(&a, &b, None), "vanished");
+}
+
+#[test]
+fn new_deterministic_metric_absent_from_baseline_fails_closed() {
+    let (a, mut b) = pair();
+    b.det_u64("unbaselined", 1).unwrap();
+    assert_violates(&compare(&a, &b, None), "unbaselined");
+}
+
+#[test]
+fn wall_clock_metrics_never_gate() {
+    // missing, added, and wildly regressed wall-clock values: notes only
+    let (mut a, mut b) = pair();
+    a.det_u64("anchor", 1).unwrap();
+    b.det_u64("anchor", 1).unwrap();
+    a.wall_f64("gone", 1.0).unwrap();
+    a.wall_f64("p50", 1.0).unwrap();
+    b.wall_f64("p50", 5000.0).unwrap();
+    b.wall_f64("fresh", 2.0).unwrap();
+    let c = compare(&a, &b, None);
+    assert!(c.passed(), "{}", c.render());
+    assert!(c.notes.iter().any(|n| n.contains("gone")), "{}", c.render());
+    assert!(c.notes.iter().any(|n| n.contains("fresh")), "{}", c.render());
+    assert!(c.notes.iter().any(|n| n.contains("p50")), "{}", c.render());
+}
+
+#[test]
+fn non_finite_values_are_violations_even_for_wall_clock() {
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let (mut a, mut b) = pair();
+        a.wall_f64("p50", 1.0).unwrap();
+        b.wall_f64("p50", bad).unwrap();
+        assert_violates(&compare(&a, &b, None), "p50");
+
+        // ...and on the baseline side too
+        let (mut a, mut b) = pair();
+        a.wall_f64("p50", bad).unwrap();
+        b.wall_f64("p50", 1.0).unwrap();
+        assert_violates(&compare(&a, &b, None), "p50");
+    }
+}
+
+#[test]
+fn pct_gate_zero_baseline_fails_closed_on_any_regression() {
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("allocs", 0, 10.0).unwrap();
+    b.det_u64_pct("allocs", 1, 10.0).unwrap();
+    assert_violates(&compare(&a, &b, None), "allocs");
+
+    // both zero is not a regression
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("allocs", 0, 10.0).unwrap();
+    b.det_u64_pct("allocs", 0, 10.0).unwrap();
+    assert!(compare(&a, &b, None).passed());
+}
+
+#[test]
+fn pct_gate_boundary_is_inclusive() {
+    // exactly +10% on a pct:10 gate fails — ties go to the gate
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("allocs", 100, 10.0).unwrap();
+    b.det_u64_pct("allocs", 110, 10.0).unwrap();
+    assert_violates(&compare(&a, &b, None), "allocs");
+
+    // just under passes, with a trajectory note
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("allocs", 100, 10.0).unwrap();
+    b.det_u64_pct("allocs", 109, 10.0).unwrap();
+    let c = compare(&a, &b, None);
+    assert!(c.passed(), "{}", c.render());
+    assert!(c.notes.iter().any(|n| n.contains("allocs")), "{}", c.render());
+}
+
+#[test]
+fn pct_gate_improvement_passes_with_a_ratchet_note() {
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("allocs", 100, 10.0).unwrap();
+    b.det_u64_pct("allocs", 50, 10.0).unwrap();
+    let c = compare(&a, &b, None);
+    assert!(c.passed(), "{}", c.render());
+    assert!(c.notes.iter().any(|n| n.contains("improved")), "{}", c.render());
+}
+
+#[test]
+fn threshold_override_replaces_pct_gates_in_both_directions() {
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("allocs", 100, 10.0).unwrap();
+    b.det_u64_pct("allocs", 110, 10.0).unwrap();
+    // loosened to 20%: the +10% regression now passes
+    assert!(compare(&a, &b, Some(20.0)).passed());
+
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("allocs", 100, 10.0).unwrap();
+    b.det_u64_pct("allocs", 109, 10.0).unwrap();
+    // tightened to 5%: the +9% regression now fails
+    assert_violates(&compare(&a, &b, Some(5.0)), "allocs");
+}
+
+#[test]
+fn threshold_override_never_loosens_exact_gates() {
+    let (mut a, mut b) = pair();
+    a.det_u64("counter", 100).unwrap();
+    b.det_u64("counter", 101).unwrap();
+    assert_violates(&compare(&a, &b, Some(1e9)), "counter");
+}
+
+#[test]
+fn schema_mismatch_fails_before_anything_else() {
+    let (mut a, b) = pair();
+    a.schema = 2;
+    assert_violates(&compare(&a, &b, None), "<schema>");
+    let (a, mut b) = pair();
+    b.schema = 0;
+    assert_violates(&compare(&a, &b, None), "<schema>");
+}
+
+#[test]
+fn name_and_fingerprint_mismatches_fail() {
+    let a = BenchReport::new("t", "t v1");
+    let b = BenchReport::new("u", "t v1");
+    assert_violates(&compare(&a, &b, None), "<report>");
+
+    // same bench name, different config: not comparable
+    let a = BenchReport::new("t", "t v1");
+    let b = BenchReport::new("t", "t v2");
+    assert_violates(&compare(&a, &b, None), "<fingerprint>");
+}
+
+#[test]
+fn status_transitions_follow_the_bootstrap_contract() {
+    let ok = BenchReport::new("t", "t v1");
+    let skipped = BenchReport::skipped("t", "t v1");
+
+    // ok baseline, skipped current: the bench stopped running — fail
+    assert_violates(&compare(&ok, &skipped, None), "<status>");
+
+    // skipped baseline, ok current: bootstrap path — pass with a
+    // rebaseline note
+    let c = compare(&skipped, &ok, None);
+    assert!(c.passed(), "{}", c.render());
+    assert!(c.notes.iter().any(|n| n.contains("baseline")), "{}", c.render());
+
+    // both skipped: nothing measured, nothing gated
+    let c = compare(&skipped, &skipped, None);
+    assert!(c.passed(), "{}", c.render());
+    assert_eq!(c.gated, 0);
+}
+
+#[test]
+fn kind_gate_and_type_reclassifications_fail() {
+    // the typed helpers refuse to build these shapes, so construct the
+    // divergent metric directly — exactly what a hand-edited report is
+    let (mut a, mut b) = pair();
+    a.det_u64("m", 1).unwrap();
+    b.metrics.push(Metric {
+        name: "m".into(),
+        kind: Kind::WallClock,
+        gate: Gate::RecordOnly,
+        value: Value::F64(1.0),
+    });
+    assert_violates(&compare(&a, &b, None), "m");
+
+    // same kind, gate changed (pct threshold edited in place)
+    let (mut a, mut b) = pair();
+    a.det_u64_pct("m", 1, 10.0).unwrap();
+    b.det_u64_pct("m", 1, 20.0).unwrap();
+    assert_violates(&compare(&a, &b, None), "m");
+
+    // same kind and gate, value type changed
+    let (mut a, mut b) = pair();
+    a.det_u64("m", 1).unwrap();
+    b.metrics.push(Metric {
+        name: "m".into(),
+        kind: Kind::Deterministic,
+        gate: Gate::Exact,
+        value: Value::Digest(1),
+    });
+    assert_violates(&compare(&a, &b, None), "m");
+}
+
+#[test]
+fn skipped_reports_round_trip_through_the_comparator_via_disk() {
+    // the hotpath bootstrap in CI: committed skipped baseline vs a fresh
+    // skipped report must pass (nothing measured on either side)
+    let dir = std::env::temp_dir();
+    let p1 = dir.join(format!("elmo_bd_skip_a_{}.json", std::process::id()));
+    let p2 = dir.join(format!("elmo_bd_skip_b_{}.json", std::process::id()));
+    BenchReport::skipped("hotpath", "hotpath v1").save(p1.to_str().unwrap()).unwrap();
+    BenchReport::skipped("hotpath", "hotpath v1").save(p2.to_str().unwrap()).unwrap();
+    let a = BenchReport::load(p1.to_str().unwrap()).unwrap();
+    let b = BenchReport::load(p2.to_str().unwrap()).unwrap();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(a.status, Status::Skipped);
+    assert!(compare(&a, &b, None).passed());
+}
+
+// ---- the real binary, the way CI runs it ----------------------------------
+
+fn write_report(rep: &BenchReport, tag: &str) -> String {
+    let path = std::env::temp_dir().join(format!("elmo_bd_{tag}_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    rep.save(&path).unwrap();
+    path
+}
+
+fn run_bench_diff(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_elmo"))
+        .arg("bench-diff")
+        .args(args)
+        .output()
+        .expect("spawn elmo bench-diff")
+}
+
+#[test]
+fn cli_exits_zero_on_matching_reports_and_nonzero_on_drift() {
+    let (mut a, mut b) = pair();
+    for r in [&mut a, &mut b] {
+        r.det_u64("counter", 7).unwrap();
+        r.det_digest("digest", 0xdead_beef).unwrap();
+    }
+    let pa = write_report(&a, "cli_base");
+    let pb = write_report(&b, "cli_same");
+    let out = run_bench_diff(&[&pa, &pb]);
+    assert!(out.status.success(), "stdout: {}", String::from_utf8_lossy(&out.stdout));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("OK"), "{stdout}");
+
+    // drift the digest: non-zero exit, violation named on stdout
+    let mut c = BenchReport::new("t", "t v1");
+    c.det_u64("counter", 7).unwrap();
+    c.det_digest("digest", 0xdead_bef0).unwrap();
+    let pc = write_report(&c, "cli_drift");
+    let out = run_bench_diff(&[&pa, &pc]);
+    assert!(!out.status.success(), "drift must exit non-zero");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("VIOLATION digest"), "{stdout}");
+
+    for p in [pa, pb, pc] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn cli_threshold_flag_loosens_pct_gates() {
+    let mut a = BenchReport::new("t", "t v1");
+    a.det_u64_pct("allocs", 100, 10.0).unwrap();
+    let mut b = BenchReport::new("t", "t v1");
+    b.det_u64_pct("allocs", 110, 10.0).unwrap();
+    let pa = write_report(&a, "thr_base");
+    let pb = write_report(&b, "thr_cur");
+
+    let out = run_bench_diff(&[&pa, &pb]);
+    assert!(!out.status.success(), "+10% on pct:10 must fail without the flag");
+
+    let out = run_bench_diff(&[&pa, &pb, "--threshold", "25"]);
+    assert!(
+        out.status.success(),
+        "--threshold 25 must pass; stdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+
+    // a malformed threshold is a usage error, not a silent pass
+    let out = run_bench_diff(&[&pa, &pb, "--threshold", "lots"]);
+    assert!(!out.status.success());
+
+    std::fs::remove_file(pa).ok();
+    std::fs::remove_file(pb).ok();
+}
+
+#[test]
+fn cli_rejects_missing_files_and_bad_usage() {
+    let out = run_bench_diff(&[]);
+    assert!(!out.status.success(), "no args must be a usage error");
+    let out = run_bench_diff(&["/nonexistent/a.json", "/nonexistent/b.json"]);
+    assert!(!out.status.success(), "missing files must exit non-zero");
+}

@@ -1,0 +1,274 @@
+//! `BenchReport` emit/parse round-trip, pinned in both directions in the
+//! style of the RunSpec parser tests: the rendered JSON text is asserted
+//! verbatim (so the on-disk `BENCH_*.json` format cannot drift silently),
+//! and parsing that text reproduces the report exactly — for every metric
+//! type, including large u64 allocation counts and negative/subnormal
+//! f64s (ISSUE 6 satellite).
+
+use elmo::bench::{fnv1a64, BenchReport, Gate, Kind, Status, Value, SCHEMA_VERSION};
+
+/// Field-by-field equality with bit-exact values (NaN-safe, unlike a
+/// derived PartialEq over f64).
+fn assert_identical(a: &BenchReport, b: &BenchReport) {
+    assert_eq!(a.schema, b.schema);
+    assert_eq!(a.name, b.name);
+    assert_eq!(a.status, b.status);
+    assert_eq!(a.git_rev, b.git_rev);
+    assert_eq!(a.emitted_at, b.emitted_at);
+    assert_eq!(a.fingerprint, b.fingerprint);
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.kind, y.kind);
+        assert_eq!(x.gate, y.gate);
+        assert!(
+            x.value.bits_eq(y.value),
+            "metric `{}` drifted through the round trip: {} vs {}",
+            x.name,
+            x.value.render(),
+            y.value.render()
+        );
+    }
+}
+
+/// A report with pinned identity fields (no env/git/clock dependence).
+fn fixed_report(name: &str, config: &str) -> BenchReport {
+    let mut rep = BenchReport::new(name, config);
+    rep.git_rev = "deadbeef".into();
+    rep.emitted_at = 1_754_500_000;
+    rep
+}
+
+#[test]
+fn emitted_json_is_pinned_verbatim_and_parses_back_exactly() {
+    let mut rep = fixed_report("demo", "demo v1");
+    rep.det_u64("counters/batches", 42).unwrap();
+    rep.det_digest("digests/packing", 0x0123_4567_89ab_cdef).unwrap();
+    rep.det_u64_pct("alloc/calls", u64::MAX, 20.0).unwrap();
+    rep.wall_f64("wall/p50_ms", 1.5).unwrap();
+
+    let fp = format!("{:016x}", fnv1a64(b"demo v1"));
+    let expected = format!(
+        r#"{{
+  "schema": 1,
+  "name": "demo",
+  "status": "ok",
+  "git_rev": "deadbeef",
+  "emitted_at": 1754500000,
+  "fingerprint": "{fp}",
+  "metrics": [
+    {{"name": "counters/batches", "kind": "deterministic", "gate": "exact", "type": "u64", "value": 42}},
+    {{"name": "digests/packing", "kind": "deterministic", "gate": "exact", "type": "digest", "value": "0123456789abcdef"}},
+    {{"name": "alloc/calls", "kind": "deterministic", "gate": "pct:20", "type": "u64", "value": 18446744073709551615}},
+    {{"name": "wall/p50_ms", "kind": "wall_clock", "gate": "none", "type": "f64", "value": 1.5}}
+  ]
+}}
+"#
+    );
+    assert_eq!(rep.to_json(), expected, "emitter format drifted");
+    assert_identical(&rep, &BenchReport::parse(&expected).unwrap());
+}
+
+#[test]
+fn pinned_external_text_parses_without_the_emitter() {
+    // the reverse pin: text not produced by to_json (different spacing,
+    // field order preserved) must parse to the same typed report
+    let text = r#"{ "schema": 1, "name": "x", "status": "skipped",
+        "git_rev": "unknown", "emitted_at": 0,
+        "fingerprint": "00000000000000ff", "metrics": [] }"#;
+    let rep = BenchReport::parse(text).unwrap();
+    assert_eq!(rep.schema, SCHEMA_VERSION);
+    assert_eq!(rep.name, "x");
+    assert_eq!(rep.status, Status::Skipped);
+    assert_eq!(rep.fingerprint, "00000000000000ff");
+    assert!(rep.metrics.is_empty());
+}
+
+#[test]
+fn u64_round_trip_covers_the_extremes() {
+    let mut rep = fixed_report("u64s", "v1");
+    for (i, v) in [0u64, 1, 4096, u64::MAX - 1, u64::MAX].into_iter().enumerate() {
+        rep.det_u64(&format!("m{i}"), v).unwrap();
+    }
+    let back = BenchReport::parse(&rep.to_json()).unwrap();
+    assert_identical(&rep, &back);
+    assert!(matches!(back.metric("m4").unwrap().value, Value::U64(u64::MAX)));
+}
+
+#[test]
+fn f64_round_trip_is_bit_exact_for_negative_subnormal_and_extreme_values() {
+    let cases = [
+        0.0,
+        -0.0,
+        1.5,
+        -273.15,
+        5e-324,          // smallest positive subnormal
+        -5e-324,         // negative subnormal
+        f64::MIN_POSITIVE,
+        f64::EPSILON,
+        1.7976931348623157e308, // f64::MAX
+        -1.7976931348623157e308,
+        0.1,             // classic shortest-round-trip case
+        std::f64::consts::PI,
+    ];
+    let mut rep = fixed_report("f64s", "v1");
+    for (i, v) in cases.into_iter().enumerate() {
+        rep.wall_f64(&format!("m{i}"), v).unwrap();
+    }
+    let back = BenchReport::parse(&rep.to_json()).unwrap();
+    assert_identical(&rep, &back);
+    for (i, v) in cases.into_iter().enumerate() {
+        let Value::F64(got) = back.metric(&format!("m{i}")).unwrap().value else {
+            panic!("m{i} lost its type");
+        };
+        assert_eq!(got.to_bits(), v.to_bits(), "m{i} ({v:e}) drifted");
+    }
+}
+
+#[test]
+fn non_finite_f64s_survive_the_round_trip_for_the_comparator_to_reject() {
+    // the parser must not choke on a corrupt bench's NaN/inf — fail-closed
+    // rejection is the comparator's job, which requires parse to succeed
+    let mut rep = fixed_report("nonfinite", "v1");
+    rep.wall_f64("nan", f64::NAN).unwrap();
+    rep.wall_f64("pinf", f64::INFINITY).unwrap();
+    rep.wall_f64("ninf", f64::NEG_INFINITY).unwrap();
+    let json = rep.to_json();
+    assert!(json.contains("\"value\": NaN"), "{json}");
+    assert!(json.contains("\"value\": inf"), "{json}");
+    assert!(json.contains("\"value\": -inf"), "{json}");
+    let back = BenchReport::parse(&json).unwrap();
+    let Value::F64(nan) = back.metric("nan").unwrap().value else { panic!() };
+    assert!(nan.is_nan());
+    let Value::F64(pinf) = back.metric("pinf").unwrap().value else { panic!() };
+    assert_eq!(pinf, f64::INFINITY);
+    let Value::F64(ninf) = back.metric("ninf").unwrap().value else { panic!() };
+    assert_eq!(ninf, f64::NEG_INFINITY);
+}
+
+#[test]
+fn digest_round_trip_keeps_leading_zeros() {
+    let mut rep = fixed_report("digests", "v1");
+    rep.det_digest("zero", 0).unwrap();
+    rep.det_digest("low", 0xff).unwrap();
+    rep.det_digest("high", u64::MAX).unwrap();
+    let json = rep.to_json();
+    assert!(json.contains("\"0000000000000000\""), "{json}");
+    assert!(json.contains("\"00000000000000ff\""), "{json}");
+    assert!(json.contains("\"ffffffffffffffff\""), "{json}");
+    assert_identical(&rep, &BenchReport::parse(&json).unwrap());
+}
+
+#[test]
+fn string_escaping_round_trips() {
+    let mut rep = fixed_report("esc", "v1");
+    rep.git_rev = "weird \"rev\"\\with\nnewline\ttab".into();
+    rep.det_u64("m", 1).unwrap();
+    assert_identical(&rep, &BenchReport::parse(&rep.to_json()).unwrap());
+}
+
+#[test]
+fn skipped_report_round_trips_and_is_distinguishable() {
+    let mut rep = BenchReport::skipped("hotpath", "hotpath v1");
+    rep.git_rev = "unknown".into();
+    rep.emitted_at = 0;
+    let json = rep.to_json();
+    assert!(json.contains("\"status\": \"skipped\""), "{json}");
+    let back = BenchReport::parse(&json).unwrap();
+    assert_eq!(back.status, Status::Skipped);
+    assert_identical(&rep, &back);
+}
+
+#[test]
+fn push_enforces_the_kind_gate_contract() {
+    let mut rep = fixed_report("contract", "v1");
+    // deterministic metrics must carry a real gate; wall-clock must not;
+    // digests only gate exactly; duplicates are rejected
+    rep.det_u64("ok", 1).unwrap();
+    assert!(rep.det_u64("ok", 2).is_err(), "duplicate name must fail");
+    let json_before = rep.to_json();
+    // a hand-built bad metric must be rejected at parse time too
+    let bad_wall_gated = json_before.replace(
+        r#""kind": "deterministic", "gate": "exact""#,
+        r#""kind": "wall_clock", "gate": "exact""#,
+    );
+    assert!(BenchReport::parse(&bad_wall_gated).is_err(), "gated wall-clock must not parse");
+    let bad_det_ungated = json_before.replace(
+        r#""kind": "deterministic", "gate": "exact""#,
+        r#""kind": "deterministic", "gate": "none""#,
+    );
+    assert!(BenchReport::parse(&bad_det_ungated).is_err(), "ungated deterministic must not parse");
+}
+
+#[test]
+fn malformed_reports_fail_to_parse_with_config_errors() {
+    let good = fixed_report("m", "v1").to_json();
+    let cases = [
+        "".to_string(),
+        "{".to_string(),
+        good.replace("\"status\": \"ok\"", "\"status\": \"maybe\""),
+        good.replace("\"schema\": 1", "\"schema\": 1.5"),
+        good.replace("\"schema\": 1,", ""), // missing field
+        good.replace(
+            &format!("\"fingerprint\": \"{}\"", fixed_report("m", "v1").fingerprint),
+            "\"fingerprint\": \"zz\"",
+        ),
+        format!("{good}trailing"),
+    ];
+    for (i, text) in cases.iter().enumerate() {
+        let err = BenchReport::parse(text).unwrap_err();
+        assert_eq!(err.kind(), "config", "case {i} gave {err}");
+    }
+    // typed value mismatches inside metrics
+    let mut rep = fixed_report("m2", "v1");
+    rep.det_u64("n", 3).unwrap();
+    let j = rep.to_json();
+    assert!(BenchReport::parse(&j.replace("\"value\": 3", "\"value\": 3.5")).is_err());
+    assert!(BenchReport::parse(&j.replace("\"value\": 3", "\"value\": -3")).is_err());
+    assert!(BenchReport::parse(&j.replace("\"type\": \"u64\"", "\"type\": \"i128\"")).is_err());
+}
+
+#[test]
+fn deterministic_section_excludes_trajectory_and_provenance() {
+    let mut a = fixed_report("sec", "v1");
+    a.det_u64("counter", 7).unwrap();
+    a.det_digest("digest", 0xabc).unwrap();
+    a.wall_f64("p50", 1.25).unwrap();
+    let mut b = a.clone();
+    // different provenance + different wall-clock values: the gated
+    // surface must not see any of it
+    b.git_rev = "someotherrev".into();
+    b.emitted_at = 99;
+    b.metrics.retain(|m| m.kind == Kind::Deterministic);
+    b.wall_f64("p50", 9000.0).unwrap();
+    assert_eq!(a.deterministic_section(), b.deterministic_section());
+    let sec = a.deterministic_section();
+    assert!(sec.contains("metric counter exact u64 7"), "{sec}");
+    assert!(sec.contains("metric digest exact digest \"0000000000000abc\""), "{sec}");
+    assert!(!sec.contains("p50"), "wall-clock leaked into the gated surface: {sec}");
+    assert!(!sec.contains("deadbeef"), "git rev leaked into the gated surface: {sec}");
+}
+
+#[test]
+fn save_load_round_trips_through_disk() {
+    let mut rep = fixed_report("disk", "v1");
+    rep.det_u64("m", 123_456_789_012_345).unwrap();
+    let path = std::env::temp_dir().join(format!("elmo_bench_report_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    rep.save(&path).unwrap();
+    let back = BenchReport::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_identical(&rep, &back);
+    // load of a missing path is a config error naming the path
+    let err = BenchReport::load("/nonexistent/elmo/BENCH_x.json").unwrap_err();
+    assert_eq!(err.kind(), "config");
+    assert!(format!("{err}").contains("BENCH_x.json"), "{err}");
+}
+
+#[test]
+fn gate_rendering_round_trips_fractional_thresholds() {
+    let mut rep = fixed_report("gates", "v1");
+    rep.det_u64_pct("half", 10, 2.5).unwrap();
+    let back = BenchReport::parse(&rep.to_json()).unwrap();
+    assert_eq!(back.metric("half").unwrap().gate, Gate::Pct(2.5));
+}
