@@ -16,7 +16,7 @@
 #[global_allocator]
 static ALLOC: elmo::bench::CountingAlloc = elmo::bench::CountingAlloc;
 
-use elmo::bench::{self, ARRIVAL_SEED, BURSTS, RATES, SHARDS};
+use elmo::bench::{self, ARRIVAL_SEED, BURSTS, RATES, SHARDS, SHORTLIST_PROBES};
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -49,6 +49,27 @@ fn main() -> anyhow::Result<()> {
     print_table(
         &["cell", "done", "rej", "batches", "deadline", "p50 ms", "p99 ms", "packing digest"],
         &rows,
+    );
+
+    // shortlist cells: the two-stage scanner on the zero-rejection corner
+    let mut sl_rows = Vec::new();
+    for probe in SHORTLIST_PROBES {
+        let cell = bench::run_shortlist_cell(probe, ARRIVAL_SEED)?;
+        let s = &cell.stats;
+        sl_rows.push(vec![
+            format!("sl/p{probe}"),
+            s.completed().to_string(),
+            s.core.batches.to_string(),
+            s.chunks_scanned.to_string(),
+            format!("{}/{}", cell.recall_hits, cell.recall_total),
+            cell.index_bytes.to_string(),
+            format!("{:016x}", cell.results_digest),
+        ]);
+    }
+    println!("== shortlist cells (exact twin r4000/b1 scans batches x 4 chunks) ==");
+    print_table(
+        &["cell", "done", "batches", "chunks", "recall", "index B", "results digest"],
+        &sl_rows,
     );
 
     rep.save("BENCH_serve_throughput.json")?;

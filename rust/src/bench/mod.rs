@@ -39,6 +39,7 @@ pub use report::{
     SCHEMA_VERSION,
 };
 pub use scenario::{
-    run_cell, serve_throughput_config, serve_throughput_report, synth_score, CellOutcome,
-    ARRIVAL_SEED, BURSTS, RATES, SHARDS,
+    run_cell, run_shortlist_cell, serve_throughput_config, serve_throughput_report,
+    synth_clustered_score, synth_score, CellOutcome, ShortlistCellOutcome, ARRIVAL_SEED, BURSTS,
+    RATES, SHARDS, SHORTLIST_PROBES,
 };

@@ -20,7 +20,7 @@ use crate::bench::report::{fnv1a64_fold, BenchReport, FNV64_OFFSET};
 use crate::data::SEQ_LEN;
 use crate::err_runtime;
 use crate::error::Result;
-use crate::infer::Prediction;
+use crate::infer::{Prediction, ShortlistIndex, ShortlistSpec};
 use crate::memmodel::{self, MemParams, Method};
 use crate::metrics::TopK;
 use crate::serve::{self, LoadGen, LoadGenConfig, Server, ServerConfig, ServingStats, VirtualClock};
@@ -51,10 +51,32 @@ pub const SCEN_LABELS: usize = 512;
 pub const SCEN_D: usize = 8;
 pub const SCEN_CHUNK: usize = 128;
 pub const SCEN_K: usize = 5;
+/// Label chunks per batch scan (512 labels / 128-label chunks).
+pub const SCEN_N_CHUNKS: usize = SCEN_LABELS / SCEN_CHUNK;
 /// Hypothetical worker-pool width for the `serve_shard_bytes` staging
 /// metric (the scenario itself scores inline — the byte model is what is
 /// being pinned, not a real pool).
 pub const SCEN_WORKERS: usize = 4;
+
+/// Shortlist cells probe this many clusters per row.  Capped below
+/// `SCEN_N_CHUNKS` on purpose: probing every chunk would scan exactly as
+/// many chunks as the exact path and the bench's strict-sublinearity gate
+/// (`sl/*/chunks_scanned < exact chunks_scanned`) would pin nothing.
+pub const SHORTLIST_PROBES: [usize; 2] = [1, 2];
+/// Shortlist cells run at the grid corner whose committed exact twin has
+/// zero rejections (`r4000/b1`): with nothing rejected, the admission
+/// queue assigns ids in offer order, so token == id for every completion
+/// and the recall oracle can reconstruct each row's token from `p.id`
+/// without tracking the schedule.
+pub const SHORTLIST_RATE: u64 = 4000;
+pub const SHORTLIST_BURST: usize = 1;
+/// Additive score bonus for labels in the home chunk (chunk 0).  Strictly
+/// larger than the 7.875 maximum of `synth_score`, so the exact oracle's
+/// top-k lives entirely inside chunk 0 and a probe-1 shortlist over the
+/// one-hot centroids achieves recall 1.0 by construction.  8.0 and every
+/// `n/8 + 8.0` sum are exactly representable in f32: the digest stays
+/// platform-exact.
+pub const SHORTLIST_BONUS: f32 = 8.0;
 
 /// Synthetic score for (first token, label): a SplitMix64-style integer
 /// finalizer folded onto a coarse 64-bucket grid.  Coarse on purpose —
@@ -68,6 +90,22 @@ pub fn synth_score(first_token: u32, label: u32) -> f32 {
     z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z ^= z >> 32;
     ((z % 64) as f32) * 0.125
+}
+
+/// `synth_score` with the chunk-0 home bonus — the scoring function of
+/// the shortlist cells.  Clustered on purpose: under the uniform
+/// `synth_score` hash a 1-of-4-chunk shortlist could only ever reach
+/// recall ~0.25, which would measure the synthetic label layout, not the
+/// scanner.  Real XMC classifiers are cluster-structured (that is the
+/// premise of the shortlist); the bonus builds the smallest exactly-
+/// representable instance of that structure.
+pub fn synth_clustered_score(first_token: u32, label: u32) -> f32 {
+    let base = synth_score(first_token, label);
+    if (label as usize) / SCEN_CHUNK == 0 {
+        base + SHORTLIST_BONUS
+    } else {
+        base
+    }
 }
 
 /// One grid cell's outcome: the server's own counters/digest plus the
@@ -102,6 +140,7 @@ pub fn run_cell(rate_qps: f64, burst_max: usize, shards: usize, seed: u64) -> Re
     )?;
     let mut out: Vec<Prediction> = Vec::with_capacity(SCEN_ROWS);
     let mut next_row = 0i32;
+    let mut chunks_scanned = 0u64;
     let per_shard_labels = SCEN_LABELS / shards;
     serve::replay(
         &mut sv,
@@ -115,6 +154,10 @@ pub fn run_cell(rate_qps: f64, burst_max: usize, shards: usize, seed: u64) -> Re
             toks
         },
         |tokens: &[i32]| {
+            // exact scan: every batch walks all chunks regardless of how
+            // the labels are sharded (shards partition chunks, they do
+            // not skip them)
+            chunks_scanned += SCEN_N_CHUNKS as u64;
             // score each label shard independently, then fuse through the
             // production merge — identical to a single full fold by the
             // merge_rows contract, so the digest is shard-invariant
@@ -143,6 +186,7 @@ pub fn run_cell(rate_qps: f64, burst_max: usize, shards: usize, seed: u64) -> Re
     if !sv.stats.reconciles() {
         return Err(err_runtime!("scenario counters do not reconcile: {}", sv.stats.summary()));
     }
+    sv.stats.chunks_scanned = chunks_scanned;
 
     let mut h = FNV64_OFFSET;
     for p in &out {
@@ -169,6 +213,151 @@ pub fn run_cell(rate_qps: f64, burst_max: usize, shards: usize, seed: u64) -> Re
     })
 }
 
+/// One shortlist cell's outcome: the exact-cell counters plus the recall
+/// tally against the full-label oracle and the centroid-index footprint.
+pub struct ShortlistCellOutcome {
+    pub stats: ServingStats,
+    /// Same fold as `CellOutcome::results_digest` (id, then top-k (score
+    /// bits, label) per completion, in completion order).
+    pub results_digest: u64,
+    pub completions: usize,
+    /// Oracle top-k labels recovered by the shortlisted scan, summed over
+    /// every completion; `recall_hits == recall_total` at this scenario's
+    /// geometry because the oracle's top-k lives entirely in chunk 0.
+    pub recall_hits: u64,
+    pub recall_total: u64,
+    /// `ShortlistIndex::index_bytes` — the memory cost of sublinearity.
+    pub index_bytes: u64,
+}
+
+/// Run one shortlist cell: the `r4000/b1` arrival schedule scored through
+/// a two-stage shortlist over an identity clustering of the scenario's
+/// four label chunks.
+///
+/// The index is built from one-hot chunk means (`mean[c] = e_c`) with
+/// `clusters = 0`, i.e. the identity clustering — no k-means, no float
+/// accumulation, every centroid value exactly 0.0 or 1.0.  Every query
+/// row embeds as `e_0`, so stage 1 selects chunk 0 first at any probe
+/// (dot = 1.0 vs 0.0, ties broken toward the lower cluster index), and
+/// `synth_clustered_score`'s chunk-0 bonus puts the oracle's entire top-k
+/// inside that chunk: recall is 1.0 by construction and the results
+/// digest is probe-invariant.  What the bench gates is the *counter*:
+/// `chunks_scanned = batches * probe`, strictly below the exact cell's
+/// `batches * SCEN_N_CHUNKS`.
+pub fn run_shortlist_cell(probe: usize, seed: u64) -> Result<ShortlistCellOutcome> {
+    let mut means = vec![0.0f32; SCEN_N_CHUNKS * SCEN_D];
+    for c in 0..SCEN_N_CHUNKS {
+        means[c * SCEN_D + c] = 1.0;
+    }
+    let idx = ShortlistIndex::from_chunk_means(
+        means,
+        SCEN_N_CHUNKS,
+        SCEN_D,
+        &ShortlistSpec { clusters: 0, probe, seed },
+    )?;
+
+    let schedule = LoadGen::new(LoadGenConfig {
+        rate_qps: SHORTLIST_RATE as f64,
+        burst_max: SHORTLIST_BURST,
+        seed,
+    })?
+    .schedule_rows(SCEN_ROWS);
+    let mut sv = Server::new(
+        ServerConfig {
+            width: SCEN_WIDTH,
+            queue_cap: SCEN_QUEUE_CAP,
+            max_delay_ms: SCEN_MAX_DELAY_MS,
+        },
+        VirtualClock::new(),
+    )?;
+    let mut out: Vec<Prediction> = Vec::with_capacity(SCEN_ROWS);
+    let mut next_row = 0i32;
+    let mut chunks_scanned = 0u64;
+    serve::replay(
+        &mut sv,
+        &schedule,
+        |rows| {
+            let mut toks = vec![0i32; rows * SEQ_LEN];
+            for i in 0..rows {
+                toks[i * SEQ_LEN] = next_row + i as i32;
+            }
+            next_row += rows as i32;
+            toks
+        },
+        |tokens: &[i32]| {
+            let batch = tokens.len() / SEQ_LEN;
+            // every row embeds as e_0 — stage 1 is batch-level, so one
+            // selection covers the whole batch, exactly like the serving
+            // path's per-batch `select_chunks`
+            let mut emb = vec![0.0f32; batch * SCEN_D];
+            for r in 0..batch {
+                emb[r * SCEN_D] = 1.0;
+            }
+            let selection = idx.select_chunks(&emb, batch)?;
+            chunks_scanned += selection.len() as u64;
+            let topks = tokens
+                .chunks_exact(SEQ_LEN)
+                .map(|row| {
+                    let t = row[0] as u32;
+                    let mut tk = TopK::new(SCEN_K);
+                    for &chunk in &selection {
+                        let lo = (chunk * SCEN_CHUNK) as u32;
+                        let hi = ((chunk + 1) * SCEN_CHUNK) as u32;
+                        for label in lo..hi {
+                            tk.push(synth_clustered_score(t, label), label);
+                        }
+                    }
+                    tk
+                })
+                .collect();
+            Ok(topks)
+        },
+        &mut out,
+    )?;
+    if !sv.stats.reconciles() {
+        return Err(err_runtime!("shortlist counters do not reconcile: {}", sv.stats.summary()));
+    }
+    if sv.stats.rejected != 0 {
+        // token == id only holds with zero rejections; a nonzero count
+        // means the cell moved off the r4000/b1 corner and the recall
+        // oracle below would score the wrong rows
+        return Err(err_runtime!(
+            "shortlist cell expects zero rejections (token == id identity), got {}",
+            sv.stats.rejected
+        ));
+    }
+    sv.stats.chunks_scanned = chunks_scanned;
+
+    let mut h = FNV64_OFFSET;
+    let mut recall_hits = 0u64;
+    let mut recall_total = 0u64;
+    for p in &out {
+        h = fnv1a64_fold(h, &p.id.to_le_bytes());
+        for &(score, label) in &p.topk {
+            h = fnv1a64_fold(h, &score.to_bits().to_le_bytes());
+            h = fnv1a64_fold(h, &label.to_le_bytes());
+        }
+        // exact oracle over ALL labels for this row's token (== id)
+        let t = p.id as u32;
+        let mut oracle = TopK::new(SCEN_K);
+        for label in 0..SCEN_LABELS as u32 {
+            oracle.push(synth_clustered_score(t, label), label);
+        }
+        let want = oracle.labels();
+        recall_hits += p.topk.iter().filter(|(_, l)| want.contains(l)).count() as u64;
+        recall_total += SCEN_K as u64;
+    }
+
+    Ok(ShortlistCellOutcome {
+        results_digest: h,
+        completions: out.len(),
+        recall_hits,
+        recall_total,
+        index_bytes: idx.index_bytes(),
+        stats: sv.stats,
+    })
+}
+
 /// The memmodel methods the report pins, with stable metric-name tags.
 pub const MEM_METHODS: [(Method, &str); 6] = [
     (Method::Renee, "renee"),
@@ -184,17 +373,24 @@ pub const MEM_METHODS: [(Method, &str); 6] = [
 /// fingerprint itself is platform-exact.
 pub fn serve_throughput_config(seed: u64) -> String {
     format!(
-        "serve_throughput v1 rows={SCEN_ROWS} width={SCEN_WIDTH} queue_cap={SCEN_QUEUE_CAP} \
+        "serve_throughput v2 rows={SCEN_ROWS} width={SCEN_WIDTH} queue_cap={SCEN_QUEUE_CAP} \
          max_delay_us={SCEN_MAX_DELAY_US} labels={SCEN_LABELS} d={SCEN_D} chunk={SCEN_CHUNK} \
-         k={SCEN_K} workers={SCEN_WORKERS} rates=500,4000 bursts=1,6 shards=1,2,4 seed={seed}"
+         k={SCEN_K} workers={SCEN_WORKERS} rates=500,4000 bursts=1,6 shards=1,2,4 \
+         shortlist_probes=1,2 shortlist_rate=4000 shortlist_burst=1 \
+         shortlist_bonus_eighths=64 seed={seed}"
     )
 }
 
 /// Run the full grid and render it as a `BenchReport`.
 ///
 /// Deterministic metrics per cell (prefix `r{rate}/b{burst}/s{shards}/`):
-/// packing + results digests, admission/flush counters, padded rows, and
-/// the `serve_shard_bytes` staging model — all gated exactly.  Virtual
+/// packing + results digests, admission/flush counters, padded rows,
+/// chunk-scan counts, and the `serve_shard_bytes` staging model — all
+/// gated exactly.  Two shortlist cells (`sl/p{probe}/`) rerun the
+/// zero-rejection corner through the two-stage scanner and pin the
+/// sublinearity evidence: `chunks_scanned` strictly below the exact
+/// cell's, recall vs. the full-label oracle, and the centroid-index byte
+/// cost.  Virtual
 /// latency percentiles are wall-clock-kind (they inherit libm ulps from
 /// the arrival process).  Global metrics: `memmodel` peak bytes for every
 /// method at the paper's Sec 4.4 walkthrough (exact), allocation counts
@@ -227,11 +423,26 @@ pub fn serve_throughput_report(seed: u64) -> Result<BenchReport> {
                 rep.det_u64(&format!("{p}/deadline_flushes"), cell.stats.deadline_flushes)?;
                 rep.det_u64(&format!("{p}/full_flushes"), cell.stats.full_flushes)?;
                 rep.det_u64(&format!("{p}/padded_rows"), cell.stats.core.padded_rows)?;
+                rep.det_u64(&format!("{p}/chunks_scanned"), cell.stats.chunks_scanned)?;
                 rep.det_u64(&format!("{p}/shard_staging_bytes"), cell.shard_staging_bytes)?;
                 rep.wall_f64(&format!("{p}/virt_p50_ms"), cell.virt_p50_ms)?;
                 rep.wall_f64(&format!("{p}/virt_p99_ms"), cell.virt_p99_ms)?;
             }
         }
+    }
+    for probe in SHORTLIST_PROBES {
+        let cell = run_shortlist_cell(probe, seed)?;
+        let p = format!("sl/p{probe}");
+        rep.det_digest(&format!("{p}/packing_digest"), cell.stats.packing_digest())?;
+        rep.det_digest(&format!("{p}/results_digest"), cell.results_digest)?;
+        rep.det_u64(&format!("{p}/submitted"), cell.stats.submitted)?;
+        rep.det_u64(&format!("{p}/completed"), cell.stats.completed())?;
+        rep.det_u64(&format!("{p}/rejected"), cell.stats.rejected)?;
+        rep.det_u64(&format!("{p}/batches"), cell.stats.core.batches)?;
+        rep.det_u64(&format!("{p}/chunks_scanned"), cell.stats.chunks_scanned)?;
+        rep.det_u64(&format!("{p}/recall_hits"), cell.recall_hits)?;
+        rep.det_u64(&format!("{p}/recall_total"), cell.recall_total)?;
+        rep.det_u64(&format!("{p}/shortlist_index_bytes"), cell.index_bytes)?;
     }
     if counting_enabled() {
         let da = alloc_since(alloc_start);

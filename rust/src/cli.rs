@@ -55,7 +55,17 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
     Subcommand {
         name: "predict",
         summary: "load a checkpoint and evaluate P@k through the serving path",
-        flags: &["checkpoint", "profile", "eval-rows", "artifacts", "workers", "config"],
+        flags: &[
+            "checkpoint",
+            "profile",
+            "eval-rows",
+            "artifacts",
+            "workers",
+            "config",
+            "shortlist-enabled",
+            "shortlist-clusters",
+            "shortlist-probe",
+        ],
     },
     Subcommand {
         name: "serve-bench",
@@ -75,6 +85,9 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
             "rate",
             "burst",
             "arrival-seed",
+            "shortlist-enabled",
+            "shortlist-clusters",
+            "shortlist-probe",
             "artifacts",
             "workers",
             "config",
@@ -143,13 +156,16 @@ USAGE:
                [--eval-rows N] [--artifacts DIR] [--save PATH] [--workers N]
   elmo predict     --checkpoint PATH [--config FILE] [--profile NAME]
                    [--eval-rows N] [--artifacts DIR] [--workers N]
+                   [--shortlist-enabled BOOL] [--shortlist-clusters C]
+                   [--shortlist-probe P]
   elmo serve-bench --checkpoint PATH [--config FILE] [--queries N]
                    [--max-burst N] [--k N] [--seed N] [--artifacts DIR]
                    [--workers N]
   elmo serve       --checkpoint PATH [--config FILE] [--queries N] [--k N]
                    [--shards R] [--queue-cap N] [--max-delay-ms F]
                    [--rate QPS] [--burst N] [--arrival-seed N]
-                   [--artifacts DIR] [--workers N]
+                   [--shortlist-enabled BOOL] [--shortlist-clusters C]
+                   [--shortlist-probe P] [--artifacts DIR] [--workers N]
   elmo datasets
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
@@ -187,6 +203,16 @@ SERVE FLAGS (docs/SERVING.md):
   --burst N         each arrival carries 1..=N rows
   --arrival-seed N  arrival-process seed: the same seed replays the exact
                     packing decisions (reported as a packing digest)
+
+SHORTLIST FLAGS (serve + predict; docs/SERVING.md):
+  --shortlist-enabled BOOL   score via the two-stage shortlist: cluster
+                    centroids first, fine-scan only the probed clusters'
+                    chunks (default false = exact full scan)
+  --shortlist-clusters C     centroid count for the seeded k-means over
+                    the classifier chunks (0 = identity clustering: one
+                    cluster per scoring chunk, no k-means)
+  --shortlist-probe P        clusters fine-scanned per query row
+                    (stage-1 top-P; clamps to the cluster count)
 
 BENCH-DIFF FLAGS (docs/BENCHMARKS.md):
   --threshold PCT   override the pct-gate regression threshold for

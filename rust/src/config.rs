@@ -32,7 +32,7 @@ use crate::error::{Result, ResultExt};
 
 /// Every key a `RunSpec` file (or the matching CLI flag) may set, in the
 /// canonical serialization order.
-pub const KEYS: [&str; 21] = [
+pub const KEYS: [&str; 24] = [
     "profile",
     "precision",
     "chunk",
@@ -54,6 +54,9 @@ pub const KEYS: [&str; 21] = [
     "serve.rate",
     "serve.burst",
     "serve.arrival_seed",
+    "serve.shortlist.enabled",
+    "serve.shortlist.clusters",
+    "serve.shortlist.probe",
 ];
 
 /// CLI flag name -> RunSpec key (flags are dashed, keys underscored) for
@@ -78,13 +81,16 @@ const FLAG_KEYS: [(&str, &str); 15] = [
 
 /// Serving-only CLI flags (`elmo serve`) -> `serve.*` RunSpec keys,
 /// layered by `apply_flags` exactly like `FLAG_KEYS`.
-const SERVE_FLAG_KEYS: [(&str, &str); 6] = [
+const SERVE_FLAG_KEYS: [(&str, &str); 9] = [
     ("shards", "serve.shards"),
     ("queue-cap", "serve.queue_cap"),
     ("max-delay-ms", "serve.max_delay_ms"),
     ("rate", "serve.rate"),
     ("burst", "serve.burst"),
     ("arrival-seed", "serve.arrival_seed"),
+    ("shortlist-enabled", "serve.shortlist.enabled"),
+    ("shortlist-clusters", "serve.shortlist.clusters"),
+    ("shortlist-probe", "serve.shortlist.probe"),
 ];
 
 /// A declarative run description.  Defaults match the CLI flag defaults,
@@ -126,6 +132,16 @@ pub struct RunSpec {
     /// `elmo serve`: arrival-process seed (identical seed => identical
     /// packing decisions).
     pub serve_arrival_seed: u64,
+    /// `elmo serve`/`elmo predict`: score via the two-stage shortlist
+    /// (cluster centroids first, fine-scan only the probed clusters'
+    /// chunks) instead of the exact full scan.
+    pub serve_shortlist_enabled: bool,
+    /// Shortlist centroid count C (0 = identity clustering: one cluster
+    /// per scoring chunk, no k-means).
+    pub serve_shortlist_clusters: usize,
+    /// Clusters fine-scanned per query row (stage-1 top-`probe`; clamps
+    /// to the cluster count).
+    pub serve_shortlist_probe: usize,
     /// Keys explicitly set by a file or flag (drives decisions like
     /// `elmo predict` preferring the checkpoint's stored profile unless
     /// one was explicitly chosen).  Not part of equality.
@@ -156,6 +172,9 @@ impl Default for RunSpec {
             serve_rate: 2000.0,
             serve_burst: 4,
             serve_arrival_seed: 0,
+            serve_shortlist_enabled: false,
+            serve_shortlist_clusters: 0,
+            serve_shortlist_probe: 4,
             explicit: BTreeSet::new(),
         }
     }
@@ -275,6 +294,9 @@ impl RunSpec {
             "serve.rate" => self.serve_rate = num(key, val)?,
             "serve.burst" => self.serve_burst = num(key, val)?,
             "serve.arrival_seed" => self.serve_arrival_seed = num(key, val)?,
+            "serve.shortlist.enabled" => self.serve_shortlist_enabled = num(key, val)?,
+            "serve.shortlist.clusters" => self.serve_shortlist_clusters = num(key, val)?,
+            "serve.shortlist.probe" => self.serve_shortlist_probe = num(key, val)?,
             other => return Err(err_config!("unknown key `{other}`")),
         }
         self.explicit.insert(key);
@@ -360,6 +382,13 @@ impl RunSpec {
                 self.serve_rate
             ));
         }
+        // `serve.shortlist.clusters` = 0 is meaningful (identity
+        // clustering); a probe of 0 would fine-scan nothing
+        if self.serve_shortlist_probe == 0 {
+            return Err(err_config!(
+                "`serve.shortlist.probe` must be >= 1 (clusters fine-scanned per row)"
+            ));
+        }
         Ok(())
     }
 
@@ -423,7 +452,10 @@ impl fmt::Display for RunSpec {
         writeln!(f, "serve.max_delay_ms = {}", self.serve_max_delay_ms)?;
         writeln!(f, "serve.rate = {}", self.serve_rate)?;
         writeln!(f, "serve.burst = {}", self.serve_burst)?;
-        writeln!(f, "serve.arrival_seed = {}", self.serve_arrival_seed)
+        writeln!(f, "serve.arrival_seed = {}", self.serve_arrival_seed)?;
+        writeln!(f, "serve.shortlist.enabled = {}", self.serve_shortlist_enabled)?;
+        writeln!(f, "serve.shortlist.clusters = {}", self.serve_shortlist_clusters)?;
+        writeln!(f, "serve.shortlist.probe = {}", self.serve_shortlist_probe)
     }
 }
 
@@ -590,6 +622,9 @@ lr_cls = 0.1
         spec.serve_rate = 1500.0;
         spec.serve_burst = 8;
         spec.serve_arrival_seed = 99;
+        spec.serve_shortlist_enabled = true;
+        spec.serve_shortlist_clusters = 16;
+        spec.serve_shortlist_probe = 3;
         let text = spec.to_string();
         let back = RunSpec::parse(&text).unwrap();
         assert_eq!(back, spec, "round-trip drifted:\n{text}");
@@ -650,6 +685,7 @@ lr_cls = 0.1
             ("serve.max_delay_ms = inf", "`serve.max_delay_ms`"),
             ("serve.rate = 0", "`serve.rate`"),
             ("serve.rate = NaN", "`serve.rate`"),
+            ("serve.shortlist.probe = 0", "`serve.shortlist.probe`"),
         ] {
             let spec = RunSpec::parse(line).unwrap();
             let err = spec.validate().unwrap_err();
@@ -727,6 +763,30 @@ serve.max_delay_ms = 2.5
             .apply_flags(&parse_flags(&argv(&["--shards", "many"])).unwrap())
             .unwrap_err();
         assert!(format!("{err}").contains("--shards"), "{err}");
+    }
+
+    #[test]
+    fn shortlist_keys_parse_and_flags_override() {
+        let mut spec = RunSpec::parse(
+            "serve.shortlist.enabled = true\nserve.shortlist.clusters = 8\n",
+        )
+        .unwrap();
+        assert!(spec.serve_shortlist_enabled);
+        assert_eq!(spec.serve_shortlist_clusters, 8);
+        assert_eq!(spec.serve_shortlist_probe, RunSpec::default().serve_shortlist_probe);
+        assert!(spec.is_explicit("serve.shortlist.enabled"));
+        assert!(!spec.is_explicit("serve.shortlist.probe"));
+        let f =
+            parse_flags(&argv(&["--shortlist-clusters", "32", "--shortlist-probe", "2"])).unwrap();
+        spec.apply_flags(&f).unwrap();
+        assert_eq!(spec.serve_shortlist_clusters, 32, "flag wins over file");
+        assert_eq!(spec.serve_shortlist_probe, 2);
+        assert!(spec.serve_shortlist_enabled, "file value survives when no flag is given");
+        // booleans parse strictly (`true`/`false`), errors name the flag
+        let err = spec
+            .apply_flags(&parse_flags(&argv(&["--shortlist-enabled", "yes"])).unwrap())
+            .unwrap_err();
+        assert!(format!("{err}").contains("--shortlist-enabled"), "{err}");
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::err_shape;
 use crate::error::Result;
 use crate::infer::predict::embed_inference;
 use crate::infer::scanner::{ChunkScanner, ClassifierView};
+use crate::infer::shortlist::ScanStrategy;
 use crate::metrics::EvalAccum;
 use crate::runtime::{to_vec_f32, Arg};
 use crate::session::Session;
@@ -51,6 +52,11 @@ pub struct EvalModel<'a> {
     /// Encoder forward artifact name (`enc_fwd_*`).
     pub enc_art: String,
     pub cls: ClassifierView<'a>,
+    /// Exact full scan or the two-stage shortlist (a shortlist-enabled
+    /// `Predictor` passes its index through; the trainer-side `evaluate`
+    /// is always exact — training metrics never depend on a serving
+    /// approximation).
+    pub strategy: ScanStrategy,
 }
 
 /// Evaluate the trainer's classifier on the test split.
@@ -67,6 +73,7 @@ pub fn evaluate(
         enc_p: &tr.enc_p,
         enc_art: format!("enc_fwd_{}", tr.enc_cfg()),
         cls: ClassifierView::of_store(&tr.store),
+        strategy: ScanStrategy::Exact,
     };
     evaluate_model(sess, &m, ds, max_rows)
 }
@@ -114,8 +121,8 @@ pub fn evaluate_model(
         let emb = embed_inference(ex.rt, &m.enc_art, m.enc_p, &tokens)?;
 
         // stream label chunks through the shared scanner (pooled when the
-        // session has workers)
-        let topks = scanner.scan(ex, &m.cls, &emb, b)?;
+        // session has workers; subset-only under a shortlist strategy)
+        let (topks, _scanned) = scanner.scan_with(ex, &m.cls, &emb, b, &m.strategy)?;
 
         for bi in 0..valid {
             let r = row0 + bi;

@@ -9,6 +9,9 @@
 //! * `scanner` — the single chunked top-k scoring path shared by
 //!   `coordinator::evaluate` and serving, streaming `cls_fwd_*` label
 //!   chunks so no full [n, L] logit matrix ever exists;
+//! * `shortlist` — the two-stage sublinear strategy: a seeded
+//!   chunk-cluster index scored first, so the scanner fine-scans only the
+//!   probed clusters' chunks (`ScanStrategy::Shortlist`);
 //! * `predict` — `Predictor`, a read-only store loaded from a checkpoint
 //!   that serves batched top-k queries;
 //! * `batcher` — a micro-batching request queue that packs variable-size
@@ -22,8 +25,10 @@ pub mod batcher;
 pub mod checkpoint;
 pub mod predict;
 pub mod scanner;
+pub mod shortlist;
 
 pub use batcher::{MicroBatcher, Prediction, ServeStats, LATENCY_WINDOW_CAP};
 pub use checkpoint::Checkpoint;
 pub use predict::{embed_inference, Predictor};
-pub use scanner::{ChunkScanner, ClassifierView, SCORE_LC};
+pub use scanner::{ChunkScanner, ClassifierView, CLS_FWD_ART, SCORE_LC};
+pub use shortlist::{ScanStrategy, ShortlistIndex, ShortlistSpec};

@@ -18,8 +18,11 @@ use crate::runtime::{to_vec_f32, Arg, Runtime};
 use crate::session::{KernelSet, Session};
 use crate::store::WeightStore;
 
+use std::sync::Arc;
+
 use super::checkpoint::Checkpoint;
-use super::scanner::{ChunkScanner, ClassifierView, SCORE_LC};
+use super::scanner::{ChunkScanner, ClassifierView, CLS_FWD_ART};
+use super::shortlist::{ScanStrategy, ShortlistIndex, ShortlistSpec};
 
 /// Inference-mode encoder forward (dropout off, fixed seed 0) — the one
 /// embed invocation shared by `coordinator::evaluate_model` and the
@@ -54,6 +57,9 @@ pub struct Predictor {
     step_count: u64,
     seed: u64,
     profile: String,
+    /// Two-stage shortlist index, built on demand (`enable_shortlist`);
+    /// while `None`, every scan is exact.
+    shortlist: Option<Arc<ShortlistIndex>>,
 }
 
 impl Predictor {
@@ -83,7 +89,33 @@ impl Predictor {
             step_count: ckpt.step_count,
             seed: ckpt.seed,
             profile: ckpt.profile,
+            shortlist: None,
         })
+    }
+
+    /// Build the two-stage shortlist index over the stored classifier
+    /// (the `serve.shortlist.*` keys resolve into `spec`).  The store is
+    /// read-only, so one build stays valid for the predictor's lifetime;
+    /// `predict_batch` and `evaluate` use it from here on.  Returns the
+    /// index for inspection (digest, cluster count, byte accounting).
+    pub fn enable_shortlist(&mut self, spec: &ShortlistSpec) -> Result<Arc<ShortlistIndex>> {
+        let idx = Arc::new(ShortlistIndex::build(&self.view(), spec)?);
+        self.shortlist = Some(Arc::clone(&idx));
+        Ok(idx)
+    }
+
+    /// The active scan strategy: `Shortlist` once `enable_shortlist` has
+    /// built an index, `Exact` otherwise.
+    pub fn strategy(&self) -> ScanStrategy {
+        match &self.shortlist {
+            Some(idx) => ScanStrategy::Shortlist(Arc::clone(idx)),
+            None => ScanStrategy::Exact,
+        }
+    }
+
+    /// The built shortlist index, if any.
+    pub fn shortlist(&self) -> Option<&Arc<ShortlistIndex>> {
+        self.shortlist.as_ref()
     }
 
     /// The serving weight store (read-only).
@@ -136,7 +168,7 @@ impl Predictor {
     pub fn required_kernels(&self) -> KernelSet {
         KernelSet {
             host: vec![self.enc_artifact()],
-            chunk: vec![format!("cls_fwd_{SCORE_LC}")],
+            chunk: vec![CLS_FWD_ART.to_string()],
         }
     }
 
@@ -160,7 +192,8 @@ impl Predictor {
     ///
     /// One code path for serial and pooled serving: the label-chunk scan
     /// fans out to the session's pool when serving with `--workers N`
-    /// (the encoder forward stays on the session runtime).
+    /// (the encoder forward stays on the session runtime).  With a
+    /// shortlist enabled, only the index-selected chunks are scanned.
     pub fn predict_batch(
         &self,
         sess: &mut Session,
@@ -171,11 +204,15 @@ impl Predictor {
         let ex = &mut ctx;
         let b = ex.rt.config().batch;
         let emb = self.embed(ex.rt, tokens)?;
-        ChunkScanner::new(k).scan(ex, &self.view(), &emb, b)
+        let (topks, _scanned) =
+            ChunkScanner::new(k).scan_with(ex, &self.view(), &emb, b, &self.strategy())?;
+        Ok(topks)
     }
 
     /// Evaluate the stored model on a dataset's test split with the exact
-    /// protocol (and code) of `coordinator::evaluate`.
+    /// protocol (and code) of `coordinator::evaluate`.  Uses the active
+    /// scan strategy, so a shortlist-enabled predictor reports shortlist
+    /// metrics (the recall-vs-exact question the harness answers).
     pub fn evaluate(
         &self,
         sess: &mut Session,
@@ -186,6 +223,7 @@ impl Predictor {
             enc_p: &self.enc_p,
             enc_art: self.enc_artifact(),
             cls: self.view(),
+            strategy: self.strategy(),
         };
         evaluate_model(sess, &m, ds, max_rows)
     }

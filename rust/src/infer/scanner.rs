@@ -13,6 +13,12 @@
 //! and the per-chunk logits fold into the running `TopK`s **in chunk
 //! order** (`OrderedReducer`), which keeps tie-breaking — and therefore
 //! P@k — bit-identical to the serial scan.
+//!
+//! `scan_with` selects between the exact full scan and the two-stage
+//! shortlist scan (`infer::shortlist`): the shortlist path scans only the
+//! index-selected chunks via `scan_subset`, which folds an ascending
+//! chunk subset in the same order the full scan would — same kernel, same
+//! fold discipline, fewer chunks.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -24,8 +30,18 @@ use crate::metrics::TopK;
 use crate::runtime::{to_vec_f32, Arg, ExecCtx, OrderedReducer, Runtime, RuntimePool};
 use crate::store::WeightStore;
 
+use super::shortlist::ScanStrategy;
+
 /// Scoring chunk width: the lowered `cls_fwd_*` artifact width.
 pub const SCORE_LC: usize = 1024;
+
+/// The scoring artifact name, precomputed: the scan hot loops used to
+/// rebuild `format!("cls_fwd_{SCORE_LC}")` per call (one heap allocation
+/// per scanned batch, two on the pooled path).
+pub const CLS_FWD_ART: &str = "cls_fwd_1024";
+
+// the name literal must track the chunk-width constant
+const _: () = assert!(SCORE_LC == 1024, "CLS_FWD_ART must be renamed with SCORE_LC");
 
 /// Read-only view of a classifier weight store, shaped for chunked scoring.
 ///
@@ -179,11 +195,10 @@ impl ChunkScanner {
     ) -> Result<Vec<TopK>> {
         view.validate()?;
         view.validate_emb(emb, batch)?;
-        let art = format!("cls_fwd_{SCORE_LC}");
         let mut topks: Vec<TopK> = (0..batch).map(|_| TopK::new(self.k)).collect();
         for chunk in 0..view.l_pad / SCORE_LC {
             let wslice = &view.w[chunk * SCORE_LC * view.d..(chunk + 1) * SCORE_LC * view.d];
-            let outs = rt.exec(&art, &[Arg::F32(wslice), Arg::F32(emb)])?;
+            let outs = rt.exec(CLS_FWD_ART, &[Arg::F32(wslice), Arg::F32(emb)])?;
             let logits = to_vec_f32(&outs[0])?; // [batch, SCORE_LC]
             fold_chunk(&mut topks, view, chunk, &logits);
         }
@@ -200,20 +215,18 @@ impl ChunkScanner {
         view.validate()?;
         view.validate_emb(emb, batch)?;
         let n_chunks = view.l_pad / SCORE_LC;
-        let art = Arc::new(format!("cls_fwd_{SCORE_LC}"));
         let emb_sh = Arc::new(emb.to_vec());
         let (tx, rx) = channel::<(usize, Result<Vec<f32>>)>();
         // windowed submission: ~2 in-flight chunk weight clones per worker
         let submit = |chunk: usize| -> Result<()> {
             let w = view.w[chunk * SCORE_LC * view.d..(chunk + 1) * SCORE_LC * view.d].to_vec();
-            let art = Arc::clone(&art);
             let emb = Arc::clone(&emb_sh);
             let tx = tx.clone();
             pool.submit(
                 chunk % pool.workers(),
                 Box::new(move |rt| {
                     let r = rt
-                        .exec(&art, &[Arg::F32(&w), Arg::F32(&emb)])
+                        .exec(CLS_FWD_ART, &[Arg::F32(&w), Arg::F32(&emb)])
                         .and_then(|outs| to_vec_f32(&outs[0]));
                     let _ = tx.send((chunk, r));
                 }),
@@ -241,4 +254,166 @@ impl ChunkScanner {
         debug_assert!(red.is_drained() && red.emitted() == n_chunks);
         Ok(topks)
     }
+
+    /// Strategy dispatcher: the exact full scan, or the two-stage
+    /// shortlist scan (stage 1 selects chunks from the index, stage 2
+    /// fine-scans only those chunks).  Returns the per-row top-k plus the
+    /// number of chunks actually scanned — the `chunks_scanned`
+    /// sublinearity evidence (`Exact` always reports the full chunk
+    /// count).
+    pub fn scan_with(
+        &self,
+        ex: &mut ExecCtx,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+        strategy: &ScanStrategy,
+    ) -> Result<(Vec<TopK>, u64)> {
+        match strategy {
+            ScanStrategy::Exact => {
+                let topks = self.scan(ex, view, emb, batch)?;
+                Ok((topks, (view.l_pad / SCORE_LC) as u64))
+            }
+            ScanStrategy::Shortlist(idx) => {
+                if idx.n_chunks() != view.l_pad / SCORE_LC {
+                    return Err(err_shape!(
+                        "shortlist index covers {} chunks but the view has {}",
+                        idx.n_chunks(),
+                        view.l_pad / SCORE_LC
+                    ));
+                }
+                let chunks = idx.select_chunks(emb, batch)?;
+                let scanned = chunks.len() as u64;
+                let topks = self.scan_subset(ex, view, emb, batch, &chunks)?;
+                Ok((topks, scanned))
+            }
+        }
+    }
+
+    /// Score only the listed chunks (strictly ascending global chunk
+    /// ids).  Fold order equals list order, so an ascending subset folds
+    /// exactly like the full scan restricted to those chunks — the
+    /// shortlist determinism contract.  Pool-aware like `scan`.
+    pub fn scan_subset(
+        &self,
+        ex: &mut ExecCtx,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+        chunks: &[usize],
+    ) -> Result<Vec<TopK>> {
+        match ex.pool {
+            Some(pool) if chunks.len() > 1 => {
+                self.scan_subset_pooled(pool, view, emb, batch, chunks)
+            }
+            _ => self.scan_subset_serial(ex.rt, view, emb, batch, chunks),
+        }
+    }
+
+    /// Serial subset scan on an explicit runtime (the shard executor's
+    /// per-worker entrypoint, like `scan_on` for the exact path).
+    pub fn scan_subset_on(
+        &self,
+        rt: &mut Runtime,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+        chunks: &[usize],
+    ) -> Result<Vec<TopK>> {
+        self.scan_subset_serial(rt, view, emb, batch, chunks)
+    }
+
+    fn scan_subset_serial(
+        &self,
+        rt: &mut Runtime,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+        chunks: &[usize],
+    ) -> Result<Vec<TopK>> {
+        view.validate()?;
+        view.validate_emb(emb, batch)?;
+        validate_chunks(view, chunks)?;
+        let mut topks: Vec<TopK> = (0..batch).map(|_| TopK::new(self.k)).collect();
+        for &chunk in chunks {
+            let wslice = &view.w[chunk * SCORE_LC * view.d..(chunk + 1) * SCORE_LC * view.d];
+            let outs = rt.exec(CLS_FWD_ART, &[Arg::F32(wslice), Arg::F32(emb)])?;
+            let logits = to_vec_f32(&outs[0])?;
+            fold_chunk(&mut topks, view, chunk, &logits);
+        }
+        Ok(topks)
+    }
+
+    /// Pooled subset scan.  The `OrderedReducer` needs dense indices from
+    /// 0, so jobs are keyed by *position in the selection*, not by global
+    /// chunk id; the fold maps each position back to its chunk, keeping
+    /// fold order == selection order == ascending chunk order.
+    fn scan_subset_pooled(
+        &self,
+        pool: &RuntimePool,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+        chunks: &[usize],
+    ) -> Result<Vec<TopK>> {
+        view.validate()?;
+        view.validate_emb(emb, batch)?;
+        validate_chunks(view, chunks)?;
+        let n_sel = chunks.len();
+        let emb_sh = Arc::new(emb.to_vec());
+        let (tx, rx) = channel::<(usize, Result<Vec<f32>>)>();
+        let submit = |pos: usize| -> Result<()> {
+            let chunk = chunks[pos];
+            let w = view.w[chunk * SCORE_LC * view.d..(chunk + 1) * SCORE_LC * view.d].to_vec();
+            let emb = Arc::clone(&emb_sh);
+            let tx = tx.clone();
+            pool.submit(
+                pos % pool.workers(),
+                Box::new(move |rt| {
+                    let r = rt
+                        .exec(CLS_FWD_ART, &[Arg::F32(&w), Arg::F32(&emb)])
+                        .and_then(|outs| to_vec_f32(&outs[0]));
+                    let _ = tx.send((pos, r));
+                }),
+            )
+        };
+        let window = (2 * pool.workers()).clamp(1, n_sel);
+        let mut next = 0;
+        while next < window {
+            submit(next)?;
+            next += 1;
+        }
+        let mut topks: Vec<TopK> = (0..batch).map(|_| TopK::new(self.k)).collect();
+        let mut red = OrderedReducer::new();
+        for _ in 0..n_sel {
+            let (pos, res) = rx
+                .recv()
+                .map_err(|_| err_runtime!("runtime pool workers hung up mid-scan"))?;
+            if next < n_sel {
+                submit(next)?;
+                next += 1;
+            }
+            let logits = res?;
+            red.push(pos, logits, |p, l| fold_chunk(&mut topks, view, chunks[p], &l));
+        }
+        debug_assert!(red.is_drained() && red.emitted() == n_sel);
+        Ok(topks)
+    }
+}
+
+/// Subset-scan precondition: chunk ids strictly ascending and in range.
+fn validate_chunks(view: &ClassifierView, chunks: &[usize]) -> Result<()> {
+    let n_chunks = view.l_pad / SCORE_LC;
+    for (i, &c) in chunks.iter().enumerate() {
+        if c >= n_chunks {
+            return Err(err_shape!("subset chunk {c} out of range (view has {n_chunks})"));
+        }
+        if i > 0 && chunks[i - 1] >= c {
+            return Err(err_shape!(
+                "subset chunks must be strictly ascending (…{}, {c}…)",
+                chunks[i - 1]
+            ));
+        }
+    }
+    Ok(())
 }

@@ -1,0 +1,491 @@
+//! Two-stage shortlist index: cluster the scoring chunks, score the
+//! small [C, d] centroid matrix first, then fine-scan only the probed
+//! clusters' chunks through the existing `cls_fwd` path.
+//!
+//! The index is built once at checkpoint-load time and is **chunk
+//! granular**: clusters group whole `SCORE_LC`-wide scoring chunks (each
+//! summarized by its mean weight row), never individual labels, so the
+//! fine scan reuses the lowered `cls_fwd_*` artifact unchanged and a
+//! shortlisted scan is exactly the full scan restricted to a subset of
+//! chunks.  Stage 1 (centroid scoring) is host-side f32 arithmetic — no
+//! new lowered kernels.
+//!
+//! Determinism contract (the `serve.shortlist.*` analogue of the packing
+//! digest): clustering is seeded k-means over the chunk means with a
+//! fixed iteration count, plain sequential f32 accumulation, and
+//! index-ascending tie-breaks everywhere — same seed + same weights →
+//! same clustering → same shortlist → same scores, pinned by `digest()`
+//! and `rust/tests/shortlist_recall.rs`.  Cluster probing unions the
+//! top-`probe` clusters across the batch's rows (the `cls_fwd` artifact
+//! scores the whole batch against a chunk, so the chunk set must be
+//! per-batch, not per-row), and the union is returned in ascending chunk
+//! order so the fine scan folds chunks in the exact order the full scan
+//! would.
+
+use std::sync::Arc;
+
+use crate::err_config;
+use crate::error::Result;
+use crate::memmodel;
+
+use super::scanner::{ClassifierView, SCORE_LC};
+
+/// Fixed k-means iteration count: enough to converge on chunk-mean
+/// geometries, small enough that index build stays negligible next to
+/// checkpoint load.  A constant (not a tolerance loop) so the iteration
+/// count can never vary with floating-point noise.
+const KMEANS_ITERS: usize = 10;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1_0000_0001_b3;
+
+fn fnv_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// How the shortlist index is built: the resolved `serve.shortlist.*`
+/// keys plus the clustering seed (the checkpoint's training seed, so
+/// "same seed + checkpoint" pins the clustering).
+#[derive(Clone, Copy, Debug)]
+pub struct ShortlistSpec {
+    /// Centroid count C.  0 (or >= the chunk count) selects the cheap
+    /// chunk-identity clustering: every scoring chunk is its own cluster
+    /// and the centroid is the chunk's mean row.
+    pub clusters: usize,
+    /// Clusters probed per batch (clamped to the cluster count at build).
+    pub probe: usize,
+    /// Clustering seed.
+    pub seed: u64,
+}
+
+/// Which scoring path a caller wants: the exact full scan, or the
+/// two-stage shortlist scan through a shared index.
+#[derive(Clone)]
+pub enum ScanStrategy {
+    Exact,
+    Shortlist(Arc<ShortlistIndex>),
+}
+
+impl ScanStrategy {
+    pub fn is_exact(&self) -> bool {
+        matches!(self, ScanStrategy::Exact)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScanStrategy::Exact => "exact",
+            ScanStrategy::Shortlist(_) => "shortlist",
+        }
+    }
+}
+
+/// The built index: C centroids over the chunk means, and each cluster's
+/// member chunks.  Every cluster is non-empty (empty clusters are dropped
+/// at build), so a probe of >= 1 always selects at least one chunk.
+pub struct ShortlistIndex {
+    /// Row-major [clusters, d] centroid matrix (stage 1 operand).
+    centroids: Vec<f32>,
+    /// Member chunks per cluster, ascending; every chunk appears in
+    /// exactly one cluster.
+    cluster_chunks: Vec<Vec<usize>>,
+    d: usize,
+    n_chunks: usize,
+    /// Clusters probed per batch (already clamped to the cluster count).
+    probe: usize,
+}
+
+impl ShortlistIndex {
+    /// Build from a classifier view: summarize each `SCORE_LC`-wide chunk
+    /// by the mean of its real (non-padding) rows, then cluster the
+    /// chunk means.
+    pub fn build(view: &ClassifierView, spec: &ShortlistSpec) -> Result<Self> {
+        let n_chunks = view.l_pad / SCORE_LC;
+        let d = view.d;
+        let mut means = vec![0.0f32; n_chunks * d];
+        for c in 0..n_chunks {
+            let real = view.labels.clamp(c * SCORE_LC, (c + 1) * SCORE_LC) - c * SCORE_LC;
+            if real == 0 {
+                continue; // all-padding tail chunk: zero centroid
+            }
+            let m = &mut means[c * d..(c + 1) * d];
+            for r in 0..real {
+                let row = &view.w[(c * SCORE_LC + r) * d..(c * SCORE_LC + r + 1) * d];
+                for (acc, &v) in m.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+            let inv = 1.0 / real as f32;
+            for acc in m.iter_mut() {
+                *acc *= inv;
+            }
+        }
+        Self::from_chunk_means(means, n_chunks, d, spec)
+    }
+
+    /// Build from precomputed per-chunk mean rows ([n_chunks, d]
+    /// row-major).  This is the geometry-agnostic core: `build` feeds it
+    /// `SCORE_LC`-chunk means, the bench scenario feeds it synthetic
+    /// chunk means over its own (smaller) chunk grid.
+    pub fn from_chunk_means(
+        means: Vec<f32>,
+        n_chunks: usize,
+        d: usize,
+        spec: &ShortlistSpec,
+    ) -> Result<Self> {
+        if n_chunks == 0 || d == 0 {
+            return Err(err_config!(
+                "shortlist index needs n_chunks >= 1 and d >= 1 (got {n_chunks}, {d})"
+            ));
+        }
+        if means.len() != n_chunks * d {
+            return Err(err_config!(
+                "chunk means have {} values, expected {} ({n_chunks} x d={d})",
+                means.len(),
+                n_chunks * d
+            ));
+        }
+        if spec.probe == 0 {
+            return Err(err_config!("`serve.shortlist.probe` must be >= 1"));
+        }
+        let identity = spec.clusters == 0 || spec.clusters >= n_chunks;
+        let (centroids, assign) = if identity {
+            (means, (0..n_chunks).collect::<Vec<usize>>())
+        } else {
+            kmeans(&means, n_chunks, d, spec.clusters, spec.seed)
+        };
+        // group members; drop empty clusters (keeps "probe >= 1 selects
+        // at least one chunk" unconditional)
+        let n_cent = centroids.len() / d;
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_cent];
+        for (chunk, &c) in assign.iter().enumerate() {
+            members[c].push(chunk);
+        }
+        let mut kept_centroids = Vec::new();
+        let mut cluster_chunks = Vec::new();
+        for (c, m) in members.into_iter().enumerate() {
+            if m.is_empty() {
+                continue;
+            }
+            kept_centroids.extend_from_slice(&centroids[c * d..(c + 1) * d]);
+            cluster_chunks.push(m);
+        }
+        let probe = spec.probe.min(cluster_chunks.len());
+        Ok(ShortlistIndex {
+            centroids: kept_centroids,
+            cluster_chunks,
+            d,
+            n_chunks,
+            probe,
+        })
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.cluster_chunks.len()
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n_chunks
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn probe(&self) -> usize {
+        self.probe
+    }
+
+    /// Cluster `c`'s member chunks, ascending.
+    pub fn cluster_members(&self, c: usize) -> &[usize] {
+        &self.cluster_chunks[c]
+    }
+
+    /// Stage 1: score every centroid against every row of `emb`
+    /// ([batch, d] row-major), take each row's top-`probe` clusters
+    /// (score-descending, ties to the lower cluster index), and return
+    /// the union of their member chunks in ascending chunk order.
+    pub fn select_chunks(&self, emb: &[f32], batch: usize) -> Result<Vec<usize>> {
+        if emb.len() != batch * self.d {
+            return Err(err_config!(
+                "shortlist embedding batch has {} values, expected {} ({batch} x d={})",
+                emb.len(),
+                batch * self.d,
+                self.d
+            ));
+        }
+        let n_cent = self.cluster_chunks.len();
+        let mut picked = vec![false; n_cent];
+        let mut scores = vec![0.0f32; n_cent];
+        let mut order: Vec<usize> = Vec::with_capacity(n_cent);
+        for row in emb.chunks_exact(self.d) {
+            for c in 0..n_cent {
+                let cent = &self.centroids[c * self.d..(c + 1) * self.d];
+                let mut dot = 0.0f32;
+                for (a, b) in row.iter().zip(cent) {
+                    dot += a * b;
+                }
+                scores[c] = dot;
+            }
+            order.clear();
+            order.extend(0..n_cent);
+            order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+            for &c in order.iter().take(self.probe) {
+                picked[c] = true;
+            }
+        }
+        let mut chunk_set = vec![false; self.n_chunks];
+        for (c, &hit) in picked.iter().enumerate() {
+            if hit {
+                for &chunk in &self.cluster_chunks[c] {
+                    chunk_set[chunk] = true;
+                }
+            }
+        }
+        Ok((0..self.n_chunks).filter(|&c| chunk_set[c]).collect())
+    }
+
+    /// Order-sensitive FNV-1a over the whole index (geometry, centroid
+    /// bits, assignments): the clustering-determinism witness — same seed
+    /// + same weights → same digest.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for v in [
+            self.n_chunks as u64,
+            self.d as u64,
+            self.probe as u64,
+            self.cluster_chunks.len() as u64,
+        ] {
+            h = fnv_fold(h, &v.to_le_bytes());
+        }
+        for &c in &self.centroids {
+            h = fnv_fold(h, &c.to_bits().to_le_bytes());
+        }
+        for chunks in &self.cluster_chunks {
+            h = fnv_fold(h, &(chunks.len() as u64).to_le_bytes());
+            for &c in chunks {
+                h = fnv_fold(h, &(c as u64).to_le_bytes());
+            }
+        }
+        h
+    }
+
+    /// Resident bytes of the index (the `memmodel` accounting: centroid
+    /// matrix + chunk→cluster assignment).
+    pub fn index_bytes(&self) -> u64 {
+        memmodel::shortlist_index_bytes(self.clusters(), self.d, self.n_chunks) as u64
+    }
+}
+
+/// Seeded k-means over the chunk means: deterministic init (distinct
+/// seeded picks, sorted), fixed iteration count, nearest-centroid by
+/// squared L2 with ties to the lower centroid index, empty clusters keep
+/// their previous centroid.  Returns the [C, d] centroids and the
+/// per-chunk assignment.
+fn kmeans(
+    means: &[f32],
+    n_chunks: usize,
+    d: usize,
+    clusters: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<usize>) {
+    debug_assert!(clusters >= 1 && clusters < n_chunks);
+    let mut init = crate::util::Rng::new(seed).distinct(clusters, n_chunks);
+    init.sort_unstable();
+    let mut centroids: Vec<f32> = Vec::with_capacity(clusters * d);
+    for &c in &init {
+        centroids.extend_from_slice(&means[c * d..(c + 1) * d]);
+    }
+    let mut assign = vec![0usize; n_chunks];
+    for _ in 0..KMEANS_ITERS {
+        // assignment: nearest centroid, ties to the lower index (strict
+        // `<` keeps the first minimum)
+        for (chunk, a) in assign.iter_mut().enumerate() {
+            let row = &means[chunk * d..(chunk + 1) * d];
+            let mut best = 0usize;
+            let mut best_d2 = f32::INFINITY;
+            for c in 0..clusters {
+                let cent = &centroids[c * d..(c + 1) * d];
+                let mut d2 = 0.0f32;
+                for (x, y) in row.iter().zip(cent) {
+                    let diff = x - y;
+                    d2 += diff * diff;
+                }
+                if d2 < best_d2 {
+                    best_d2 = d2;
+                    best = c;
+                }
+            }
+            *a = best;
+        }
+        // update: mean of members in ascending chunk order; an empty
+        // cluster keeps its previous centroid
+        for c in 0..clusters {
+            let mut sum = vec![0.0f32; d];
+            let mut count = 0usize;
+            for (chunk, &a) in assign.iter().enumerate() {
+                if a == c {
+                    for (s, &v) in sum.iter_mut().zip(&means[chunk * d..(chunk + 1) * d]) {
+                        *s += v;
+                    }
+                    count += 1;
+                }
+            }
+            if count > 0 {
+                let inv = 1.0 / count as f32;
+                for (dst, s) in centroids[c * d..(c + 1) * d].iter_mut().zip(sum) {
+                    *dst = s * inv;
+                }
+            }
+        }
+    }
+    (centroids, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(clusters: usize, probe: usize, seed: u64) -> ShortlistSpec {
+        ShortlistSpec { clusters, probe, seed }
+    }
+
+    /// Four well-separated chunk means on the axes of a d=4 space.
+    fn axis_means() -> (Vec<f32>, usize, usize) {
+        let (n, d) = (4usize, 4usize);
+        let mut m = vec![0.0f32; n * d];
+        for c in 0..n {
+            m[c * d + c] = 1.0;
+        }
+        (m, n, d)
+    }
+
+    #[test]
+    fn identity_clustering_maps_each_chunk_to_itself() {
+        let (m, n, d) = axis_means();
+        for clusters in [0, n, n + 3] {
+            let idx = ShortlistIndex::from_chunk_means(m.clone(), n, d, &spec(clusters, 2, 7))
+                .unwrap();
+            assert_eq!(idx.clusters(), n);
+            for c in 0..n {
+                assert_eq!(idx.cluster_members(c), &[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn every_chunk_lands_in_exactly_one_nonempty_cluster() {
+        // pseudo-random means, a k-means C < n_chunks
+        let (n, d) = (12usize, 3usize);
+        let mut rng = crate::util::Rng::new(5);
+        let means: Vec<f32> = (0..n * d).map(|_| rng.uniform_f32() - 0.5).collect();
+        let idx = ShortlistIndex::from_chunk_means(means, n, d, &spec(4, 1, 11)).unwrap();
+        assert!(idx.clusters() >= 1 && idx.clusters() <= 4);
+        let mut seen = vec![0usize; n];
+        for c in 0..idx.clusters() {
+            assert!(!idx.cluster_members(c).is_empty(), "empty clusters are dropped");
+            for &chunk in idx.cluster_members(c) {
+                seen[chunk] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1), "partition: {seen:?}");
+    }
+
+    #[test]
+    fn same_seed_same_clustering_digest() {
+        let (n, d) = (16usize, 4usize);
+        let mut rng = crate::util::Rng::new(9);
+        let means: Vec<f32> = (0..n * d).map(|_| rng.uniform_f32()).collect();
+        let a = ShortlistIndex::from_chunk_means(means.clone(), n, d, &spec(5, 2, 21)).unwrap();
+        let b = ShortlistIndex::from_chunk_means(means.clone(), n, d, &spec(5, 2, 21)).unwrap();
+        assert_eq!(a.digest(), b.digest(), "same seed, same clustering");
+        // probe is part of the digest (it changes the shortlist)
+        let c = ShortlistIndex::from_chunk_means(means, n, d, &spec(5, 1, 21)).unwrap();
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn kmeans_groups_the_separated_axes() {
+        // 8 chunks = 2 copies of each axis mean: C=4 must pair them up
+        let d = 4usize;
+        let n = 8usize;
+        let mut m = vec![0.0f32; n * d];
+        for c in 0..n {
+            m[c * d + c % 4] = 1.0;
+        }
+        let idx = ShortlistIndex::from_chunk_means(m, n, d, &spec(4, 1, 3)).unwrap();
+        assert_eq!(idx.clusters(), 4);
+        for c in 0..4 {
+            let mem = idx.cluster_members(c);
+            assert_eq!(mem.len(), 2, "axis pair: {mem:?}");
+            assert_eq!(mem[0] % 4, mem[1] % 4, "same axis: {mem:?}");
+        }
+    }
+
+    #[test]
+    fn select_unions_probed_clusters_in_ascending_chunk_order() {
+        let (m, n, d) = axis_means();
+        let idx = ShortlistIndex::from_chunk_means(m, n, d, &spec(0, 1, 0)).unwrap();
+        // two rows pointing at clusters 2 and 0
+        let mut emb = vec![0.0f32; 2 * d];
+        emb[2] = 1.0; // row 0 -> axis 2
+        emb[d] = 1.0; // row 1 -> axis 0
+        let sel = idx.select_chunks(&emb, 2).unwrap();
+        assert_eq!(sel, vec![0, 2], "union, ascending");
+        // probe = clusters selects everything
+        let full = ShortlistIndex::from_chunk_means(axis_means().0, n, d, &spec(0, n, 0))
+            .unwrap();
+        assert_eq!(full.select_chunks(&emb, 2).unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn select_breaks_score_ties_toward_the_lower_cluster() {
+        let (m, n, d) = axis_means();
+        let idx = ShortlistIndex::from_chunk_means(m, n, d, &spec(0, 2, 0)).unwrap();
+        // a row aligned with axis 3: top-1 is cluster 3, then every other
+        // cluster ties at 0.0 — the lower index (0) must win the 2nd slot
+        let mut emb = vec![0.0f32; d];
+        emb[3] = 1.0;
+        assert_eq!(idx.select_chunks(&emb, 1).unwrap(), vec![0, 3]);
+    }
+
+    #[test]
+    fn probe_clamps_to_the_cluster_count() {
+        let (m, n, d) = axis_means();
+        let idx = ShortlistIndex::from_chunk_means(m, n, d, &spec(0, 99, 0)).unwrap();
+        assert_eq!(idx.probe(), n);
+        assert!(
+            ShortlistIndex::from_chunk_means(axis_means().0, n, d, &spec(0, 0, 0)).is_err(),
+            "probe 0 is a config error"
+        );
+    }
+
+    #[test]
+    fn build_summarizes_real_rows_only() {
+        // 2 chunks, constant rows per chunk; labels end mid-chunk-1 so the
+        // padding rows must not dilute chunk 1's mean
+        let d = 2usize;
+        let l_pad = 2 * SCORE_LC;
+        let labels = SCORE_LC + 10;
+        let mut w = vec![0.0f32; l_pad * d];
+        for r in 0..labels {
+            let v = if r < SCORE_LC { 1.5 } else { -2.0 };
+            w[r * d] = v;
+            w[r * d + 1] = v;
+        }
+        let order: Vec<u32> = (0..labels as u32).collect();
+        let view = ClassifierView { w: &w, d, labels, l_pad, label_order: &order };
+        let idx = ShortlistIndex::build(&view, &spec(0, 1, 0)).unwrap();
+        assert_eq!(idx.n_chunks(), 2);
+        assert_eq!(idx.clusters(), 2);
+        assert_eq!(idx.centroids[0], 1.5);
+        assert_eq!(idx.centroids[2], -2.0, "padding rows excluded from the mean");
+        assert_eq!(
+            idx.index_bytes(),
+            (2 * d * 4 + 2 * 4) as u64,
+            "centroids + assignment accounting"
+        );
+    }
+}

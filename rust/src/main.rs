@@ -29,7 +29,7 @@ use anyhow::{anyhow, bail, Result};
 use elmo::cli::{self, flag, parse_flags, reject_unknown, require, Flags};
 use elmo::coordinator::{evaluate, Precision, TrainConfig, Trainer};
 use elmo::data::{self, SEQ_LEN, VOCAB};
-use elmo::infer::{Checkpoint, MicroBatcher, Predictor, SCORE_LC};
+use elmo::infer::{Checkpoint, MicroBatcher, Predictor, ShortlistSpec, SCORE_LC};
 use elmo::memmodel::{self, MemParams, Method};
 use elmo::metrics::TopK;
 use elmo::serve::{
@@ -202,7 +202,24 @@ fn cmd_predict(f: &Flags) -> Result<()> {
     let mut sess = Session::builder().artifacts(art.as_str()).workers(spec.workers).build()?;
     // loads the checkpoint and precompiles Predictor::required_kernels()
     // on the runtime and every pool worker
-    let p = sess.predictor(&ckpt_path)?;
+    let mut p = sess.predictor(&ckpt_path)?;
+    if spec.serve_shortlist_enabled {
+        // seeded by the checkpoint's own training seed: the same
+        // checkpoint always clusters the same way (no extra config key)
+        let idx = p.enable_shortlist(&ShortlistSpec {
+            clusters: spec.serve_shortlist_clusters,
+            probe: spec.serve_shortlist_probe,
+            seed: p.seed(),
+        })?;
+        println!(
+            "# shortlist: {} cluster(s) over {} chunks, probe {}, index {} B, digest {:016x}",
+            idx.clusters(),
+            idx.n_chunks(),
+            idx.probe(),
+            idx.index_bytes(),
+            idx.digest()
+        );
+    }
     // the checkpoint's stored profile is the default; an explicit
     // `profile` (flag or config file) overrides it
     let profile_name = if spec.is_explicit("profile") {
@@ -329,11 +346,29 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         bail!("--queries must be positive");
     }
     let mut sess = Session::builder().artifacts(art.as_str()).workers(spec.workers).build()?;
-    let p = sess.predictor(&ckpt_path)?;
+    let mut p = sess.predictor(&ckpt_path)?;
     let width = sess.config().batch;
     spec.validate_serve(width)?;
+    if spec.serve_shortlist_enabled {
+        // seeded by the checkpoint's own training seed, so the same
+        // checkpoint always builds the same clustering (and digest)
+        let idx = p.enable_shortlist(&ShortlistSpec {
+            clusters: spec.serve_shortlist_clusters,
+            probe: spec.serve_shortlist_probe,
+            seed: p.seed(),
+        })?;
+        println!(
+            "# shortlist: {} cluster(s) over {} chunks, probe {}, index {} B, digest {:016x}",
+            idx.clusters(),
+            idx.n_chunks(),
+            idx.probe(),
+            idx.index_bytes(),
+            idx.digest()
+        );
+    }
     let plan = ShardPlan::new(p.store().l_pad / SCORE_LC, spec.serve_shards)?;
     let mut shard_exec = ShardExecutor::new(plan, k);
+    shard_exec.set_strategy(p.strategy());
     if spec.serve_shards > 1 && sess.workers() > 1 {
         // snapshot the read-only shard weights once: the pooled per-batch
         // hot loop ships Arc clones to workers instead of copying weight
@@ -410,6 +445,7 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         &mut out,
     )?;
     server.stats.shard_chunks = shard_exec.shard_chunks.clone();
+    server.stats.chunks_scanned = shard_exec.chunks_scanned;
 
     let s = &server.stats;
     if !s.reconciles() {
@@ -450,6 +486,26 @@ fn cmd_serve(f: &Flags) -> Result<()> {
             .map(|u| format!("{:.0}%", 100.0 * u))
             .collect();
         println!("shard utilization (chunk execs): [{}]", util.join(", "));
+    }
+    if let Some(idx) = p.shortlist() {
+        // sublinearity evidence: chunk scans actually run vs. what the
+        // exact scan would have run, and the byte tradeoff either way
+        let exact = s.core.batches * shard_exec.plan().n_chunks() as u64;
+        let avoided = exact.saturating_sub(s.chunks_scanned);
+        println!(
+            "shortlist: {} of {} chunk scans ({} avoided = {} GiB of weights unread; index {} B)",
+            s.chunks_scanned,
+            exact,
+            avoided,
+            gib(memmodel::shortlist_bytes_avoided(SCORE_LC, p.store().d, avoided)),
+            idx.index_bytes()
+        );
+    } else {
+        debug_assert_eq!(
+            s.chunks_scanned,
+            s.core.batches * shard_exec.plan().n_chunks() as u64,
+            "exact serving must scan every chunk of every batch"
+        );
     }
     for pred in out.iter().take(3) {
         let labels: Vec<String> = pred

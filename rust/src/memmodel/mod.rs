@@ -103,6 +103,26 @@ pub fn serve_shard_bytes(
     pinned + inflight * per_job + batch * store.d * 4 // + shared embedding copy
 }
 
+/// Host bytes the two-stage shortlist index (`infer::ShortlistIndex`)
+/// keeps resident: the [clusters, d] f32 centroid matrix plus one cluster
+/// assignment per scoring chunk (u32-sized in the accounting — the
+/// member lists tile the chunk space exactly once, whatever the cluster
+/// count).  This is the memory *cost* side of the shortlist tradeoff;
+/// `shortlist_bytes_avoided` is the per-batch benefit.
+pub fn shortlist_index_bytes(clusters: usize, d: usize, n_chunks: usize) -> usize {
+    clusters * d * 4 + n_chunks * 4
+}
+
+/// Classifier-weight bytes a shortlist scan leaves untouched: every chunk
+/// the stage-1 selection skips is `SCORE_LC * d` f32 rows the fine scan
+/// never ships to a runtime.  Paired with `shortlist_index_bytes`, this is
+/// the centroid-storage-vs-chunks-avoided accounting the serving report
+/// prints (`chunks_avoided` comes from the `chunks_scanned` counter:
+/// exact-equivalent scans minus actual scans).
+pub fn shortlist_bytes_avoided(chunk_rows: usize, d: usize, chunks_avoided: u64) -> u64 {
+    chunks_avoided * (chunk_rows * d * 4) as u64
+}
+
 /// Precision/method variants the model knows how to schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -614,6 +634,21 @@ mod tests {
         let narrow = serve_shard_bytes(&store, 16, 5, 8, 2);
         let wide = serve_shard_bytes(&store, 16, 5, 8, 8);
         assert!(narrow < wide, "window widens with workers until every shard is in flight");
+    }
+
+    #[test]
+    fn shortlist_accounting_balances_cost_against_avoided_bytes() {
+        // 4 clusters over 16 chunks at d=8: 4*8 f32 centroids + 16 u32
+        assert_eq!(shortlist_index_bytes(4, 8, 16), 4 * 8 * 4 + 16 * 4);
+        // identity clustering still charges the assignment table
+        assert_eq!(shortlist_index_bytes(16, 8, 16), 16 * 8 * 4 + 16 * 4);
+        assert_eq!(shortlist_bytes_avoided(1024, 8, 0), 0, "exact scans avoid nothing");
+        // skipping 3 chunks of [1024, 8] f32 rows
+        assert_eq!(shortlist_bytes_avoided(1024, 8, 3), 3 * 1024 * 8 * 4);
+        // the tradeoff the index exists to win: at any real geometry one
+        // avoided chunk already outweighs the whole index
+        let idx = shortlist_index_bytes(64, 768, 2048) as u64;
+        assert!(shortlist_bytes_avoided(1024, 768, 1) > idx);
     }
 
     #[test]

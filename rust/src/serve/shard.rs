@@ -34,6 +34,7 @@ use crate::error::Result;
 use crate::{err_config, err_runtime, err_shape};
 
 use crate::infer::scanner::{ChunkScanner, ClassifierView, SCORE_LC};
+use crate::infer::shortlist::ScanStrategy;
 use crate::metrics::TopK;
 use crate::runtime::{ExecCtx, Runtime, RuntimePool};
 
@@ -146,12 +147,20 @@ impl PinnedShard {
 pub struct ShardExecutor {
     plan: ShardPlan,
     scanner: ChunkScanner,
+    /// Exact full scan (default) or the two-stage shortlist: under a
+    /// shortlist, stage 1 selects a global chunk set per batch and each
+    /// shard fine-scans only its own shortlisted chunks.
+    strategy: ScanStrategy,
     /// Per-shard weight snapshots (`pin`); while empty (unpinned),
     /// `score` clones each shard's slice per call instead.
     pinned: Vec<PinnedShard>,
     /// Chunk executions per shard (utilization accounting; a balanced
     /// plan keeps these within one chunk of each other per batch).
     pub shard_chunks: Vec<u64>,
+    /// Total chunk executions across all shards — the `chunks_scanned`
+    /// counter the serving stats report (exact mode scans every chunk
+    /// per batch; shortlist mode strictly fewer).
+    pub chunks_scanned: u64,
 }
 
 impl ShardExecutor {
@@ -160,8 +169,10 @@ impl ShardExecutor {
         ShardExecutor {
             plan,
             scanner: ChunkScanner::new(k),
+            strategy: ScanStrategy::Exact,
             pinned: Vec::new(),
             shard_chunks: vec![0; shards],
+            chunks_scanned: 0,
         }
     }
 
@@ -171,6 +182,15 @@ impl ShardExecutor {
 
     pub fn k(&self) -> usize {
         self.scanner.k
+    }
+
+    /// Select the scan strategy (`ScanStrategy::Exact` is the default).
+    pub fn set_strategy(&mut self, strategy: ScanStrategy) {
+        self.strategy = strategy;
+    }
+
+    pub fn strategy(&self) -> &ScanStrategy {
+        &self.strategy
     }
 
     /// Snapshot every shard's weight slice + permutation slice once, so
@@ -224,8 +244,15 @@ impl ShardExecutor {
     }
 
     /// Score one [batch, d] embedding block across every shard and merge.
-    /// Bit-identical to `ChunkScanner::scan` over the unsharded view for
-    /// any shard count (scores and label order; see `merge`).
+    /// Under the exact strategy this is bit-identical to
+    /// `ChunkScanner::scan` over the unsharded view for any shard count
+    /// (scores and label order; see `merge`).  Under a shortlist, stage 1
+    /// runs once globally (the selection must be per-batch, and identical
+    /// across shards, for the merged result to equal the unsharded
+    /// shortlist scan), then each shard scans the selected chunks that
+    /// fall in its own range — `merge_rows` composes unchanged because
+    /// shard results still carry global label ids in ascending shard
+    /// order.
     pub fn score(
         &mut self,
         ex: &mut ExecCtx,
@@ -235,19 +262,99 @@ impl ShardExecutor {
     ) -> Result<Vec<TopK>> {
         self.check_geometry(view)?;
         let shards = self.plan.shards();
-        let per_shard = match ex.pool {
-            Some(pool) if shards > 1 => self.score_pooled(pool, view, emb, batch)?,
-            // a single shard is the plain predict path: delegate to the
-            // scanner, which fans chunks to the pool when one exists
-            _ if shards == 1 => {
-                vec![self.scanner.scan(ex, &self.shard_view(view, 0), emb, batch)?]
+        let strategy = self.strategy.clone();
+        let per_shard = match &strategy {
+            ScanStrategy::Shortlist(idx) => {
+                if idx.n_chunks() != self.plan.n_chunks() {
+                    return Err(err_shape!(
+                        "shortlist index covers {} chunks but the shard plan has {}",
+                        idx.n_chunks(),
+                        self.plan.n_chunks()
+                    ));
+                }
+                let selection = idx.select_chunks(emb, batch)?;
+                let local = self.split_selection(&selection);
+                for s in 0..shards {
+                    self.shard_chunks[s] += local[s].len() as u64;
+                }
+                self.chunks_scanned += selection.len() as u64;
+                self.score_shortlist(ex, view, emb, batch, &local)?
             }
-            _ => self.score_serial(ex.rt, view, emb, batch)?,
+            ScanStrategy::Exact => {
+                let per_shard = match ex.pool {
+                    Some(pool) if shards > 1 => self.score_pooled(pool, view, emb, batch)?,
+                    // a single shard is the plain predict path: delegate to
+                    // the scanner, which fans chunks to the pool when one
+                    // exists
+                    _ if shards == 1 => {
+                        vec![self.scanner.scan(ex, &self.shard_view(view, 0), emb, batch)?]
+                    }
+                    _ => self.score_serial(ex.rt, view, emb, batch)?,
+                };
+                for s in 0..shards {
+                    self.shard_chunks[s] += self.plan.chunk_range(s).len() as u64;
+                }
+                self.chunks_scanned += self.plan.n_chunks() as u64;
+                per_shard
+            }
         };
-        for s in 0..shards {
-            self.shard_chunks[s] += self.plan.chunk_range(s).len() as u64;
-        }
         merge_rows(self.scanner.k, &per_shard)
+    }
+
+    /// Partition an ascending global chunk selection into per-shard
+    /// shard-local chunk lists (`local[s]` holds selection ∩ shard s's
+    /// range, rebased to the shard's own chunk space).
+    fn split_selection(&self, selection: &[usize]) -> Vec<Vec<usize>> {
+        let mut local: Vec<Vec<usize>> =
+            (0..self.plan.shards()).map(|_| Vec::new()).collect();
+        let mut s = 0;
+        for &c in selection {
+            while c >= self.plan.chunk_range(s).end {
+                s += 1;
+            }
+            local[s].push(c - self.plan.chunk_range(s).start);
+        }
+        local
+    }
+
+    /// Stage-2 fine scan under a shortlist: every shard scans only its
+    /// shortlisted chunks.  Shards whose local list is empty contribute
+    /// empty top-k rows (merge ignores them) without touching a runtime.
+    fn score_shortlist(
+        &self,
+        ex: &mut ExecCtx,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+        local: &[Vec<usize>],
+    ) -> Result<Vec<Vec<TopK>>> {
+        let shards = self.plan.shards();
+        if shards == 1 {
+            return Ok(vec![self.scanner.scan_subset(
+                ex,
+                &self.shard_view(view, 0),
+                emb,
+                batch,
+                &local[0],
+            )?]);
+        }
+        match ex.pool {
+            Some(pool) => self.score_shortlist_pooled(pool, view, emb, batch, local),
+            None => {
+                let mut per_shard = Vec::with_capacity(shards);
+                for s in 0..shards {
+                    let shard_view = self.shard_view(view, s);
+                    per_shard.push(self.scanner.scan_subset_on(
+                        ex.rt,
+                        &shard_view,
+                        emb,
+                        batch,
+                        &local[s],
+                    )?);
+                }
+                Ok(per_shard)
+            }
+        }
     }
 
     /// Pool-less fallback: every shard scans serially on the session
@@ -332,6 +439,89 @@ impl ShardExecutor {
                 .recv()
                 .map_err(|_| err_runtime!("runtime pool workers hung up mid-shard-scan"))?;
             if next < shards {
+                submit(next)?;
+                next += 1;
+            }
+            per_shard[s] = Some(res?);
+        }
+        Ok(per_shard
+            .into_iter()
+            .map(|r| r.expect("every shard reported exactly once"))
+            .collect())
+    }
+
+    /// Pooled stage-2 fine scan: like `score_pooled`, but each shard job
+    /// runs the subset scan over its shard-local shortlist.  Shards with
+    /// an empty shortlist are filled with empty top-k rows up front and
+    /// never submitted.
+    fn score_shortlist_pooled(
+        &self,
+        pool: &RuntimePool,
+        view: &ClassifierView,
+        emb: &[f32],
+        batch: usize,
+        local: &[Vec<usize>],
+    ) -> Result<Vec<Vec<TopK>>> {
+        let shards = self.plan.shards();
+        let k = self.scanner.k;
+        let plan = &self.plan;
+        let pinned = &self.pinned;
+        let emb_sh = Arc::new(emb.to_vec());
+        let (tx, rx) = channel::<(usize, Result<Vec<TopK>>)>();
+        let active: Vec<usize> = (0..shards).filter(|&s| !local[s].is_empty()).collect();
+        let submit = |i: usize| -> Result<()> {
+            let s = active[i];
+            let sel = local[s].clone();
+            let (w, order, d, labels, l_pad) = match pinned.get(s) {
+                Some(pin) => {
+                    (Arc::clone(&pin.w), Arc::clone(&pin.order), pin.d, pin.labels, pin.l_pad)
+                }
+                None => {
+                    let v = plan.view(view, s);
+                    (
+                        Arc::new(v.w.to_vec()),
+                        Arc::new(v.label_order.to_vec()),
+                        v.d,
+                        v.labels,
+                        v.l_pad,
+                    )
+                }
+            };
+            let emb = Arc::clone(&emb_sh);
+            let tx = tx.clone();
+            pool.submit(
+                s,
+                Box::new(move |rt| {
+                    let view = ClassifierView {
+                        w: w.as_slice(),
+                        d,
+                        labels,
+                        l_pad,
+                        label_order: order.as_slice(),
+                    };
+                    let r = ChunkScanner::new(k).scan_subset_on(rt, &view, &emb, batch, &sel);
+                    let _ = tx.send((s, r));
+                }),
+            )
+        };
+        let window = (2 * pool.workers()).min(active.len());
+        let mut next = 0;
+        while next < window {
+            submit(next)?;
+            next += 1;
+        }
+        let mut per_shard: Vec<Option<Vec<TopK>>> = (0..shards)
+            .map(|s| {
+                local[s]
+                    .is_empty()
+                    .then(|| (0..batch).map(|_| TopK::new(k)).collect())
+            })
+            .collect();
+        for _ in 0..active.len() {
+            let (s, res) = rx
+                .recv()
+                .map_err(|_| err_runtime!("runtime pool workers hung up mid-shard-scan"))?;
+            if next < active.len() {
                 submit(next)?;
                 next += 1;
             }
@@ -469,5 +659,79 @@ mod tests {
         };
         let err = ShardExecutor::new(ShardPlan::new(3, 3).unwrap(), 5).pin(&short).unwrap_err();
         assert!(matches!(err, crate::error::Error::Shape(_)), "{err}");
+    }
+
+    #[test]
+    fn plan_with_shards_equal_to_chunks_gives_singleton_ranges() {
+        let n = 6;
+        let p = ShardPlan::new(n, n).unwrap();
+        assert_eq!(p.shards(), n);
+        for s in 0..n {
+            assert_eq!(p.chunk_range(s), s..s + 1, "shard {s} owns exactly chunk {s}");
+        }
+    }
+
+    #[test]
+    fn plan_with_more_shards_than_chunks_is_a_typed_config_error() {
+        for (n_chunks, shards) in [(1, 2), (4, 5), (7, 100)] {
+            let err = ShardPlan::new(n_chunks, shards).unwrap_err();
+            assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+            assert!(format!("{err}").contains("serve.shards"), "{err}");
+        }
+    }
+
+    #[test]
+    fn plan_covers_every_chunk_exactly_once_for_uneven_divisions() {
+        crate::util::prop_check("shard_plan_exact_cover", 300, |rng| {
+            let n_chunks = 1 + rng.below(64);
+            let shards = 1 + rng.below(n_chunks);
+            let p = ShardPlan::new(n_chunks, shards).map_err(|e| e.to_string())?;
+            let mut covered = vec![0usize; n_chunks];
+            let mut prev_end = 0;
+            for s in 0..p.shards() {
+                let r = p.chunk_range(s);
+                if r.is_empty() {
+                    return Err(format!("shard {s} of {shards} over {n_chunks} is empty"));
+                }
+                if r.start != prev_end {
+                    return Err(format!("shard {s} starts at {} != {prev_end}", r.start));
+                }
+                prev_end = r.end;
+                for c in r {
+                    covered[c] += 1;
+                }
+            }
+            if prev_end != n_chunks || covered.iter().any(|&c| c != 1) {
+                return Err(format!("{n_chunks}x{shards}: cover {covered:?}"));
+            }
+            // balance: range lengths differ by at most one, longer first
+            let lens: Vec<usize> = (0..p.shards()).map(|s| p.chunk_range(s).len()).collect();
+            for w in lens.windows(2) {
+                if w[1] > w[0] || w[0] - w[1] > 1 {
+                    return Err(format!("{n_chunks}x{shards}: lens {lens:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn executor_defaults_to_the_exact_strategy() {
+        let ex = ShardExecutor::new(ShardPlan::new(4, 2).unwrap(), 5);
+        assert!(ex.strategy().is_exact());
+        assert_eq!(ex.chunks_scanned, 0);
+    }
+
+    #[test]
+    fn split_selection_rebases_global_chunks_per_shard() {
+        // plan over 10 chunks as [0..3, 3..6, 6..8, 8..10]
+        let exec = ShardExecutor::new(ShardPlan::new(10, 4).unwrap(), 5);
+        let local = exec.split_selection(&[0, 2, 3, 5, 8, 9]);
+        assert_eq!(local[0], vec![0, 2]);
+        assert_eq!(local[1], vec![0, 2], "globals 3,5 rebase to shard 1's 0,2");
+        assert!(local[2].is_empty(), "no selection in shard 2's range");
+        assert_eq!(local[3], vec![0, 1], "globals 8,9 rebase to shard 3's 0,1");
+        let total: usize = local.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 6, "selection conserved across shards");
     }
 }

@@ -40,6 +40,11 @@ pub struct ServingStats {
     /// Chunk executions per shard (copied from
     /// `ShardExecutor::shard_chunks` by the driver before reporting).
     pub shard_chunks: Vec<u64>,
+    /// Total scoring-chunk executions across all shards (copied from
+    /// `ShardExecutor::chunks_scanned` by the driver).  Exact scans obey
+    /// `chunks_scanned == batches * n_chunks`; a shortlist run reports
+    /// strictly fewer — the sublinearity witness the bench gates on.
+    pub chunks_scanned: u64,
 }
 
 impl Default for ServingStats {
@@ -53,6 +58,7 @@ impl Default for ServingStats {
             packing: Vec::new(),
             packing_digest: FNV_OFFSET,
             shard_chunks: Vec::new(),
+            chunks_scanned: 0,
         }
     }
 }

@@ -24,7 +24,7 @@ use elmo::coordinator::{
     evaluate, evaluate_model, EvalModel, LrSchedule, Precision, TrainConfig, Trainer,
 };
 use elmo::data::{self, Dataset, SEQ_LEN};
-use elmo::infer::{Checkpoint, ClassifierView, Predictor};
+use elmo::infer::{Checkpoint, ClassifierView, Predictor, ScanStrategy};
 use elmo::numerics::{quantize_rne, FP16};
 use elmo::runtime::{to_scalar_f32, to_vec_f32, Arg, Runtime};
 use elmo::store::{BufferSpec, WeightStore};
@@ -563,6 +563,7 @@ fn assert_policy_parity(precision: Precision, chunk: usize, steps: usize) {
             l_pad: leg.l_pad,
             label_order: &leg.label_order,
         },
+        strategy: ScanStrategy::Exact,
     };
     let rep_old = evaluate_model(&mut sess, &m_old, &ds, 96).unwrap();
     assert_eq!(rep_new.p, rep_old.p, "{precision:?}: P@k diverged");

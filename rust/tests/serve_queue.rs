@@ -252,6 +252,13 @@ fn serve_throughput_report_is_byte_identical_across_same_seed_runs() {
             }
         }
     }
+    // ... and the shortlist cells with their sublinearity counters
+    for probe in elmo::bench::SHORTLIST_PROBES {
+        for tail in ["chunks_scanned", "recall_hits", "results_digest"] {
+            let m = format!("sl/p{probe}/{tail}");
+            assert!(a.metric(&m).is_some(), "missing shortlist cell metric {m}");
+        }
+    }
 }
 
 #[test]
@@ -308,6 +315,78 @@ fn serve_throughput_results_are_shard_invariant() {
     assert_eq!(one.shard_staging_bytes, 0, "unsharded serving stages nothing extra");
     assert!(s4.shard_staging_bytes >= s2.shard_staging_bytes);
     assert!(s2.shard_staging_bytes > 0);
+}
+
+#[test]
+fn exact_cells_scan_every_chunk_of_every_batch() {
+    // the reconciliation invariant behind the bench's sublinearity gate:
+    // an exact scan touches all chunks once per batch, so the counter is
+    // fully determined by the batch count — anything else means the
+    // counter (or the scan) is lying
+    use elmo::bench::scenario::SCEN_N_CHUNKS;
+    for rate in elmo::bench::RATES {
+        for burst in elmo::bench::BURSTS {
+            let cell = elmo::bench::run_cell(rate as f64, burst, 1, 42).unwrap();
+            assert_eq!(
+                cell.stats.chunks_scanned,
+                cell.stats.core.batches * SCEN_N_CHUNKS as u64,
+                "r{rate}/b{burst}: exact scan must walk every chunk of every batch"
+            );
+            assert!(cell.stats.chunks_scanned > 0);
+        }
+    }
+}
+
+#[test]
+fn shortlist_cells_scan_strictly_fewer_chunks_than_their_exact_twin() {
+    // the exact twin: same arrivals, same server, full scan
+    let exact = elmo::bench::run_cell(4000.0, 1, 1, 42).unwrap();
+    for probe in elmo::bench::SHORTLIST_PROBES {
+        let sl = elmo::bench::run_shortlist_cell(probe, 42).unwrap();
+        // admission is scan-independent: identical packing decisions
+        assert_eq!(
+            sl.stats.packing_digest(),
+            exact.stats.packing_digest(),
+            "probe={probe}: the shortlist must not change batching"
+        );
+        assert_eq!(sl.stats.core.batches, exact.stats.core.batches);
+        assert_eq!(sl.stats.rejected, 0, "the r4000/b1 corner never rejects");
+        assert!(sl.stats.reconciles(), "probe={probe}: {}", sl.stats.summary());
+        // sublinearity: probe chunks per batch, strictly below the exact
+        // cell's SCEN_N_CHUNKS per batch
+        assert_eq!(sl.stats.chunks_scanned, sl.stats.core.batches * probe as u64);
+        assert!(
+            sl.stats.chunks_scanned < exact.stats.chunks_scanned,
+            "probe={probe}: {} chunk scans is not sublinear vs exact {}",
+            sl.stats.chunks_scanned,
+            exact.stats.chunks_scanned
+        );
+        // recall vs the full-label oracle is perfect by construction (the
+        // oracle's top-k lives in the probed home chunk)
+        assert_eq!(sl.recall_hits, sl.recall_total, "probe={probe}: recall@k < 1.0");
+        assert_eq!(sl.recall_total, sl.completions as u64 * 5);
+        assert!(sl.index_bytes > 0, "the centroid index has a real footprint");
+    }
+}
+
+#[test]
+fn shortlist_results_are_probe_invariant_and_replayable() {
+    // chunk 0 always ranks first in stage 1, and the oracle top-k lives
+    // entirely inside it — so widening the probe adds chunks that never
+    // displace a top-k entry and the fused predictions are bit-identical
+    // across probes (and across same-seed reruns)
+    let p1 = elmo::bench::run_shortlist_cell(1, 42).unwrap();
+    let p1_again = elmo::bench::run_shortlist_cell(1, 42).unwrap();
+    assert_eq!(p1.results_digest, p1_again.results_digest, "same seed must replay");
+    assert_eq!(p1.stats.packing_digest(), p1_again.stats.packing_digest());
+    let p2 = elmo::bench::run_shortlist_cell(2, 42).unwrap();
+    assert_eq!(
+        p1.results_digest, p2.results_digest,
+        "a wider probe may only add never-winning chunks"
+    );
+    // a different arrival seed re-times the run and shows in the packing
+    let other = elmo::bench::run_shortlist_cell(1, 43).unwrap();
+    assert_ne!(p1.stats.packing_digest(), other.stats.packing_digest());
 }
 
 #[test]

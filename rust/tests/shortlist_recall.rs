@@ -1,0 +1,223 @@
+//! Shortlist recall and determinism harness — host-side, no artifacts,
+//! no PJRT, always runs.
+//!
+//! Pins the two contracts the two-stage scanner ships under
+//! (docs/SERVING.md):
+//!
+//! * **Recall**: on a cluster-structured classifier (the regime the
+//!   shortlist is built for — and the regime real XMC classifiers are
+//!   in), the shortlisted top-k must recover >= 0.95 of the exact
+//!   oracle's top-k while scanning a strict subset of the chunks.
+//! * **Determinism**: the same seed builds the same clustering
+//!   (`ShortlistIndex::digest`), which selects the same chunks for the
+//!   same queries; probing every cluster degenerates to the exact scan
+//!   bit for bit.
+//!
+//! Scoring here is a host-side dot-product fold in the scanner's chunk
+//! order — the same push order `ChunkScanner::scan_subset` produces — so
+//! the parity assertions exercise the real tie-breaking semantics
+//! without a runtime.
+
+use elmo::infer::{ClassifierView, ShortlistIndex, ShortlistSpec, SCORE_LC};
+use elmo::metrics::TopK;
+use elmo::store::{BufferSpec, WeightStore};
+use elmo::util::Rng;
+
+const D: usize = 8;
+const N_CHUNKS: usize = 8;
+const K: usize = 5;
+
+/// A cluster-structured store: every row of chunk `c` is the unit
+/// direction `e_{c mod D}` plus small seeded jitter, so each chunk has a
+/// dominant direction and a query near `e_c`'s true top-k lives entirely
+/// inside chunk `c`.  The tail chunk ends mid-chunk to exercise the
+/// real-rows-only mean in `ShortlistIndex::build`.
+fn clustered_store(seed: u64) -> WeightStore {
+    let labels = (N_CHUNKS - 1) * SCORE_LC + 700; // partial tail chunk
+    let order: Vec<u32> = (0..labels as u32).collect();
+    let mut store =
+        WeightStore::new(labels, D, SCORE_LC, order, 0, BufferSpec::default()).unwrap();
+    let mut rng = Rng::new(seed);
+    for row in 0..labels {
+        let c = row / SCORE_LC;
+        for j in 0..D {
+            let base = if j == c % D { 1.0 } else { 0.0 };
+            store.w_mut()[row * D + j] = base + 0.01 * (rng.uniform_f32() - 0.5);
+        }
+    }
+    store
+}
+
+/// Queries aimed at a cycling home chunk, with a little cross-cluster
+/// leakage so stage 1 is doing real work, not matching exact one-hots.
+fn queries(n: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let mut emb = vec![0.0f32; n * D];
+    let mut home = Vec::with_capacity(n);
+    for q in 0..n {
+        let c = rng.below(N_CHUNKS);
+        home.push(c);
+        for j in 0..D {
+            let base = if j == c % D { 1.0 } else { 0.0 };
+            emb[q * D + j] = base + 0.05 * (rng.uniform_f32() - 0.5);
+        }
+    }
+    (emb, home)
+}
+
+/// The exact oracle: fold one query over every real row in row order —
+/// `ChunkScanner::scan`'s push order.
+fn fold_all_rows(view: &ClassifierView, emb_row: &[f32]) -> TopK {
+    let mut tk = TopK::new(K);
+    for row in 0..view.labels {
+        let w = &view.w[row * view.d..(row + 1) * view.d];
+        let dot: f32 = w.iter().zip(emb_row).map(|(a, b)| a * b).sum();
+        tk.push(dot, view.label_order[row]);
+    }
+    tk
+}
+
+/// Fold one query over the given chunks in ascending order, labels in
+/// row order within each chunk — the scanner's push order.
+fn fold_chunks(view: &ClassifierView, emb_row: &[f32], chunks: &[usize]) -> TopK {
+    let mut tk = TopK::new(K);
+    for &c in chunks {
+        let hi = ((c + 1) * SCORE_LC).min(view.labels);
+        for row in c * SCORE_LC..hi {
+            let w = &view.w[row * view.d..(row + 1) * view.d];
+            let dot: f32 = w.iter().zip(emb_row).map(|(a, b)| a * b).sum();
+            tk.push(dot, view.label_order[row]);
+        }
+    }
+    tk
+}
+
+#[test]
+fn shortlist_recall_meets_the_acceptance_floor() {
+    let store = clustered_store(0xC1);
+    let view = ClassifierView::of_store(&store);
+    let idx = ShortlistIndex::build(
+        &view,
+        &ShortlistSpec { clusters: 4, probe: 2, seed: 0x5EED },
+    )
+    .unwrap();
+    assert_eq!(idx.n_chunks(), N_CHUNKS);
+    let (emb, _) = queries(64, 0xBEEF);
+    let mut hits = 0u64;
+    let mut total = 0u64;
+    for q in 0..64 {
+        let row = &emb[q * D..(q + 1) * D];
+        let selection = idx.select_chunks(row, 1).unwrap();
+        assert!(
+            selection.len() < N_CHUNKS,
+            "query {q}: probe 2 of 4 clusters must shortlist a strict subset, \
+             got {selection:?}"
+        );
+        let oracle = fold_all_rows(&view, row);
+        let short = fold_chunks(&view, row, &selection);
+        let want = oracle.labels();
+        hits += short.labels().iter().filter(|l| want.contains(l)).count() as u64;
+        total += K as u64;
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(recall >= 0.95, "recall@{K} {recall:.3} below the 0.95 acceptance floor");
+}
+
+#[test]
+fn same_seed_builds_the_same_clustering_and_shortlist() {
+    let store = clustered_store(0xC1);
+    let view = ClassifierView::of_store(&store);
+    let spec = ShortlistSpec { clusters: 4, probe: 2, seed: 7 };
+    let a = ShortlistIndex::build(&view, &spec).unwrap();
+    let b = ShortlistIndex::build(&view, &spec).unwrap();
+    assert_eq!(a.digest(), b.digest(), "same seed must rebuild the same index");
+    let (emb, _) = queries(32, 0xF00D);
+    assert_eq!(
+        a.select_chunks(&emb, 32).unwrap(),
+        b.select_chunks(&emb, 32).unwrap(),
+        "same index must shortlist the same chunks"
+    );
+    // the digest covers geometry: a different cluster budget is a
+    // different index even over identical weights
+    let c = ShortlistIndex::build(
+        &view,
+        &ShortlistSpec { clusters: 2, probe: 2, seed: 7 },
+    )
+    .unwrap();
+    assert_ne!(a.digest(), c.digest(), "cluster count must fold into the digest");
+}
+
+#[test]
+fn clusters_partition_the_chunks_exactly_once() {
+    let store = clustered_store(0xC1);
+    let view = ClassifierView::of_store(&store);
+    for clusters in [1usize, 3, 4, N_CHUNKS] {
+        let idx = ShortlistIndex::build(
+            &view,
+            &ShortlistSpec { clusters, probe: 1, seed: 11 },
+        )
+        .unwrap();
+        let mut seen = vec![0u32; N_CHUNKS];
+        for c in 0..idx.clusters() {
+            assert!(!idx.cluster_members(c).is_empty(), "empty clusters are dropped");
+            for &ch in idx.cluster_members(c) {
+                seen[ch] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&n| n == 1),
+            "clusters={clusters}: every chunk in exactly one cluster, got {seen:?}"
+        );
+    }
+}
+
+#[test]
+fn probing_every_cluster_reproduces_the_exact_scan_bit_for_bit() {
+    let store = clustered_store(0xC1);
+    let view = ClassifierView::of_store(&store);
+    // probe == clusters: stage 1 selects everything, so the fine scan is
+    // the exact scan — same chunks, same ascending order, same pushes
+    let idx = ShortlistIndex::build(
+        &view,
+        &ShortlistSpec { clusters: 4, probe: 4, seed: 3 },
+    )
+    .unwrap();
+    let (emb, _) = queries(16, 0xCAFE);
+    let all: Vec<usize> = (0..N_CHUNKS).collect();
+    for q in 0..16 {
+        let row = &emb[q * D..(q + 1) * D];
+        let selection = idx.select_chunks(row, 1).unwrap();
+        assert_eq!(selection, all, "probing all clusters must select every chunk");
+        // chunk-decomposed ascending scan == row-order exact scan, ties
+        // and all: the scanner's exact-parity claim
+        let exact = fold_all_rows(&view, row);
+        let short = fold_chunks(&view, row, &selection);
+        assert_eq!(short.items(), exact.items(), "query {q}: full probe diverged");
+    }
+}
+
+#[test]
+fn identity_clustering_shortlists_single_chunks() {
+    // clusters = 0 requests the identity clustering (one cluster per
+    // chunk) — the shape the bench scenario pins; here over the real
+    // k-means-bypass path on a checkpoint-shaped store
+    let store = clustered_store(0xC1);
+    let view = ClassifierView::of_store(&store);
+    let idx = ShortlistIndex::build(
+        &view,
+        &ShortlistSpec { clusters: 0, probe: 1, seed: 0 },
+    )
+    .unwrap();
+    assert_eq!(idx.clusters(), N_CHUNKS);
+    let (emb, home) = queries(32, 0xD00D);
+    for q in 0..32 {
+        let row = &emb[q * D..(q + 1) * D];
+        let selection = idx.select_chunks(row, 1).unwrap();
+        assert_eq!(selection.len(), 1, "probe 1 over singletons is one chunk");
+        assert_eq!(
+            selection[0] % D,
+            home[q] % D,
+            "query {q}: stage 1 must pick the query's dominant direction"
+        );
+    }
+}
