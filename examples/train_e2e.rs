@@ -14,7 +14,7 @@ use elmo::Session;
 use elmo::coordinator::{evaluate, Precision, TrainConfig};
 use elmo::data::{self, Batcher};
 use elmo::memmodel::{self, MemParams, Method};
-use elmo::util::gib;
+use elmo::util::{gib, Stopwatch};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         cfg.precision.label(), tr.chunks(), ds.train.n / tr.batch);
 
     // loss curve, logged every 8 steps
-    let t0 = std::time::Instant::now();
+    let t0 = Stopwatch::start();
     let mut total_steps = 0u64;
     for epoch in 0..epochs {
         let mut batcher = Batcher::new(ds.train.n, tr.batch, epoch as u64);
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                     "step {:>5}  loss {:.6}  ({:.2} steps/s)",
                     total_steps,
                     mean,
-                    total_steps as f64 / t0.elapsed().as_secs_f64()
+                    total_steps as f64 / t0.secs()
                 );
                 window.clear();
             }
@@ -81,6 +81,6 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    println!("train_e2e OK ({} steps, {:.1}s)", total_steps, t0.elapsed().as_secs_f64());
+    println!("train_e2e OK ({} steps, {:.1}s)", total_steps, t0.secs());
     Ok(())
 }

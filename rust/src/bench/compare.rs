@@ -226,7 +226,7 @@ fn compare_metrics(
                 }
                 c.gated += 1;
                 match bm.gate {
-                    Gate::RecordOnly => unreachable!("push/parse reject ungated deterministic metrics"),
+                    Gate::RecordOnly => unreachable!("push/parse reject ungated deterministic metrics"), // elmo-lint: allow(panic-in-library) -- push() and parse() reject ungated deterministic metrics, so no constructed report reaches this arm
                     Gate::Exact => {
                         if !bm.value.bits_eq(cm.value) {
                             c.fail(

@@ -75,7 +75,8 @@ pub fn git_rev() -> String {
 /// Seconds since the unix epoch — stamped into reports as trajectory
 /// context (when was this measured), never gated.
 pub fn unix_secs() -> u64 {
-    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+    #[allow(clippy::disallowed_methods)]
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0) // elmo-lint: allow(wall-clock-in-replay) -- emitted_at is recorded-never-gated trajectory context
 }
 
 /// Metric classification: must a repeated run reproduce this value?
@@ -693,7 +694,10 @@ impl<'a> Parser<'a> {
                     self.pos -= 1;
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| err_config!("bench report: invalid utf-8 in string"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| err_config!("bench report: unterminated string"))?;
                     out.push(c);
                     self.pos += c.len_utf8();
                 }

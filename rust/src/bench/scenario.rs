@@ -13,8 +13,6 @@
 //! `serve::merge_rows`), which exercises the production sharded-merge
 //! path while keeping every score exactly representable.
 
-use std::time::Instant;
-
 use crate::bench::alloc::{alloc_since, alloc_snapshot, counting_enabled};
 use crate::bench::report::{fnv1a64_fold, BenchReport, FNV64_OFFSET};
 use crate::data::SEQ_LEN;
@@ -407,7 +405,7 @@ pub fn serve_throughput_report(seed: u64) -> Result<BenchReport> {
         )?;
     }
 
-    let wall_start = Instant::now();
+    let wall_start = crate::util::Stopwatch::start();
     let alloc_start = alloc_snapshot();
     for rate in RATES {
         for burst in BURSTS {
@@ -449,6 +447,6 @@ pub fn serve_throughput_report(seed: u64) -> Result<BenchReport> {
         rep.det_u64_pct("alloc/grid_calls", da.calls, 20.0)?;
         rep.det_u64_pct("alloc/grid_bytes", da.bytes, 20.0)?;
     }
-    rep.wall_f64("wall/grid_s", wall_start.elapsed().as_secs_f64())?;
+    rep.wall_f64("wall/grid_s", wall_start.secs())?;
     Ok(rep)
 }

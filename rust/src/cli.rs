@@ -113,6 +113,11 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
         summary: "compare two BENCH_*.json reports; non-zero exit on deterministic drift",
         flags: &["threshold"],
     },
+    Subcommand {
+        name: "lint",
+        summary: "repo-invariant static analysis over rust/src; non-zero exit on any finding",
+        flags: &["fix-allow"],
+    },
 ];
 
 /// Registry lookup by name.
@@ -170,6 +175,7 @@ USAGE:
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
   elmo bench-diff BASELINE.json CURRENT.json [--threshold PCT]
+  elmo lint    [PATHS…] [--fix-allow BOOL]
   elmo help [SUBCOMMAND]
   elmo --version
 
@@ -218,6 +224,11 @@ BENCH-DIFF FLAGS (docs/BENCHMARKS.md):
   --threshold PCT   override the pct-gate regression threshold for
                     gateable deterministic metrics (exact gates and
                     wall-clock trajectory are unaffected)
+
+LINT FLAGS (docs/LINTS.md):
+  --fix-allow BOOL  rewrite the scanned files to drop allow markers that
+                    no longer suppress any finding (default false: a
+                    stale marker is itself an `unused-allow` finding)
 ";
 
 /// Parse an alternating `--flag value` list.  Rejects non-`--` arguments
@@ -429,6 +440,36 @@ mod tests {
                     assert!(
                         sc.flags.contains(&f),
                         "help serve mentions --{f}, which `serve` rejects"
+                    );
+                }
+            }
+        }
+    }
+
+    /// `elmo help lint` pinned to the registry, both directions — the
+    /// same contract as `serve` and `bench-diff`.
+    #[test]
+    fn lint_help_and_usage_match_the_registry_flag_set() {
+        let sc = subcommand("lint").expect("`lint` is registered");
+        assert_eq!(sc.flags, &["fix-allow"]);
+        let h = help_for("lint").unwrap();
+        for f in sc.flags {
+            assert!(h.contains(&format!("--{f}")), "help lint missing --{f}:\n{h}");
+            assert!(
+                USAGE.contains(&format!("--{f}")),
+                "USAGE drifted: `lint` accepts --{f} but USAGE never mentions it"
+            );
+        }
+        assert!(USAGE.contains("elmo lint "), "USAGE must show the lint invocation");
+        assert!(h.contains("static analysis"), "help lint keeps its summary:\n{h}");
+        // reverse direction: every --flag the help text mentions is one
+        // reject_unknown will actually accept for `lint`
+        for tok in h.split(|c: char| !(c.is_ascii_alphanumeric() || c == '-')) {
+            if let Some(f) = tok.strip_prefix("--") {
+                if !f.is_empty() {
+                    assert!(
+                        sc.flags.contains(&f),
+                        "help lint mentions --{f}, which `lint` rejects"
                     );
                 }
             }

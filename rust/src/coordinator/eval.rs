@@ -90,7 +90,7 @@ pub fn evaluate_model(
 ) -> Result<EvalReport> {
     let mut ctx = sess.ctx();
     let ex = &mut ctx;
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::Stopwatch::start();
     let b = ex.rt.config().batch;
     if ds.profile.labels != m.cls.labels {
         return Err(err_shape!(
@@ -137,7 +137,7 @@ pub fn evaluate_model(
         p: [accum.p_at(0), accum.p_at(1), accum.p_at(2)],
         psp: [accum.psp_at(0), accum.psp_at(1), accum.psp_at(2)],
         n: accum.n,
-        secs: t0.elapsed().as_secs_f64(),
+        secs: t0.secs(),
     })
 }
 

@@ -369,7 +369,7 @@ impl Trainer {
         let mut batcher =
             crate::data::Batcher::new(ds.train.n, self.batch, self.cfg.seed ^ epoch as u64);
         let mut stats = EpochStats::default();
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::Stopwatch::start();
         let mut loss_sum = 0.0;
         let trunc0 = self.truncated_positives;
         while let Some((rows, _valid)) = batcher.next_batch() {
@@ -381,7 +381,7 @@ impl Trainer {
             }
         }
         stats.mean_loss = loss_sum / stats.steps.max(1) as f64;
-        stats.secs = t0.elapsed().as_secs_f64();
+        stats.secs = t0.secs();
         stats.loss_scale = self.loss_scale;
         stats.gmax = self.gmax_peak;
         stats.truncated_positives = (self.truncated_positives - trunc0) as usize;

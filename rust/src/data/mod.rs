@@ -190,7 +190,7 @@ impl ZipfSampler {
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.uniform();
-        match self.cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        match self.cum.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cum.len() - 1),
         }

@@ -14,14 +14,13 @@
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
-use std::time::Instant;
 
 use crate::err_shape;
 use crate::error::Result;
 
 use crate::data::SEQ_LEN;
 use crate::metrics::TopK;
-use crate::util::pad_tail_rows;
+use crate::util::{pad_tail_rows, Stopwatch};
 
 /// One completed query: top-k (score, label) pairs, best first.
 #[derive(Clone, Debug)]
@@ -56,7 +55,7 @@ pub struct ServeStats {
     pub batches: u64,
     /// Rows executed only as padding (capacity lost to partial batches).
     pub padded_rows: u64,
-    started: Option<Instant>,
+    started: Option<Stopwatch>,
     wall_secs: f64,
 }
 
@@ -78,8 +77,8 @@ impl ServeStats {
     }
 
     pub(crate) fn mark(&mut self) {
-        let t0 = *self.started.get_or_insert_with(Instant::now);
-        self.wall_secs = t0.elapsed().as_secs_f64();
+        let sw = *self.started.get_or_insert_with(Stopwatch::start);
+        self.wall_secs = sw.secs();
     }
 
     /// Queries per second over the submit..last-completion window.
@@ -100,7 +99,7 @@ impl ServeStats {
             // one O(cap log cap) pass with cap-bounded scratch, however
             // long the run
             let mut v = self.latencies_ms.clone();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(|a, b| a.total_cmp(b));
             v
         });
         let idx = (q / 100.0 * (v.len() - 1) as f64).round() as usize;
@@ -140,7 +139,10 @@ impl ServeStats {
 struct Pending {
     id: u64,
     tokens: Vec<i32>,
-    enqueued: Instant,
+    /// Enqueue time in ms on the batcher's own `epoch` stopwatch — queue
+    /// latency is a difference of two readings of the same stopwatch, so
+    /// no raw `Instant` ever leaves the `util::Stopwatch` shim.
+    enqueued_ms: f64,
 }
 
 /// Packs variable-size query sets into fixed-width scoring batches.
@@ -149,6 +151,8 @@ pub struct MicroBatcher {
     width: usize,
     queue: VecDeque<Pending>,
     next_id: u64,
+    /// Time origin for per-query latency accounting.
+    epoch: Stopwatch,
     pub stats: ServeStats,
 }
 
@@ -159,6 +163,7 @@ impl MicroBatcher {
             width,
             queue: VecDeque::new(),
             next_id: 0,
+            epoch: Stopwatch::start(),
             stats: ServeStats::default(),
         }
     }
@@ -177,12 +182,12 @@ impl MicroBatcher {
             ));
         }
         self.stats.mark();
-        let now = Instant::now();
+        let now_ms = self.epoch.ms();
         let mut ids = Vec::with_capacity(tokens.len() / SEQ_LEN);
         for row in tokens.chunks_exact(SEQ_LEN) {
             let id = self.next_id;
             self.next_id += 1;
-            self.queue.push_back(Pending { id, tokens: row.to_vec(), enqueued: now });
+            self.queue.push_back(Pending { id, tokens: row.to_vec(), enqueued_ms: now_ms });
             ids.push(id);
         }
         Ok(ids)
@@ -214,9 +219,9 @@ impl MicroBatcher {
         if topks.len() < valid {
             return Err(err_shape!("scorer returned {} rows for a {valid}-query batch", topks.len()));
         }
-        let done = Instant::now();
+        let done_ms = self.epoch.ms();
         for (q, tk) in batch.into_iter().zip(topks.into_iter()) {
-            let ms = done.duration_since(q.enqueued).as_secs_f64() * 1e3;
+            let ms = (done_ms - q.enqueued_ms).max(0.0);
             self.stats.record(ms);
             out.push(Prediction { id: q.id, topk: tk.items().to_vec(), latency_ms: ms });
         }

@@ -138,16 +138,22 @@ impl<'a> Rd<'a> {
         Ok(s)
     }
 
+    // `take(n)?` returns exactly `n` bytes, so the from_le_bytes arrays
+    // below index in-bounds by construction — spelled out instead of
+    // `try_into().unwrap()` to keep the library panic-free.
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
     }
 
     fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
     /// A u64-length-prefixed f32 section.
@@ -258,7 +264,7 @@ impl Checkpoint {
         if bytes.len() < MAGIC.len() + 4 {
             return Err(err_checkpoint!("checkpoint truncated before the version field"));
         }
-        let ver = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let ver = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
         if ver != VERSION {
             return Err(err_checkpoint!("unsupported checkpoint version {ver} (this build reads version {VERSION})"));
         }
@@ -266,7 +272,8 @@ impl Checkpoint {
             return Err(err_checkpoint!("checkpoint truncated before the checksum trailer"));
         }
         let body = &bytes[..bytes.len() - 8];
-        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let t = &bytes[bytes.len() - 8..];
+        let stored = u64::from_le_bytes([t[0], t[1], t[2], t[3], t[4], t[5], t[6], t[7]]);
         let computed = fnv1a(body);
         if stored != computed {
             return Err(err_checkpoint!(

@@ -31,6 +31,15 @@
 //! declarative run description behind `--config`.  All library errors are
 //! the typed `elmo::Error` (`error` module) — `anyhow` is a consumer-side
 //! convenience for the binary and the test/bench harnesses only.
+//!
+//! The invariants behind those guarantees are machine-checked: `lint`
+//! implements `elmo lint` (docs/LINTS.md), a dependency-free static
+//! analysis pass over `rust/src` that CI runs as a blocking step.
+
+// Rule 3 (panic-in-library) mirrored at the compiler level: clippy warns
+// on unwrap/expect in non-test library code, and CI runs clippy with
+// `-D warnings`.  clippy.toml exempts `#[cfg(test)]` code.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod bench;
 pub mod cli;
@@ -39,6 +48,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod infer;
+pub mod lint;
 pub mod memmodel;
 pub mod metrics;
 pub mod numerics;

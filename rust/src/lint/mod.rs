@@ -1,0 +1,400 @@
+//! `elmo lint` — repo-invariant static analysis.
+//!
+//! Every determinism claim this repo makes (bit-identical pooled-vs-serial
+//! parity, byte-stable `BENCH_*.json`, seed-replayable serving) rests on
+//! source-level invariants: no wall clock in replayed paths, no unordered
+//! iteration feeding digests, no panics in the library, no unseeded
+//! randomness, no float reassociation on parity-pinned paths, no stray
+//! threads.  This module enforces them lexically at diff time, in the same
+//! hand-rolled no-dependency style as the `RunSpec` parser and the bench
+//! JSON emitter.
+//!
+//! Sanctioned exceptions are annotated in place with a comment of the form
+//! `allow(<rule>) -- <reason>` prefixed by the marker tag (see
+//! docs/LINTS.md for the exact grammar); a marker that stops suppressing
+//! anything becomes an `unused-allow` finding itself, so waivers cannot
+//! outlive the code they excused.  `--fix-allow true` rewrites scanned
+//! files to drop such stale markers.
+
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::err_config;
+use crate::error::Result;
+
+/// One lint hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path as scanned (relative when the input path was relative),
+    /// normalised to unix separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// 1-based character column of the first matching token.
+    pub col: usize,
+    /// Rule name (or a meta-rule: `unused-allow`, `malformed-allow`).
+    pub rule: String,
+    /// Short human description of the hit.
+    pub message: String,
+    /// Trimmed source excerpt of the offending line.
+    pub excerpt: String,
+}
+
+/// Outcome of a lint run over a set of paths.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, sorted by (file, line, col, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Number of suppressions performed by allow markers.
+    pub allows_used: usize,
+    /// Number of stale markers removed by `--fix-allow`.
+    pub allows_fixed: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render findings in the `file:line:col: rule: message` style every
+    /// editor understands, one excerpt line under each.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{}:{}: {}: {}\n", f.file, f.line, f.col, f.rule, f.message));
+            if !f.excerpt.is_empty() {
+                s.push_str(&format!("    {}\n", f.excerpt));
+            }
+        }
+        s
+    }
+}
+
+/// Lint every `.rs` file under `paths` (files are taken as-is,
+/// directories are walked recursively in sorted order).  With
+/// `fix_allow`, rewrite files to drop markers whose every rule is valid
+/// but no longer suppresses anything.
+pub fn run(paths: &[PathBuf], fix_allow: bool) -> Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = Report::default();
+    report.files_scanned = files.len();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .map_err(|e| err_config!("lint: cannot read `{}`: {e}", path.display()))?;
+        let label = path.to_string_lossy().replace('\\', "/");
+        if let Some(rewritten) = lint_source(&label, &src, fix_allow, &mut report) {
+            fs::write(path, rewritten)
+                .map_err(|e| err_config!("lint --fix-allow: cannot write `{}`: {e}", path.display()))?;
+        }
+    }
+    report
+        .findings
+        .sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.col, a.rule.as_str())
+                .cmp(&(b.file.as_str(), b.line, b.col, b.rule.as_str()))
+        });
+    Ok(report)
+}
+
+/// Lint one in-memory source.  Returns `Some(rewritten)` when `fix_allow`
+/// removed stale markers and the caller should persist the new contents.
+/// Public so the engine is testable without touching the filesystem.
+pub fn lint_source(
+    file_label: &str,
+    src: &str,
+    fix_allow: bool,
+    report: &mut Report,
+) -> Option<String> {
+    let lines = scan::strip(src);
+    let in_test = scan::test_regions(&lines);
+    let markers = scan::markers(&lines);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let mut used: Vec<Vec<bool>> = markers.iter().map(|m| vec![false; m.rules.len()]).collect();
+
+    for rule in rules::RULES {
+        if !rule.scope.is_empty() && !rule.scope.iter().any(|s| file_label.contains(s)) {
+            continue;
+        }
+        for (i, line) in lines.iter().enumerate() {
+            if in_test.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            let mut hit: Option<usize> = None;
+            for tok in rule.tokens {
+                if let Some(p) = line.code.find(tok) {
+                    hit = Some(hit.map_or(p, |c| c.min(p)));
+                }
+            }
+            let Some(p) = hit else {
+                continue;
+            };
+            let lineno = i + 1;
+            let suppressed = markers.iter().enumerate().find_map(|(mi, m)| {
+                if m.error.is_some() || m.target != lineno {
+                    return None;
+                }
+                m.rules.iter().position(|r| r == rule.name).map(|ri| (mi, ri))
+            });
+            if let Some((mi, ri)) = suppressed {
+                used[mi][ri] = true;
+                report.allows_used += 1;
+                continue;
+            }
+            report.findings.push(Finding {
+                file: file_label.to_string(),
+                line: lineno,
+                col: line.code[..p].chars().count() + 1,
+                rule: rule.name.to_string(),
+                message: rule.summary.to_string(),
+                excerpt: excerpt(raw_lines.get(i).copied().unwrap_or("")),
+            });
+        }
+    }
+
+    // Marker hygiene: malformed markers, unknown rule names, stale allows.
+    let mut drop: Vec<usize> = Vec::new();
+    for (mi, m) in markers.iter().enumerate() {
+        if let Some(err) = &m.error {
+            report.findings.push(Finding {
+                file: file_label.to_string(),
+                line: m.line,
+                col: 1,
+                rule: rules::MALFORMED_ALLOW.to_string(),
+                message: err.clone(),
+                excerpt: excerpt(raw_lines.get(m.line - 1).copied().unwrap_or("")),
+            });
+            continue;
+        }
+        let mut all_stale = true;
+        for (ri, name) in m.rules.iter().enumerate() {
+            if rules::by_name(name).is_none() {
+                all_stale = false;
+                report.findings.push(Finding {
+                    file: file_label.to_string(),
+                    line: m.line,
+                    col: 1,
+                    rule: rules::MALFORMED_ALLOW.to_string(),
+                    message: format!("unknown rule `{name}` in allow marker"),
+                    excerpt: excerpt(raw_lines.get(m.line - 1).copied().unwrap_or("")),
+                });
+            } else if used[mi][ri] {
+                all_stale = false;
+            }
+        }
+        if m.rules.is_empty() {
+            all_stale = false;
+        }
+        if all_stale && fix_allow {
+            drop.push(mi);
+            continue;
+        }
+        for (ri, name) in m.rules.iter().enumerate() {
+            if rules::by_name(name).is_some() && !used[mi][ri] {
+                report.findings.push(Finding {
+                    file: file_label.to_string(),
+                    line: m.line,
+                    col: 1,
+                    rule: rules::UNUSED_ALLOW.to_string(),
+                    message: format!("allow(`{name}`) no longer suppresses anything here"),
+                    excerpt: excerpt(raw_lines.get(m.line - 1).copied().unwrap_or("")),
+                });
+            }
+        }
+    }
+
+    if drop.is_empty() {
+        return None;
+    }
+    let mut out_lines: Vec<String> = raw_lines.iter().map(|l| l.to_string()).collect();
+    let mut remove = vec![false; out_lines.len()];
+    for &mi in &drop {
+        let m = &markers[mi];
+        let idx = m.line - 1;
+        let standalone = lines.get(idx).map(|l| l.code.trim().is_empty()).unwrap_or(false);
+        if standalone {
+            if let Some(r) = remove.get_mut(idx) {
+                *r = true;
+            }
+        } else if let (Some(line), Some(raw)) = (lines.get(idx), out_lines.get_mut(idx)) {
+            // The channels are column-aligned, so the comment starts right
+            // after the last real code character.
+            let keep_chars = line.code.trim_end().chars().count();
+            let byte = raw
+                .char_indices()
+                .nth(keep_chars)
+                .map(|(b, _)| b)
+                .unwrap_or(raw.len());
+            raw.truncate(byte);
+            while raw.ends_with(' ') || raw.ends_with('\t') {
+                raw.pop();
+            }
+        }
+        report.allows_fixed += 1;
+    }
+    let mut rebuilt = out_lines
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !remove.get(*i).copied().unwrap_or(false))
+        .map(|(_, l)| l.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    if src.ends_with('\n') {
+        rebuilt.push('\n');
+    }
+    Some(rebuilt)
+}
+
+fn excerpt(raw: &str) -> String {
+    let t = raw.trim();
+    if t.chars().count() > 96 {
+        let cut: String = t.chars().take(93).collect();
+        format!("{cut}...")
+    } else {
+        t.to_string()
+    }
+}
+
+fn collect(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let meta = fs::metadata(path)
+        .map_err(|e| err_config!("lint: cannot stat `{}`: {e}", path.display()))?;
+    if !meta.is_dir() {
+        out.push(path.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(path)
+        .map_err(|e| err_config!("lint: cannot read dir `{}`: {e}", path.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for e in entries {
+        if e.is_dir() {
+            collect(&e, out)?;
+        } else if e.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(e);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(label: &str, src: &str) -> Report {
+        let mut r = Report::default();
+        lint_source(label, src, false, &mut r);
+        r.findings.sort_by(|a, b| (a.line, a.col).cmp(&(b.line, b.col)));
+        r
+    }
+
+    #[test]
+    fn wall_clock_fires_with_line_and_col() {
+        let r = lint_str("x.rs", "fn f() {\n    let t = std::time::Instant::now();\n}\n");
+        assert_eq!(r.findings.len(), 1);
+        let f = &r.findings[0];
+        assert_eq!((f.rule.as_str(), f.line), ("wall-clock-in-replay", 2));
+        assert_eq!(f.col, 24, "column points at the token, 1-based");
+    }
+
+    #[test]
+    fn tokens_in_strings_comments_and_tests_do_not_fire() {
+        let src = "\
+fn f() -> &'static str {
+    // Instant::now in a comment
+    \"Instant::now in a string\"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = std::time::Instant::now();
+        x.unwrap();
+    }
+}
+";
+        assert!(lint_str("x.rs", src).is_clean());
+    }
+
+    #[test]
+    fn scoped_rules_only_fire_inside_their_scope() {
+        let src = "use std::collections::HashMap;\n";
+        assert!(lint_str("rust/src/config.rs", src).is_clean());
+        let r = lint_str("rust/src/serve/merge.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "unordered-iter-in-digest");
+    }
+
+    #[test]
+    fn one_finding_per_rule_per_line_even_with_multiple_tokens() {
+        let r = lint_str("rust/src/metrics.rs", "let s: f32 = v.iter().sum::<f32>();\n");
+        assert_eq!(r.findings.len(), 1, "sum() and sum::<f32>() collapse to one finding");
+    }
+
+    #[test]
+    fn trailing_allow_suppresses_and_counts() {
+        let src = "let t = Instant::now(); // elmo-lint: allow(wall-clock-in-replay) -- shim\n";
+        let r = lint_str("x.rs", src);
+        assert!(r.is_clean());
+        assert_eq!(r.allows_used, 1);
+    }
+
+    #[test]
+    fn unused_allow_is_a_finding() {
+        let src = "fn ok() {}\n// elmo-lint: allow(panic-in-library) -- nothing here\nfn also_ok() {}\n";
+        let r = lint_str("x.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "unused-allow");
+        assert_eq!(r.findings[0].line, 2);
+    }
+
+    #[test]
+    fn unknown_rule_in_marker_is_malformed() {
+        let src = "x(); // elmo-lint: allow(no-such-rule) -- whatever\n";
+        let r = lint_str("x.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "malformed-allow");
+    }
+
+    #[test]
+    fn fix_allow_drops_stale_trailing_and_standalone_markers() {
+        let src = "\
+fn ok() {}
+// elmo-lint: allow(unseeded-rng) -- stale standalone
+fn mid() {} // elmo-lint: allow(raw-thread-spawn) -- stale trailing
+";
+        let mut r = Report::default();
+        let rewritten = lint_source("x.rs", src, true, &mut r);
+        assert_eq!(r.allows_fixed, 2);
+        let out = rewritten.unwrap_or_default();
+        assert_eq!(out, "fn ok() {}\nfn mid() {}\n");
+        // and the rewritten source is clean
+        assert!(lint_str("x.rs", &out).is_clean());
+    }
+
+    #[test]
+    fn fix_allow_keeps_markers_that_still_suppress() {
+        let src = "let t = Instant::now(); // elmo-lint: allow(wall-clock-in-replay) -- shim\n";
+        let mut r = Report::default();
+        assert!(lint_source("x.rs", src, true, &mut r).is_none());
+        assert_eq!(r.allows_fixed, 0);
+        assert!(r.is_clean());
+    }
+
+    #[test]
+    fn render_is_editor_parseable() {
+        let r = lint_str("a.rs", "fn f() { q.unwrap(); }\n");
+        let text = r.render();
+        assert!(text.starts_with("a.rs:1:11: panic-in-library:"), "got: {text}");
+    }
+}

@@ -1,0 +1,138 @@
+//! The rule registry for `elmo lint`.
+//!
+//! Each rule is a set of code-channel tokens plus an optional path scope.
+//! Matching is deliberately lexical — the scanner in [`super::scan`]
+//! guarantees tokens inside strings, comments, and `#[cfg(test)]` regions
+//! never fire, and everything else is a finding unless a marker with a
+//! written reason says otherwise.  docs/LINTS.md carries the long-form
+//! documentation for every rule.
+
+/// A single lint rule.
+#[derive(Debug)]
+pub struct Rule {
+    /// Kebab-case name, used in findings and `allow(...)` markers.
+    pub name: &'static str,
+    /// One-line description shown with each finding.
+    pub summary: &'static str,
+    /// The invariant the rule protects (rendered in docs/LINTS.md).
+    pub why: &'static str,
+    /// Path fragments (unix separators) the rule applies to; empty means
+    /// every scanned file.
+    pub scope: &'static [&'static str],
+    /// Substring tokens matched against the code channel.
+    pub tokens: &'static [&'static str],
+}
+
+/// Registry order is presentation order: findings sort by location, but
+/// docs and summaries list rules in this sequence.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "wall-clock-in-replay",
+        summary: "raw wall-clock read outside the sanctioned shims",
+        why: "replayed and gated paths (serve replay, bench trajectories) must take \
+              time from an injected serve::Clock or util::Stopwatch; a raw read makes \
+              output depend on the host and breaks seed-replay",
+        scope: &[],
+        tokens: &["Instant::now", "SystemTime::now"],
+    },
+    Rule {
+        name: "unordered-iter-in-digest",
+        summary: "unordered collection on the deterministic surface",
+        why: "HashMap/HashSet iteration order feeds digests, shortlists, and byte-stable \
+              reports on these paths; use sorted Vecs or BTreeMap, or allow with a \
+              sortedness argument",
+        scope: &["bench/", "serve/", "infer/shortlist.rs", "store.rs"],
+        tokens: &["HashMap", "HashSet"],
+    },
+    Rule {
+        name: "panic-in-library",
+        summary: "panic path in library code",
+        why: "library code surfaces failures through the typed elmo::Error taxonomy; a \
+              panic takes down a serving process and skips the error-context chain",
+        scope: &[],
+        tokens: &[
+            ".unwrap()",
+            ".expect(\"",
+            "panic!",
+            "unreachable!",
+            "todo!",
+            "unimplemented!",
+        ],
+    },
+    Rule {
+        name: "unseeded-rng",
+        summary: "randomness not derived from a named seed",
+        why: "every stochastic choice (SR rounding, shuffles, load arrivals) replays from \
+              RunSpec seeds via util::Rng; entropy-seeded generators cannot be replayed",
+        scope: &[],
+        tokens: &["thread_rng", "from_entropy", "OsRng", "getrandom", "RandomState::new", "rand::"],
+    },
+    Rule {
+        name: "float-order-hazard",
+        summary: "unordered float reduction in a parity-pinned module",
+        why: "float addition does not reassociate; parity-pinned paths fold through \
+              StepAccum/TopK or document a fixed serial order with an allow marker",
+        scope: &[
+            "policy/",
+            "store.rs",
+            "numerics/",
+            "metrics.rs",
+            "coordinator/",
+            "infer/scanner.rs",
+            "serve/merge.rs",
+        ],
+        tokens: &[".sum::<f32>()", ".sum::<f64>()", ".sum()", ".product()"],
+    },
+    Rule {
+        name: "raw-thread-spawn",
+        summary: "thread spawned outside runtime/pool.rs",
+        why: "RuntimePool owns worker lifecycle (panic propagation, ordered reduction, \
+              teardown); stray threads break the pooled-vs-serial parity argument",
+        scope: &[],
+        tokens: &["thread::spawn", "thread::Builder"],
+    },
+];
+
+/// Meta-rules emitted by the engine itself (marker hygiene).  They cannot
+/// be suppressed with a marker.
+pub const UNUSED_ALLOW: &str = "unused-allow";
+pub const MALFORMED_ALLOW: &str = "malformed-allow";
+
+/// Look a rule up by marker name.
+pub fn by_name(name: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_names_are_unique_kebab_case() {
+        for (i, r) in RULES.iter().enumerate() {
+            assert!(
+                r.name.chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "{} is not kebab-case",
+                r.name
+            );
+            assert!(
+                RULES.iter().skip(i + 1).all(|o| o.name != r.name),
+                "duplicate rule name {}",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn every_rule_documents_itself() {
+        for r in RULES {
+            assert!(!r.summary.is_empty() && !r.why.is_empty() && !r.tokens.is_empty());
+        }
+    }
+
+    #[test]
+    fn meta_rule_names_do_not_collide_with_real_rules() {
+        assert!(by_name(UNUSED_ALLOW).is_none());
+        assert!(by_name(MALFORMED_ALLOW).is_none());
+    }
+}

@@ -1,0 +1,437 @@
+//! Lexical scanner behind `elmo lint`.
+//!
+//! A miniature Rust lexer: it walks a source file character by character
+//! and splits every line into a *code* channel (comments and literal
+//! contents replaced by spaces, delimiters kept, so every surviving
+//! character sits at its original column) and a *comment* channel.  Rules
+//! match against the code channel only, which means a rule token inside a
+//! string literal or a comment can never fire.  The comment channel is
+//! parsed for allow markers, and a brace-depth tracker marks
+//! `#[cfg(test)]` regions so test code is exempt from every rule.
+//!
+//! The lexer understands line comments, nested block comments, string
+//! literals (including multi-line and escaped), raw strings with any
+//! number of `#` guards, byte/char literals, and the lifetime-vs-char
+//! ambiguity (`'a` in `&'a str` is not an unterminated char literal).
+
+/// One source line, split into channels by [`strip`].
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with comments and literal contents blanked to spaces; each
+    /// kept character sits at the same column as in the raw line.
+    pub code: String,
+    /// Concatenated comment text from the line (line and block comments).
+    pub comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    Code,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Lex `src` into per-line code/comment channels.
+pub fn strip(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            out.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        let next = chars.get(i + 1).copied().unwrap_or('\0');
+        match st {
+            St::Code => {
+                if c == '/' && next == '/' {
+                    code.push_str("  ");
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    code.push_str("  ");
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r'
+                    && (next == '"' || next == '#')
+                    && !code
+                        .chars()
+                        .last()
+                        .map(|p| p.is_alphanumeric() || p == '_')
+                        .unwrap_or(false)
+                {
+                    // Raw string candidate: r"..." or r#"..."# (with any
+                    // number of hashes).  If the hashes are not followed
+                    // by a quote this is ordinary code (e.g. `r#try`).
+                    let mut hashes = 0u32;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        code.push('r');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        code.push('"');
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Lifetime (`'a`, `'static`) vs char literal (`'x'`).
+                    let n2 = chars.get(i + 2).copied().unwrap_or('\0');
+                    code.push('\'');
+                    if (next.is_alphabetic() || next == '_') && n2 != '\'' {
+                        // lifetime: stay in code
+                    } else {
+                        st = St::Char;
+                    }
+                    i += 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                code.push(' ');
+                comment.push(c);
+                i += 1;
+            }
+            St::Block(depth) => {
+                if c == '*' && next == '/' {
+                    code.push_str("  ");
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    code.push_str("  ");
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else {
+                    code.push(' ');
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str | St::Char => {
+                let close = if st == St::Str { '"' } else { '\'' };
+                if c == '\\' {
+                    code.push(' ');
+                    if next != '\n' && next != '\0' {
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == close {
+                    code.push(close);
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        st = St::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(Line { code, comment });
+    }
+    out
+}
+
+/// A parsed allow marker (or a parse failure worth reporting).
+#[derive(Debug, Clone)]
+pub struct Marker {
+    /// 1-based line the marker comment sits on.
+    pub line: usize,
+    /// 1-based line of the code the marker suppresses: its own line for a
+    /// trailing marker, the next code-bearing line for a standalone one
+    /// (blank, comment-only, and attribute lines are skipped).
+    pub target: usize,
+    /// Rule names inside `allow(...)`; empty when `error` is set.
+    pub rules: Vec<String>,
+    /// Parse failure description, reported as `malformed-allow`.
+    pub error: Option<String>,
+}
+
+const TAG: &str = "elmo-lint:";
+
+/// Extract every marker from the comment channel of `lines`.
+pub fn markers(lines: &[Line]) -> Vec<Marker> {
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let Some(parsed) = parse_marker(&line.comment) else {
+            continue;
+        };
+        let lineno = i + 1;
+        let target = if line.code.trim().is_empty() {
+            let mut j = i + 1;
+            loop {
+                match lines.get(j) {
+                    // Dangling marker at EOF: self-targeted, reads as unused.
+                    None => break lineno,
+                    Some(l) => {
+                        let t = l.code.trim();
+                        if t.is_empty() || t.starts_with("#[") || t.starts_with("#!") {
+                            j += 1;
+                        } else {
+                            break j + 1;
+                        }
+                    }
+                }
+            }
+        } else {
+            lineno
+        };
+        match parsed {
+            Ok(rules) => out.push(Marker { line: lineno, target, rules, error: None }),
+            Err(e) => out.push(Marker { line: lineno, target, rules: Vec::new(), error: Some(e) }),
+        }
+    }
+    out
+}
+
+/// Parse one line's comment text.  Returns `None` when the comment does
+/// not start with the marker tag (prose that merely *mentions* the tag
+/// mid-comment is ignored), `Some(Err(..))` when it starts with the tag
+/// but does not follow the `allow(<rule>) -- <reason>` grammar.
+fn parse_marker(comment: &str) -> Option<Result<Vec<String>, String>> {
+    let t = comment.trim_start_matches(['/', '!', ' ']).trim_start();
+    if !t.starts_with(TAG) {
+        return None;
+    }
+    let rest = t[TAG.len()..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Some(Err("expected `allow(<rule>)` after the marker tag".to_string()));
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(Err("unclosed `allow(`".to_string()));
+    };
+    let names: Vec<String> = rest[..close].split(',').map(|s| s.trim().to_string()).collect();
+    if names.iter().any(String::is_empty) {
+        return Some(Err("empty rule name in `allow(...)`".to_string()));
+    }
+    let tail = rest[close + 1..].trim_start();
+    let Some(reason) = tail.strip_prefix("--") else {
+        return Some(Err("missing `-- <reason>` after `allow(...)`".to_string()));
+    };
+    if reason.trim().is_empty() {
+        return Some(Err("empty reason after `--`".to_string()));
+    }
+    Some(Ok(names))
+}
+
+/// Mark each line `true` when it sits inside a `#[cfg(test)]` item.  The
+/// repo convention is a `mod tests` block at the bottom of each file, but
+/// any `#[cfg(test)]`-gated `mod`/`fn` region qualifies.  Tracking is by
+/// brace depth over the code channel, so braces inside strings or
+/// comments cannot desynchronise it.
+pub fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut flags = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut entry: Option<i64> = None;
+    let mut opened = false;
+    for (i, line) in lines.iter().enumerate() {
+        let trimmed = line.code.trim();
+        if entry.is_none() && line.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        if pending && entry.is_none() {
+            if trimmed.contains("mod ")
+                || trimmed.contains("fn ")
+                || trimmed.ends_with("mod")
+            {
+                entry = Some(depth);
+                opened = false;
+                pending = false;
+            } else if !(trimmed.is_empty()
+                || trimmed.starts_with("#[")
+                || trimmed.starts_with("#!"))
+            {
+                // The attribute applied to something we do not region-track
+                // (a use, a const): treat just the attribute lines as test.
+                pending = false;
+            }
+        }
+        flags[i] = entry.is_some() || pending;
+        for c in line.code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(e) = entry {
+            if !opened && depth > e {
+                opened = true;
+            }
+            if opened && depth <= e {
+                entry = None;
+                opened = false;
+            }
+        }
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        strip(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked_but_columns_survive() {
+        let src = "let x = \"Instant::now\"; // Instant::now\nlet y = 1;";
+        let got = codes(src);
+        assert_eq!(got.len(), 2);
+        assert!(!got[0].contains("Instant::now"));
+        // the semicolon keeps its original column
+        assert_eq!(got[0].find(';'), src.find(';'));
+        assert_eq!(got[1], "let y = 1;");
+    }
+
+    #[test]
+    fn raw_strings_and_nested_block_comments() {
+        let src = "let r = r#\"panic! /* \"# ; /* a /* b */ c */ let z = 2;";
+        let got = codes(src);
+        assert!(!got[0].contains("panic!"));
+        assert!(got[0].contains("let z = 2;"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(s: &'a str) -> &'a str { s }\nlet c = 'x'; let esc = '\\''; panic!(\"boom\")";
+        let got = codes(src);
+        assert!(got[0].contains("{ s }"));
+        assert!(got[1].contains("panic!("));
+        assert!(!got[1].contains("boom"));
+    }
+
+    #[test]
+    fn multiline_strings_stay_blanked_across_lines() {
+        let src = "let u = \"line one\n  Instant::now on line two\n  end\"; done()";
+        let got = codes(src);
+        assert_eq!(got.len(), 3);
+        assert!(!got[1].contains("Instant::now"));
+        assert!(got[2].contains("done()"));
+    }
+
+    #[test]
+    fn trailing_marker_parses_and_targets_its_own_line() {
+        let src = "call(); // elmo-lint: allow(panic-in-library) -- provable\n";
+        let ms = markers(&strip(src));
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].target, 1);
+        assert_eq!(ms[0].rules, vec!["panic-in-library".to_string()]);
+        assert!(ms[0].error.is_none());
+    }
+
+    #[test]
+    fn standalone_marker_skips_attributes_to_find_its_target() {
+        let src = "\
+// elmo-lint: allow(wall-clock-in-replay) -- shim
+#[allow(clippy::disallowed_methods)]
+let t = now();
+";
+        let ms = markers(&strip(src));
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].line, 1);
+        assert_eq!(ms[0].target, 3);
+    }
+
+    #[test]
+    fn marker_without_reason_is_malformed() {
+        let ms = markers(&strip("x(); // elmo-lint: allow(unseeded-rng)\n"));
+        assert_eq!(ms.len(), 1);
+        assert!(ms[0].error.as_deref().unwrap_or("").contains("reason"));
+    }
+
+    #[test]
+    fn prose_mentioning_the_tag_mid_comment_is_not_a_marker() {
+        let ms = markers(&strip("x(); // markers look like `elmo-lint: allow(r) -- why`\n"));
+        assert!(ms.is_empty());
+    }
+
+    #[test]
+    fn multi_rule_marker_parses_every_name() {
+        let ms = markers(&strip(
+            "y(); // elmo-lint: allow(unseeded-rng, raw-thread-spawn) -- both fine\n",
+        ));
+        assert_eq!(ms[0].rules.len(), 2);
+        assert_eq!(ms[0].rules[1], "raw-thread-spawn");
+    }
+
+    #[test]
+    fn cfg_test_region_covers_the_bottom_mod_and_nothing_else() {
+        let src = "\
+fn lib() { x.unwrap(); }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        boom.unwrap();
+    }
+}
+
+fn after() {}
+";
+        let lines = strip(src);
+        let flags = test_regions(&lines);
+        assert!(!flags[0], "library line is not test code");
+        assert!(flags[2] && flags[3] && flags[6], "attr, mod, body are test code");
+        assert!(flags[8], "closing brace still in region");
+        assert!(!flags[10], "code after the region is library code again");
+    }
+}

@@ -13,6 +13,9 @@
 //!   sweep        Fig-2a (E, M) bit-width sweep on a small profile
 //!   bench-diff   compare two BENCH_*.json perf reports; non-zero exit on
 //!                any deterministic-metric drift (the CI perf gate)
+//!   lint         repo-invariant static analysis over rust/src (wall
+//!                clock, panics, unordered iteration, unseeded RNG —
+//!                docs/LINTS.md); non-zero exit on any finding
 //!
 //! Flag parsing and the subcommand registry live in `elmo::cli`
 //! (hand-rolled; no clap offline — see DESIGN.md Substitutions).  Run
@@ -21,8 +24,6 @@
 //! overriding file values).  The binary consumes the library's typed
 //! `elmo::Error` through `anyhow` (allowed here; the library itself is
 //! anyhow-free).
-
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -35,7 +36,7 @@ use elmo::metrics::TopK;
 use elmo::serve::{
     self, LoadGen, LoadGenConfig, Server, ServerConfig, ShardExecutor, ShardPlan, VirtualClock,
 };
-use elmo::util::{gib, mmss, print_table, Rng};
+use elmo::util::{gib, mmss, print_table, Rng, Stopwatch};
 use elmo::{RunSpec, Session};
 
 fn main() {
@@ -64,6 +65,7 @@ fn run(args: &[String]) -> Result<()> {
         Some("memtrace") => cmd_memtrace(&parse_cmd_flags("memtrace", &args[1..])?),
         Some("sweep") => cmd_sweep(&parse_cmd_flags("sweep", &args[1..])?),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("--version" | "version") => {
             println!("{}", cli::version());
             Ok(())
@@ -91,7 +93,9 @@ fn run(args: &[String]) -> Result<()> {
 
 /// Parse flags and reject anything outside the subcommand's registry set.
 fn parse_cmd_flags(name: &str, args: &[String]) -> Result<Flags> {
-    let spec = cli::subcommand(name).expect("registered subcommand");
+    #[allow(clippy::expect_used)]
+    let spec = cli::subcommand(name).expect("registered subcommand"); // elmo-lint: allow(panic-in-library) -- `name` is always a literal from run()'s match arms; the registry unit test pins them
+
     let f = parse_flags(args)?;
     reject_unknown(&f, spec.flags)?;
     Ok(f)
@@ -420,12 +424,12 @@ fn cmd_serve(f: &Flags) -> Result<()> {
     // only — it must never influence a packing decision)
     let service_ms = std::cell::Cell::new(0.0f64);
     let mut score = |t: &[i32]| -> elmo::Result<Vec<TopK>> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut ctx = sess.ctx();
         let ex = &mut ctx;
         let emb = p.embed(ex.rt, t)?;
         let r = shard_exec.score(ex, &p.view(), &emb, width);
-        service_ms.set(service_ms.get() + t0.elapsed().as_secs_f64() * 1e3);
+        service_ms.set(service_ms.get() + t0.ms());
         r
     };
     let mut next_row = 0usize;
@@ -565,6 +569,43 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
         "bench-diff: OK — {} deterministic metric(s) gated, {} note(s)",
         cmp.gated,
         cmp.notes.len()
+    );
+    Ok(())
+}
+
+/// `elmo lint [PATHS…] [--fix-allow BOOL]`: repo-invariant static
+/// analysis (docs/LINTS.md).  Scans `rust/src` by default; exit 0 only
+/// when the tree is clean with zero unused allow markers.
+fn cmd_lint(args: &[String]) -> Result<()> {
+    // leading positionals (paths), then registry-checked flags — the same
+    // split bench-diff uses (`parse_flags` rejects bare words by design)
+    let split = args.iter().position(|a| a.starts_with("--")).unwrap_or(args.len());
+    let (pos, rest) = args.split_at(split);
+    let f = parse_cmd_flags("lint", rest)?;
+    let fix_allow: bool = flag(&f, "fix-allow", false)?;
+    let paths: Vec<std::path::PathBuf> = if pos.is_empty() {
+        vec![std::path::PathBuf::from("rust/src")]
+    } else {
+        pos.iter().map(std::path::PathBuf::from).collect()
+    };
+    let report = elmo::lint::run(&paths, fix_allow)?;
+    print!("{}", report.render());
+    if report.allows_fixed > 0 {
+        println!("lint: removed {} stale allow marker(s)", report.allows_fixed);
+    }
+    if !report.is_clean() {
+        bail!(
+            "lint: {} finding(s) across {} file(s) — see docs/LINTS.md \
+             (annotate sanctioned sites with a reasoned allow marker)",
+            report.findings.len(),
+            report.files_scanned
+        );
+    }
+    println!(
+        "lint: clean — {} file(s), {} rule(s), {} allow marker(s) in use",
+        report.files_scanned,
+        elmo::lint::rules::RULES.len(),
+        report.allows_used
     );
     Ok(())
 }

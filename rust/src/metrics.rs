@@ -72,12 +72,12 @@ pub fn psp_at_k(
         .take(k)
         .filter(|l| relevant.binary_search(l).is_ok())
         .map(|&l| 1.0 / propensity[l as usize])
-        .sum();
+        .sum(); // elmo-lint: allow(float-order-hazard) -- serial fold over <= k terms in ranked topk order; order is part of the metric's definition
     // normalizer: the k largest 1/p over the instance's relevant labels
     let mut best: Vec<f64> =
         relevant.iter().map(|&l| 1.0 / propensity[l as usize]).collect();
-    best.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    let den: f64 = best.iter().take(k).sum();
+    best.sort_by(|a, b| b.total_cmp(a));
+    let den: f64 = best.iter().take(k).sum(); // elmo-lint: allow(float-order-hazard) -- serial fold over the k largest inverse propensities, fixed by the total_cmp sort above
     if den == 0.0 {
         0.0
     } else {

@@ -91,7 +91,7 @@ impl Runtime {
         let spec = self
             .manifest
             .artifact(name)
-            .expect("prepare() verified the artifact exists");
+            .ok_or_else(|| err_artifacts!("`{name}` vanished from the manifest after prepare()"))?;
         if args.len() != spec.inputs.len() {
             return Err(err_shape!(
                 "`{name}` expects {} inputs, got {}",
@@ -132,7 +132,10 @@ impl Runtime {
             .map_err(|e| err_runtime!("uploading `{}`: {e:?}", tspec.name))?;
             bufs.push(buf);
         }
-        let exe = self.exes.get(name).unwrap();
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| err_runtime!("`{name}` missing from the executable cache after prepare()"))?;
         let result = exe
             .execute_b(&bufs)
             .map_err(|e| err_runtime!("executing `{name}`: {e:?}"))?;

@@ -67,6 +67,7 @@ impl RuntimePool {
             let (tx, rx) = channel::<Job>();
             let worker_dir = dir.clone();
             let boot = boot_tx.clone();
+            // elmo-lint: allow(raw-thread-spawn) -- the RuntimePool IS the sanctioned spawn site; every other module fans out through it
             let handle = std::thread::Builder::new()
                 .name(format!("elmo-chunk-worker-{i}"))
                 .spawn(move || {
@@ -119,12 +120,13 @@ impl RuntimePool {
     /// artifacts every step (one compilation per worker per artifact).
     pub fn submit(&self, worker: usize, job: Job) -> Result<()> {
         let idx = worker % self.workers.len();
-        self.workers[idx]
-            .tx
-            .as_ref()
-            .expect("pool senders live until drop")
-            .send(job)
-            .map_err(|_| err_runtime!("runtime pool worker {idx} has shut down"))
+        // senders live until Drop; a None here means submit-after-shutdown
+        match self.workers[idx].tx.as_ref() {
+            Some(tx) => tx
+                .send(job)
+                .map_err(|_| err_runtime!("runtime pool worker {idx} has shut down")),
+            None => Err(err_runtime!("runtime pool worker {idx} is shutting down")),
+        }
     }
 
     /// Precompile `names` on every worker (parallel warmup), surfacing the

@@ -51,7 +51,8 @@ pub struct WallClock(Instant);
 
 impl WallClock {
     pub fn new() -> Self {
-        WallClock(Instant::now())
+        #[allow(clippy::disallowed_methods)]
+        WallClock(Instant::now()) // elmo-lint: allow(wall-clock-in-replay) -- WallClock IS the wall-clock Clock impl; replayed paths inject VirtualClock instead
     }
 }
 

@@ -444,10 +444,11 @@ impl ShardExecutor {
             }
             per_shard[s] = Some(res?);
         }
-        Ok(per_shard
+        per_shard
             .into_iter()
-            .map(|r| r.expect("every shard reported exactly once"))
-            .collect())
+            .enumerate()
+            .map(|(s, r)| r.ok_or_else(|| err_runtime!("shard {s} never reported its rows")))
+            .collect()
     }
 
     /// Pooled stage-2 fine scan: like `score_pooled`, but each shard job
@@ -527,10 +528,11 @@ impl ShardExecutor {
             }
             per_shard[s] = Some(res?);
         }
-        Ok(per_shard
+        per_shard
             .into_iter()
-            .map(|r| r.expect("every shard reported exactly once"))
-            .collect())
+            .enumerate()
+            .map(|(s, r)| r.ok_or_else(|| err_runtime!("shard {s} never reported its rows")))
+            .collect()
     }
 }
 

@@ -172,29 +172,55 @@ where
         let seed = 0xE1_000_000 + case;
         let mut rng = Rng::new(seed);
         if let Err(msg) = f(&mut rng) {
-            panic!("property `{name}` failed on case seed {seed}: {msg}");
+            panic!("property `{name}` failed on case seed {seed}: {msg}"); // elmo-lint: allow(panic-in-library) -- property-harness failure reporting; reached only from #[cfg(test)] consumers
         }
+    }
+}
+
+/// The sanctioned wall-clock handle: every progress / throughput report in
+/// the library times through a `Stopwatch`, and the `wall-clock-in-replay`
+/// lint (docs/LINTS.md) keeps new raw `Instant::now` reads out.  Replayed
+/// paths must not use this — they take an injected `serve::Clock` instead,
+/// so their output never depends on the host.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start timing.  This is the one raw wall-clock read in the library.
+    pub fn start() -> Self {
+        #[allow(clippy::disallowed_methods)]
+        Stopwatch(Instant::now()) // elmo-lint: allow(wall-clock-in-replay) -- the Stopwatch shim is the one sanctioned raw wall-clock read; progress timing routes through it
+    }
+
+    /// Seconds elapsed since `start()`.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed since `start()`.
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
     }
 }
 
 /// Time a closure, returning (result, seconds).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
-    let t0 = Instant::now();
+    let sw = Stopwatch::start();
     let out = f();
-    (out, t0.elapsed().as_secs_f64())
+    (out, sw.secs())
 }
 
 /// Repeat-timing for bench harnesses: runs `f` until `min_secs` elapsed or
 /// `max_iters` reached (after one warmup), returns mean seconds/iter.
 pub fn bench_secs(min_secs: f64, max_iters: usize, mut f: impl FnMut()) -> f64 {
     f(); // warmup
-    let t0 = Instant::now();
+    let sw = Stopwatch::start();
     let mut iters = 0;
-    while iters < max_iters && (iters == 0 || t0.elapsed().as_secs_f64() < min_secs) {
+    while iters < max_iters && (iters == 0 || sw.secs() < min_secs) {
         f();
         iters += 1;
     }
-    t0.elapsed().as_secs_f64() / iters as f64
+    sw.secs() / iters as f64
 }
 
 /// Format seconds as the paper's mm:ss epoch-time column.
@@ -350,6 +376,18 @@ mod tests {
     fn pad_tail_rows_rejects_shrinking() {
         let mut buf = vec![1, 2, 3, 4];
         pad_tail_rows(&mut buf, 2, 1);
+    }
+
+    #[test]
+    fn stopwatch_is_monotone_and_units_agree() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(a >= 0.0 && b >= a, "elapsed time never runs backwards");
+        assert!(sw.ms() >= b * 1e3, "ms is the same reading scaled");
+        let (out, secs) = timed(|| 41 + 1);
+        assert_eq!(out, 42);
+        assert!(secs >= 0.0);
     }
 
     #[test]

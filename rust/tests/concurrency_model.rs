@@ -1,0 +1,263 @@
+//! Model checks for the two concurrency-critical invariants:
+//!
+//! 1. `OrderedReducer` — the fold a caller observes is invariant under
+//!    worker completion order.  Checked exhaustively here over every
+//!    permutation of n <= 7 completions (Heap's algorithm, 5040 orders),
+//!    with the partial frontier pinned after every push.
+//! 2. `serve::Server`'s bounded admission queue — rejects-with-counter,
+//!    never blocks, never overfills, and reconciles exactly
+//!    (`completed + rejected == submitted`).  Checked here by enumerating
+//!    every base-4 event sequence up to length 7 (~22k schedules) against
+//!    a virtual clock.
+//!
+//! The `#[cfg(loom)]` module at the bottom re-states both invariants
+//! under *real* thread interleavings explored by loom's model checker.
+//! It only compiles in the dedicated CI job
+//! (`RUSTFLAGS="--cfg loom" cargo test --test concurrency_model` with the
+//! loom dev-dependency added runner-side), so the default build stays
+//! dependency-free.
+
+use elmo::data::SEQ_LEN;
+use elmo::metrics::TopK;
+use elmo::runtime::OrderedReducer;
+use elmo::serve::{Server, ServerConfig, VirtualClock};
+
+/// All permutations of `0..n` via Heap's algorithm (iterative swap form).
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    fn heap(k: usize, a: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if k <= 1 {
+            out.push(a.clone());
+            return;
+        }
+        for i in 0..k {
+            heap(k - 1, a, out);
+            if k % 2 == 0 {
+                a.swap(i, k - 1);
+            } else {
+                a.swap(0, k - 1);
+            }
+        }
+    }
+    let mut a: Vec<usize> = (0..n).collect();
+    let mut out = Vec::new();
+    heap(n, &mut a, &mut out);
+    out
+}
+
+#[test]
+fn permutations_helper_counts_factorially_and_is_duplicate_free() {
+    for (n, want) in [(0usize, 1usize), (1, 1), (3, 6), (5, 120)] {
+        let mut ps = permutations(n);
+        assert_eq!(ps.len(), want);
+        ps.sort();
+        ps.dedup();
+        assert_eq!(ps.len(), want, "n={n} has duplicate permutations");
+    }
+}
+
+// ---- invariant 1: reducer emission order is completion-order invariant --
+
+#[test]
+fn reducer_fold_is_invariant_under_every_completion_order_up_to_7() {
+    for n in 1..=7usize {
+        let want: Vec<(usize, usize)> = (0..n).map(|i| (i, i * 100)).collect();
+        for arrival in permutations(n) {
+            let mut red = OrderedReducer::new();
+            let mut seen: Vec<(usize, usize)> = Vec::new();
+            let mut received = vec![false; n];
+            for &idx in &arrival {
+                red.push(idx, idx * 100, |i, v| seen.push((i, v)));
+                received[idx] = true;
+                // The frontier is exactly the contiguous received prefix:
+                // nothing emits early, nothing stalls once unblocked.
+                let frontier = received.iter().take_while(|&&r| r).count();
+                assert_eq!(
+                    red.emitted(),
+                    frontier,
+                    "n={n} arrival={arrival:?} after idx={idx}"
+                );
+                assert_eq!(&seen[..], &want[..frontier]);
+            }
+            assert!(red.is_drained(), "n={n} arrival={arrival:?}");
+            assert_eq!(seen, want, "n={n} arrival={arrival:?}");
+        }
+    }
+}
+
+// ---- invariant 2: bounded admission queue ------------------------------
+
+const WIDTH: usize = 2;
+const CAP: usize = 3;
+
+fn score(tokens: &[i32]) -> elmo::error::Result<Vec<TopK>> {
+    Ok((0..tokens.len() / SEQ_LEN).map(|_| TopK::new(1)).collect())
+}
+
+fn rows(n: usize) -> Vec<i32> {
+    vec![7i32; n * SEQ_LEN]
+}
+
+/// Drive one base-4 event schedule and check every queue invariant after
+/// every event.  Events: 0 = submit 1 row, 1 = submit CAP+1 rows (must
+/// overflow), 2 = jump to the next deadline and poll, 3 = flush full
+/// batches.
+fn drive(schedule: &[u8]) {
+    let cfg = ServerConfig { width: WIDTH, queue_cap: CAP, max_delay_ms: 5.0 };
+    let mut server = Server::new(cfg, VirtualClock::new()).expect("config is valid");
+    let mut out = Vec::new();
+    let mut offered = 0u64;
+    let mut accepted = 0u64;
+
+    for (step, ev) in schedule.iter().enumerate() {
+        match ev {
+            0 | 1 => {
+                let n = if *ev == 0 { 1 } else { CAP + 1 };
+                let free = CAP - server.pending();
+                let adm = server
+                    .submit(&rows(n))
+                    .expect("submit never errors on well-shaped rows");
+                offered += n as u64;
+                accepted += adm.accepted.len() as u64;
+                // Reject-with-counter, never block, never drop: every
+                // offered row is accounted for immediately...
+                assert_eq!(adm.accepted.len() + adm.rejected, n, "step {step}: {schedule:?}");
+                // ...and admission is exact: rows fit until the cap, the
+                // remainder bounces.
+                assert_eq!(adm.accepted.len(), n.min(free), "step {step}: {schedule:?}");
+                if *ev == 1 {
+                    assert!(adm.rejected >= 1, "CAP+1 rows must overflow somewhere");
+                }
+            }
+            2 => {
+                let had_deadline = server.next_deadline().is_some();
+                if let Some(d) = server.next_deadline() {
+                    let now = server.clock().now_ms();
+                    server.clock().set(d.max(now));
+                } else {
+                    server.clock().advance(1.0);
+                }
+                let fired = server.poll_deadline(score, &mut out).expect("poll");
+                assert_eq!(
+                    fired, had_deadline,
+                    "a clock sitting exactly on next_deadline() must fire: {schedule:?}"
+                );
+            }
+            _ => {
+                server.run_full(score, &mut out).expect("run_full");
+                assert!(server.pending() < WIDTH, "full batches all flushed");
+            }
+        }
+        // Global invariants, after every event.
+        assert!(server.pending() <= CAP, "queue overfilled: {schedule:?}");
+        assert_eq!(server.stats.submitted, offered);
+        assert_eq!(server.stats.submitted, accepted + server.stats.rejected);
+        // Conservation pre-drain: admitted rows are completed or queued.
+        assert_eq!(
+            server.stats.completed() + server.pending() as u64,
+            accepted,
+            "row leaked: {schedule:?}"
+        );
+    }
+
+    server.drain(score, &mut out).expect("drain");
+    assert_eq!(server.pending(), 0, "{schedule:?}");
+    assert!(server.stats.reconciles(), "completed + rejected != submitted: {schedule:?}");
+    assert_eq!(out.len() as u64, accepted, "every admitted row yields a prediction");
+    // Ids are assigned in admission order and never reused.
+    let mut ids: Vec<u64> = out.iter().map(|p| p.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, accepted, "duplicate query id: {schedule:?}");
+}
+
+#[test]
+fn bounded_queue_invariants_hold_for_every_event_schedule_up_to_7() {
+    let mut schedules = 0u64;
+    for len in 1..=7u32 {
+        for code in 0..4u64.pow(len) {
+            let schedule: Vec<u8> =
+                (0..len).map(|i| ((code >> (2 * i)) & 3) as u8).collect();
+            drive(&schedule);
+            schedules += 1;
+        }
+    }
+    assert_eq!(schedules, 21844, "4 + 16 + ... + 4^7 schedules");
+}
+
+// ---- the same two invariants under loom's interleaving explorer --------
+//
+// Compiled only by the loom CI job; `loom` is added there with
+// `cargo add loom --dev` before the `--cfg loom` test run.
+
+#[cfg(loom)]
+mod loom_model {
+    use super::*;
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+
+    /// Two workers complete interleaved chunks; every interleaving loom
+    /// explores must observe the same serial fold.
+    #[test]
+    fn reducer_emits_serial_order_under_all_thread_interleavings() {
+        loom::model(|| {
+            let shared = Arc::new(Mutex::new((OrderedReducer::new(), Vec::new())));
+            let handles: Vec<_> = [[0usize, 2], [1, 3]]
+                .into_iter()
+                .map(|chunk_ids| {
+                    let shared = Arc::clone(&shared);
+                    thread::spawn(move || {
+                        for idx in chunk_ids {
+                            let mut g = shared.lock().unwrap();
+                            let (red, seen) = &mut *g;
+                            red.push(idx, idx * 10, |i, v| seen.push((i, v)));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let g = shared.lock().unwrap();
+            assert_eq!(g.1, vec![(0, 0), (1, 10), (2, 20), (3, 30)]);
+            assert!(g.0.is_drained());
+            assert_eq!(g.0.emitted(), 4);
+        });
+    }
+
+    /// Concurrent submitters against a full-able queue: submits return
+    /// immediately with exact accounting (reject-never-block), and the
+    /// drained server reconciles under every interleaving.
+    #[test]
+    fn bounded_queue_rejects_never_blocks_under_concurrent_submit() {
+        loom::model(|| {
+            let cfg = ServerConfig { width: 2, queue_cap: 2, max_delay_ms: 1.0 };
+            let server = Arc::new(Mutex::new(
+                Server::new(cfg, VirtualClock::new()).expect("config is valid"),
+            ));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let server = Arc::clone(&server);
+                    thread::spawn(move || {
+                        let adm = server.lock().unwrap().submit(&rows(2)).expect("submit");
+                        assert_eq!(adm.accepted.len() + adm.rejected, 2, "exact accounting");
+                        (adm.accepted.len() as u64, adm.rejected as u64)
+                    })
+                })
+                .collect();
+            let (mut acc, mut rej) = (0u64, 0u64);
+            for h in handles {
+                let (a, r) = h.join().unwrap();
+                acc += a;
+                rej += r;
+            }
+            // Cap 2, offered 4: exactly two rows bounce in EVERY schedule.
+            assert_eq!((acc, rej), (2, 2));
+            let mut server = server.lock().unwrap();
+            let mut out = Vec::new();
+            server.drain(score, &mut out).expect("drain");
+            assert_eq!(server.pending(), 0);
+            assert!(server.stats.reconciles());
+            assert_eq!(out.len(), 2);
+        });
+    }
+}

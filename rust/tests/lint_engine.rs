@@ -1,0 +1,222 @@
+//! Integration tests for `elmo lint`: one violation fixture per rule with
+//! span assertions, marker semantics (allowed / unused / malformed),
+//! scoping, `--fix-allow`, real-binary exit codes, and the self-scan that
+//! pins the shipped tree clean with zero unused allows.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use elmo::lint::{self, Report};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/lint_fixtures")).join(name)
+}
+
+fn scan(name: &str) -> Report {
+    lint::run(&[fixture(name)], false).expect("fixture scans")
+}
+
+/// (line, rule) pairs of every finding, in report order.
+fn spans(r: &Report) -> Vec<(usize, String)> {
+    r.findings.iter().map(|f| (f.line, f.rule.clone())).collect()
+}
+
+// ---- one test per rule: the fixture fires exactly that rule -------------
+
+#[test]
+fn rule_wall_clock_in_replay_fires_on_fixture() {
+    let r = scan("viol_wall_clock.rs");
+    assert_eq!(spans(&r), vec![(3, "wall-clock-in-replay".into())]);
+    assert!(r.findings[0].col > 1, "column points inside the line");
+    assert!(r.findings[0].excerpt.contains("Instant::now"));
+}
+
+#[test]
+fn rule_unordered_iter_in_digest_fires_on_serve_scoped_fixture() {
+    let r = scan("serve/viol_digest_iter.rs");
+    let s = spans(&r);
+    assert_eq!(s.len(), 2, "use + signature both carry HashMap: {s:?}");
+    assert!(s.iter().all(|(_, rule)| rule == "unordered-iter-in-digest"));
+    assert_eq!(s[0].0, 4);
+}
+
+#[test]
+fn rule_panic_in_library_fires_on_unwrap_expect_and_panic() {
+    let r = scan("viol_panic.rs");
+    assert_eq!(
+        spans(&r),
+        vec![
+            (4, "panic-in-library".into()),
+            (8, "panic-in-library".into()),
+            (12, "panic-in-library".into()),
+        ]
+    );
+}
+
+#[test]
+fn rule_unseeded_rng_fires_on_fixture() {
+    let r = scan("viol_rng.rs");
+    assert_eq!(spans(&r), vec![(3, "unseeded-rng".into())]);
+}
+
+#[test]
+fn rule_float_order_hazard_fires_on_policy_scoped_fixture() {
+    let r = scan("policy/viol_float_order.rs");
+    assert_eq!(spans(&r), vec![(4, "float-order-hazard".into())]);
+}
+
+#[test]
+fn rule_raw_thread_spawn_fires_on_fixture() {
+    let r = scan("viol_thread.rs");
+    assert_eq!(spans(&r), vec![(3, "raw-thread-spawn".into())]);
+}
+
+// ---- marker + scope semantics ------------------------------------------
+
+#[test]
+fn clean_fixture_is_clean() {
+    let r = scan("clean.rs");
+    assert!(r.is_clean(), "unexpected findings:\n{}", r.render());
+    assert_eq!(r.allows_used, 0);
+}
+
+#[test]
+fn allow_markers_suppress_and_are_counted() {
+    let r = scan("allowed.rs");
+    assert!(r.is_clean(), "unexpected findings:\n{}", r.render());
+    assert_eq!(r.allows_used, 3, "trailing x2 + standalone x1");
+}
+
+#[test]
+fn stale_marker_is_an_unused_allow_finding() {
+    let r = scan("unused_allow.rs");
+    assert_eq!(spans(&r), vec![(5, "unused-allow".into())]);
+}
+
+#[test]
+fn broken_markers_are_malformed_allow_findings() {
+    let r = scan("malformed_allow.rs");
+    assert_eq!(
+        spans(&r),
+        vec![(4, "malformed-allow".into()), (9, "malformed-allow".into())]
+    );
+    assert!(r.findings[1].message.contains("no-such-rule"));
+}
+
+#[test]
+fn scoped_rules_do_not_fire_outside_their_paths() {
+    let r = scan("unscoped_hash.rs");
+    assert!(r.is_clean(), "HashMap outside the scope fired:\n{}", r.render());
+}
+
+#[test]
+fn whole_fixture_tree_totals_are_stable() {
+    let r = lint::run(&[fixture("")], false).expect("tree scans");
+    assert_eq!(r.files_scanned, 11);
+    assert_eq!(r.allows_used, 3);
+    // 1 wall-clock + 2 digest + 3 panic + 1 rng + 1 float + 1 thread
+    // + 1 unused-allow + 2 malformed-allow
+    assert_eq!(r.findings.len(), 12, "got:\n{}", r.render());
+}
+
+// ---- --fix-allow --------------------------------------------------------
+
+#[test]
+fn fix_allow_rewrites_stale_markers_and_leaves_a_clean_file() {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("lint_fix_allow");
+    std::fs::create_dir_all(&dir).expect("tmpdir");
+    let copy = dir.join("unused_allow.rs");
+    std::fs::copy(fixture("unused_allow.rs"), &copy).expect("copy fixture");
+
+    let r = lint::run(std::slice::from_ref(&copy), true).expect("fix run");
+    assert_eq!(r.allows_fixed, 1);
+    assert!(r.is_clean(), "fix leaves no findings:\n{}", r.render());
+
+    let rewritten = std::fs::read_to_string(&copy).expect("read back");
+    assert!(!rewritten.contains("elmo-lint:"), "marker removed:\n{rewritten}");
+
+    let again = lint::run(std::slice::from_ref(&copy), false).expect("rescan");
+    assert!(again.is_clean());
+}
+
+// ---- the self-scan: shipped tree clean, zero unused allows --------------
+
+#[test]
+fn shipped_tree_is_clean_with_zero_unused_allows() {
+    let src = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
+    let r = lint::run(&[src], false).expect("self-scan");
+    assert!(r.is_clean(), "shipped tree has findings:\n{}", r.render());
+    assert!(r.files_scanned > 40, "scanned {} files", r.files_scanned);
+    assert!(
+        r.allows_used > 0,
+        "the sanctioned shims (Stopwatch, WallClock, RuntimePool) carry markers"
+    );
+    // is_clean() already implies no unused-allow findings; pin it anyway so
+    // a future meta-rule rename keeps this guarantee explicit.
+    assert!(r.findings.iter().all(|f| f.rule != "unused-allow"));
+}
+
+// ---- exit codes through the real binary ---------------------------------
+
+fn elmo_lint(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_elmo"))
+        .arg("lint")
+        .args(args)
+        .output()
+        .expect("spawn elmo")
+}
+
+#[test]
+fn binary_exits_zero_on_clean_and_nonzero_on_each_violation_fixture() {
+    let clean = elmo_lint(&[fixture("clean.rs").to_str().expect("utf8 path")]);
+    assert!(clean.status.success(), "clean fixture must exit 0");
+    let stdout = String::from_utf8_lossy(&clean.stdout);
+    assert!(stdout.contains("lint: clean"), "got: {stdout}");
+
+    for (name, rule) in [
+        ("viol_wall_clock.rs", "wall-clock-in-replay"),
+        ("serve/viol_digest_iter.rs", "unordered-iter-in-digest"),
+        ("viol_panic.rs", "panic-in-library"),
+        ("viol_rng.rs", "unseeded-rng"),
+        ("policy/viol_float_order.rs", "float-order-hazard"),
+        ("viol_thread.rs", "raw-thread-spawn"),
+        ("unused_allow.rs", "unused-allow"),
+        ("malformed_allow.rs", "malformed-allow"),
+    ] {
+        let out = elmo_lint(&[fixture(name).to_str().expect("utf8 path")]);
+        assert!(!out.status.success(), "{name} must exit non-zero");
+        let text = format!(
+            "{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(text.contains(rule), "{name}: expected `{rule}` in:\n{text}");
+    }
+}
+
+#[test]
+fn binary_default_scan_of_the_shipped_tree_is_clean() {
+    let out = Command::new(env!("CARGO_BIN_EXE_elmo"))
+        .arg("lint")
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn elmo");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(out.status.success(), "default `elmo lint` not clean:\n{text}");
+    assert!(text.contains("lint: clean"), "got: {text}");
+}
+
+#[test]
+fn help_lint_documents_the_fix_allow_flag() {
+    let out = Command::new(env!("CARGO_BIN_EXE_elmo"))
+        .args(["help", "lint"])
+        .output()
+        .expect("spawn elmo");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fix-allow"), "got: {text}");
+}

@@ -1,0 +1,19 @@
+// Every violation here carries a reasoned allow marker, so this file
+// scans clean — with three markers in use.
+pub struct Ticker(std::time::Instant);
+
+impl Ticker {
+    pub fn start() -> Self {
+        Ticker(std::time::Instant::now()) // elmo-lint: allow(wall-clock-in-replay) -- fixture: plays the sanctioned shim
+    }
+}
+
+pub fn fan_out() {
+    // elmo-lint: allow(raw-thread-spawn) -- fixture: plays the pool's one spawn site
+    let h = std::thread::spawn(|| 1 + 1);
+    drop(h);
+}
+
+pub fn provable(v: &[u32]) -> u32 {
+    *v.first().expect("caller guarantees non-empty") // elmo-lint: allow(panic-in-library) -- fixture: infallibility provable at the call site
+}

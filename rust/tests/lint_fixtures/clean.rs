@@ -1,0 +1,22 @@
+// A lint-clean source: typed errors, no raw wall clock, and the tokens
+// that WOULD fire sit only where the scanner must ignore them — strings,
+// comments, and #[cfg(test)] code.
+pub fn add(a: u32, b: u32) -> u32 {
+    // a comment may say Instant::now or panic! freely
+    a.checked_add(b).unwrap_or(u32::MAX)
+}
+
+pub fn describe() -> &'static str {
+    "calling .unwrap() or thread::spawn in a string is not a violation"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_panic_and_time_freely() {
+        let v = vec![1u32];
+        assert_eq!(*v.first().unwrap(), 1);
+        let t0 = std::time::Instant::now();
+        assert!(t0.elapsed().as_secs_f64() >= 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+// Two broken markers: one missing its `-- <reason>`, one naming a rule
+// that does not exist.  Both are `malformed-allow` findings.
+pub fn no_reason() -> u32 {
+    // elmo-lint: allow(panic-in-library)
+    2
+}
+
+pub fn unknown_rule() -> u32 {
+    // elmo-lint: allow(no-such-rule) -- a reason for a rule that is not real
+    3
+}

@@ -1,0 +1,5 @@
+// Violates float-order-hazard: an iterator sum in a parity-pinned module
+// (this file sits under policy/).
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().copied().sum::<f32>()
+}

@@ -1,0 +1,12 @@
+// Violates unordered-iter-in-digest: this file sits under serve/, on the
+// deterministic surface, where HashMap iteration order would feed a
+// digest.
+use std::collections::HashMap;
+
+pub fn digest(m: &HashMap<u32, u32>) -> u64 {
+    let mut h = 0u64;
+    for (k, v) in m.iter() {
+        h ^= ((*k as u64) << 32) | *v as u64;
+    }
+    h
+}

@@ -1,0 +1,12 @@
+// HashMap is fine OUTSIDE the deterministic surface: this file's path is
+// not under bench/, serve/, infer/shortlist.rs, or store.rs, so the
+// unordered-iter-in-digest rule does not apply and this scans clean.
+use std::collections::HashMap;
+
+pub fn count(keys: &[u32]) -> HashMap<u32, usize> {
+    let mut m = HashMap::new();
+    for k in keys {
+        *m.entry(*k).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,7 @@
+// A marker whose violation was fixed but whose waiver was left behind:
+// the engine reports it as `unused-allow`, and `--fix-allow true`
+// removes it.
+pub fn quiet() -> u32 {
+    // elmo-lint: allow(panic-in-library) -- nothing here panics any more
+    1 + 1
+}

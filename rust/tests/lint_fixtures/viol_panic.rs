@@ -1,0 +1,13 @@
+// Violates panic-in-library three ways: unwrap, expect-with-message,
+// and an explicit panic.
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+pub fn head(v: &[u32]) -> u32 {
+    *v.first().expect("non-empty")
+}
+
+pub fn boom() {
+    panic!("boom");
+}

@@ -1,0 +1,6 @@
+// Violates unseeded-rng: entropy-seeded randomness cannot replay.
+pub fn entropy() -> u64 {
+    let state = std::collections::hash_map::RandomState::new();
+    let _ = state;
+    0
+}

@@ -1,0 +1,5 @@
+// Violates raw-thread-spawn: threads outside runtime/pool.rs.
+pub fn fan_out() -> u64 {
+    let h = std::thread::spawn(|| 41 + 1);
+    h.join().unwrap_or(0)
+}

@@ -1,0 +1,5 @@
+// Violates wall-clock-in-replay: a raw Instant::now outside the shims.
+pub fn now_ms() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64() * 1e3
+}
