@@ -16,7 +16,10 @@
 #[global_allocator]
 static ALLOC: elmo::bench::CountingAlloc = elmo::bench::CountingAlloc;
 
-use elmo::bench::{self, ARRIVAL_SEED, BURSTS, RATES, SHARDS, SHORTLIST_PROBES};
+use elmo::bench::{
+    self, ARRIVAL_SEED, BURSTS, CACHE_CELLS, RATES, REPLICA_COUNTS, SHARDS, SHORTLIST_PROBES,
+};
+use elmo::serve::RoutePolicy;
 use elmo::util::print_table;
 
 fn main() -> anyhow::Result<()> {
@@ -70,6 +73,56 @@ fn main() -> anyhow::Result<()> {
     print_table(
         &["cell", "done", "batches", "chunks", "recall", "index B", "results digest"],
         &sl_rows,
+    );
+
+    // replica cells: both routing policies over the same corner — the
+    // results digest column must match r4000/b1/s1 above, line for line
+    let mut rep_rows = Vec::new();
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+        let tag = match policy {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "ll",
+        };
+        for replicas in REPLICA_COUNTS {
+            let cell = bench::run_replica_cell(replicas, policy, ARRIVAL_SEED)?;
+            let s = &cell.stats;
+            let routed: Vec<String> =
+                s.replica_batches.iter().map(|b| b.to_string()).collect();
+            rep_rows.push(vec![
+                format!("rep/{tag}{replicas}"),
+                s.completed().to_string(),
+                s.core.batches.to_string(),
+                format!("[{}]", routed.join(" ")),
+                cell.replica_bytes.to_string(),
+                format!("{:016x}", cell.results_digest),
+            ]);
+        }
+    }
+    println!("== replica cells (routing chooses who scans, never what) ==");
+    print_table(&["cell", "done", "batches", "routed", "replica B", "results digest"], &rep_rows);
+
+    // cache cells: Zipf hot-key mixes through the swap-aware cached scan
+    let mut cache_rows = Vec::new();
+    for (tag, zipf_keys, zipf_s, cap, swap_at_ms, ramp_period_ms) in CACHE_CELLS {
+        let cell =
+            bench::run_cache_cell(zipf_keys, zipf_s, cap, swap_at_ms, ramp_period_ms, ARRIVAL_SEED)?;
+        let s = &cell.stats;
+        cache_rows.push(vec![
+            format!("cache/{tag}"),
+            s.completed().to_string(),
+            s.core.batches.to_string(),
+            s.chunks_scanned.to_string(),
+            format!("{}/{}", s.cache_hits, s.cache_lookups),
+            s.cache_evictions.to_string(),
+            s.cache_batch_skips.to_string(),
+            format!("v{}", s.model_version),
+            format!("{:016x}", cell.results_digest),
+        ]);
+    }
+    println!("== cache cells (seeded Zipf mixes, swap-aware cached scan) ==");
+    print_table(
+        &["cell", "done", "batches", "chunks", "hit/look", "evict", "skips", "ver", "results digest"],
+        &cache_rows,
     );
 
     rep.save("BENCH_serve_throughput.json")?;

@@ -34,22 +34,11 @@ use crate::error::{Result, ResultExt};
 /// Format version; the comparator refuses to gate across versions.
 pub const SCHEMA_VERSION: u64 = 1;
 
-/// FNV-1a 64-bit offset basis (shared with `serve::stats`' digest).
-pub const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV64_PRIME: u64 = 0x1_0000_0001_b3;
-
-/// Fold bytes into a running FNV-1a 64-bit hash.
-pub fn fnv1a64_fold(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h = (h ^ b as u64).wrapping_mul(FNV64_PRIME);
-    }
-    h
-}
-
-/// FNV-1a 64-bit hash of a byte string (config fingerprints).
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    fnv1a64_fold(FNV64_OFFSET, bytes)
-}
+/// The shared FNV-1a 64-bit digest (config fingerprints here; packing
+/// digests, checkpoint checksums, and the query cache elsewhere).  The
+/// single definition lives in `util`; this re-export keeps the historical
+/// `bench::{fnv1a64, fnv1a64_fold, FNV64_OFFSET}` paths working.
+pub use crate::util::{fnv1a64, fnv1a64_fold, FNV64_OFFSET};
 
 /// The current git revision, best effort: `ELMO_GIT_REV` when set (CI
 /// exports it), else `.git/HEAD` resolved one level, else "unknown".

@@ -21,7 +21,10 @@ use crate::error::Result;
 use crate::infer::{Prediction, ShortlistIndex, ShortlistSpec};
 use crate::memmodel::{self, MemParams, Method};
 use crate::metrics::TopK;
-use crate::serve::{self, LoadGen, LoadGenConfig, Server, ServerConfig, ServingStats, VirtualClock};
+use crate::serve::{
+    self, LoadGen, LoadGenConfig, QueryCache, Ramp, ReplicaRouter, RoutePolicy, ScenarioConfig,
+    ScenarioGen, Server, ServerConfig, ServingStats, VirtualClock, WarmSwap, ZipfKeys,
+};
 use crate::store::{BufferSpec, WeightStore};
 
 /// Default arrival seed for the committed baseline.
@@ -75,6 +78,36 @@ pub const SHORTLIST_BURST: usize = 1;
 /// `n/8 + 8.0` sum are exactly representable in f32: the digest stays
 /// platform-exact.
 pub const SHORTLIST_BONUS: f32 = 8.0;
+
+/// Replica-group cells: R pinned copies behind one queue, both routing
+/// policies.  They run at the zero-rejection corner (`r4000/b1`) whose
+/// exact twin is already in the grid, so the committed baseline itself
+/// witnesses routing invariance: `rep/*/results_digest` must equal
+/// `r4000/b1/s1/results_digest` cell-for-cell.
+pub const REPLICA_COUNTS: [usize; 2] = [2, 4];
+pub const REPLICA_RATE: u64 = 4000;
+pub const REPLICA_BURST: usize = 1;
+
+/// Hot-query-cache cells, each a (tag, zipf keys, zipf s, cache cap,
+/// swap_at virtual ms, diurnal ramp period ms) scenario mix (0 = knob
+/// off):
+///
+/// * `hot` — 16 keys at s=1.2 with the whole universe cacheable: after
+///   warm-up every batch hits end-to-end (`cache_batch_skips` > 0,
+///   `chunks_scanned` stops growing, zero evictions);
+/// * `churn` — 64 keys at s=1.1 over a cap of 8, under a diurnal rate
+///   ramp: steady eviction churn plus ramp coverage in one committed
+///   digest;
+/// * `swap` — the `hot` mix with a warm swap staged mid-run: the
+///   resident entries are invalidated at the boundary, `model_version`
+///   reaches 2, and the cache re-warms from scratch.
+pub const CACHE_CELLS: [(&str, usize, f64, usize, f64, f64); 3] = [
+    ("hot", 16, 1.2, 16, 0.0, 0.0),
+    ("churn", 64, 1.1, 8, 0.0, 50.0),
+    ("swap", 16, 1.2, 16, 50.0, 0.0),
+];
+pub const CACHE_RATE: u64 = 4000;
+pub const CACHE_BURST: usize = 6;
 
 /// Synthetic score for (first token, label): a SplitMix64-style integer
 /// finalizer folded onto a coarse 64-bucket grid.  Coarse on purpose —
@@ -356,6 +389,252 @@ pub fn run_shortlist_cell(probe: usize, seed: u64) -> Result<ShortlistCellOutcom
     })
 }
 
+/// One replica cell's outcome: the exact-cell counters plus the routing
+/// tally and the incremental snapshot footprint.
+pub struct ReplicaCellOutcome {
+    pub stats: ServingStats,
+    /// Same fold as `CellOutcome::results_digest`.  The routing-invariance
+    /// contract: this must equal the `r4000/b1/s1` exact cell's digest for
+    /// every (policy, R) — routing chooses who scans, never what.
+    pub results_digest: u64,
+    pub completions: usize,
+    /// `memmodel::serve_replica_bytes` at this cell's replica count.
+    pub replica_bytes: u64,
+}
+
+/// Run one replica-group cell: the `r4000/b1` arrival schedule with every
+/// batch routed across `replicas` identical snapshot copies.
+///
+/// The scoring body is byte-for-byte the `run_cell(shards=1)` body — the
+/// router only picks an index — so the committed baseline itself proves
+/// routing invariance (`rep/*/results_digest == r4000/b1/s1/
+/// results_digest`).  What the replica cells add to the record is the
+/// routing tally per policy: round-robin spreads batches `i % R`, while
+/// least-loaded follows cumulative routed rows, and both distributions
+/// replay exactly from the arrival seed.
+pub fn run_replica_cell(replicas: usize, policy: RoutePolicy, seed: u64) -> Result<ReplicaCellOutcome> {
+    let schedule = LoadGen::new(LoadGenConfig {
+        rate_qps: REPLICA_RATE as f64,
+        burst_max: REPLICA_BURST,
+        seed,
+    })?
+    .schedule_rows(SCEN_ROWS);
+    let mut sv = Server::new(
+        ServerConfig {
+            width: SCEN_WIDTH,
+            queue_cap: SCEN_QUEUE_CAP,
+            max_delay_ms: SCEN_MAX_DELAY_MS,
+        },
+        VirtualClock::new(),
+    )?;
+    let mut out: Vec<Prediction> = Vec::with_capacity(SCEN_ROWS);
+    let mut next_row = 0i32;
+    let mut chunks_scanned = 0u64;
+    let mut router = ReplicaRouter::new(replicas, policy)?;
+    serve::replay(
+        &mut sv,
+        &schedule,
+        |rows| {
+            let mut toks = vec![0i32; rows * SEQ_LEN];
+            for i in 0..rows {
+                toks[i * SEQ_LEN] = next_row + i as i32;
+            }
+            next_row += rows as i32;
+            toks
+        },
+        |tokens: &[i32]| {
+            // routing picks WHO scans; every replica pins the same
+            // snapshot, so the scan below is replica-blind by
+            // construction — `_r` indexes a copy, not a variant
+            let _r = router.route(tokens.len() / SEQ_LEN);
+            chunks_scanned += SCEN_N_CHUNKS as u64;
+            let mut per_shard: Vec<Vec<TopK>> = Vec::with_capacity(1);
+            per_shard.push(
+                tokens
+                    .chunks_exact(SEQ_LEN)
+                    .map(|row| {
+                        let t = row[0] as u32;
+                        let mut tk = TopK::new(SCEN_K);
+                        for label in 0..SCEN_LABELS as u32 {
+                            tk.push(synth_score(t, label), label);
+                        }
+                        tk
+                    })
+                    .collect(),
+            );
+            serve::merge_rows(SCEN_K, &per_shard)
+        },
+        &mut out,
+    )?;
+    sv.stats.chunks_scanned = chunks_scanned;
+    sv.stats.replica_batches = router.batches().to_vec();
+    if !sv.stats.reconciles() {
+        return Err(err_runtime!("replica counters do not reconcile: {}", sv.stats.summary()));
+    }
+
+    let mut h = FNV64_OFFSET;
+    for p in &out {
+        h = fnv1a64_fold(h, &p.id.to_le_bytes());
+        for &(score, label) in &p.topk {
+            h = fnv1a64_fold(h, &score.to_bits().to_le_bytes());
+            h = fnv1a64_fold(h, &label.to_le_bytes());
+        }
+    }
+
+    let order: Vec<u32> = (0..SCEN_LABELS as u32).collect();
+    let store =
+        WeightStore::new(SCEN_LABELS, SCEN_D, SCEN_CHUNK, order, 0, BufferSpec::default())?;
+    let replica_bytes = memmodel::serve_replica_bytes(&store, replicas) as u64;
+
+    Ok(ReplicaCellOutcome {
+        results_digest: h,
+        completions: out.len(),
+        replica_bytes,
+        stats: sv.stats,
+    })
+}
+
+/// One cache cell's outcome: the serving counters (cache block included)
+/// plus the scenario's schedule digest and the cache's byte footprint.
+pub struct CacheCellOutcome {
+    pub stats: ServingStats,
+    /// Same fold as `CellOutcome::results_digest`.
+    pub results_digest: u64,
+    /// `serve::schedule_digest` of the Zipf scenario — pins the arrival
+    /// times AND the per-row key draws.
+    pub schedule_digest: u64,
+    pub completions: usize,
+    /// `memmodel::serve_cache_bytes` at this cell's capacity.
+    pub cache_bytes: u64,
+}
+
+/// Run one hot-query-cache cell: a seeded Zipf key mix (optionally under
+/// a diurnal ramp) scored through the swap-aware cached-scan composition
+/// that `elmo serve` uses — drain due swaps at the batch boundary, look
+/// every padded row up by digest, skip the scan entirely when the whole
+/// batch hits, insert the missed rows after scanning.
+///
+/// Padding repeats the batch's last valid row, so padded rows share its
+/// digest and "every padded row hits" is equivalent to "every valid row
+/// hits" — the skip never serves a row the cache has not actually seen.
+/// The swap variant stages one warm swap on the shared `VirtualClock`;
+/// its boundary invalidates the resident entries, bumps `model_version`,
+/// and the cache re-warms, all pinned by the committed counters.
+pub fn run_cache_cell(
+    zipf_keys: usize,
+    zipf_s: f64,
+    cache_cap: usize,
+    swap_at_ms: f64,
+    ramp_period_ms: f64,
+    seed: u64,
+) -> Result<CacheCellOutcome> {
+    let scenario = ScenarioGen::new(ScenarioConfig {
+        base: LoadGenConfig { rate_qps: CACHE_RATE as f64, burst_max: CACHE_BURST, seed },
+        ramp: if ramp_period_ms > 0.0 {
+            Ramp::Diurnal { period_ms: ramp_period_ms }
+        } else {
+            Ramp::Flat
+        },
+        zipf: Some(ZipfKeys { keys: zipf_keys, s: zipf_s }),
+    })?
+    .schedule_rows(SCEN_ROWS);
+    let sched_digest = serve::schedule_digest(&scenario);
+    let schedule: Vec<serve::Arrival> = scenario.iter().map(|a| a.arrival()).collect();
+    let keys: Vec<u32> = scenario.iter().flat_map(|a| a.keys.iter().copied()).collect();
+
+    let clock = std::rc::Rc::new(VirtualClock::new());
+    let mut sv = Server::new(
+        ServerConfig {
+            width: SCEN_WIDTH,
+            queue_cap: SCEN_QUEUE_CAP,
+            max_delay_ms: SCEN_MAX_DELAY_MS,
+        },
+        clock.clone(),
+    )?;
+    let mut out: Vec<Prediction> = Vec::with_capacity(SCEN_ROWS);
+    let mut next_key = 0usize;
+    let mut chunks_scanned = 0u64;
+    let mut cache_skips = 0u64;
+    let mut cache: QueryCache<TopK> = QueryCache::new(cache_cap);
+    let mut swap: WarmSwap<()> = WarmSwap::new();
+    if swap_at_ms > 0.0 {
+        swap.stage(swap_at_ms, ())?;
+    }
+    let swap_clock = clock.clone();
+    serve::replay(
+        &mut sv,
+        &schedule,
+        |rows| {
+            let mut toks = vec![0i32; rows * SEQ_LEN];
+            for i in 0..rows {
+                toks[i * SEQ_LEN] = keys[next_key + i] as i32;
+            }
+            next_key += rows;
+            toks
+        },
+        |tokens: &[i32]| {
+            // swap boundary first: entries scored on the old version must
+            // not answer post-swap lookups in this very batch
+            for () in swap.take_due(swap_clock.now_ms()) {
+                cache.invalidate_all();
+            }
+            let digests: Vec<u64> =
+                tokens.chunks_exact(SEQ_LEN).map(serve::row_digest).collect();
+            let cached: Vec<Option<TopK>> =
+                digests.iter().map(|&d| cache.get(d)).collect();
+            if cached.iter().all(|c| c.is_some()) {
+                cache_skips += 1;
+                return Ok(cached.into_iter().flatten().collect());
+            }
+            chunks_scanned += SCEN_N_CHUNKS as u64;
+            let topks: Vec<TopK> = tokens
+                .chunks_exact(SEQ_LEN)
+                .map(|row| {
+                    let t = row[0] as u32;
+                    let mut tk = TopK::new(SCEN_K);
+                    for label in 0..SCEN_LABELS as u32 {
+                        tk.push(synth_score(t, label), label);
+                    }
+                    tk
+                })
+                .collect();
+            for (i, c) in cached.iter().enumerate() {
+                if c.is_none() {
+                    cache.insert(digests[i], topks[i].clone());
+                }
+            }
+            Ok(topks)
+        },
+        &mut out,
+    )?;
+    sv.stats.chunks_scanned = chunks_scanned;
+    for _ in 0..swap.applied() {
+        sv.stats.note_swap();
+    }
+    sv.stats.absorb_cache(&cache);
+    sv.stats.cache_batch_skips = cache_skips;
+    if !sv.stats.reconciles() || !cache.reconciles() {
+        return Err(err_runtime!("cache counters do not reconcile: {}", sv.stats.summary()));
+    }
+
+    let mut h = FNV64_OFFSET;
+    for p in &out {
+        h = fnv1a64_fold(h, &p.id.to_le_bytes());
+        for &(score, label) in &p.topk {
+            h = fnv1a64_fold(h, &score.to_bits().to_le_bytes());
+            h = fnv1a64_fold(h, &label.to_le_bytes());
+        }
+    }
+
+    Ok(CacheCellOutcome {
+        results_digest: h,
+        schedule_digest: sched_digest,
+        completions: out.len(),
+        cache_bytes: memmodel::serve_cache_bytes(cache_cap, SCEN_K) as u64,
+        stats: sv.stats,
+    })
+}
+
 /// The memmodel methods the report pins, with stable metric-name tags.
 pub const MEM_METHODS: [(Method, &str); 6] = [
     (Method::Renee, "renee"),
@@ -371,11 +650,13 @@ pub const MEM_METHODS: [(Method, &str); 6] = [
 /// fingerprint itself is platform-exact.
 pub fn serve_throughput_config(seed: u64) -> String {
     format!(
-        "serve_throughput v2 rows={SCEN_ROWS} width={SCEN_WIDTH} queue_cap={SCEN_QUEUE_CAP} \
+        "serve_throughput v3 rows={SCEN_ROWS} width={SCEN_WIDTH} queue_cap={SCEN_QUEUE_CAP} \
          max_delay_us={SCEN_MAX_DELAY_US} labels={SCEN_LABELS} d={SCEN_D} chunk={SCEN_CHUNK} \
          k={SCEN_K} workers={SCEN_WORKERS} rates=500,4000 bursts=1,6 shards=1,2,4 \
          shortlist_probes=1,2 shortlist_rate=4000 shortlist_burst=1 \
-         shortlist_bonus_eighths=64 seed={seed}"
+         shortlist_bonus_eighths=64 replicas=2,4 routes=rr,ll replica_rate=4000 \
+         replica_burst=1 cache_rate=4000 cache_burst=6 \
+         cache_cells=hot:16:12:16:0:0,churn:64:11:8:0:50,swap:16:12:16:50:0 seed={seed}"
     )
 }
 
@@ -388,7 +669,13 @@ pub fn serve_throughput_config(seed: u64) -> String {
 /// zero-rejection corner through the two-stage scanner and pin the
 /// sublinearity evidence: `chunks_scanned` strictly below the exact
 /// cell's, recall vs. the full-label oracle, and the centroid-index byte
-/// cost.  Virtual
+/// cost.  Four replica cells (`rep/{rr|ll}{R}/`) rerun the same corner
+/// through both routing policies at R in {2, 4} and pin the routing
+/// tally, the snapshot byte model, and — via digest equality with
+/// `r4000/b1/s1` — the routing-invariance contract.  Three cache cells
+/// (`cache/{hot|churn|swap}/`) replay seeded Zipf mixes through the
+/// swap-aware cached scan and pin the full cache counter block, the
+/// scenario schedule digest, and the swap version history.  Virtual
 /// latency percentiles are wall-clock-kind (they inherit libm ulps from
 /// the arrival process).  Global metrics: `memmodel` peak bytes for every
 /// method at the paper's Sec 4.4 walkthrough (exact), allocation counts
@@ -441,6 +728,46 @@ pub fn serve_throughput_report(seed: u64) -> Result<BenchReport> {
         rep.det_u64(&format!("{p}/recall_hits"), cell.recall_hits)?;
         rep.det_u64(&format!("{p}/recall_total"), cell.recall_total)?;
         rep.det_u64(&format!("{p}/shortlist_index_bytes"), cell.index_bytes)?;
+    }
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+        let tag = match policy {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "ll",
+        };
+        for replicas in REPLICA_COUNTS {
+            let cell = run_replica_cell(replicas, policy, seed)?;
+            let p = format!("rep/{tag}{replicas}");
+            rep.det_digest(&format!("{p}/packing_digest"), cell.stats.packing_digest())?;
+            rep.det_digest(&format!("{p}/results_digest"), cell.results_digest)?;
+            rep.det_u64(&format!("{p}/completed"), cell.stats.completed())?;
+            rep.det_u64(&format!("{p}/batches"), cell.stats.core.batches)?;
+            rep.det_u64(&format!("{p}/chunks_scanned"), cell.stats.chunks_scanned)?;
+            for (i, &routed) in cell.stats.replica_batches.iter().enumerate() {
+                rep.det_u64(&format!("{p}/routed{i}"), routed)?;
+            }
+            rep.det_u64(&format!("{p}/replica_bytes"), cell.replica_bytes)?;
+        }
+    }
+    for (tag, zipf_keys, zipf_s, cap, swap_at_ms, ramp_period_ms) in CACHE_CELLS {
+        let cell = run_cache_cell(zipf_keys, zipf_s, cap, swap_at_ms, ramp_period_ms, seed)?;
+        let p = format!("cache/{tag}");
+        rep.det_digest(&format!("{p}/packing_digest"), cell.stats.packing_digest())?;
+        rep.det_digest(&format!("{p}/schedule_digest"), cell.schedule_digest)?;
+        rep.det_digest(&format!("{p}/results_digest"), cell.results_digest)?;
+        rep.det_u64(&format!("{p}/submitted"), cell.stats.submitted)?;
+        rep.det_u64(&format!("{p}/completed"), cell.stats.completed())?;
+        rep.det_u64(&format!("{p}/rejected"), cell.stats.rejected)?;
+        rep.det_u64(&format!("{p}/batches"), cell.stats.core.batches)?;
+        rep.det_u64(&format!("{p}/chunks_scanned"), cell.stats.chunks_scanned)?;
+        rep.det_u64(&format!("{p}/cache_lookups"), cell.stats.cache_lookups)?;
+        rep.det_u64(&format!("{p}/cache_hits"), cell.stats.cache_hits)?;
+        rep.det_u64(&format!("{p}/cache_misses"), cell.stats.cache_misses)?;
+        rep.det_u64(&format!("{p}/cache_evictions"), cell.stats.cache_evictions)?;
+        rep.det_u64(&format!("{p}/cache_invalidations"), cell.stats.cache_invalidations)?;
+        rep.det_u64(&format!("{p}/cache_batch_skips"), cell.stats.cache_batch_skips)?;
+        rep.det_u64(&format!("{p}/model_version"), cell.stats.model_version)?;
+        rep.det_u64(&format!("{p}/swaps"), cell.stats.swaps)?;
+        rep.det_u64(&format!("{p}/cache_bytes"), cell.cache_bytes)?;
     }
     if counting_enabled() {
         let da = alloc_since(alloc_start);

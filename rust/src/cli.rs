@@ -88,6 +88,15 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
             "shortlist-enabled",
             "shortlist-clusters",
             "shortlist-probe",
+            "replicas",
+            "route",
+            "cache-cap",
+            "swap-at-ms",
+            "zipf-s",
+            "zipf-keys",
+            "ramp",
+            "ramp-period-ms",
+            "stats-json",
             "artifacts",
             "workers",
             "config",
@@ -170,7 +179,10 @@ USAGE:
                    [--shards R] [--queue-cap N] [--max-delay-ms F]
                    [--rate QPS] [--burst N] [--arrival-seed N]
                    [--shortlist-enabled BOOL] [--shortlist-clusters C]
-                   [--shortlist-probe P] [--artifacts DIR] [--workers N]
+                   [--shortlist-probe P] [--replicas R] [--route POLICY]
+                   [--cache-cap N] [--swap-at-ms F] [--zipf-s F]
+                   [--zipf-keys N] [--ramp SHAPE] [--ramp-period-ms F]
+                   [--stats-json PATH] [--artifacts DIR] [--workers N]
   elmo datasets
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
@@ -209,6 +221,24 @@ SERVE FLAGS (docs/SERVING.md):
   --burst N         each arrival carries 1..=N rows
   --arrival-seed N  arrival-process seed: the same seed replays the exact
                     packing decisions (reported as a packing digest)
+
+PRODUCTION SERVE FLAGS (docs/SERVING.md):
+  --replicas R      replica-group size: R independent pinned copies of the
+                    shard pool behind one queue (default 1); routing picks
+                    who scans, never what — results are bit-identical for
+                    any R
+  --route POLICY    replica routing policy: round-robin | least-loaded
+  --cache-cap N     bounded LRU hot-query cache, in entries (default 0 =
+                    disabled); exact-scan only, invalidated on swap
+  --swap-at-ms F    stage a warm checkpoint swap at virtual ms F (0 = no
+                    swap); cuts over between batches, bumps model_version
+  --zipf-s F        scenario mix: Zipf hot-key exponent (0 = sequential
+                    keys, no repeats)
+  --zipf-keys N     scenario mix: Zipf key-universe size
+  --ramp SHAPE      scenario mix: arrival-rate ramp, flat | diurnal
+  --ramp-period-ms F  diurnal ramp period in virtual ms
+  --stats-json PATH   write the final ServingStats as a byte-stable
+                    BENCH-format JSON report to PATH
 
 SHORTLIST FLAGS (serve + predict; docs/SERVING.md):
   --shortlist-enabled BOOL   score via the two-stage shortlist: cluster

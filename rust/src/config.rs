@@ -32,7 +32,7 @@ use crate::error::{Result, ResultExt};
 
 /// Every key a `RunSpec` file (or the matching CLI flag) may set, in the
 /// canonical serialization order.
-pub const KEYS: [&str; 24] = [
+pub const KEYS: [&str; 32] = [
     "profile",
     "precision",
     "chunk",
@@ -57,6 +57,14 @@ pub const KEYS: [&str; 24] = [
     "serve.shortlist.enabled",
     "serve.shortlist.clusters",
     "serve.shortlist.probe",
+    "serve.replicas",
+    "serve.route",
+    "serve.cache_cap",
+    "serve.swap_at_ms",
+    "serve.zipf_s",
+    "serve.zipf_keys",
+    "serve.ramp",
+    "serve.ramp_period_ms",
 ];
 
 /// CLI flag name -> RunSpec key (flags are dashed, keys underscored) for
@@ -81,7 +89,7 @@ const FLAG_KEYS: [(&str, &str); 15] = [
 
 /// Serving-only CLI flags (`elmo serve`) -> `serve.*` RunSpec keys,
 /// layered by `apply_flags` exactly like `FLAG_KEYS`.
-const SERVE_FLAG_KEYS: [(&str, &str); 9] = [
+const SERVE_FLAG_KEYS: [(&str, &str); 17] = [
     ("shards", "serve.shards"),
     ("queue-cap", "serve.queue_cap"),
     ("max-delay-ms", "serve.max_delay_ms"),
@@ -91,6 +99,14 @@ const SERVE_FLAG_KEYS: [(&str, &str); 9] = [
     ("shortlist-enabled", "serve.shortlist.enabled"),
     ("shortlist-clusters", "serve.shortlist.clusters"),
     ("shortlist-probe", "serve.shortlist.probe"),
+    ("replicas", "serve.replicas"),
+    ("route", "serve.route"),
+    ("cache-cap", "serve.cache_cap"),
+    ("swap-at-ms", "serve.swap_at_ms"),
+    ("zipf-s", "serve.zipf_s"),
+    ("zipf-keys", "serve.zipf_keys"),
+    ("ramp", "serve.ramp"),
+    ("ramp-period-ms", "serve.ramp_period_ms"),
 ];
 
 /// A declarative run description.  Defaults match the CLI flag defaults,
@@ -142,6 +158,27 @@ pub struct RunSpec {
     /// Clusters fine-scanned per query row (stage-1 top-`probe`; clamps
     /// to the cluster count).
     pub serve_shortlist_probe: usize,
+    /// `elmo serve`: replica-group size R — independent pinned copies of
+    /// the shard pool behind one admission queue (1 = no replication).
+    pub serve_replicas: usize,
+    /// `elmo serve`: replica routing policy (`round-robin` or
+    /// `least-loaded`); routing chooses who scans, never what.
+    pub serve_route: String,
+    /// `elmo serve`: hot-query cache capacity in entries (0 = disabled).
+    /// Incompatible with the shortlist (see `validate_serve`).
+    pub serve_cache_cap: usize,
+    /// `elmo serve`: stage a warm checkpoint swap at this virtual
+    /// millisecond (0 = no swap).
+    pub serve_swap_at_ms: f64,
+    /// `elmo serve`: Zipf exponent for the hot-key scenario mix (0 =
+    /// sequential keys, no repeats).
+    pub serve_zipf_s: f64,
+    /// `elmo serve`: Zipf key-universe size for the hot-key mix.
+    pub serve_zipf_keys: usize,
+    /// `elmo serve`: arrival-rate ramp shape (`flat` or `diurnal`).
+    pub serve_ramp: String,
+    /// `elmo serve`: diurnal ramp period, virtual milliseconds.
+    pub serve_ramp_period_ms: f64,
     /// Keys explicitly set by a file or flag (drives decisions like
     /// `elmo predict` preferring the checkpoint's stored profile unless
     /// one was explicitly chosen).  Not part of equality.
@@ -175,6 +212,14 @@ impl Default for RunSpec {
             serve_shortlist_enabled: false,
             serve_shortlist_clusters: 0,
             serve_shortlist_probe: 4,
+            serve_replicas: 1,
+            serve_route: "round-robin".to_string(),
+            serve_cache_cap: 0,
+            serve_swap_at_ms: 0.0,
+            serve_zipf_s: 0.0,
+            serve_zipf_keys: 64,
+            serve_ramp: "flat".to_string(),
+            serve_ramp_period_ms: 1000.0,
             explicit: BTreeSet::new(),
         }
     }
@@ -297,6 +342,14 @@ impl RunSpec {
             "serve.shortlist.enabled" => self.serve_shortlist_enabled = num(key, val)?,
             "serve.shortlist.clusters" => self.serve_shortlist_clusters = num(key, val)?,
             "serve.shortlist.probe" => self.serve_shortlist_probe = num(key, val)?,
+            "serve.replicas" => self.serve_replicas = num(key, val)?,
+            "serve.route" => self.serve_route = val.to_string(),
+            "serve.cache_cap" => self.serve_cache_cap = num(key, val)?,
+            "serve.swap_at_ms" => self.serve_swap_at_ms = num(key, val)?,
+            "serve.zipf_s" => self.serve_zipf_s = num(key, val)?,
+            "serve.zipf_keys" => self.serve_zipf_keys = num(key, val)?,
+            "serve.ramp" => self.serve_ramp = val.to_string(),
+            "serve.ramp_period_ms" => self.serve_ramp_period_ms = num(key, val)?,
             other => return Err(err_config!("unknown key `{other}`")),
         }
         self.explicit.insert(key);
@@ -389,6 +442,40 @@ impl RunSpec {
                 "`serve.shortlist.probe` must be >= 1 (clusters fine-scanned per row)"
             ));
         }
+        if self.serve_replicas == 0 {
+            return Err(err_config!("`serve.replicas` must be >= 1 (1 = no replication)"));
+        }
+        // routing policy and ramp shape are closed enum-like strings
+        crate::serve::RoutePolicy::parse(&self.serve_route)?;
+        match self.serve_ramp.as_str() {
+            "flat" | "diurnal" => {}
+            other => {
+                return Err(err_config!(
+                    "`serve.ramp` must be `flat` or `diurnal` (got `{other}`)"
+                ))
+            }
+        }
+        if !self.serve_swap_at_ms.is_finite() || self.serve_swap_at_ms < 0.0 {
+            return Err(err_config!(
+                "`serve.swap_at_ms` must be finite and >= 0 (got {}; 0 = no swap)",
+                self.serve_swap_at_ms
+            ));
+        }
+        if !self.serve_zipf_s.is_finite() || self.serve_zipf_s < 0.0 {
+            return Err(err_config!(
+                "`serve.zipf_s` must be finite and >= 0 (got {}; 0 = sequential keys)",
+                self.serve_zipf_s
+            ));
+        }
+        if self.serve_zipf_keys == 0 {
+            return Err(err_config!("`serve.zipf_keys` must be >= 1"));
+        }
+        if !self.serve_ramp_period_ms.is_finite() || self.serve_ramp_period_ms <= 0.0 {
+            return Err(err_config!(
+                "`serve.ramp_period_ms` must be finite and > 0 (got {})",
+                self.serve_ramp_period_ms
+            ));
+        }
         Ok(())
     }
 
@@ -404,7 +491,26 @@ impl RunSpec {
                 self.serve_queue_cap
             ));
         }
+        // per-row cache entries are bit-safe only under the exact scan:
+        // shortlist stage-1 pools cluster votes across the batch, so a
+        // row's top-k depends on its batchmates and a cached value could
+        // silently disagree with a fresh scan (docs/SERVING.md)
+        if self.serve_cache_cap > 0 && self.serve_shortlist_enabled {
+            return Err(err_config!(
+                "`serve.cache_cap` ({}) requires the exact scan: the hot-query cache \
+                 cannot be combined with `serve.shortlist.enabled` (batch-pooled \
+                 cluster selection makes per-row results batch-dependent)",
+                self.serve_cache_cap
+            ));
+        }
         Ok(())
+    }
+
+    /// Parsed `serve.route` policy (validated by `validate`, so this is
+    /// infallible after a validated spec, but kept fallible for direct
+    /// callers).
+    pub fn route_policy(&self) -> Result<crate::serve::RoutePolicy> {
+        crate::serve::RoutePolicy::parse(&self.serve_route)
     }
 
     /// Project the training-relevant fields into a `TrainConfig` (the
@@ -455,7 +561,15 @@ impl fmt::Display for RunSpec {
         writeln!(f, "serve.arrival_seed = {}", self.serve_arrival_seed)?;
         writeln!(f, "serve.shortlist.enabled = {}", self.serve_shortlist_enabled)?;
         writeln!(f, "serve.shortlist.clusters = {}", self.serve_shortlist_clusters)?;
-        writeln!(f, "serve.shortlist.probe = {}", self.serve_shortlist_probe)
+        writeln!(f, "serve.shortlist.probe = {}", self.serve_shortlist_probe)?;
+        writeln!(f, "serve.replicas = {}", self.serve_replicas)?;
+        writeln!(f, "serve.route = \"{}\"", self.serve_route)?;
+        writeln!(f, "serve.cache_cap = {}", self.serve_cache_cap)?;
+        writeln!(f, "serve.swap_at_ms = {}", self.serve_swap_at_ms)?;
+        writeln!(f, "serve.zipf_s = {}", self.serve_zipf_s)?;
+        writeln!(f, "serve.zipf_keys = {}", self.serve_zipf_keys)?;
+        writeln!(f, "serve.ramp = \"{}\"", self.serve_ramp)?;
+        writeln!(f, "serve.ramp_period_ms = {}", self.serve_ramp_period_ms)
     }
 }
 
@@ -625,6 +739,14 @@ lr_cls = 0.1
         spec.serve_shortlist_enabled = true;
         spec.serve_shortlist_clusters = 16;
         spec.serve_shortlist_probe = 3;
+        spec.serve_replicas = 4;
+        spec.serve_route = "least-loaded".to_string();
+        spec.serve_cache_cap = 128;
+        spec.serve_swap_at_ms = 75.5;
+        spec.serve_zipf_s = 1.1;
+        spec.serve_zipf_keys = 32;
+        spec.serve_ramp = "diurnal".to_string();
+        spec.serve_ramp_period_ms = 250.0;
         let text = spec.to_string();
         let back = RunSpec::parse(&text).unwrap();
         assert_eq!(back, spec, "round-trip drifted:\n{text}");
@@ -686,6 +808,14 @@ lr_cls = 0.1
             ("serve.rate = 0", "`serve.rate`"),
             ("serve.rate = NaN", "`serve.rate`"),
             ("serve.shortlist.probe = 0", "`serve.shortlist.probe`"),
+            ("serve.replicas = 0", "`serve.replicas`"),
+            ("serve.route = random", "`serve.route`"),
+            ("serve.swap_at_ms = -1", "`serve.swap_at_ms`"),
+            ("serve.swap_at_ms = inf", "`serve.swap_at_ms`"),
+            ("serve.zipf_s = -0.5", "`serve.zipf_s`"),
+            ("serve.zipf_keys = 0", "`serve.zipf_keys`"),
+            ("serve.ramp = sinusoid", "`serve.ramp`"),
+            ("serve.ramp_period_ms = 0", "`serve.ramp_period_ms`"),
         ] {
             let spec = RunSpec::parse(line).unwrap();
             let err = spec.validate().unwrap_err();
@@ -804,6 +934,65 @@ serve.max_delay_ms = 2.5
         for flag in ["config", "workers", "checkpoint"] {
             assert!(serve.flags.contains(&flag), "`elmo serve` must accept --{flag}");
         }
+    }
+
+    #[test]
+    fn production_keys_parse_flags_override_and_project() {
+        let mut spec = RunSpec::parse(
+            "serve.replicas = 2\nserve.route = \"least-loaded\"\nserve.cache_cap = 64\n\
+             serve.zipf_s = 1.2\nserve.ramp = diurnal\n",
+        )
+        .unwrap();
+        assert_eq!(spec.serve_replicas, 2);
+        assert_eq!(spec.serve_route, "least-loaded");
+        assert_eq!(spec.route_policy().unwrap(), crate::serve::RoutePolicy::LeastLoaded);
+        assert_eq!(spec.serve_cache_cap, 64);
+        assert_eq!(spec.serve_zipf_s, 1.2);
+        assert_eq!(spec.serve_ramp, "diurnal");
+        // untouched production keys keep their defaults
+        let d = RunSpec::default();
+        assert_eq!(spec.serve_swap_at_ms, d.serve_swap_at_ms);
+        assert_eq!(spec.serve_zipf_keys, d.serve_zipf_keys);
+        assert_eq!(spec.serve_ramp_period_ms, d.serve_ramp_period_ms);
+        assert!(spec.is_explicit("serve.replicas"));
+        assert!(!spec.is_explicit("serve.swap_at_ms"));
+        // flags win over file values
+        let f = parse_flags(&argv(&[
+            "--replicas", "4", "--route", "round-robin", "--swap-at-ms", "50",
+            "--zipf-keys", "16", "--ramp-period-ms", "500", "--cache-cap", "8",
+        ]))
+        .unwrap();
+        spec.apply_flags(&f).unwrap();
+        assert_eq!(spec.serve_replicas, 4);
+        assert_eq!(spec.route_policy().unwrap(), crate::serve::RoutePolicy::RoundRobin);
+        assert_eq!(spec.serve_swap_at_ms, 50.0);
+        assert_eq!(spec.serve_zipf_keys, 16);
+        assert_eq!(spec.serve_ramp_period_ms, 500.0);
+        assert_eq!(spec.serve_cache_cap, 8);
+        assert_eq!(spec.serve_ramp, "diurnal", "file value survives when no flag is given");
+        assert!(spec.validate().is_ok());
+        // bad flag values name the flag
+        let err = spec
+            .apply_flags(&parse_flags(&argv(&["--replicas", "many"])).unwrap())
+            .unwrap_err();
+        assert!(format!("{err}").contains("--replicas"), "{err}");
+    }
+
+    #[test]
+    fn cache_refuses_to_ride_the_shortlist() {
+        // per-row cache entries are only bit-safe under the exact scan
+        let spec =
+            RunSpec::parse("serve.cache_cap = 16\nserve.shortlist.enabled = true\n").unwrap();
+        let err = spec.validate_serve(4).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let msg = format!("{err}");
+        assert!(msg.contains("serve.cache_cap") && msg.contains("shortlist"), "{msg}");
+        // either alone is fine
+        assert!(RunSpec::parse("serve.cache_cap = 16\n").unwrap().validate_serve(4).is_ok());
+        assert!(RunSpec::parse("serve.shortlist.enabled = true\n")
+            .unwrap()
+            .validate_serve(4)
+            .is_ok());
     }
 
     #[test]

@@ -28,14 +28,11 @@ pub const MAGIC: &[u8; 8] = b"ELMOCKPT";
 pub const VERSION: u32 = 2;
 
 /// 64-bit FNV-1a — tiny, dependency-free integrity hash (not crypto;
-/// this guards against corruption, not tampering).
+/// this guards against corruption, not tampering).  Delegates to the
+/// shared `util::fnv1a64`; the alias keeps the checkpoint-format API
+/// (`checkpoint::fnv1a`) stable for existing consumers.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
+    crate::util::fnv1a64(bytes)
 }
 
 fn precision_tag(p: Precision) -> u32 {

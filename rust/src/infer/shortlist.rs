@@ -36,15 +36,7 @@ use super::scanner::{ClassifierView, SCORE_LC};
 /// count can never vary with floating-point noise.
 const KMEANS_ITERS: usize = 10;
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x1_0000_0001_b3;
-
-fn fnv_fold(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
-    }
-    h
-}
+use crate::util::{fnv1a64_fold as fnv_fold, FNV64_OFFSET as FNV_OFFSET};
 
 /// How the shortlist index is built: the resolved `serve.shortlist.*`
 /// keys plus the clustering seed (the checkpoint's training seed, so

@@ -34,7 +34,8 @@ use elmo::infer::{Checkpoint, MicroBatcher, Predictor, ShortlistSpec, SCORE_LC};
 use elmo::memmodel::{self, MemParams, Method};
 use elmo::metrics::TopK;
 use elmo::serve::{
-    self, LoadGen, LoadGenConfig, Server, ServerConfig, ShardExecutor, ShardPlan, VirtualClock,
+    self, LoadGenConfig, QueryCache, Ramp, ReplicaRouter, ScenarioConfig, ScenarioGen, Server,
+    ServerConfig, ShardExecutor, ShardPlan, VirtualClock, WarmSwap, ZipfKeys,
 };
 use elmo::util::{gib, mmss, print_table, Rng, Stopwatch};
 use elmo::{RunSpec, Session};
@@ -370,31 +371,67 @@ fn cmd_serve(f: &Flags) -> Result<()> {
             idx.digest()
         );
     }
+    let replicas = spec.serve_replicas;
     let plan = ShardPlan::new(p.store().l_pad / SCORE_LC, spec.serve_shards)?;
-    let mut shard_exec = ShardExecutor::new(plan, k);
-    shard_exec.set_strategy(p.strategy());
-    if spec.serve_shards > 1 && sess.workers() > 1 {
-        // snapshot the read-only shard weights once: the pooled per-batch
-        // hot loop ships Arc clones to workers instead of copying weight
-        // slices.  Unsharded or serial runs copy nothing either way, so
-        // pinning there would only duplicate the matrix (exactly the
-        // condition under which memmodel::serve_shard_bytes charges 0).
-        shard_exec.pin(&p.view())?;
+    // Snapshot the read-only shard weights when the run benefits: the
+    // pooled sharded hot loop ships Arc clones to workers instead of
+    // copying weight slices; a replica group gives each replica its own
+    // snapshot; a staged swap needs a snapshot to cut over (re-pin).
+    // Unsharded serial single-replica runs copy nothing either way, so
+    // pinning there would only duplicate the matrix (exactly the
+    // condition under which memmodel::serve_shard_bytes charges 0).
+    let pin_snapshots = replicas > 1
+        || spec.serve_swap_at_ms > 0.0
+        || (spec.serve_shards > 1 && sess.workers() > 1);
+    let mut group: Vec<ShardExecutor> = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let mut ex = ShardExecutor::new(plan.clone(), k);
+        ex.set_strategy(p.strategy());
+        if pin_snapshots {
+            ex.pin(&p.view())?;
+        }
+        group.push(ex);
     }
+    let mut router = ReplicaRouter::new(replicas, spec.route_policy()?)?;
+    let mut cache: QueryCache<TopK> = QueryCache::new(spec.serve_cache_cap);
+    let mut swap: WarmSwap<()> = WarmSwap::new();
+    if spec.serve_swap_at_ms > 0.0 {
+        // a swap drill against the same checkpoint: the cutover mechanics
+        // (snapshot re-pin, version bump, cache invalidation) are fully
+        // exercised, and because the staged snapshot carries identical
+        // weights, results are provably unchanged across the boundary
+        swap.stage(spec.serve_swap_at_ms, ())?;
+    }
+    // the clock is shared: the replay loop advances it through the Rc the
+    // server owns, and the swap poll below reads the same instant
+    let clock = std::rc::Rc::new(VirtualClock::new());
     let mut server = Server::new(
         ServerConfig {
             width,
             queue_cap: spec.serve_queue_cap,
             max_delay_ms: spec.serve_max_delay_ms,
         },
-        VirtualClock::new(),
+        clock.clone(),
     )?;
-    let schedule = LoadGen::new(LoadGenConfig {
-        rate_qps: spec.serve_rate,
-        burst_max: spec.serve_burst,
-        seed: spec.serve_arrival_seed,
+    let scenario = ScenarioGen::new(ScenarioConfig {
+        base: LoadGenConfig {
+            rate_qps: spec.serve_rate,
+            burst_max: spec.serve_burst,
+            seed: spec.serve_arrival_seed,
+        },
+        ramp: match spec.serve_ramp.as_str() {
+            "diurnal" => Ramp::Diurnal { period_ms: spec.serve_ramp_period_ms },
+            _ => Ramp::Flat,
+        },
+        zipf: (spec.serve_zipf_s > 0.0)
+            .then_some(ZipfKeys { keys: spec.serve_zipf_keys, s: spec.serve_zipf_s }),
     })?
     .schedule_rows(n_queries);
+    let sched_digest = serve::schedule_digest(&scenario);
+    let schedule: Vec<serve::Arrival> = scenario.iter().map(|a| a.arrival()).collect();
+    // one key per row, in arrival order: the key picks the query row, so
+    // a Zipf mix replays hot rows and the flat default walks sequentially
+    let keys: Vec<u32> = scenario.iter().flat_map(|a| a.keys.iter().copied()).collect();
     let query_rows = serving_query_rows(&p, spec.serve_arrival_seed);
     let rows_available = query_rows.len() / SEQ_LEN;
 
@@ -410,6 +447,25 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         spec.serve_max_delay_ms,
         spec.serve_arrival_seed
     );
+    if replicas > 1 || spec.serve_cache_cap > 0 || spec.serve_swap_at_ms > 0.0 {
+        println!(
+            "# production: {replicas} replica(s) [{}], cache cap {} ({} B), swap at {} ms",
+            spec.serve_route,
+            spec.serve_cache_cap,
+            memmodel::serve_cache_bytes(spec.serve_cache_cap, k),
+            spec.serve_swap_at_ms
+        );
+    }
+    if spec.serve_zipf_s > 0.0 || spec.serve_ramp != "flat" {
+        println!(
+            "# scenario mix: ramp {} (period {} ms), zipf s={} over {} keys, \
+             schedule digest {sched_digest:016x}",
+            spec.serve_ramp,
+            spec.serve_ramp_period_ms,
+            spec.serve_zipf_s,
+            spec.serve_zipf_keys
+        );
+    }
     let staging =
         memmodel::serve_shard_bytes(p.store(), width, k, spec.serve_shards, sess.workers());
     if staging > 0 {
@@ -418,46 +474,120 @@ fn cmd_serve(f: &Flags) -> Result<()> {
             staging >> 20
         );
     }
+    let replica_bytes = memmodel::serve_replica_bytes(p.store(), replicas);
+    if replica_bytes > 0 {
+        println!(
+            "# replica snapshots: +{} MiB resident ({} extra pinned cop(ies))",
+            replica_bytes >> 20,
+            replicas - 1
+        );
+    }
 
     let mut out = Vec::with_capacity(n_queries);
     // scoring wall time, tracked outside the virtual clock (reporting
     // only — it must never influence a packing decision)
     let service_ms = std::cell::Cell::new(0.0f64);
+    let mut cache_skips = 0u64;
+    let swap_clock = clock.clone();
     let mut score = |t: &[i32]| -> elmo::Result<Vec<TopK>> {
+        // 1) warm swaps due at this batch boundary: re-pin every replica
+        //    from the staged snapshot and drop every cached row — cached
+        //    values are bits of the old version and must not survive it
+        for () in swap.take_due(swap_clock.now_ms()) {
+            for ex in group.iter_mut() {
+                if ex.is_pinned() {
+                    ex.pin(&p.view())?;
+                }
+            }
+            cache.invalidate_all();
+        }
+        // 2) hot-query cache: padding repeats the last valid row, so
+        //    padded rows share its digest and "every row hits" is exactly
+        //    "every valid row hits"
+        let digests: Vec<u64> = if cache.enabled() {
+            t.chunks(SEQ_LEN).map(serve::row_digest).collect()
+        } else {
+            Vec::new()
+        };
+        let mut vals: Vec<Option<TopK>> = Vec::with_capacity(digests.len());
+        let mut missed: Vec<usize> = Vec::new();
+        for (i, &dg) in digests.iter().enumerate() {
+            match cache.get(dg) {
+                Some(v) => vals.push(Some(v.clone())),
+                None => {
+                    missed.push(i);
+                    vals.push(None);
+                }
+            }
+        }
+        if cache.enabled() && missed.is_empty() {
+            // the whole batch is served from the cache: no routing, no
+            // embed, no chunk scan
+            cache_skips += 1;
+            return Ok(vals.into_iter().flatten().collect());
+        }
+        // 3) route: exactly one replica scans this batch; the choice can
+        //    never affect the result because every replica pins an
+        //    identical snapshot
+        let r = router.route(t.len() / SEQ_LEN);
         let t0 = Stopwatch::start();
         let mut ctx = sess.ctx();
         let ex = &mut ctx;
         let emb = p.embed(ex.rt, t)?;
-        let r = shard_exec.score(ex, &p.view(), &emb, width);
+        let res = group[r].score(ex, &p.view(), &emb, width)?;
         service_ms.set(service_ms.get() + t0.ms());
-        r
+        // 4) fill the cache with the rows that missed (the scan IS the
+        //    value a later hit will return)
+        for &i in &missed {
+            cache.insert(digests[i], res[i].clone());
+        }
+        Ok(res)
     };
-    let mut next_row = 0usize;
+    let mut next_key = 0usize;
     serve::replay(
         &mut server,
         &schedule,
         |rows| {
             let mut toks = Vec::with_capacity(rows * SEQ_LEN);
             for i in 0..rows {
-                let r = (next_row + i) % rows_available;
+                let r = keys[next_key + i] as usize % rows_available;
                 toks.extend_from_slice(&query_rows[r * SEQ_LEN..(r + 1) * SEQ_LEN]);
             }
-            next_row += rows;
+            next_key += rows;
             toks
         },
         &mut score,
         &mut out,
     )?;
-    server.stats.shard_chunks = shard_exec.shard_chunks.clone();
-    server.stats.chunks_scanned = shard_exec.chunks_scanned;
+    server.stats.shard_chunks = vec![0; plan.shards()];
+    for ex in &group {
+        for (s, &c) in ex.shard_chunks.iter().enumerate() {
+            server.stats.shard_chunks[s] += c;
+        }
+        server.stats.chunks_scanned += ex.chunks_scanned;
+    }
+    for _ in 0..swap.applied() {
+        server.stats.note_swap();
+    }
+    server.stats.absorb_cache(&cache);
+    server.stats.cache_batch_skips = cache_skips;
+    server.stats.replica_batches = router.batches().to_vec();
 
     let s = &server.stats;
     if !s.reconciles() {
         bail!(
-            "serve counters failed to reconcile: {} completed + {} rejected != {} submitted",
+            "serve counters failed to reconcile (admission / cache / replica conservation): \
+             {} completed + {} rejected vs {} submitted; cache {}+{} vs {} lookups; \
+             replicas {:?} + {} skips vs {} batches",
             s.completed(),
             s.rejected,
-            s.submitted
+            s.submitted,
+            s.cache_hits,
+            s.cache_misses,
+            s.cache_lookups,
+            s.replica_batches,
+            s.cache_batch_skips,
+            s.core.batches
         );
     }
     println!("# latency columns are virtual queue-delay ms (deterministic under the seed);");
@@ -491,10 +621,31 @@ fn cmd_serve(f: &Flags) -> Result<()> {
             .collect();
         println!("shard utilization (chunk execs): [{}]", util.join(", "));
     }
+    if replicas > 1 {
+        let routed: Vec<String> = s.replica_batches.iter().map(|b| b.to_string()).collect();
+        println!(
+            "replica batches [{}]: [{}] (routing chose who scanned, never what)",
+            spec.serve_route,
+            routed.join(", ")
+        );
+    }
+    if cache.enabled() {
+        println!(
+            "cache: {}/{} row hits, {} evictions, {} invalidations, {} whole-batch skips",
+            s.cache_hits, s.cache_lookups, s.cache_evictions, s.cache_invalidations,
+            s.cache_batch_skips
+        );
+    }
+    if s.swaps > 0 {
+        println!(
+            "warm swap: {} cutover(s), final model version v{} (cache dropped at each boundary)",
+            s.swaps, s.model_version
+        );
+    }
     if let Some(idx) = p.shortlist() {
         // sublinearity evidence: chunk scans actually run vs. what the
         // exact scan would have run, and the byte tradeoff either way
-        let exact = s.core.batches * shard_exec.plan().n_chunks() as u64;
+        let exact = s.core.batches * plan.n_chunks() as u64;
         let avoided = exact.saturating_sub(s.chunks_scanned);
         println!(
             "shortlist: {} of {} chunk scans ({} avoided = {} GiB of weights unread; index {} B)",
@@ -507,8 +658,8 @@ fn cmd_serve(f: &Flags) -> Result<()> {
     } else {
         debug_assert_eq!(
             s.chunks_scanned,
-            s.core.batches * shard_exec.plan().n_chunks() as u64,
-            "exact serving must scan every chunk of every batch"
+            (s.core.batches - s.cache_batch_skips) * plan.n_chunks() as u64,
+            "exact serving must scan every chunk of every non-cache-served batch"
         );
     }
     for pred in out.iter().take(3) {
@@ -519,6 +670,57 @@ fn cmd_serve(f: &Flags) -> Result<()> {
             .collect();
         println!("query {:>4}: [{}]", pred.id, labels.join(", "));
     }
+    if let Some(path) = f.get("stats-json") {
+        save_serve_stats(path, &spec, n_queries, k, s, sched_digest, service_ms.get())?;
+        println!("# stats-json: wrote {path}");
+    }
+    Ok(())
+}
+
+/// `elmo serve --stats-json PATH`: the final `ServingStats` as a
+/// byte-stable BENCH-format report (the deterministic metrics replay
+/// bit-for-bit under the same spec; `qps`/`svc_ms` are wall-clock
+/// trajectory notes).  The config string is the canonical RunSpec
+/// serialization plus the query count and k, so the fingerprint changes
+/// exactly when the run definition does.
+fn save_serve_stats(
+    path: &str,
+    spec: &RunSpec,
+    n_queries: usize,
+    k: usize,
+    s: &elmo::serve::ServingStats,
+    sched_digest: u64,
+    service_ms: f64,
+) -> Result<()> {
+    let config = format!(
+        "elmo-serve queries={n_queries} k={k} {}",
+        // RunSpec's canonical form, flattened to one line (drop the
+        // leading comment; JSON strings in the report are single-line)
+        spec.to_string().lines().skip(1).collect::<Vec<_>>().join(" ")
+    );
+    let mut rep = elmo::bench::BenchReport::new("serve", &config);
+    rep.det_u64("submitted", s.submitted)?;
+    rep.det_u64("completed", s.completed())?;
+    rep.det_u64("rejected", s.rejected)?;
+    rep.det_u64("batches", s.core.batches)?;
+    rep.det_u64("deadline_flushes", s.deadline_flushes)?;
+    rep.det_u64("chunks_scanned", s.chunks_scanned)?;
+    rep.det_u64("model_version", s.model_version)?;
+    rep.det_u64("swaps", s.swaps)?;
+    rep.det_u64("cache_lookups", s.cache_lookups)?;
+    rep.det_u64("cache_hits", s.cache_hits)?;
+    rep.det_u64("cache_misses", s.cache_misses)?;
+    rep.det_u64("cache_evictions", s.cache_evictions)?;
+    rep.det_u64("cache_invalidations", s.cache_invalidations)?;
+    rep.det_u64("cache_batch_skips", s.cache_batch_skips)?;
+    for (i, &b) in s.replica_batches.iter().enumerate() {
+        rep.det_u64(&format!("replica{i}_batches"), b)?;
+    }
+    rep.det_digest("packing_digest", s.packing_digest())?;
+    rep.det_digest("schedule_digest", sched_digest)?;
+    rep.wall_f64("qps", s.core.qps())?;
+    rep.wall_f64("svc_ms", service_ms)?;
+    rep.save(path)?;
     Ok(())
 }
 

@@ -103,6 +103,28 @@ pub fn serve_shard_bytes(
     pinned + inflight * per_job + batch * store.d * 4 // + shared embedding copy
 }
 
+/// Host bytes a replica group keeps resident beyond a single serving
+/// copy: every replica past the first pins its own snapshot of the
+/// scored matrix (f32 weight slices) and the label permutation (u32) —
+/// the whole point of ELMO's low-precision peak-memory work is that R
+/// such copies fit on one host.  Returns 0 for R <= 1: replication is
+/// the only reason to duplicate the snapshot (`serve_shard_bytes`
+/// already charges the first copy's staging when it exists).
+pub fn serve_replica_bytes(store: &WeightStore, replicas: usize) -> usize {
+    if replicas <= 1 {
+        return 0;
+    }
+    (replicas - 1) * (store.l_pad * store.d * 4 + store.labels * 4)
+}
+
+/// Hot-query cache bytes at capacity (`serve.cache_cap`): each entry
+/// holds the 8-byte FNV-1a row digest key, an 8-byte recency tick, and
+/// k (f32 score, u32 label) result pairs.  Map-node overhead is not
+/// charged — the model counts payload, as elsewhere.
+pub fn serve_cache_bytes(cap: usize, k: usize) -> usize {
+    cap * (8 + 8 + k * 8)
+}
+
 /// Host bytes the two-stage shortlist index (`infer::ShortlistIndex`)
 /// keeps resident: the [clusters, d] f32 centroid matrix plus one cluster
 /// assignment per scoring chunk (u32-sized in the accounting — the
@@ -634,6 +656,25 @@ mod tests {
         let narrow = serve_shard_bytes(&store, 16, 5, 8, 2);
         let wide = serve_shard_bytes(&store, 16, 5, 8, 8);
         assert!(narrow < wide, "window widens with workers until every shard is in flight");
+    }
+
+    #[test]
+    fn replica_and_cache_bytes_are_exact_arithmetic() {
+        use crate::store::BufferSpec;
+        let order: Vec<u32> = (0..4096u32).collect();
+        let store =
+            WeightStore::new(4096, 8, 1024, order, 0, BufferSpec::default()).unwrap();
+        // a single replica duplicates nothing
+        assert_eq!(serve_replica_bytes(&store, 0), 0);
+        assert_eq!(serve_replica_bytes(&store, 1), 0);
+        // each extra replica pins one full snapshot: weights + permutation
+        let snapshot = 4096 * 8 * 4 + 4096 * 4;
+        assert_eq!(serve_replica_bytes(&store, 2), snapshot);
+        assert_eq!(serve_replica_bytes(&store, 4), 3 * snapshot);
+        // cache entries: 8 B key + 8 B tick + k * 8 B results
+        assert_eq!(serve_cache_bytes(0, 5), 0, "disabled cache charges nothing");
+        assert_eq!(serve_cache_bytes(1, 5), 8 + 8 + 5 * 8);
+        assert_eq!(serve_cache_bytes(128, 5), 128 * (16 + 40));
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Bounded LRU hot-query cache (`serve.cache_cap`).
+//!
+//! Production XMC traffic is heavily skewed: a small set of hot queries
+//! (head searches, trending items) repeats constantly, and ELMO's
+//! memory frugality leaves room to keep their top-k lists resident.  The
+//! cache is keyed on an FNV-1a digest of the query's token row
+//! ([`row_digest`]) and stores the row's scored top-k verbatim, so a hit
+//! returns **the same bits a fresh scan would produce**: the cached value
+//! *was* a scan of the identical row under the identical model version,
+//! and per-row exact scoring depends only on the row's own tokens (the
+//! embedding and every chunk scan are row-local).  That argument is why
+//! `validate_serve` refuses to combine the cache with the two-stage
+//! shortlist, whose cluster selection is batch-pooled — there a row's
+//! result depends on its batch neighbours and caching per row would
+//! change bits.
+//!
+//! Determinism: the store is a `BTreeMap` keyed by digest with an LRU
+//! tick per entry, so iteration, eviction (minimum tick; ticks are
+//! unique), and every counter replay exactly under the seeded load
+//! harness.  A warm checkpoint swap must call [`QueryCache::invalidate_all`]
+//! — cached rows scored on the old snapshot are stale bits under the new
+//! one — and the invalidation is counted so `ServingStats` reconciles
+//! the cache's whole life: `hits + misses == lookups` and
+//! `inserted == resident + evicted + invalidated`.
+
+use std::collections::BTreeMap;
+
+use crate::util::{fnv1a64_fold, FNV64_OFFSET};
+
+/// FNV-1a digest of one query's token row — the cache key.  Folds each
+/// token's little-endian bytes in row order, so two rows collide only on
+/// a genuine 64-bit digest collision (accepted: this is a cache key, not
+/// an integrity check, and the row universe is the query pool).
+pub fn row_digest(tokens: &[i32]) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for t in tokens {
+        h = fnv1a64_fold(h, &t.to_le_bytes());
+    }
+    h
+}
+
+#[derive(Clone, Debug)]
+struct Slot<V> {
+    /// Monotone recency stamp; larger means touched more recently.
+    tick: u64,
+    value: V,
+}
+
+/// Bounded, deterministic LRU cache from query digest to scored value.
+///
+/// `cap == 0` disables the cache: every lookup misses without counting
+/// and inserts are dropped, so a disabled cache is byte-for-byte inert.
+#[derive(Clone, Debug, Default)]
+pub struct QueryCache<V> {
+    cap: usize,
+    tick: u64,
+    map: BTreeMap<u64, Slot<V>>,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to the scanner.
+    pub misses: u64,
+    /// Entries displaced by capacity pressure.
+    pub evictions: u64,
+    /// Entries dropped at swap boundaries (`invalidate_all`).
+    pub invalidations: u64,
+    /// Values accepted by `insert` (refreshes of a resident key included).
+    pub inserted: u64,
+    /// Inserts that refreshed an already-resident key.
+    refreshed: u64,
+}
+
+impl<V: Clone> QueryCache<V> {
+    pub fn new(cap: usize) -> Self {
+        QueryCache {
+            cap,
+            tick: 0,
+            map: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            invalidations: 0,
+            inserted: 0,
+            refreshed: 0,
+        }
+    }
+
+    /// A zero-capacity cache never stores and never counts.
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total counted lookups (`hits + misses`).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Look a digest up, bumping its recency and the hit/miss counters.
+    pub fn get(&mut self, key: u64) -> Option<V> {
+        if !self.enabled() {
+            return None;
+        }
+        self.tick += 1;
+        match self.map.get_mut(&key) {
+            Some(slot) => {
+                slot.tick = self.tick;
+                self.hits += 1;
+                Some(slot.value.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a value, evicting the least-recently-used
+    /// entry when at capacity.  Ticks are unique, so the LRU choice is
+    /// total — no tie to break, no iteration-order dependence.
+    pub fn insert(&mut self, key: u64, value: V) {
+        if !self.enabled() {
+            return;
+        }
+        self.tick += 1;
+        self.inserted += 1;
+        if let Some(slot) = self.map.get_mut(&key) {
+            slot.tick = self.tick;
+            slot.value = value;
+            self.refreshed += 1;
+            return;
+        }
+        if self.map.len() >= self.cap {
+            // ticks are unique, so min_by_key is total; the map is
+            // non-empty here because cap > 0 and len >= cap
+            if let Some(lru) = self.map.iter().min_by_key(|(_, s)| s.tick).map(|(&k, _)| k) {
+                self.map.remove(&lru);
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(key, Slot { tick: self.tick, value });
+    }
+
+    /// Drop every resident entry (the swap boundary), counting them as
+    /// invalidations.  Returns how many were dropped.
+    pub fn invalidate_all(&mut self) -> u64 {
+        let n = self.map.len() as u64;
+        self.map.clear();
+        self.invalidations += n;
+        n
+    }
+
+    /// The cache's conservation law: every counted lookup resolved, and
+    /// every accepted insert is still resident, was refreshed in place,
+    /// was evicted, or was invalidated.
+    pub fn reconciles(&self) -> bool {
+        self.inserted
+            == self.map.len() as u64 + self.refreshed + self.evictions + self.invalidations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_digest_is_order_and_content_sensitive() {
+        assert_eq!(row_digest(&[1, 2, 3]), row_digest(&[1, 2, 3]));
+        assert_ne!(row_digest(&[1, 2, 3]), row_digest(&[3, 2, 1]));
+        assert_ne!(row_digest(&[1, 2, 3]), row_digest(&[1, 2, 4]));
+        assert_eq!(row_digest(&[]), FNV64_OFFSET);
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let mut c: QueryCache<u32> = QueryCache::new(4);
+        assert_eq!(c.get(7), None);
+        c.insert(7, 70);
+        assert_eq!(c.get(7), Some(70));
+        assert_eq!((c.hits, c.misses, c.lookups()), (1, 1, 2));
+        assert!(c.reconciles());
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_used() {
+        let mut c: QueryCache<u32> = QueryCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(1), Some(10)); // 2 is now the LRU
+        c.insert(3, 30);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.get(2), None, "the LRU entry was evicted");
+        assert_eq!(c.get(1), Some(10));
+        assert_eq!(c.get(3), Some(30));
+        assert!(c.reconciles());
+    }
+
+    #[test]
+    fn refresh_does_not_evict() {
+        let mut c: QueryCache<u32> = QueryCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // refresh, cache already full
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(1), Some(11));
+        assert!(c.reconciles());
+    }
+
+    #[test]
+    fn invalidation_clears_and_counts() {
+        let mut c: QueryCache<u32> = QueryCache::new(4);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.invalidate_all(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.invalidations, 2);
+        assert_eq!(c.get(1), None, "post-swap lookups miss");
+        assert!(c.reconciles());
+    }
+
+    #[test]
+    fn zero_capacity_is_inert() {
+        let mut c: QueryCache<u32> = QueryCache::new(0);
+        assert!(!c.enabled());
+        c.insert(1, 10);
+        assert_eq!(c.get(1), None);
+        assert_eq!((c.hits, c.misses, c.inserted), (0, 0, 0));
+        assert_eq!(c.invalidate_all(), 0);
+        assert!(c.reconciles());
+    }
+
+    #[test]
+    fn same_access_sequence_replays_identical_counters() {
+        let run = || {
+            let mut c: QueryCache<u64> = QueryCache::new(3);
+            let keys = [5u64, 9, 5, 2, 7, 9, 5, 1, 2, 7];
+            for &k in &keys {
+                if c.get(k).is_none() {
+                    c.insert(k, k * 10);
+                }
+            }
+            (c.hits, c.misses, c.evictions, c.invalidations, c.len())
+        };
+        assert_eq!(run(), run(), "deterministic counters under replay");
+    }
+}

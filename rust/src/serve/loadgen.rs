@@ -16,7 +16,7 @@
 
 use crate::err_config;
 use crate::error::Result;
-use crate::util::Rng;
+use crate::util::{fnv1a64_fold, Rng, FNV64_OFFSET};
 
 /// Load scenario knobs (the `serve.rate` / `serve.burst` /
 /// `serve.arrival_seed` RunSpec keys).
@@ -90,6 +90,188 @@ impl LoadGen {
     }
 }
 
+/// Fixed diurnal swing: the rate multiplier ramps [`DIURNAL_LOW`] →
+/// [`DIURNAL_HIGH`] → [`DIURNAL_LOW`] over one period, piecewise-linear
+/// (a triangle).  The swing is part of the scenario format; the period
+/// is the configurable shape knob (`serve.ramp_period_ms`).  Linear on
+/// purpose: no libm transcendentals in a committed digest's path beyond
+/// the `ln` the base process already uses.
+pub const DIURNAL_LOW: f64 = 0.5;
+pub const DIURNAL_HIGH: f64 = 1.5;
+
+/// Rate shape over virtual time for scenario mixes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Ramp {
+    /// Constant rate — the plain `LoadGen` behaviour.
+    Flat,
+    /// Diurnal triangle: the instantaneous rate multiplier climbs from
+    /// `DIURNAL_LOW` to `DIURNAL_HIGH` over the first half of
+    /// `period_ms` and back down over the second half, repeating.
+    Diurnal { period_ms: f64 },
+}
+
+impl Ramp {
+    /// Instantaneous rate multiplier at virtual time `t_ms`.
+    pub fn multiplier(&self, t_ms: f64) -> f64 {
+        match *self {
+            Ramp::Flat => 1.0,
+            Ramp::Diurnal { period_ms } => {
+                let phase = (t_ms / period_ms).fract(); // [0, 1)
+                let tri = if phase < 0.5 { 2.0 * phase } else { 2.0 * (1.0 - phase) };
+                DIURNAL_LOW + (DIURNAL_HIGH - DIURNAL_LOW) * tri
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let Ramp::Diurnal { period_ms } = *self {
+            if !period_ms.is_finite() || period_ms <= 0.0 {
+                return Err(err_config!(
+                    "`serve.ramp_period_ms` must be finite and > 0 (got {period_ms})"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Zipf-distributed hot-key repeats: each row's query identity is drawn
+/// from a Zipf(`s`) law over `keys` distinct keys, so a small head of
+/// keys dominates — the skew a hot-query cache exploits.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ZipfKeys {
+    /// Distinct key universe (key ids are `0..keys`).
+    pub keys: usize,
+    /// Skew exponent; larger concentrates more mass on the head.
+    pub s: f64,
+}
+
+/// One scenario arrival: the burst's rows land at `t_ms`, each carrying
+/// a query key (an index into the driver's query pool).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioArrival {
+    pub t_ms: f64,
+    pub keys: Vec<u32>,
+}
+
+impl ScenarioArrival {
+    /// The plain arrival event (what `serve::replay` consumes).
+    pub fn arrival(&self) -> Arrival {
+        Arrival { t_ms: self.t_ms, rows: self.keys.len() }
+    }
+}
+
+/// Scenario-mix knobs: the base open-loop process plus a rate shape and
+/// an optional hot-key law.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    pub base: LoadGenConfig,
+    pub ramp: Ramp,
+    /// `Some` draws every row key Zipf; `None` assigns fresh sequential
+    /// keys (no repeats — the plain-traffic baseline).
+    pub zipf: Option<ZipfKeys>,
+}
+
+/// Seeded scenario generator: `LoadGen`'s process with a time-varying
+/// rate and per-row query keys.  Everything replays on the virtual
+/// clock: same config, same schedule, same keys, same digest.
+pub struct ScenarioGen {
+    rng: Rng,
+    t_ms: f64,
+    cfg: ScenarioConfig,
+    /// Normalized Zipf CDF (empty when `zipf` is `None`).
+    cdf: Vec<f64>,
+    /// Next fresh key when `zipf` is `None`.
+    next_key: u32,
+}
+
+impl ScenarioGen {
+    pub fn new(cfg: ScenarioConfig) -> Result<Self> {
+        // reuse the base validation (rate/burst bounds) verbatim
+        LoadGen::new(cfg.base.clone())?;
+        cfg.ramp.validate()?;
+        let mut cdf = Vec::new();
+        if let Some(z) = cfg.zipf {
+            if z.keys == 0 {
+                return Err(err_config!("`serve.zipf_keys` must be >= 1"));
+            }
+            if !z.s.is_finite() || z.s < 0.0 {
+                return Err(err_config!(
+                    "`serve.zipf_s` must be finite and >= 0 (got {})",
+                    z.s
+                ));
+            }
+            let mut acc = 0.0;
+            for k in 0..z.keys {
+                acc += (k as f64 + 1.0).powf(-z.s);
+                cdf.push(acc);
+            }
+            for c in cdf.iter_mut() {
+                *c /= acc; // the last entry divides to exactly 1.0
+            }
+        }
+        Ok(ScenarioGen { rng: Rng::new(cfg.base.seed), t_ms: 0.0, cfg, cdf, next_key: 0 })
+    }
+
+    fn draw_key(&mut self) -> u32 {
+        if self.cdf.is_empty() {
+            let k = self.next_key;
+            self.next_key = self.next_key.wrapping_add(1);
+            return k;
+        }
+        let u = self.rng.uniform(); // [0, 1): always below the final CDF entry
+        self.cdf.partition_point(|&c| c <= u) as u32
+    }
+
+    /// Draw the next arrival.  Draw order — burst size, then one key per
+    /// row, then the gap — is part of the format, exactly like
+    /// `LoadGen::next_arrival`; the gap scales by the ramp multiplier at
+    /// the pre-gap time.
+    pub fn next_arrival(&mut self) -> ScenarioArrival {
+        let rows = 1 + self.rng.below(self.cfg.base.burst_max);
+        let keys: Vec<u32> = (0..rows).map(|_| self.draw_key()).collect();
+        let mean_rows = (1.0 + self.cfg.base.burst_max as f64) / 2.0;
+        let rate = self.cfg.base.rate_qps * self.cfg.ramp.multiplier(self.t_ms);
+        let burst_rate = rate / mean_rows;
+        let u = self.rng.uniform();
+        let dt_s = -(1.0 - u).ln() / burst_rate;
+        self.t_ms += dt_s * 1e3;
+        ScenarioArrival { t_ms: self.t_ms, keys }
+    }
+
+    /// The full deterministic schedule carrying exactly `total_rows`
+    /// rows (the final burst's key list is clipped).
+    pub fn schedule_rows(&mut self, total_rows: usize) -> Vec<ScenarioArrival> {
+        let mut out = Vec::new();
+        let mut rows = 0;
+        while rows < total_rows {
+            let mut a = self.next_arrival();
+            if rows + a.keys.len() > total_rows {
+                a.keys.truncate(total_rows - rows);
+            }
+            rows += a.keys.len();
+            out.push(a);
+        }
+        out
+    }
+}
+
+/// Order-sensitive FNV-1a over a scenario schedule: every arrival's
+/// time bits, burst size, and row keys.  THE determinism witness for a
+/// scenario mix — a different seed, ramp shape, or zipf skew moves it;
+/// an identical config replays it bit-for-bit.
+pub fn schedule_digest(sched: &[ScenarioArrival]) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for a in sched {
+        h = fnv1a64_fold(h, &a.t_ms.to_bits().to_le_bytes());
+        h = fnv1a64_fold(h, &(a.keys.len() as u32).to_le_bytes());
+        for &k in &a.keys {
+            h = fnv1a64_fold(h, &k.to_le_bytes());
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +322,145 @@ mod tests {
             LoadGen::new(LoadGenConfig { rate_qps: f64::NAN, burst_max: 4, seed: 0 }).is_err()
         );
         assert!(LoadGen::new(LoadGenConfig { rate_qps: 10.0, burst_max: 0, seed: 0 }).is_err());
+    }
+
+    fn scen(seed: u64, ramp: Ramp, zipf: Option<ZipfKeys>) -> ScenarioConfig {
+        ScenarioConfig { base: cfg(seed), ramp, zipf }
+    }
+
+    #[test]
+    fn flat_no_zipf_scenario_times_the_plain_loadgen_schedule() {
+        // with no key draws (sequential keys) and a flat ramp, the rng
+        // stream is consumed exactly as LoadGen consumes it, so the
+        // timings coincide — the scenario layer is a strict superset
+        let plain = LoadGen::new(cfg(7)).unwrap().schedule_rows(300);
+        let mix = ScenarioGen::new(scen(7, Ramp::Flat, None)).unwrap().schedule_rows(300);
+        let as_plain: Vec<Arrival> = mix.iter().map(|a| a.arrival()).collect();
+        assert_eq!(plain, as_plain);
+        // and the sequential keys cover 0..300 with no repeats
+        let keys: Vec<u32> = mix.iter().flat_map(|a| a.keys.iter().copied()).collect();
+        assert_eq!(keys, (0..300).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn diurnal_multiplier_is_a_triangle() {
+        let r = Ramp::Diurnal { period_ms: 1000.0 };
+        assert_eq!(r.multiplier(0.0), DIURNAL_LOW);
+        assert_eq!(r.multiplier(250.0), 1.0);
+        assert_eq!(r.multiplier(500.0), DIURNAL_HIGH);
+        assert_eq!(r.multiplier(750.0), 1.0);
+        assert_eq!(r.multiplier(1000.0), DIURNAL_LOW, "periodic");
+        assert_eq!(Ramp::Flat.multiplier(123.4), 1.0);
+    }
+
+    #[test]
+    fn same_seed_replays_each_mix_bit_for_bit() {
+        for (ramp, zipf) in [
+            (Ramp::Flat, None),
+            (Ramp::Diurnal { period_ms: 500.0 }, None),
+            (Ramp::Flat, Some(ZipfKeys { keys: 32, s: 1.1 })),
+            (Ramp::Diurnal { period_ms: 500.0 }, Some(ZipfKeys { keys: 32, s: 1.1 })),
+        ] {
+            let a = ScenarioGen::new(scen(9, ramp, zipf)).unwrap().schedule_rows(400);
+            let b = ScenarioGen::new(scen(9, ramp, zipf)).unwrap().schedule_rows(400);
+            assert_eq!(a, b);
+            assert_eq!(schedule_digest(&a), schedule_digest(&b));
+        }
+    }
+
+    #[test]
+    fn shape_and_skew_move_the_digest() {
+        let base = ScenarioGen::new(scen(9, Ramp::Flat, Some(ZipfKeys { keys: 32, s: 1.1 })))
+            .unwrap()
+            .schedule_rows(400);
+        let skew = ScenarioGen::new(scen(9, Ramp::Flat, Some(ZipfKeys { keys: 32, s: 0.7 })))
+            .unwrap()
+            .schedule_rows(400);
+        assert_ne!(schedule_digest(&base), schedule_digest(&skew), "zipf-s moves the digest");
+        let ramped = ScenarioGen::new(scen(
+            9,
+            Ramp::Diurnal { period_ms: 500.0 },
+            Some(ZipfKeys { keys: 32, s: 1.1 }),
+        ))
+        .unwrap()
+        .schedule_rows(400);
+        assert_ne!(
+            schedule_digest(&base),
+            schedule_digest(&ramped),
+            "the ramp shape moves the digest"
+        );
+    }
+
+    #[test]
+    fn zipf_produces_measured_repeats_and_sequential_does_not() {
+        let repeats = |sched: &[ScenarioArrival]| {
+            let mut seen: Vec<u32> = Vec::new();
+            let mut dup = 0usize;
+            let mut total = 0usize;
+            for a in sched {
+                for &k in &a.keys {
+                    total += 1;
+                    if seen.contains(&k) {
+                        dup += 1;
+                    } else {
+                        seen.push(k);
+                    }
+                }
+            }
+            dup as f64 / total as f64
+        };
+        let fresh = ScenarioGen::new(scen(5, Ramp::Flat, None)).unwrap().schedule_rows(500);
+        assert_eq!(repeats(&fresh), 0.0, "sequential keys never repeat");
+        let hot = ScenarioGen::new(scen(5, Ramp::Flat, Some(ZipfKeys { keys: 64, s: 1.2 })))
+            .unwrap()
+            .schedule_rows(500);
+        assert!(repeats(&hot) > 0.5, "zipf over 64 keys at 500 rows must repeat heavily");
+        let mild = ScenarioGen::new(scen(5, Ramp::Flat, Some(ZipfKeys { keys: 4096, s: 0.0 })))
+            .unwrap()
+            .schedule_rows(500);
+        assert!(
+            repeats(&mild) < repeats(&hot),
+            "a flat law over a big universe repeats less than a skewed one over a small one"
+        );
+    }
+
+    #[test]
+    fn diurnal_trough_stretches_the_schedule() {
+        // the triangle averages to 1.0 over a full period, but a period
+        // much longer than the run keeps the whole run near the trough
+        // (multiplier ~DIURNAL_LOW), stretching the span accordingly
+        let flat = ScenarioGen::new(scen(11, Ramp::Flat, None)).unwrap().schedule_rows(500);
+        let slow = ScenarioGen::new(scen(11, Ramp::Diurnal { period_ms: 1e9 }, None))
+            .unwrap()
+            .schedule_rows(500);
+        let span = |s: &[ScenarioArrival]| s.last().unwrap().t_ms;
+        assert!(
+            span(&slow) > 1.5 * span(&flat),
+            "trough-pinned diurnal must stretch the span ({} vs {})",
+            span(&slow),
+            span(&flat)
+        );
+    }
+
+    #[test]
+    fn scenario_validation_names_the_knob() {
+        let err = |c: ScenarioConfig| ScenarioGen::new(c).unwrap_err().to_string();
+        assert!(err(scen(0, Ramp::Diurnal { period_ms: 0.0 }, None))
+            .contains("serve.ramp_period_ms"));
+        assert!(err(scen(0, Ramp::Flat, Some(ZipfKeys { keys: 0, s: 1.0 })))
+            .contains("serve.zipf_keys"));
+        assert!(err(scen(0, Ramp::Flat, Some(ZipfKeys { keys: 8, s: f64::NAN })))
+            .contains("serve.zipf_s"));
+        assert!(err(scen(0, Ramp::Flat, Some(ZipfKeys { keys: 8, s: -0.5 })))
+            .contains("serve.zipf_s"));
+        // the base validation still applies through the scenario layer
+        assert!(
+            ScenarioGen::new(ScenarioConfig {
+                base: LoadGenConfig { rate_qps: 0.0, burst_max: 4, seed: 0 },
+                ramp: Ramp::Flat,
+                zipf: None,
+            })
+            .is_err()
+        );
     }
 }

@@ -27,20 +27,39 @@
 //!   replay exactly: same arrival seed, same packing decisions;
 //! * `stats` — `ServingStats` extends the micro-batcher's `ServeStats`
 //!   with rejected / deadline-flush / shard-utilization counters and a
-//!   running packing digest that pins run-to-run determinism.
+//!   running packing digest that pins run-to-run determinism;
+//! * `replica` — replica groups (`serve.replicas`): R pinned copies of
+//!   the shard pool behind one queue, with deterministic round-robin and
+//!   least-loaded routing that choose *who* scans, never *what* —
+//!   results stay bit-identical to a single replica;
+//! * `swap` — warm checkpoint swap: stage a snapshot at a virtual time,
+//!   cut over between batches by re-pinning (`Arc` swap), bump
+//!   `ServingStats::model_version`, invalidate the cache;
+//! * `cache` — a bounded, deterministic LRU hot-query cache keyed on the
+//!   FNV-1a row digest, exploiting the Zipf-skewed traffic the scenario
+//!   mixes (`loadgen::ScenarioGen`) model.
 //!
 //! Wired end to end as `elmo serve` (`cli`/`main`), configured by the
 //! `serve.*` RunSpec keys (`config`), and charged by
 //! `memmodel::serve_shard_bytes`.  See `docs/SERVING.md`.
 
+pub mod cache;
 pub mod loadgen;
 pub mod merge;
+pub mod replica;
 pub mod server;
 pub mod shard;
 pub mod stats;
+pub mod swap;
 
-pub use loadgen::{Arrival, LoadGen, LoadGenConfig};
+pub use cache::{row_digest, QueryCache};
+pub use loadgen::{
+    schedule_digest, Arrival, LoadGen, LoadGenConfig, Ramp, ScenarioArrival, ScenarioConfig,
+    ScenarioGen, ZipfKeys, DIURNAL_HIGH, DIURNAL_LOW,
+};
 pub use merge::merge_rows;
+pub use replica::{ReplicaRouter, RoutePolicy};
 pub use server::{replay, Admission, Clock, Server, ServerConfig, VirtualClock, WallClock};
 pub use shard::{ShardExecutor, ShardPlan};
 pub use stats::{ServingStats, PACKING_WINDOW_CAP};
+pub use swap::WarmSwap;

@@ -1,0 +1,191 @@
+//! Replica groups (`serve.replicas`): R independent copies of the
+//! label-sharded scoring pool behind one admission queue.
+//!
+//! ELMO's peak-memory optimization is what makes this the natural scale
+//! lever: a 3M-label FP8 classifier fits in ~6.6 GiB, so a serving host
+//! can afford R pinned copies and route batches across them for
+//! throughput.  The load-bearing invariant is that **routing chooses who
+//! scans, never what is scanned**: every replica pins an identical
+//! snapshot of the same checkpoint (same weights, same label permutation,
+//! same shard plan), and per-batch scoring is a pure function of the
+//! batch and the snapshot.  Any routing policy therefore returns
+//! bit-identical top-k lists to a single-replica scan — pinned by the
+//! routing-invariance parity test in `rust/tests/serve_production.rs`
+//! and argued in docs/SERVING.md.
+//!
+//! Two deterministic policies:
+//!
+//! * **round-robin** — batch `i` goes to replica `i % R`; the counter
+//!   lives here, not in wall time, so replay is exact;
+//! * **least-loaded** — the batch goes to the replica with the fewest
+//!   *rows routed so far*, ties to the lowest index.  Under the virtual
+//!   clock batches complete synchronously, so cumulative routed rows is
+//!   the deterministic load signal (a wall-clock "outstanding work"
+//!   gauge would re-route batches based on host speed and break replay).
+
+use crate::err_config;
+use crate::error::Result;
+
+/// How a replica group picks the scanning replica for each batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+
+    /// Parse the `serve.route` key (kebab-case, as printed by `as_str`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "least-loaded" => Ok(RoutePolicy::LeastLoaded),
+            other => Err(err_config!(
+                "`serve.route` must be `round-robin` or `least-loaded` (got `{other}`)"
+            )),
+        }
+    }
+}
+
+/// Deterministic batch router over R replicas, with per-replica counters
+/// that feed `ServingStats::replica_batches`.
+#[derive(Clone, Debug)]
+pub struct ReplicaRouter {
+    policy: RoutePolicy,
+    /// Round-robin cursor (next replica index).
+    next: usize,
+    /// Batches routed to each replica.
+    batches: Vec<u64>,
+    /// Rows routed to each replica — the least-loaded signal.
+    rows: Vec<u64>,
+}
+
+impl ReplicaRouter {
+    pub fn new(replicas: usize, policy: RoutePolicy) -> Result<Self> {
+        if replicas == 0 {
+            return Err(err_config!("`serve.replicas` must be >= 1"));
+        }
+        Ok(ReplicaRouter { policy, next: 0, batches: vec![0; replicas], rows: vec![0; replicas] })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick the replica for a batch of `rows` valid rows and record the
+    /// routing decision.  Pure state machine: the choice depends only on
+    /// the routing history, never on the clock or scoring wall time.
+    pub fn route(&mut self, rows: usize) -> usize {
+        let r = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.next;
+                self.next = (self.next + 1) % self.batches.len();
+                r
+            }
+            RoutePolicy::LeastLoaded => {
+                // min over cumulative routed rows; position_min ties to
+                // the lowest index because later candidates must be
+                // strictly smaller to win
+                let mut best = 0;
+                for (i, &w) in self.rows.iter().enumerate().skip(1) {
+                    if w < self.rows[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.batches[r] += 1;
+        self.rows[r] += rows as u64;
+        r
+    }
+
+    /// Batches routed per replica (index = replica id).
+    pub fn batches(&self) -> &[u64] {
+        &self.batches
+    }
+
+    /// Rows routed per replica (index = replica id).
+    pub fn rows(&self) -> &[u64] {
+        &self.rows
+    }
+
+    /// Conservation law: every routed batch is counted exactly once.
+    pub fn total_batches(&self) -> u64 {
+        self.batches.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+            assert_eq!(RoutePolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn zero_replicas_is_rejected_by_name() {
+        let err = ReplicaRouter::new(0, RoutePolicy::RoundRobin).unwrap_err().to_string();
+        assert!(err.contains("serve.replicas"), "{err}");
+    }
+
+    #[test]
+    fn round_robin_cycles_in_order() {
+        let mut r = ReplicaRouter::new(3, RoutePolicy::RoundRobin).unwrap();
+        let picks: Vec<usize> = (0..7).map(|_| r.route(8)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(r.batches(), &[3, 2, 2]);
+        assert_eq!(r.total_batches(), 7);
+    }
+
+    #[test]
+    fn least_loaded_follows_rows_not_batches() {
+        let mut r = ReplicaRouter::new(2, RoutePolicy::LeastLoaded).unwrap();
+        assert_eq!(r.route(8), 0, "empty group ties to the lowest index");
+        assert_eq!(r.route(2), 1);
+        // replica 1 holds 2 rows vs 8: the next three small batches all
+        // land on 1 until it catches up
+        assert_eq!(r.route(2), 1);
+        assert_eq!(r.route(2), 1);
+        assert_eq!(r.route(2), 1);
+        assert_eq!(r.rows(), &[8, 8]);
+        assert_eq!(r.route(1), 0, "tie at 8 rows goes to the lowest index");
+    }
+
+    #[test]
+    fn single_replica_routes_everything_to_zero() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+            let mut r = ReplicaRouter::new(1, policy).unwrap();
+            for rows in [1, 8, 3] {
+                assert_eq!(r.route(rows), 0);
+            }
+            assert_eq!(r.batches(), &[3]);
+        }
+    }
+
+    #[test]
+    fn routing_is_a_pure_function_of_the_batch_sequence() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+            let run = || {
+                let mut r = ReplicaRouter::new(4, policy).unwrap();
+                [8usize, 3, 8, 8, 1, 5, 8, 8, 2, 8].iter().map(|&n| r.route(n)).collect::<Vec<_>>()
+            };
+            assert_eq!(run(), run(), "{policy:?} must replay exactly");
+        }
+    }
+}

@@ -98,6 +98,18 @@ impl Clock for VirtualClock {
     }
 }
 
+/// A shared virtual clock: the server advances it through the `Rc` it
+/// owns while a driver reads the same instant from inside the score
+/// closure (`replay` borrows the server mutably for its whole run, so
+/// `Server::clock()` is unreachable there).  The warm-swap poll in
+/// `elmo serve` is the canonical user: it drains `WarmSwap::take_due`
+/// at each batch boundary against the replayed time.
+impl Clock for std::rc::Rc<VirtualClock> {
+    fn now_ms(&self) -> f64 {
+        self.as_ref().now_ms()
+    }
+}
+
 /// Server knobs (the `serve.*` RunSpec keys resolve into this).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {

@@ -9,13 +9,13 @@
 //! divergence in packing shows up as a one-line diff.
 
 use crate::infer::ServeStats;
+use crate::util::{fnv1a64_fold, FNV64_OFFSET};
+
+use super::cache::QueryCache;
 
 /// The run's **first** packing decisions, retained verbatim for
 /// inspection and tests; the digest covers the whole run.
 pub const PACKING_WINDOW_CAP: usize = 4096;
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x1_0000_0001_b3;
 
 /// Counters for the online serving path (`serve::Server`).
 #[derive(Clone, Debug)]
@@ -45,6 +45,29 @@ pub struct ServingStats {
     /// `chunks_scanned == batches * n_chunks`; a shortlist run reports
     /// strictly fewer — the sublinearity witness the bench gates on.
     pub chunks_scanned: u64,
+    /// Model version the scoring path is on (starts at 1; each warm
+    /// checkpoint swap bumps it via `note_swap`).
+    pub model_version: u64,
+    /// Completed warm swaps (`model_version == 1 + swaps`).
+    pub swaps: u64,
+    /// Hot-query cache counters, absorbed from the `QueryCache` by the
+    /// driver after drain.  Lookups run per padded batch row; the law
+    /// `cache_hits + cache_misses == cache_lookups` folds into
+    /// `reconciles`.
+    pub cache_lookups: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// Entries dropped at swap boundaries.
+    pub cache_invalidations: u64,
+    /// Batches answered entirely from cache — the scanner never ran, so
+    /// these batches are excluded from the replica-routing conservation
+    /// law and from `chunks_scanned`.
+    pub cache_batch_skips: u64,
+    /// Batches routed to each replica (empty when no replica routing is
+    /// in play).  When present, `sum + cache_batch_skips == batches`
+    /// folds into `reconciles`.
+    pub replica_batches: Vec<u64>,
 }
 
 impl Default for ServingStats {
@@ -56,9 +79,18 @@ impl Default for ServingStats {
             deadline_flushes: 0,
             full_flushes: 0,
             packing: Vec::new(),
-            packing_digest: FNV_OFFSET,
+            packing_digest: FNV64_OFFSET,
             shard_chunks: Vec::new(),
             chunks_scanned: 0,
+            model_version: 1,
+            swaps: 0,
+            cache_lookups: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
+            cache_invalidations: 0,
+            cache_batch_skips: 0,
+            replica_batches: Vec::new(),
         }
     }
 }
@@ -81,15 +113,8 @@ impl ServingStats {
         } else {
             self.full_flushes += 1;
         }
-        let mut h = self.packing_digest;
-        for b in (valid as u32)
-            .to_le_bytes()
-            .into_iter()
-            .chain(std::iter::once(deadline as u8))
-        {
-            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
-        }
-        self.packing_digest = h;
+        let h = fnv1a64_fold(self.packing_digest, &(valid as u32).to_le_bytes());
+        self.packing_digest = fnv1a64_fold(h, &[deadline as u8]);
         if self.packing.len() < PACKING_WINDOW_CAP {
             self.packing.push((valid as u32, deadline));
         }
@@ -100,10 +125,39 @@ impl ServingStats {
         self.core.completed
     }
 
-    /// The conservation law of the admission queue: every submitted row
-    /// is either completed or rejected once the server has drained.
+    /// One warm swap cut over: the scoring path is now on the next model
+    /// version.  The caller must also invalidate the hot-query cache —
+    /// cached rows are bits of the old snapshot.
+    pub fn note_swap(&mut self) {
+        self.swaps += 1;
+        self.model_version += 1;
+    }
+
+    /// Absorb the hot-query cache's final counters (driver calls this
+    /// after drain, before reporting).
+    pub fn absorb_cache<V: Clone>(&mut self, cache: &QueryCache<V>) {
+        self.cache_lookups = cache.lookups();
+        self.cache_hits = cache.hits;
+        self.cache_misses = cache.misses;
+        self.cache_evictions = cache.evictions;
+        self.cache_invalidations = cache.invalidations;
+    }
+
+    /// The serving conservation laws, all of which must hold once the
+    /// server has drained:
+    ///
+    /// * admission — every submitted row is either completed or rejected;
+    /// * cache — every counted lookup resolved to a hit or a miss;
+    /// * replicas — when replica routing is in play, every flushed batch
+    ///   was either routed to exactly one replica or answered entirely
+    ///   from cache.
     pub fn reconciles(&self) -> bool {
-        self.core.completed + self.rejected == self.submitted
+        let admission = self.core.completed + self.rejected == self.submitted;
+        let cache = self.cache_hits + self.cache_misses == self.cache_lookups;
+        let replicas = self.replica_batches.is_empty()
+            || self.replica_batches.iter().sum::<u64>() + self.cache_batch_skips
+                == self.core.batches;
+        admission && cache && replicas
     }
 
     /// The first `PACKING_WINDOW_CAP` (valid rows, deadline) decisions.
@@ -128,9 +182,9 @@ impl ServingStats {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} completed / {} rejected of {} | {} batches ({} deadline) | \
-             {:.1} q/s | p50 {:.2} ms  p99 {:.2} ms | fill {:.0}% | packing {:016x}",
+             {:.1} q/s | p50 {:.2} ms  p99 {:.2} ms | fill {:.0}% | packing {:016x} | v{}",
             self.core.completed,
             self.rejected,
             self.submitted,
@@ -140,8 +194,25 @@ impl ServingStats {
             self.core.p50_ms(),
             self.core.p99_ms(),
             100.0 * self.core.fill_ratio(),
-            self.packing_digest
-        )
+            self.packing_digest,
+            self.model_version
+        );
+        if self.cache_lookups > 0 {
+            s.push_str(&format!(
+                " | cache {}/{} hit ({} evict, {} inval, {} batch-skips)",
+                self.cache_hits,
+                self.cache_lookups,
+                self.cache_evictions,
+                self.cache_invalidations,
+                self.cache_batch_skips
+            ));
+        }
+        if !self.replica_batches.is_empty() {
+            let routed: Vec<String> =
+                self.replica_batches.iter().map(|b| b.to_string()).collect();
+            s.push_str(&format!(" | replicas [{}]", routed.join(" ")));
+        }
+        s
     }
 }
 
@@ -193,6 +264,61 @@ mod tests {
         assert!(s.reconciles());
         s.submitted += 1;
         assert!(!s.reconciles());
+    }
+
+    #[test]
+    fn swaps_bump_the_model_version() {
+        let mut s = ServingStats::default();
+        assert_eq!((s.model_version, s.swaps), (1, 0));
+        s.note_swap();
+        s.note_swap();
+        assert_eq!((s.model_version, s.swaps), (3, 2));
+        assert_eq!(s.model_version, 1 + s.swaps);
+    }
+
+    #[test]
+    fn cache_law_folds_into_reconciliation() {
+        let mut s = ServingStats::default();
+        let mut c: QueryCache<u8> = QueryCache::new(2);
+        c.insert(1, 1);
+        assert_eq!(c.get(1), Some(1));
+        assert_eq!(c.get(2), None);
+        s.absorb_cache(&c);
+        assert_eq!((s.cache_lookups, s.cache_hits, s.cache_misses), (2, 1, 1));
+        assert!(s.reconciles());
+        s.cache_lookups += 1; // a lookup that never resolved
+        assert!(!s.reconciles());
+    }
+
+    #[test]
+    fn replica_law_folds_into_reconciliation() {
+        let mut s = ServingStats::default();
+        s.note_batch(8, 8, false);
+        s.note_batch(8, 8, false);
+        s.note_batch(3, 8, true);
+        assert!(s.reconciles(), "no replica routing: the law is vacuous");
+        s.replica_batches = vec![2, 1];
+        assert!(s.reconciles(), "all three batches routed");
+        s.replica_batches = vec![1, 1];
+        assert!(!s.reconciles(), "a flushed batch nobody scanned");
+        s.cache_batch_skips = 1;
+        assert!(s.reconciles(), "the third batch was answered from cache");
+    }
+
+    #[test]
+    fn summary_reports_version_cache_and_replicas() {
+        let mut s = ServingStats::default();
+        assert!(s.summary().contains("| v1"));
+        assert!(!s.summary().contains("cache"), "silent when the cache is off");
+        s.note_swap();
+        s.cache_lookups = 4;
+        s.cache_hits = 3;
+        s.cache_misses = 1;
+        s.replica_batches = vec![2, 2];
+        let sum = s.summary();
+        assert!(sum.contains("| v2"), "{sum}");
+        assert!(sum.contains("cache 3/4 hit"), "{sum}");
+        assert!(sum.contains("replicas [2 2]"), "{sum}");
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Warm checkpoint swap: stage a new model snapshot in the background
+//! and cut over **between batches**, with zero queue downtime.
+//!
+//! The mechanism rides the pinning design from `serve::shard`: a
+//! `ShardExecutor` scores from `Arc` snapshots of the weight chunks and
+//! label permutation taken at `pin` time, so "swap" is nothing more than
+//! building a second snapshot set off to the side and re-pinning at a
+//! batch boundary — an `Arc` pointer swap, not a data copy, and never
+//! observable mid-batch because a batch in flight owns the clones it
+//! scores from.  The admission queue is untouched: queries admitted
+//! before the swap that flush after it score on the new snapshot
+//! (standard atomic-cutover semantics), every batch scores on exactly
+//! one version, and `ServingStats::model_version` records which.
+//!
+//! [`WarmSwap`] is the deterministic scheduler for this: snapshots are
+//! staged at **virtual** milliseconds, and the serving driver polls
+//! [`WarmSwap::take_due`] at each batch boundary with the virtual clock's
+//! reading.  Replay therefore pins swap timing exactly — the same
+//! arrival schedule and the same swap schedule cut over before the same
+//! batch on every run.  Each applied swap must bump
+//! `ServingStats::note_swap` and invalidate the hot-query cache
+//! (`QueryCache::invalidate_all`): cached rows are bits of the old
+//! snapshot and must not survive it.
+
+use crate::err_config;
+use crate::error::Result;
+
+/// A staged model snapshot waiting for its virtual cutover time.
+#[derive(Clone, Debug)]
+struct Staged<S> {
+    at_ms: f64,
+    snapshot: S,
+}
+
+/// Deterministic warm-swap scheduler: snapshots staged at virtual times,
+/// drained at batch boundaries.
+#[derive(Clone, Debug)]
+pub struct WarmSwap<S> {
+    /// Pending snapshots, ascending by `at_ms` (enforced at `stage`).
+    staged: Vec<Staged<S>>,
+    /// Swaps handed out by `take_due` over the scheduler's life.
+    applied: u64,
+}
+
+impl<S> Default for WarmSwap<S> {
+    fn default() -> Self {
+        WarmSwap { staged: Vec::new(), applied: 0 }
+    }
+}
+
+impl<S> WarmSwap<S> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage `snapshot` to cut over at virtual time `at_ms`.  Times must
+    /// be finite, non-negative, and non-decreasing in staging order —
+    /// the swap sequence is part of the scenario format, so an unordered
+    /// schedule is a configuration error, not something to sort away
+    /// silently.
+    pub fn stage(&mut self, at_ms: f64, snapshot: S) -> Result<()> {
+        if !at_ms.is_finite() || at_ms < 0.0 {
+            return Err(err_config!("`serve.swap_at_ms` must be finite and >= 0 (got {at_ms})"));
+        }
+        if let Some(last) = self.staged.last() {
+            if at_ms < last.at_ms {
+                return Err(err_config!(
+                    "swap times must be staged in non-decreasing order ({at_ms} after {})",
+                    last.at_ms
+                ));
+            }
+        }
+        self.staged.push(Staged { at_ms, snapshot });
+        Ok(())
+    }
+
+    /// Snapshots still waiting for their cutover time.
+    pub fn pending(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Virtual time of the next cutover, if any.
+    pub fn next_at(&self) -> Option<f64> {
+        self.staged.first().map(|s| s.at_ms)
+    }
+
+    /// Swaps handed out so far.
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    /// Drain every snapshot due at or before `now_ms`, in staging order.
+    /// The driver applies each in turn (re-pin, `note_swap`, cache
+    /// invalidation); when a boundary passes several staged times at
+    /// once, the intermediate versions still count — the version history
+    /// is part of the replayed record.
+    pub fn take_due(&mut self, now_ms: f64) -> Vec<S> {
+        let due = self.staged.iter().take_while(|s| s.at_ms <= now_ms).count();
+        let mut out = Vec::with_capacity(due);
+        for s in self.staged.drain(..due) {
+            out.push(s.snapshot);
+        }
+        self.applied += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_validates_times() {
+        let mut w: WarmSwap<u32> = WarmSwap::new();
+        assert!(w.stage(f64::NAN, 1).is_err());
+        assert!(w.stage(-1.0, 1).is_err());
+        w.stage(10.0, 1).unwrap();
+        assert!(w.stage(5.0, 2).is_err(), "staging order must be non-decreasing");
+        w.stage(10.0, 3).unwrap(); // equal times are fine
+        assert_eq!(w.pending(), 2);
+    }
+
+    #[test]
+    fn take_due_drains_in_order_and_counts() {
+        let mut w: WarmSwap<&str> = WarmSwap::new();
+        w.stage(5.0, "v1").unwrap();
+        w.stage(12.0, "v2").unwrap();
+        w.stage(30.0, "v3").unwrap();
+        assert_eq!(w.next_at(), Some(5.0));
+        assert!(w.take_due(4.9).is_empty(), "nothing due before the first time");
+        // a boundary past two staged times drains both, in staging order
+        assert_eq!(w.take_due(12.0), vec!["v1", "v2"]);
+        assert_eq!(w.applied(), 2);
+        assert_eq!(w.next_at(), Some(30.0));
+        assert_eq!(w.take_due(1e9), vec!["v3"]);
+        assert_eq!(w.applied(), 3);
+        assert_eq!(w.pending(), 0);
+        assert!(w.take_due(1e9).is_empty());
+    }
+
+    #[test]
+    fn boundary_inclusive_semantics() {
+        // a batch boundary exactly at the staged time applies the swap:
+        // "due at or before now"
+        let mut w: WarmSwap<u8> = WarmSwap::new();
+        w.stage(7.5, 1).unwrap();
+        assert_eq!(w.take_due(7.5), vec![1]);
+    }
+}

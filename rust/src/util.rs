@@ -83,6 +83,27 @@ impl Rng {
     }
 }
 
+/// 64-bit FNV-1a offset basis: the shared starting state for every
+/// incremental digest in the tree (serve packing digests, checkpoint
+/// checksums, bench config fingerprints, shortlist index digests, the
+/// hot-query cache key).  One definition keeps the witnesses comparable
+/// across subsystems and pins the constants in exactly one place.
+pub const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV64_PRIME: u64 = 0x1_0000_0001_b3;
+
+/// Fold `bytes` into a running 64-bit FNV-1a state (order-sensitive).
+pub fn fnv1a64_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// One-shot 64-bit FNV-1a digest of `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_fold(FNV64_OFFSET, bytes)
+}
+
 /// Fixed-capacity ring of f32 samples: once full, each push overwrites the
 /// oldest value.  Bounds diagnostics histories (the trainer's per-step
 /// gmax trace) so long runs hold a window, not an unbounded `Vec`.
@@ -263,6 +284,29 @@ pub fn print_table(header: &[&str], rows: &[Vec<String>]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a64_pins_the_reference_vectors() {
+        // Published FNV-1a 64 test vectors: the empty string hashes to the
+        // offset basis, "a" and "foobar" to the canonical values.  These
+        // pin the constants so the digests in checkpoints, packing stats,
+        // and bench fingerprints can never silently drift.
+        assert_eq!(fnv1a64(b""), FNV64_OFFSET);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv1a64_fold_composes_like_the_one_shot() {
+        let whole = fnv1a64(b"hello world");
+        let split = fnv1a64_fold(fnv1a64_fold(FNV64_OFFSET, b"hello "), b"world");
+        assert_eq!(whole, split, "incremental folding matches the one-shot digest");
+        assert_ne!(
+            fnv1a64(b"ab"),
+            fnv1a64(b"ba"),
+            "the digest is order-sensitive"
+        );
+    }
 
     #[test]
     fn rng_deterministic() {
