@@ -125,6 +125,26 @@ fn main() -> anyhow::Result<()> {
         &cache_rows,
     );
 
+    // traced cells: the observability seam's determinism witnesses.  The
+    // gated digests below are pinned in the report; the Chrome traces are
+    // written next to it so CI can trace-check and archive them.
+    let mut trace_rows = Vec::new();
+    for (tag, path, cell) in [
+        ("trace/replay", "TRACE_serve_replay.json", bench::run_traced_cell(ARRIVAL_SEED)?),
+        ("trace/cache_swap", "TRACE_cache_swap.json", bench::run_traced_swap_cell(ARRIVAL_SEED)?),
+    ] {
+        std::fs::write(path, &cell.chrome_json)?;
+        trace_rows.push(vec![
+            tag.to_string(),
+            cell.events.to_string(),
+            cell.stats.core.batches.to_string(),
+            format!("{:016x}", cell.gated_digest),
+            path.to_string(),
+        ]);
+    }
+    println!("== traced cells (gated digest = FNV-1a over the virtual-time event stream) ==");
+    print_table(&["cell", "events", "batches", "gated digest", "trace"], &trace_rows);
+
     rep.save("BENCH_serve_throughput.json")?;
     println!(
         "serve_throughput: wrote BENCH_serve_throughput.json \

@@ -39,8 +39,9 @@ pub use report::{
     SCHEMA_VERSION,
 };
 pub use scenario::{
-    run_cache_cell, run_cell, run_replica_cell, run_shortlist_cell, serve_throughput_config,
-    serve_throughput_report, synth_clustered_score, synth_score, CacheCellOutcome, CellOutcome,
-    ReplicaCellOutcome, ShortlistCellOutcome, ARRIVAL_SEED, BURSTS, CACHE_CELLS, RATES,
+    run_cache_cell, run_cell, run_replica_cell, run_shortlist_cell, run_traced_cell,
+    run_traced_swap_cell, serve_throughput_config, serve_throughput_report,
+    synth_clustered_score, synth_score, CacheCellOutcome, CellOutcome, ReplicaCellOutcome,
+    ShortlistCellOutcome, TracedCellOutcome, ARRIVAL_SEED, BURSTS, CACHE_CELLS, RATES,
     REPLICA_COUNTS, SHARDS, SHORTLIST_PROBES,
 };

@@ -439,8 +439,9 @@ impl BenchReport {
     }
 }
 
-/// Quote + escape a string as a JSON token.
-fn json_str(s: &str) -> String {
+/// Quote + escape a string as a JSON token.  Shared with `obs::trace`
+/// (the Chrome trace emitter) so both writers escape identically.
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -460,8 +461,9 @@ fn json_str(s: &str) -> String {
 
 /// Minimal JSON tree for the report format: objects, arrays, strings, and
 /// raw number/word tokens (typed on extraction, so `NaN`/`inf` round-trip
-/// through `f64` while `u64` fields reject them).
-enum Json {
+/// through `f64` while `u64` fields reject them).  `pub(crate)` so
+/// `obs::check` parses trace files with the same grammar the reports use.
+pub(crate) enum Json {
     Obj(Vec<(String, Json)>),
     Arr(Vec<Json>),
     Str(String),
@@ -469,7 +471,7 @@ enum Json {
 }
 
 impl Json {
-    fn parse(text: &str) -> Result<Json> {
+    pub(crate) fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         let v = p.value()?;
         p.skip_ws();
@@ -483,28 +485,28 @@ impl Json {
         Ok(v)
     }
 
-    fn as_obj(&self, what: &str) -> Result<&[(String, Json)]> {
+    pub(crate) fn as_obj(&self, what: &str) -> Result<&[(String, Json)]> {
         match self {
             Json::Obj(kv) => Ok(kv),
             _ => Err(err_config!("bench report: {what} must be an object")),
         }
     }
 
-    fn as_arr(&self, what: &str) -> Result<&[Json]> {
+    pub(crate) fn as_arr(&self, what: &str) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
             _ => Err(err_config!("bench report: {what} must be an array")),
         }
     }
 
-    fn as_str(&self, what: &str) -> Result<&str> {
+    pub(crate) fn as_str(&self, what: &str) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
             _ => Err(err_config!("bench report: {what} must be a string")),
         }
     }
 
-    fn as_u64(&self, what: &str) -> Result<u64> {
+    pub(crate) fn as_u64(&self, what: &str) -> Result<u64> {
         match self {
             Json::Num(raw) => raw
                 .parse::<u64>()
@@ -513,7 +515,7 @@ impl Json {
         }
     }
 
-    fn as_f64(&self, what: &str) -> Result<f64> {
+    pub(crate) fn as_f64(&self, what: &str) -> Result<f64> {
         match self {
             Json::Num(raw) => raw
                 .parse::<f64>()
@@ -523,7 +525,7 @@ impl Json {
     }
 }
 
-fn obj_get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json> {
+pub(crate) fn obj_get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json> {
     obj.iter()
         .find(|(k, _)| k == key)
         .map(|(_, v)| v)

@@ -21,11 +21,14 @@ use crate::error::Result;
 use crate::infer::{Prediction, ShortlistIndex, ShortlistSpec};
 use crate::memmodel::{self, MemParams, Method};
 use crate::metrics::TopK;
+use crate::obs::{Arg, Tracer, Ts};
 use crate::serve::{
     self, LoadGen, LoadGenConfig, QueryCache, Ramp, ReplicaRouter, RoutePolicy, ScenarioConfig,
     ScenarioGen, Server, ServerConfig, ServingStats, VirtualClock, WarmSwap, ZipfKeys,
 };
 use crate::store::{BufferSpec, WeightStore};
+use std::cell::RefCell;
+use std::rc::Rc;
 
 /// Default arrival seed for the committed baseline.
 pub const ARRIVAL_SEED: u64 = 42;
@@ -635,6 +638,248 @@ pub fn run_cache_cell(
     })
 }
 
+/// One traced cell's outcome: the gated-section digest the bench grid
+/// pins, plus the rendered artifacts so `benches/serve_throughput.rs`
+/// can save the Chrome trace next to the report without rerunning.
+pub struct TracedCellOutcome {
+    pub stats: ServingStats,
+    /// `Tracer::gated_digest` — FNV-1a over the virtual-time event
+    /// stream (seq, phase, cat/name, ts, args).  Wall-domain spans are
+    /// excluded by construction, so same-seed runs must agree byte-for-
+    /// byte and the committed baseline gates this exactly.
+    pub gated_digest: u64,
+    /// The digest's preimage, for diffing a moved digest in CI logs.
+    pub gated_section: String,
+    /// Perfetto-loadable Chrome trace-event JSON.
+    pub chrome_json: String,
+    /// Total events recorded (spans count twice: begin + end).
+    pub events: u64,
+}
+
+/// Run the `r4000/b1/s1` exact corner with the observability tracer
+/// attached: the server emits admit/reject instants, flush spans, and
+/// `serve/admission` counter samples on the shared `VirtualClock`, and
+/// the driver adds a per-batch `scan` instant.  The pinned digest is a
+/// determinism witness for the whole tracing seam — if span order,
+/// names, args, or virtual timestamps drift, this cell moves.
+pub fn run_traced_cell(seed: u64) -> Result<TracedCellOutcome> {
+    let schedule = LoadGen::new(LoadGenConfig {
+        rate_qps: SHORTLIST_RATE as f64,
+        burst_max: SHORTLIST_BURST,
+        seed,
+    })?
+    .schedule_rows(SCEN_ROWS);
+    let clock = Rc::new(VirtualClock::new());
+    let mut sv = Server::new(
+        ServerConfig {
+            width: SCEN_WIDTH,
+            queue_cap: SCEN_QUEUE_CAP,
+            max_delay_ms: SCEN_MAX_DELAY_MS,
+        },
+        clock.clone(),
+    )?;
+    let tracer = Rc::new(RefCell::new(Tracer::new()));
+    sv.set_tracer(tracer.clone());
+    let mut out: Vec<Prediction> = Vec::with_capacity(SCEN_ROWS);
+    let mut next_row = 0i32;
+    let mut chunks_scanned = 0u64;
+    let score_tracer = tracer.clone();
+    let score_clock = clock.clone();
+    serve::replay(
+        &mut sv,
+        &schedule,
+        |rows| {
+            let mut toks = vec![0i32; rows * SEQ_LEN];
+            for i in 0..rows {
+                toks[i * SEQ_LEN] = next_row + i as i32;
+            }
+            next_row += rows as i32;
+            toks
+        },
+        |tokens: &[i32]| {
+            chunks_scanned += SCEN_N_CHUNKS as u64;
+            score_tracer.borrow_mut().instant(
+                "serve",
+                "scan",
+                Ts::Virt(score_clock.now_ms()),
+                vec![
+                    ("chunks", Arg::U64(SCEN_N_CHUNKS as u64)),
+                    ("rows", Arg::U64((tokens.len() / SEQ_LEN) as u64)),
+                ],
+            );
+            let mut per_shard: Vec<Vec<TopK>> = Vec::with_capacity(1);
+            per_shard.push(
+                tokens
+                    .chunks_exact(SEQ_LEN)
+                    .map(|row| {
+                        let t = row[0] as u32;
+                        let mut tk = TopK::new(SCEN_K);
+                        for label in 0..SCEN_LABELS as u32 {
+                            tk.push(synth_score(t, label), label);
+                        }
+                        tk
+                    })
+                    .collect(),
+            );
+            serve::merge_rows(SCEN_K, &per_shard)
+        },
+        &mut out,
+    )?;
+    if !sv.stats.reconciles() {
+        return Err(err_runtime!("traced cell counters do not reconcile: {}", sv.stats.summary()));
+    }
+    sv.stats.chunks_scanned = chunks_scanned;
+    let tr = tracer.borrow();
+    if tr.open_spans() != 0 {
+        return Err(err_runtime!("traced cell left {} spans open", tr.open_spans()));
+    }
+    Ok(TracedCellOutcome {
+        gated_digest: tr.gated_digest(),
+        gated_section: tr.gated_section(),
+        chrome_json: tr.to_chrome_json(),
+        events: tr.events().len() as u64,
+        stats: sv.stats,
+    })
+}
+
+/// Run the cache grid's `swap` mix with the tracer attached: on top of
+/// the server-side events, the driver emits the swap cutover instant
+/// (with the new `model_version`), per-batch `serve/cache` counter
+/// samples (whose `lookups = hits + misses` law `elmo trace-check`
+/// re-verifies event-by-event), `cache_skip` instants for end-to-end
+/// hits, and `scan` instants for the batches that miss.
+pub fn run_traced_swap_cell(seed: u64) -> Result<TracedCellOutcome> {
+    let (_, zipf_keys, zipf_s, cache_cap, swap_at_ms, _) = CACHE_CELLS[2];
+    let scenario = ScenarioGen::new(ScenarioConfig {
+        base: LoadGenConfig { rate_qps: CACHE_RATE as f64, burst_max: CACHE_BURST, seed },
+        ramp: Ramp::Flat,
+        zipf: Some(ZipfKeys { keys: zipf_keys, s: zipf_s }),
+    })?
+    .schedule_rows(SCEN_ROWS);
+    let schedule: Vec<serve::Arrival> = scenario.iter().map(|a| a.arrival()).collect();
+    let keys: Vec<u32> = scenario.iter().flat_map(|a| a.keys.iter().copied()).collect();
+
+    let clock = Rc::new(VirtualClock::new());
+    let mut sv = Server::new(
+        ServerConfig {
+            width: SCEN_WIDTH,
+            queue_cap: SCEN_QUEUE_CAP,
+            max_delay_ms: SCEN_MAX_DELAY_MS,
+        },
+        clock.clone(),
+    )?;
+    let tracer = Rc::new(RefCell::new(Tracer::new()));
+    sv.set_tracer(tracer.clone());
+    let mut out: Vec<Prediction> = Vec::with_capacity(SCEN_ROWS);
+    let mut next_key = 0usize;
+    let mut chunks_scanned = 0u64;
+    let mut cache_skips = 0u64;
+    let mut cache: QueryCache<TopK> = QueryCache::new(cache_cap);
+    let mut swap: WarmSwap<()> = WarmSwap::new();
+    swap.stage(swap_at_ms, ())?;
+    let swap_clock = clock.clone();
+    let score_tracer = tracer.clone();
+    let (mut lookups, mut hits, mut misses) = (0u64, 0u64, 0u64);
+    let mut model_version = 1u64;
+    serve::replay(
+        &mut sv,
+        &schedule,
+        |rows| {
+            let mut toks = vec![0i32; rows * SEQ_LEN];
+            for i in 0..rows {
+                toks[i * SEQ_LEN] = keys[next_key + i] as i32;
+            }
+            next_key += rows;
+            toks
+        },
+        |tokens: &[i32]| {
+            let now = swap_clock.now_ms();
+            for () in swap.take_due(now) {
+                cache.invalidate_all();
+                model_version += 1;
+                score_tracer.borrow_mut().instant(
+                    "serve",
+                    "swap_cutover",
+                    Ts::Virt(now),
+                    vec![("model_version", Arg::U64(model_version))],
+                );
+            }
+            let digests: Vec<u64> =
+                tokens.chunks_exact(SEQ_LEN).map(serve::row_digest).collect();
+            let cached: Vec<Option<TopK>> =
+                digests.iter().map(|&d| cache.get(d)).collect();
+            let batch_hits = cached.iter().filter(|c| c.is_some()).count() as u64;
+            lookups += cached.len() as u64;
+            hits += batch_hits;
+            misses += cached.len() as u64 - batch_hits;
+            score_tracer.borrow_mut().counter(
+                "serve",
+                "serve/cache",
+                Ts::Virt(now),
+                &[("lookups_total", lookups), ("hits_total", hits), ("misses_total", misses)],
+            );
+            if cached.iter().all(|c| c.is_some()) {
+                cache_skips += 1;
+                score_tracer.borrow_mut().instant(
+                    "serve",
+                    "cache_skip",
+                    Ts::Virt(now),
+                    vec![("rows", Arg::U64(cached.len() as u64))],
+                );
+                return Ok(cached.into_iter().flatten().collect());
+            }
+            chunks_scanned += SCEN_N_CHUNKS as u64;
+            score_tracer.borrow_mut().instant(
+                "serve",
+                "scan",
+                Ts::Virt(now),
+                vec![("chunks", Arg::U64(SCEN_N_CHUNKS as u64))],
+            );
+            let topks: Vec<TopK> = tokens
+                .chunks_exact(SEQ_LEN)
+                .map(|row| {
+                    let t = row[0] as u32;
+                    let mut tk = TopK::new(SCEN_K);
+                    for label in 0..SCEN_LABELS as u32 {
+                        tk.push(synth_score(t, label), label);
+                    }
+                    tk
+                })
+                .collect();
+            for (i, c) in cached.iter().enumerate() {
+                if c.is_none() {
+                    cache.insert(digests[i], topks[i].clone());
+                }
+            }
+            Ok(topks)
+        },
+        &mut out,
+    )?;
+    sv.stats.chunks_scanned = chunks_scanned;
+    for _ in 0..swap.applied() {
+        sv.stats.note_swap();
+    }
+    sv.stats.absorb_cache(&cache);
+    sv.stats.cache_batch_skips = cache_skips;
+    if !sv.stats.reconciles() || !cache.reconciles() {
+        return Err(err_runtime!(
+            "traced swap cell counters do not reconcile: {}",
+            sv.stats.summary()
+        ));
+    }
+    let tr = tracer.borrow();
+    if tr.open_spans() != 0 {
+        return Err(err_runtime!("traced swap cell left {} spans open", tr.open_spans()));
+    }
+    Ok(TracedCellOutcome {
+        gated_digest: tr.gated_digest(),
+        gated_section: tr.gated_section(),
+        chrome_json: tr.to_chrome_json(),
+        events: tr.events().len() as u64,
+        stats: sv.stats,
+    })
+}
+
 /// The memmodel methods the report pins, with stable metric-name tags.
 pub const MEM_METHODS: [(Method, &str); 6] = [
     (Method::Renee, "renee"),
@@ -650,13 +895,14 @@ pub const MEM_METHODS: [(Method, &str); 6] = [
 /// fingerprint itself is platform-exact.
 pub fn serve_throughput_config(seed: u64) -> String {
     format!(
-        "serve_throughput v3 rows={SCEN_ROWS} width={SCEN_WIDTH} queue_cap={SCEN_QUEUE_CAP} \
+        "serve_throughput v4 rows={SCEN_ROWS} width={SCEN_WIDTH} queue_cap={SCEN_QUEUE_CAP} \
          max_delay_us={SCEN_MAX_DELAY_US} labels={SCEN_LABELS} d={SCEN_D} chunk={SCEN_CHUNK} \
          k={SCEN_K} workers={SCEN_WORKERS} rates=500,4000 bursts=1,6 shards=1,2,4 \
          shortlist_probes=1,2 shortlist_rate=4000 shortlist_burst=1 \
          shortlist_bonus_eighths=64 replicas=2,4 routes=rr,ll replica_rate=4000 \
          replica_burst=1 cache_rate=4000 cache_burst=6 \
-         cache_cells=hot:16:12:16:0:0,churn:64:11:8:0:50,swap:16:12:16:50:0 seed={seed}"
+         cache_cells=hot:16:12:16:0:0,churn:64:11:8:0:50,swap:16:12:16:50:0 \
+         trace_cells=replay:4000:1,cache_swap seed={seed}"
     )
 }
 
@@ -675,7 +921,11 @@ pub fn serve_throughput_config(seed: u64) -> String {
 /// `r4000/b1/s1` — the routing-invariance contract.  Three cache cells
 /// (`cache/{hot|churn|swap}/`) replay seeded Zipf mixes through the
 /// swap-aware cached scan and pin the full cache counter block, the
-/// scenario schedule digest, and the swap version history.  Virtual
+/// scenario schedule digest, and the swap version history.  Two traced
+/// cells (`trace/{replay|cache_swap}/`) rerun the zero-rejection corner
+/// and the swap mix with the `obs::Tracer` attached and pin the gated
+/// trace digest plus the event count — the determinism contract for the
+/// whole observability seam.  Virtual
 /// latency percentiles are wall-clock-kind (they inherit libm ulps from
 /// the arrival process).  Global metrics: `memmodel` peak bytes for every
 /// method at the paper's Sec 4.4 walkthrough (exact), allocation counts
@@ -769,6 +1019,12 @@ pub fn serve_throughput_report(seed: u64) -> Result<BenchReport> {
         rep.det_u64(&format!("{p}/swaps"), cell.stats.swaps)?;
         rep.det_u64(&format!("{p}/cache_bytes"), cell.cache_bytes)?;
     }
+    let traced = run_traced_cell(seed)?;
+    rep.det_digest("trace/replay/gated_digest", traced.gated_digest)?;
+    rep.det_u64("trace/replay/events", traced.events)?;
+    let swap_traced = run_traced_swap_cell(seed)?;
+    rep.det_digest("trace/cache_swap/gated_digest", swap_traced.gated_digest)?;
+    rep.det_u64("trace/cache_swap/events", swap_traced.events)?;
     if counting_enabled() {
         let da = alloc_since(alloc_start);
         rep.det_u64_pct("alloc/grid_calls", da.calls, 20.0)?;

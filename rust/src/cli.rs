@@ -50,6 +50,8 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
             "save",
             "workers",
             "config",
+            "trace",
+            "metrics",
         ],
     },
     Subcommand {
@@ -65,6 +67,8 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
             "shortlist-enabled",
             "shortlist-clusters",
             "shortlist-probe",
+            "trace",
+            "metrics",
         ],
     },
     Subcommand {
@@ -100,6 +104,8 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
             "artifacts",
             "workers",
             "config",
+            "trace",
+            "metrics",
         ],
     },
     Subcommand {
@@ -126,6 +132,11 @@ pub const SUBCOMMANDS: &[Subcommand] = &[
         name: "lint",
         summary: "repo-invariant static analysis over rust/src; non-zero exit on any finding",
         flags: &["fix-allow"],
+    },
+    Subcommand {
+        name: "trace-check",
+        summary: "validate a Chrome trace's schema + reconciliation laws; non-zero exit on any violation",
+        flags: &[],
     },
 ];
 
@@ -168,10 +179,11 @@ USAGE:
                [--dropout-emb F] [--dropout-cls F] [--seed N]
                [--momentum F] [--loss-scale F] [--warmup-steps N]
                [--eval-rows N] [--artifacts DIR] [--save PATH] [--workers N]
+               [--trace PATH] [--metrics PATH]
   elmo predict     --checkpoint PATH [--config FILE] [--profile NAME]
                    [--eval-rows N] [--artifacts DIR] [--workers N]
                    [--shortlist-enabled BOOL] [--shortlist-clusters C]
-                   [--shortlist-probe P]
+                   [--shortlist-probe P] [--trace PATH] [--metrics PATH]
   elmo serve-bench --checkpoint PATH [--config FILE] [--queries N]
                    [--max-burst N] [--k N] [--seed N] [--artifacts DIR]
                    [--workers N]
@@ -183,11 +195,13 @@ USAGE:
                    [--cache-cap N] [--swap-at-ms F] [--zipf-s F]
                    [--zipf-keys N] [--ramp SHAPE] [--ramp-period-ms F]
                    [--stats-json PATH] [--artifacts DIR] [--workers N]
+                   [--trace PATH] [--metrics PATH]
   elmo datasets
   elmo memtrace [--method renee|bf16|fp8|fp32] [--labels N] [--chunks K]
   elmo sweep   [--profile NAME] [--epochs N] [--artifacts DIR]
   elmo bench-diff BASELINE.json CURRENT.json [--threshold PCT]
   elmo lint    [PATHS…] [--fix-allow BOOL]
+  elmo trace-check TRACE.json
   elmo help [SUBCOMMAND]
   elmo --version
 
@@ -259,6 +273,13 @@ LINT FLAGS (docs/LINTS.md):
   --fix-allow BOOL  rewrite the scanned files to drop allow markers that
                     no longer suppress any finding (default false: a
                     stale marker is itself an `unused-allow` finding)
+
+OBSERVABILITY FLAGS (train + predict + serve; docs/OBSERVABILITY.md):
+  --trace PATH      write a Chrome trace-event JSON (Perfetto-loadable)
+                    of the run's spans, instants, and counter samples;
+                    validate it with `elmo trace-check PATH`
+  --metrics PATH    write the unified metrics registry after the run:
+                    Prometheus text for .prom/.txt paths, JSON otherwise
 ";
 
 /// Parse an alternating `--flag value` list.  Rejects non-`--` arguments

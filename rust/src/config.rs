@@ -32,7 +32,7 @@ use crate::error::{Result, ResultExt};
 
 /// Every key a `RunSpec` file (or the matching CLI flag) may set, in the
 /// canonical serialization order.
-pub const KEYS: [&str; 32] = [
+pub const KEYS: [&str; 34] = [
     "profile",
     "precision",
     "chunk",
@@ -65,11 +65,13 @@ pub const KEYS: [&str; 32] = [
     "serve.zipf_keys",
     "serve.ramp",
     "serve.ramp_period_ms",
+    "obs.trace",
+    "obs.metrics",
 ];
 
 /// CLI flag name -> RunSpec key (flags are dashed, keys underscored) for
 /// the training-facing keys every subcommand shares.
-const FLAG_KEYS: [(&str, &str); 15] = [
+const FLAG_KEYS: [(&str, &str); 17] = [
     ("profile", "profile"),
     ("precision", "precision"),
     ("chunk", "chunk"),
@@ -85,6 +87,8 @@ const FLAG_KEYS: [(&str, &str); 15] = [
     ("eval-rows", "eval_rows"),
     ("save", "save"),
     ("workers", "workers"),
+    ("trace", "obs.trace"),
+    ("metrics", "obs.metrics"),
 ];
 
 /// Serving-only CLI flags (`elmo serve`) -> `serve.*` RunSpec keys,
@@ -179,6 +183,12 @@ pub struct RunSpec {
     pub serve_ramp: String,
     /// `elmo serve`: diurnal ramp period, virtual milliseconds.
     pub serve_ramp_period_ms: f64,
+    /// Chrome trace-event JSON written after the run ("" = no trace);
+    /// validate with `elmo trace-check` (docs/OBSERVABILITY.md).
+    pub obs_trace: String,
+    /// Metrics registry snapshot written after the run ("" = none):
+    /// Prometheus text for `.prom`/`.txt` paths, JSON otherwise.
+    pub obs_metrics: String,
     /// Keys explicitly set by a file or flag (drives decisions like
     /// `elmo predict` preferring the checkpoint's stored profile unless
     /// one was explicitly chosen).  Not part of equality.
@@ -220,6 +230,8 @@ impl Default for RunSpec {
             serve_zipf_keys: 64,
             serve_ramp: "flat".to_string(),
             serve_ramp_period_ms: 1000.0,
+            obs_trace: String::new(),
+            obs_metrics: String::new(),
             explicit: BTreeSet::new(),
         }
     }
@@ -350,6 +362,8 @@ impl RunSpec {
             "serve.zipf_keys" => self.serve_zipf_keys = num(key, val)?,
             "serve.ramp" => self.serve_ramp = val.to_string(),
             "serve.ramp_period_ms" => self.serve_ramp_period_ms = num(key, val)?,
+            "obs.trace" => self.obs_trace = val.to_string(),
+            "obs.metrics" => self.obs_metrics = val.to_string(),
             other => return Err(err_config!("unknown key `{other}`")),
         }
         self.explicit.insert(key);
@@ -569,7 +583,9 @@ impl fmt::Display for RunSpec {
         writeln!(f, "serve.zipf_s = {}", self.serve_zipf_s)?;
         writeln!(f, "serve.zipf_keys = {}", self.serve_zipf_keys)?;
         writeln!(f, "serve.ramp = \"{}\"", self.serve_ramp)?;
-        writeln!(f, "serve.ramp_period_ms = {}", self.serve_ramp_period_ms)
+        writeln!(f, "serve.ramp_period_ms = {}", self.serve_ramp_period_ms)?;
+        writeln!(f, "obs.trace = \"{}\"", self.obs_trace)?;
+        writeln!(f, "obs.metrics = \"{}\"", self.obs_metrics)
     }
 }
 
@@ -1006,6 +1022,20 @@ serve.max_delay_ms = 2.5
         // validate_serve folds in the base validation
         let bad = RunSpec::parse("serve.shards = 0\n").unwrap();
         assert!(bad.validate_serve(1).is_err());
+    }
+
+    #[test]
+    fn obs_keys_parse_round_trip_and_flags_override() {
+        let mut spec = RunSpec::parse("obs.trace = \"out/trace.json\"\n").unwrap();
+        assert_eq!(spec.obs_trace, "out/trace.json");
+        assert!(spec.is_explicit("obs.trace"));
+        assert!(!spec.is_explicit("obs.metrics"));
+        let f = parse_flags(&argv(&["--metrics", "out/metrics.prom"])).unwrap();
+        spec.apply_flags(&f).unwrap();
+        assert_eq!(spec.obs_metrics, "out/metrics.prom");
+        assert!(spec.validate().is_ok());
+        let back = RunSpec::parse(&spec.to_string()).unwrap();
+        assert_eq!(back, spec, "obs.* keys must round-trip through to_string");
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::data::{Dataset, SEQ_LEN};
 use crate::err_shape;
 use crate::error::{Result, ResultExt};
 use crate::numerics::{self, quantize_param, quantize_rne, BF16, E4M3};
+use crate::obs::{Arg as ObsArg, Registry, Tracer, Ts};
 use crate::policy::{
     self, Bf16Policy, Fp32Policy, Fp8HeadKahanPolicy, Fp8Policy, ReneePolicy, SampledPolicy,
     StepCtx, UpdatePolicy,
@@ -127,6 +128,21 @@ pub struct EpochStats {
     pub truncated_positives: usize,
 }
 
+impl EpochStats {
+    /// Export through the unified metrics registry
+    /// (docs/OBSERVABILITY.md).  Counters accumulate across epochs;
+    /// gauges hold the latest epoch's values.
+    pub fn export(&self, reg: &mut Registry) -> Result<()> {
+        reg.inc("elmo_train_steps_total", self.steps as u64)?;
+        reg.inc("elmo_train_overflow_steps_total", self.overflow_steps as u64)?;
+        reg.inc("elmo_train_truncated_positives_total", self.truncated_positives as u64)?;
+        reg.gauge("elmo_train_mean_loss", self.mean_loss)?;
+        reg.gauge("elmo_train_loss_scale", f64::from(self.loss_scale))?;
+        reg.gauge("elmo_train_gmax", f64::from(self.gmax))?;
+        Ok(())
+    }
+}
+
 /// Training state + execution plan.
 pub struct Trainer {
     pub cfg: TrainConfig,
@@ -150,6 +166,12 @@ pub struct Trainer {
     pub gmax_peak: f32,
     /// Running count of shortlist-truncated positives (Sampled).
     pub truncated_positives: u64,
+    /// Optional span/event recorder (docs/OBSERVABILITY.md): step-phase
+    /// spans on the wall domain — deterministic names/args, wall
+    /// durations tagged and never digest-gated — plus overflow,
+    /// loss-scale, and gmax instants.  Owned (not shared): all training
+    /// instrumentation happens on the coordinator thread.
+    pub tracer: Option<Tracer>,
 }
 
 impl Trainer {
@@ -202,7 +224,15 @@ impl Trainer {
             gmax_history: RingF32::new(GMAX_HISTORY_CAP),
             gmax_peak: 0.0,
             truncated_positives: 0,
+            tracer: None,
         })
+    }
+
+    /// Record through the optional tracer (no-op when tracing is off).
+    fn trace(&mut self, f: impl FnOnce(&mut Tracer)) {
+        if let Some(tr) = self.tracer.as_mut() {
+            f(tr);
+        }
     }
 
     pub fn chunks(&self) -> usize {
@@ -275,6 +305,12 @@ impl Trainer {
         debug_assert_eq!(rows.len(), self.batch);
         let seed = self.step_seed();
         self.step_count += 1;
+        let step_no = self.step_count;
+        let scale_in = self.loss_scale;
+        self.trace(|tr| {
+            tr.begin("train", "step", Ts::Wall, vec![("step", ObsArg::U64(step_no))]);
+            tr.begin("train", "encoder_fwd", Ts::Wall, Vec::new());
+        });
 
         // 1. encoder forward
         let enc_cfg = self.enc_cfg();
@@ -289,6 +325,10 @@ impl Trainer {
             ],
         )?;
         let emb = to_vec_f32(&emb_out[0])?;
+        self.trace(|tr| {
+            tr.end("train", "encoder_fwd", Ts::Wall);
+            tr.begin("train", "policy_step", Ts::Wall, Vec::new());
+        });
 
         // 2. classifier pass: the policy drives the store (chunk loop for
         //    every chunk-shaped policy, shortlist kernel for Sampled);
@@ -325,12 +365,38 @@ impl Trainer {
         self.gmax_history.push(out.gmax);
         self.gmax_peak = self.gmax_peak.max(out.gmax);
         self.truncated_positives += out.truncated_positives as u64;
+        let (gmax, scale_now) = (out.gmax, self.loss_scale);
+        self.trace(|tr| {
+            tr.end("train", "policy_step", Ts::Wall);
+            tr.instant("train", "gmax", Ts::Wall, vec![("gmax", ObsArg::F64(f64::from(gmax)))]);
+            if scale_now != scale_in {
+                tr.instant(
+                    "train",
+                    "loss_scale",
+                    Ts::Wall,
+                    vec![
+                        ("from", ObsArg::F64(f64::from(scale_in))),
+                        ("to", ObsArg::F64(f64::from(scale_now))),
+                    ],
+                );
+            }
+        });
 
         if out.overflow {
             // the policy rolled its updates back (Renee AMP semantics);
             // the encoder must skip this step too
+            self.trace(|tr| {
+                tr.instant(
+                    "train",
+                    "overflow",
+                    Ts::Wall,
+                    vec![("loss_scale", ObsArg::F64(f64::from(scale_now)))],
+                );
+                tr.end("train", "step", Ts::Wall);
+            });
             return Ok((out.loss, true));
         }
+        self.trace(|tr| tr.begin("train", "encoder_bwd", Ts::Wall, Vec::new()));
 
         // 3. encoder backward + optimizer (runs AFTER all classifier work —
         //    the Sec 4.2 reordering)
@@ -354,6 +420,10 @@ impl Trainer {
         self.enc_m = to_vec_f32(&outs[1])?;
         self.enc_v = to_vec_f32(&outs[2])?;
         self.enc_c = to_vec_f32(&outs[3])?;
+        self.trace(|tr| {
+            tr.end("train", "encoder_bwd", Ts::Wall);
+            tr.end("train", "step", Ts::Wall);
+        });
         Ok((out.loss, false))
     }
 
@@ -372,6 +442,10 @@ impl Trainer {
         let t0 = crate::util::Stopwatch::start();
         let mut loss_sum = 0.0;
         let trunc0 = self.truncated_positives;
+        let epoch_no = epoch as u64;
+        self.trace(|tr| {
+            tr.begin("train", "epoch", Ts::Wall, vec![("epoch", ObsArg::U64(epoch_no))]);
+        });
         while let Some((rows, _valid)) = batcher.next_batch() {
             let (loss, overflowed) = self.step(sess, ds, &rows)?;
             loss_sum += loss;
@@ -385,6 +459,11 @@ impl Trainer {
         stats.loss_scale = self.loss_scale;
         stats.gmax = self.gmax_peak;
         stats.truncated_positives = (self.truncated_positives - trunc0) as usize;
+        let steps_total = self.step_count;
+        self.trace(|tr| {
+            tr.counter("train", "train/steps", Ts::Wall, &[("steps_total", steps_total)]);
+            tr.end("train", "epoch", Ts::Wall);
+        });
         Ok(stats)
     }
 
@@ -441,6 +520,28 @@ impl Trainer {
     /// error, not a silent resize).
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         crate::infer::Checkpoint::load(path)?.restore(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_stats_export_accumulates_counters_across_epochs() {
+        let mut reg = Registry::new();
+        let a = EpochStats {
+            steps: 100,
+            overflow_steps: 2,
+            loss_scale: 256.0,
+            ..Default::default()
+        };
+        a.export(&mut reg).unwrap();
+        let b = EpochStats { steps: 50, loss_scale: 512.0, ..Default::default() };
+        b.export(&mut reg).unwrap();
+        assert_eq!(reg.counter("elmo_train_steps_total"), Some(150));
+        assert_eq!(reg.counter("elmo_train_overflow_steps_total"), Some(2));
+        assert_eq!(reg.gauge_value("elmo_train_loss_scale"), Some(512.0));
     }
 }
 

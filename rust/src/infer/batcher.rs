@@ -110,8 +110,35 @@ impl ServeStats {
         self.percentile_ms(50.0)
     }
 
+    pub fn p90_ms(&self) -> f64 {
+        self.percentile_ms(90.0)
+    }
+
     pub fn p99_ms(&self) -> f64 {
         self.percentile_ms(99.0)
+    }
+
+    /// Export the batcher counters and the retained latency window into
+    /// the unified metrics registry (docs/OBSERVABILITY.md): run totals
+    /// as counters, exact window percentiles as gauges, and the full
+    /// window as an `elmo_serve_latency_ms` fixed-bucket histogram over
+    /// [`crate::obs::LATENCY_BUCKETS_MS`].
+    pub fn export(&self, reg: &mut crate::obs::Registry) -> Result<()> {
+        reg.inc("elmo_serve_completed_total", self.completed)?;
+        reg.inc("elmo_serve_batches_total", self.batches)?;
+        reg.inc("elmo_serve_padded_rows_total", self.padded_rows)?;
+        reg.gauge("elmo_serve_latency_p50_ms", self.p50_ms())?;
+        reg.gauge("elmo_serve_latency_p90_ms", self.p90_ms())?;
+        reg.gauge("elmo_serve_latency_p99_ms", self.p99_ms())?;
+        reg.gauge("elmo_serve_fill_ratio", self.fill_ratio())?;
+        let bounds = &crate::obs::LATENCY_BUCKETS_MS;
+        let mut counts = vec![0u64; bounds.len() + 1];
+        let mut sum = 0.0;
+        for &ms in &self.latencies_ms {
+            counts[bounds.partition_point(|&b| b < ms)] += 1;
+            sum += ms;
+        }
+        reg.hist_bulk("elmo_serve_latency_ms", bounds, &counts, sum)
     }
 
     /// Executed-row utilization: completed / (completed + padding).
@@ -125,11 +152,12 @@ impl ServeStats {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} queries in {} batches | {:.1} q/s | p50 {:.2} ms  p99 {:.2} ms | fill {:.0}%",
+            "{} queries in {} batches | {:.1} q/s | p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms | fill {:.0}%",
             self.completed,
             self.batches,
             self.qps(),
             self.p50_ms(),
+            self.p90_ms(),
             self.p99_ms(),
             100.0 * self.fill_ratio()
         )
@@ -406,6 +434,42 @@ mod tests {
         assert_eq!(s.window_len() as u64, s.completed);
         assert_eq!(s.p50_ms(), exact_percentile(&samples, 50.0));
         assert_eq!(s.p99_ms(), exact_percentile(&samples, 99.0));
+    }
+
+    #[test]
+    fn p90_is_exact_and_ordered_between_p50_and_p99() {
+        let mut s = ServeStats::default();
+        let samples: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 1000) as f64 * 0.1).collect();
+        for &ms in &samples {
+            s.record(ms);
+        }
+        assert_eq!(s.p90_ms(), exact_percentile(&samples, 90.0));
+        assert!(s.p50_ms() <= s.p90_ms());
+        assert!(s.p90_ms() <= s.p99_ms());
+        assert!(s.summary().contains("p90"));
+    }
+
+    #[test]
+    fn export_fills_the_unified_registry() {
+        let mut s = ServeStats::default();
+        for ms in [0.1, 0.3, 3.0, 500.0] {
+            s.record(ms);
+        }
+        s.batches = 1;
+        s.padded_rows = 4;
+        let mut reg = crate::obs::Registry::new();
+        s.export(&mut reg).unwrap();
+        assert_eq!(reg.counter("elmo_serve_completed_total"), Some(4));
+        assert_eq!(reg.counter("elmo_serve_batches_total"), Some(1));
+        assert_eq!(reg.counter("elmo_serve_padded_rows_total"), Some(4));
+        assert_eq!(reg.gauge_value("elmo_serve_latency_p90_ms"), Some(s.p90_ms()));
+        let h = reg.hist("elmo_serve_latency_ms").unwrap();
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.counts()[0], 1, "0.1 lands in le=0.25");
+        assert_eq!(h.counts()[1], 1, "0.3 lands in le=0.5");
+        assert_eq!(h.counts()[4], 1, "3.0 lands in le=4.0");
+        assert_eq!(h.counts()[crate::obs::LATENCY_BUCKETS_MS.len()], 1, "500 overflows");
+        assert!((h.sum() - 503.4).abs() < 1e-9);
     }
 
     #[test]

@@ -239,6 +239,17 @@ impl ShortlistIndex {
         Ok((0..self.n_chunks).filter(|&c| chunk_set[c]).collect())
     }
 
+    /// Fraction of the chunk range a stage-1 selection fine-scans —
+    /// the per-batch sublinearity figure the serve trace's `shortlist`
+    /// events carry (`selected / n_chunks`, in [0, 1] whenever
+    /// `selected` came from `select_chunks`).
+    pub fn selection_fraction(&self, selected: usize) -> f64 {
+        if self.n_chunks == 0 {
+            return 0.0;
+        }
+        selected as f64 / self.n_chunks as f64
+    }
+
     /// Order-sensitive FNV-1a over the whole index (geometry, centroid
     /// bits, assignments): the clustering-determinism witness — same seed
     /// + same weights → same digest.
@@ -352,6 +363,15 @@ mod tests {
             m[c * d + c] = 1.0;
         }
         (m, n, d)
+    }
+
+    #[test]
+    fn selection_fraction_reports_the_stage1_funnel() {
+        let (m, n, d) = axis_means();
+        let idx = ShortlistIndex::from_chunk_means(m, n, d, &spec(n, 1, 42)).unwrap();
+        assert_eq!(idx.selection_fraction(0), 0.0);
+        assert_eq!(idx.selection_fraction(1), 0.25);
+        assert_eq!(idx.selection_fraction(n), 1.0);
     }
 
     #[test]

@@ -35,6 +35,10 @@
 //! The invariants behind those guarantees are machine-checked: `lint`
 //! implements `elmo lint` (docs/LINTS.md), a dependency-free static
 //! analysis pass over `rust/src` that CI runs as a blocking step.
+//!
+//! Cross-cutting observability lives in `obs` (docs/OBSERVABILITY.md):
+//! deterministic Chrome-trace spans on the injectable clock, a unified
+//! metrics registry, and the `elmo trace-check` reconciliation validator.
 
 // Rule 3 (panic-in-library) mirrored at the compiler level: clippy warns
 // on unwrap/expect in non-test library code, and CI runs clippy with
@@ -52,6 +56,7 @@ pub mod lint;
 pub mod memmodel;
 pub mod metrics;
 pub mod numerics;
+pub mod obs;
 pub mod policy;
 pub mod runtime;
 pub mod serve;

@@ -336,6 +336,17 @@ mod tests {
     }
 
     #[test]
+    fn obs_files_are_on_the_digest_surface() {
+        // the tracer's gated section and the registry's rendered pages
+        // are byte-compared across runs, so obs/ joins the
+        // unordered-iter scope
+        let src = "use std::collections::HashMap;\n";
+        let r = lint_str("rust/src/obs/registry.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "unordered-iter-in-digest");
+    }
+
+    #[test]
     fn one_finding_per_rule_per_line_even_with_multiple_tokens() {
         let r = lint_str("rust/src/metrics.rs", "let s: f32 = v.iter().sum::<f32>();\n");
         assert_eq!(r.findings.len(), 1, "sum() and sum::<f32>() collapse to one finding");

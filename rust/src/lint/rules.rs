@@ -41,7 +41,7 @@ pub const RULES: &[Rule] = &[
         why: "HashMap/HashSet iteration order feeds digests, shortlists, and byte-stable \
               reports on these paths; use sorted Vecs or BTreeMap, or allow with a \
               sortedness argument",
-        scope: &["bench/", "serve/", "infer/shortlist.rs", "store.rs"],
+        scope: &["bench/", "serve/", "infer/shortlist.rs", "store.rs", "obs/"],
         tokens: &["HashMap", "HashSet"],
     },
     Rule {

@@ -16,6 +16,10 @@
 //!   lint         repo-invariant static analysis over rust/src (wall
 //!                clock, panics, unordered iteration, unseeded RNG —
 //!                docs/LINTS.md); non-zero exit on any finding
+//!   trace-check  validate a Chrome trace emitted with `--trace`: schema,
+//!                balanced spans, monotone counters, the serve
+//!                conservation laws event by event, and the embedded
+//!                gated digest; non-zero exit on any violation
 //!
 //! Flag parsing and the subcommand registry live in `elmo::cli`
 //! (hand-rolled; no clap offline — see DESIGN.md Substitutions).  Run
@@ -33,6 +37,7 @@ use elmo::data::{self, SEQ_LEN, VOCAB};
 use elmo::infer::{Checkpoint, MicroBatcher, Predictor, ShortlistSpec, SCORE_LC};
 use elmo::memmodel::{self, MemParams, Method};
 use elmo::metrics::TopK;
+use elmo::obs::{Arg, Registry, Tracer, Ts};
 use elmo::serve::{
     self, LoadGenConfig, QueryCache, Ramp, ReplicaRouter, ScenarioConfig, ScenarioGen, Server,
     ServerConfig, ShardExecutor, ShardPlan, VirtualClock, WarmSwap, ZipfKeys,
@@ -67,6 +72,7 @@ fn run(args: &[String]) -> Result<()> {
         Some("sweep") => cmd_sweep(&parse_cmd_flags("sweep", &args[1..])?),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("lint") => cmd_lint(&args[1..]),
+        Some("trace-check") => cmd_trace_check(&args[1..]),
         Some("--version" | "version") => {
             println!("{}", cli::version());
             Ok(())
@@ -136,6 +142,13 @@ fn cmd_train(f: &Flags) -> Result<()> {
 
     let mut sess = Session::builder().artifacts(art.as_str()).workers(spec.workers).build()?;
     let mut tr = sess.trainer(&ds, cfg.clone())?;
+    if !spec.obs_trace.is_empty() {
+        // wall-domain spans over the step phases (encoder fwd -> policy
+        // step -> commit) with deterministic names/args; overflow and
+        // loss-scale updates land as instants
+        tr.tracer = Some(Tracer::new());
+    }
+    let mut reg = Registry::new();
     println!("# chunks per step: {}", tr.chunks());
     sess.prepare(&tr.required_kernels())?;
     if sess.workers() > 1 {
@@ -167,6 +180,9 @@ fn cmd_train(f: &Flags) -> Result<()> {
                 st.truncated_positives
             );
         }
+        if !spec.obs_metrics.is_empty() {
+            st.export(&mut reg)?;
+        }
     }
     if !spec.save.is_empty() {
         let ckpt = Checkpoint::from_trainer(&tr, &spec.profile);
@@ -191,11 +207,33 @@ fn cmd_train(f: &Flags) -> Result<()> {
     };
     if prof.paper_labels > 0 {
         let mp = MemParams::from_profile(&prof, tr.chunks() as u64);
+        let mtrace = memmodel::schedule(method, &mp);
         println!(
             "paper-scale peak memory (model): {} GiB [{}]",
-            gib(memmodel::schedule(method, &mp).peak()),
+            gib(mtrace.peak()),
             method.label()
         );
+        if !spec.obs_metrics.is_empty() {
+            mtrace.export_registry(&mut reg)?;
+        }
+        if let Some(tracer) = tr.tracer.as_mut() {
+            // one Chrome counter track per modeled buffer, plus the live
+            // total — loads next to the step spans in Perfetto
+            mtrace.export_chrome(tracer);
+        }
+    }
+    if let Some(tracer) = tr.tracer.take() {
+        tracer.save(&spec.obs_trace)?;
+        println!(
+            "# obs: wrote trace {} ({} events, gated digest {:016x})",
+            spec.obs_trace,
+            tracer.events().len(),
+            tracer.gated_digest()
+        );
+    }
+    if !spec.obs_metrics.is_empty() {
+        reg.save(&spec.obs_metrics)?;
+        println!("# obs: wrote metrics {}", spec.obs_metrics);
     }
     Ok(())
 }
@@ -247,8 +285,36 @@ fn cmd_predict(f: &Flags) -> Result<()> {
     );
     // the stored seed regenerates the exact split the model trained on
     let ds = data::generate(&prof, p.seed());
+    let mut tracer = (!spec.obs_trace.is_empty()).then(Tracer::new);
+    if let Some(t) = tracer.as_mut() {
+        t.begin(
+            "predict",
+            "evaluate",
+            Ts::Wall,
+            vec![("rows", Arg::U64(spec.eval_rows as u64))],
+        );
+    }
     let rep = p.evaluate(&mut sess, &ds, spec.eval_rows)?;
     println!("eval: {}", rep.summary());
+    if let Some(t) = tracer.as_mut() {
+        t.end("predict", "evaluate", Ts::Wall);
+        t.save(&spec.obs_trace)?;
+        println!(
+            "# obs: wrote trace {} ({} events, gated digest {:016x})",
+            spec.obs_trace,
+            t.events().len(),
+            t.gated_digest()
+        );
+    }
+    if !spec.obs_metrics.is_empty() {
+        let mut reg = Registry::new();
+        reg.inc("elmo_predict_rows_total", spec.eval_rows as u64)?;
+        reg.gauge("elmo_predict_p_at_1", rep.p[0])?;
+        reg.gauge("elmo_predict_p_at_3", rep.p[1])?;
+        reg.gauge("elmo_predict_p_at_5", rep.p[2])?;
+        reg.save(&spec.obs_metrics)?;
+        println!("# obs: wrote metrics {}", spec.obs_metrics);
+    }
     Ok(())
 }
 
@@ -413,6 +479,18 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         },
         clock.clone(),
     )?;
+    // --trace: the server emits admit/reject instants, flush spans, and
+    // admission conservation samples; the score closure below adds the
+    // driver-level events (route choice, cache lookups, swap cutover,
+    // per-shard scans) on the same shared recorder
+    let tracer: Option<std::rc::Rc<std::cell::RefCell<Tracer>>> = if spec.obs_trace.is_empty() {
+        None
+    } else {
+        Some(std::rc::Rc::new(std::cell::RefCell::new(Tracer::new())))
+    };
+    if let Some(tc) = &tracer {
+        server.set_tracer(tc.clone());
+    }
     let scenario = ScenarioGen::new(ScenarioConfig {
         base: LoadGenConfig {
             rate_qps: spec.serve_rate,
@@ -489,6 +567,9 @@ fn cmd_serve(f: &Flags) -> Result<()> {
     let service_ms = std::cell::Cell::new(0.0f64);
     let mut cache_skips = 0u64;
     let swap_clock = clock.clone();
+    let score_tracer = tracer.clone();
+    let (mut trace_lookups, mut trace_hits, mut trace_misses) = (0u64, 0u64, 0u64);
+    let mut trace_version = 1u64;
     let mut score = |t: &[i32]| -> elmo::Result<Vec<TopK>> {
         // 1) warm swaps due at this batch boundary: re-pin every replica
         //    from the staged snapshot and drop every cached row — cached
@@ -500,6 +581,15 @@ fn cmd_serve(f: &Flags) -> Result<()> {
                 }
             }
             cache.invalidate_all();
+            trace_version += 1;
+            if let Some(tc) = &score_tracer {
+                tc.borrow_mut().instant(
+                    "serve",
+                    "swap_cutover",
+                    Ts::Virt(swap_clock.now_ms()),
+                    vec![("model_version", Arg::U64(trace_version))],
+                );
+            }
         }
         // 2) hot-query cache: padding repeats the last valid row, so
         //    padded rows share its digest and "every row hits" is exactly
@@ -520,22 +610,77 @@ fn cmd_serve(f: &Flags) -> Result<()> {
                 }
             }
         }
+        if cache.enabled() {
+            if let Some(tc) = &score_tracer {
+                trace_lookups += digests.len() as u64;
+                trace_hits += (digests.len() - missed.len()) as u64;
+                trace_misses += missed.len() as u64;
+                tc.borrow_mut().counter(
+                    "serve",
+                    "serve/cache",
+                    Ts::Virt(swap_clock.now_ms()),
+                    &[
+                        ("lookups_total", trace_lookups),
+                        ("hits_total", trace_hits),
+                        ("misses_total", trace_misses),
+                    ],
+                );
+            }
+        }
         if cache.enabled() && missed.is_empty() {
             // the whole batch is served from the cache: no routing, no
             // embed, no chunk scan
             cache_skips += 1;
+            if let Some(tc) = &score_tracer {
+                tc.borrow_mut().instant(
+                    "serve",
+                    "cache_skip",
+                    Ts::Virt(swap_clock.now_ms()),
+                    vec![("rows", Arg::U64(vals.len() as u64))],
+                );
+            }
             return Ok(vals.into_iter().flatten().collect());
         }
         // 3) route: exactly one replica scans this batch; the choice can
         //    never affect the result because every replica pins an
         //    identical snapshot
         let r = router.route(t.len() / SEQ_LEN);
+        if let Some(tc) = &score_tracer {
+            tc.borrow_mut().instant(
+                "serve",
+                "route",
+                Ts::Virt(swap_clock.now_ms()),
+                vec![("replica", Arg::U64(r as u64))],
+            );
+        }
         let t0 = Stopwatch::start();
         let mut ctx = sess.ctx();
         let ex = &mut ctx;
         let emb = p.embed(ex.rt, t)?;
         let res = group[r].score(ex, &p.view(), &emb, width)?;
         service_ms.set(service_ms.get() + t0.ms());
+        if let Some(tc) = &score_tracer {
+            // stage-1 selection size (shortlist runs only) and the
+            // per-shard chunk scans of the batch that just ran
+            let mut trc = tc.borrow_mut();
+            let now = swap_clock.now_ms();
+            if let Some(sel) = group[r].last_selected {
+                trc.instant(
+                    "serve",
+                    "shortlist_select",
+                    Ts::Virt(now),
+                    vec![("chunks", Arg::U64(sel))],
+                );
+            }
+            for (si, &c) in group[r].last_scan.iter().enumerate() {
+                trc.instant(
+                    "serve",
+                    "shard_scan",
+                    Ts::Virt(now),
+                    vec![("shard", Arg::U64(si as u64)), ("chunks", Arg::U64(c))],
+                );
+            }
+        }
         // 4) fill the cache with the rows that missed (the scan IS the
         //    value a later hit will return)
         for &i in &missed {
@@ -669,6 +814,25 @@ fn cmd_serve(f: &Flags) -> Result<()> {
             .map(|&(sc, l)| format!("{l}:{sc:.3}"))
             .collect();
         println!("query {:>4}: [{}]", pred.id, labels.join(", "));
+    }
+    if let Some(tc) = &tracer {
+        let trc = tc.borrow();
+        if trc.open_spans() != 0 {
+            bail!("obs: {} span(s) left open at end of serve", trc.open_spans());
+        }
+        trc.save(&spec.obs_trace)?;
+        println!(
+            "# obs: wrote trace {} ({} events, gated digest {:016x})",
+            spec.obs_trace,
+            trc.events().len(),
+            trc.gated_digest()
+        );
+    }
+    if !spec.obs_metrics.is_empty() {
+        let mut reg = Registry::new();
+        s.export(&mut reg)?;
+        reg.save(&spec.obs_metrics)?;
+        println!("# obs: wrote metrics {}", spec.obs_metrics);
     }
     if let Some(path) = f.get("stats-json") {
         save_serve_stats(path, &spec, n_queries, k, s, sched_digest, service_ms.get())?;
@@ -808,6 +972,35 @@ fn cmd_lint(args: &[String]) -> Result<()> {
         report.files_scanned,
         elmo::lint::rules::RULES.len(),
         report.allows_used
+    );
+    Ok(())
+}
+
+/// `elmo trace-check TRACE.json`: validate a Chrome trace emitted with
+/// `--trace` — schema, strictly increasing `seq`, balanced span nesting,
+/// monotone `*_total` counter series, the serve conservation laws
+/// re-verified event by event, and a recompute of the embedded gated
+/// digest (docs/OBSERVABILITY.md).  Non-zero exit on any violation; the
+/// CI serving gate runs this against the bench grid's traces.
+fn cmd_trace_check(args: &[String]) -> Result<()> {
+    // one leading positional (the trace path), then registry-checked
+    // flags — the same split bench-diff and lint use
+    let split = args.iter().position(|a| a.starts_with("--")).unwrap_or(args.len());
+    let (pos, rest) = args.split_at(split);
+    parse_cmd_flags("trace-check", rest)?;
+    let [path] = pos else {
+        bail!("usage: elmo trace-check TRACE.json");
+    };
+    let chk = elmo::obs::check_file(path)?;
+    println!(
+        "trace-check: OK — {} event(s), {} balanced span(s), {} counter sample(s) \
+         ({} admission + {} cache law checks), gated digest {:016x}",
+        chk.events,
+        chk.spans,
+        chk.counter_samples,
+        chk.admission_samples,
+        chk.cache_samples,
+        chk.digest
     );
     Ok(())
 }

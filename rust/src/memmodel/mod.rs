@@ -303,6 +303,44 @@ impl Trace {
         self.series().last().map(|(_, b)| *b).unwrap_or(0)
     }
 
+    /// Export the simulated timeline as Chrome counter events through a
+    /// tracer (docs/OBSERVABILITY.md): one counter track per tensor
+    /// (`mem/<tensor>`, series `bytes` = that buffer's live bytes after
+    /// the event) plus a `mem/live` total track.  Events are
+    /// timestamped by op index on the virtual clock — the schedule has
+    /// no wall time; op order IS its time axis — so the export is fully
+    /// deterministic and Perfetto renders one stepped area chart per
+    /// buffer.
+    pub fn export_chrome(&self, tracer: &mut crate::obs::Tracer) {
+        let mut per: std::collections::BTreeMap<&str, i64> = std::collections::BTreeMap::new();
+        let mut live: i64 = 0;
+        for (i, e) in self.events.iter().enumerate() {
+            let ts = crate::obs::Ts::Virt(i as f64);
+            live += e.delta;
+            let b = per.entry(e.tensor.as_str()).or_insert(0);
+            *b += e.delta;
+            tracer.counter("mem", format!("mem/{}", e.tensor), ts, &[("bytes", (*b).max(0) as u64)]);
+            tracer.counter("mem", "mem/live", ts, &[("bytes", live.max(0) as u64)]);
+        }
+    }
+
+    /// Export the overall / steady / per-phase peak bytes as gauges in
+    /// the unified metrics registry.  Phase labels are lowercased to fit
+    /// the `[a-z0-9_]` metric charset; a phase that recurs keeps its max.
+    pub fn export_registry(&self, reg: &mut crate::obs::Registry) -> crate::error::Result<()> {
+        reg.gauge("elmo_mem_peak_bytes", self.peak() as f64)?;
+        reg.gauge("elmo_mem_steady_bytes", self.steady() as f64)?;
+        let mut peaks: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
+        for (phase, b) in self.phase_peaks() {
+            let e = peaks.entry(phase.to_lowercase()).or_insert(0);
+            *e = (*e).max(b);
+        }
+        for (phase, b) in &peaks {
+            reg.gauge(&format!("elmo_mem_phase_{phase}_peak_bytes"), *b as f64)?;
+        }
+        Ok(())
+    }
+
     /// Max live bytes within each phase, in phase order (Fig 1/3 rendering).
     pub fn phase_peaks(&self) -> Vec<(String, u64)> {
         let mut out: Vec<(String, u64)> = Vec::new();
@@ -445,6 +483,45 @@ mod tests {
 
     fn paper() -> MemParams {
         MemParams::paper_example()
+    }
+
+    #[test]
+    fn chrome_export_orders_counter_events_by_op_index() {
+        let mut t = Trace::default();
+        t.alloc("F1", "weights", 100);
+        t.alloc("F1", "acts", 50);
+        t.free("B1", "acts", 50);
+        let mut tr = crate::obs::Tracer::new();
+        t.export_chrome(&mut tr);
+        let evs = tr.events();
+        assert_eq!(evs.len(), 6, "one per-tensor + one total sample per op");
+        for w in evs.windows(2) {
+            assert!(w[0].seq < w[1].seq, "seq strictly ascending");
+            assert!(w[0].ts_us <= w[1].ts_us, "timestamps follow op order");
+        }
+        assert_eq!(evs[0].name, "mem/weights");
+        assert_eq!(evs[1].name, "mem/live");
+        assert_eq!(evs[2].name, "mem/acts");
+        assert_eq!(evs[4].name, "mem/acts");
+        assert_eq!(evs[3].args, vec![("bytes", crate::obs::Arg::U64(150))]);
+        assert_eq!(evs[4].args, vec![("bytes", crate::obs::Arg::U64(0))], "freed buffer");
+        assert_eq!(evs[5].args, vec![("bytes", crate::obs::Arg::U64(100))], "live after free");
+        crate::obs::check_str(&tr.to_chrome_json()).unwrap();
+    }
+
+    #[test]
+    fn registry_export_carries_phase_peaks() {
+        let tr = schedule(Method::ElmoFp8, &paper());
+        let mut reg = crate::obs::Registry::new();
+        tr.export_registry(&mut reg).unwrap();
+        assert_eq!(reg.gauge_value("elmo_mem_peak_bytes"), Some(tr.peak() as f64));
+        assert_eq!(reg.gauge_value("elmo_mem_steady_bytes"), Some(tr.steady() as f64));
+        let max_phase = reg
+            .prometheus_text()
+            .lines()
+            .filter(|l| l.starts_with("elmo_mem_phase_"))
+            .count();
+        assert!(max_phase > 0, "at least one phase peak gauge rendered");
     }
 
     #[test]

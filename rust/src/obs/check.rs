@@ -1,0 +1,371 @@
+//! `elmo trace-check`: schema + reconciliation-law validation for a
+//! Chrome trace file emitted by [`crate::obs::Tracer`].
+//!
+//! The checker re-verifies, *event by event*, the laws the aggregate
+//! tests already pin end-of-run:
+//!
+//! 1. **Schema** — top-level `schema`/`gated_digest`/`traceEvents`,
+//!    every event carrying `seq`/`ph`/`cat`/`name`/`ts`/`clock`/`args`
+//!    with `ph` in `{B, E, i, C}` and `clock` in `{virtual, wall}`.
+//! 2. **Sequence** — `seq` strictly increasing.
+//! 3. **Span nesting** — `B`/`E` balance with matching names (a stack,
+//!    exactly how the recorder's `open_spans` works).
+//! 4. **Counter monotonicity** — within each counter track, every
+//!    series whose key ends in `_total` is non-decreasing.
+//! 5. **Serve conservation laws** — every `serve/admission` sample
+//!    satisfies `submitted_total == completed_total + rejected_total +
+//!    queued`, and every `serve/cache` sample satisfies
+//!    `lookups_total == hits_total + misses_total` — the same laws
+//!    `ServingStats::reconciles` checks once at the end of a run.
+//! 6. **Digest** — the gated section is rebuilt from the parsed events
+//!    and its FNV-1a must equal the embedded `gated_digest`, so a trace
+//!    file cannot drift from its own pinned section.
+//!
+//! Number tokens are re-used *verbatim* when rebuilding the gated
+//! section: the emitter's `u64`/shortest-round-trip-`f64` rendering is
+//! exactly what the file contains, so no reformat step can disagree.
+
+use std::collections::BTreeMap;
+
+use crate::bench::report::{json_str, obj_get, Json};
+use crate::err_config;
+use crate::error::{Result, ResultExt};
+use crate::obs::trace::TRACE_SCHEMA_VERSION;
+use crate::util::fnv1a64;
+
+/// Summary of a validated trace.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Total events in the trace.
+    pub events: usize,
+    /// Completed (balanced) spans.
+    pub spans: usize,
+    /// Counter samples seen.
+    pub counter_samples: usize,
+    /// `serve/admission` conservation-law samples verified.
+    pub admission_samples: usize,
+    /// `serve/cache` conservation-law samples verified.
+    pub cache_samples: usize,
+    /// The verified gated digest.
+    pub digest: u64,
+}
+
+/// Validate a trace file on disk.
+pub fn check_file(path: &str) -> Result<TraceCheck> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| err_config!("trace-check: cannot read {path}: {e}"))?;
+    check_str(&text).with_context(|| format!("checking {path}"))
+}
+
+fn ev_str<'a>(ev: &'a [(String, Json)], key: &str, seq: usize) -> Result<&'a str> {
+    obj_get(ev, key)
+        .and_then(|v| v.as_str(key))
+        .with_context(|| format!("trace-check: event {seq}"))
+}
+
+/// Validate a trace document.
+pub fn check_str(text: &str) -> Result<TraceCheck> {
+    let doc = Json::parse(text).context("trace-check: parsing trace JSON")?;
+    let top = doc.as_obj("trace document")?;
+
+    let schema = obj_get(top, "schema")?.as_u64("schema")?;
+    if schema != TRACE_SCHEMA_VERSION {
+        return Err(err_config!(
+            "trace-check: schema {schema} unsupported (expected {TRACE_SCHEMA_VERSION})"
+        ));
+    }
+    let embedded = obj_get(top, "gated_digest")?.as_str("gated_digest")?;
+    if embedded.len() != 16 || !embedded.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(err_config!(
+            "trace-check: gated_digest must be 16 hex chars, got `{embedded}`"
+        ));
+    }
+    let embedded = u64::from_str_radix(embedded, 16)
+        .map_err(|_| err_config!("trace-check: gated_digest is not hex"))?;
+    let events = obj_get(top, "traceEvents")?.as_arr("traceEvents")?;
+
+    let mut out = TraceCheck::default();
+    let mut section = String::new();
+    let mut stack: Vec<String> = Vec::new();
+    let mut last_seq: Option<u64> = None;
+    // (counter track name, series key) -> last value, for *_total series
+    let mut totals: BTreeMap<(String, String), u64> = BTreeMap::new();
+
+    for (i, evj) in events.iter().enumerate() {
+        let ev = evj.as_obj(&format!("traceEvents[{i}]"))?;
+        let seq = obj_get(ev, "seq")
+            .and_then(|v| v.as_u64("seq"))
+            .with_context(|| format!("trace-check: event {i}"))?;
+        if let Some(prev) = last_seq {
+            if seq <= prev {
+                return Err(err_config!(
+                    "trace-check: seq not strictly increasing at event {i}: {prev} then {seq}"
+                ));
+            }
+        }
+        last_seq = Some(seq);
+
+        let ph = ev_str(ev, "ph", i)?;
+        if !matches!(ph, "B" | "E" | "i" | "C") {
+            return Err(err_config!("trace-check: event {i} has unknown ph `{ph}`"));
+        }
+        let cat = ev_str(ev, "cat", i)?;
+        let name = ev_str(ev, "name", i)?;
+        let clock = ev_str(ev, "clock", i)?;
+        if !matches!(clock, "virtual" | "wall") {
+            return Err(err_config!("trace-check: event {i} has unknown clock `{clock}`"));
+        }
+        // validate ts numeric even where the digest ignores it
+        let ts_raw = match obj_get(ev, "ts").with_context(|| format!("trace-check: event {i}"))? {
+            Json::Num(raw) => {
+                raw.parse::<f64>()
+                    .map_err(|_| err_config!("trace-check: event {i} ts `{raw}` is not a number"))?;
+                raw.clone()
+            }
+            _ => return Err(err_config!("trace-check: event {i} ts must be a number")),
+        };
+        let args = obj_get(ev, "args")
+            .and_then(|v| v.as_obj("args"))
+            .with_context(|| format!("trace-check: event {i}"))?;
+
+        // law 3: span nesting
+        match ph {
+            "B" => stack.push(name.to_string()),
+            "E" => match stack.pop() {
+                Some(open) if open == name => out.spans += 1,
+                Some(open) => {
+                    return Err(err_config!(
+                        "trace-check: span nesting: end `{cat}/{name}` at seq {seq} closes open span `{open}`"
+                    ));
+                }
+                None => {
+                    return Err(err_config!(
+                        "trace-check: span nesting: end `{cat}/{name}` at seq {seq} with no open span"
+                    ));
+                }
+            },
+            _ => {}
+        }
+
+        // laws 4 + 5: counter samples
+        if ph == "C" {
+            out.counter_samples += 1;
+            let mut vals: BTreeMap<&str, u64> = BTreeMap::new();
+            for (k, v) in args {
+                if k.ends_with("_total") || matches!(name, "serve/admission" | "serve/cache") {
+                    let val = v
+                        .as_u64(k)
+                        .with_context(|| format!("trace-check: counter `{name}` at seq {seq}"))?;
+                    vals.insert(k.as_str(), val);
+                    if k.ends_with("_total") {
+                        let key = (name.to_string(), k.clone());
+                        if let Some(&prev) = totals.get(&key) {
+                            if val < prev {
+                                return Err(err_config!(
+                                    "trace-check: counter regression: `{name}` series `{k}` {prev} -> {val} at seq {seq}"
+                                ));
+                            }
+                        }
+                        totals.insert(key, val);
+                    }
+                }
+            }
+            let get = |k: &str| -> Result<u64> {
+                vals.get(k).copied().ok_or_else(|| {
+                    err_config!("trace-check: counter `{name}` at seq {seq} missing series `{k}`")
+                })
+            };
+            if name == "serve/admission" {
+                out.admission_samples += 1;
+                let (sub, comp, rej, q) = (
+                    get("submitted_total")?,
+                    get("completed_total")?,
+                    get("rejected_total")?,
+                    get("queued")?,
+                );
+                if sub != comp + rej + q {
+                    return Err(err_config!(
+                        "trace-check: conservation: serve/admission at seq {seq}: submitted_total {sub} != completed_total {comp} + rejected_total {rej} + queued {q}"
+                    ));
+                }
+            }
+            if name == "serve/cache" {
+                out.cache_samples += 1;
+                let (lk, hit, miss) =
+                    (get("lookups_total")?, get("hits_total")?, get("misses_total")?);
+                if lk != hit + miss {
+                    return Err(err_config!(
+                        "trace-check: conservation: serve/cache at seq {seq}: lookups_total {lk} != hits_total {hit} + misses_total {miss}"
+                    ));
+                }
+            }
+        }
+
+        // law 6: rebuild the gated line byte-for-byte.  Number tokens are
+        // reused verbatim (the file already holds the emitter's exact
+        // rendering); strings re-escape through the shared json_str.
+        section.push_str(&format!("{seq} {ph} {cat}/{name}"));
+        if clock == "wall" {
+            section.push_str(" @wall");
+        } else {
+            section.push_str(&format!(" @{ts_raw}us"));
+        }
+        for (k, v) in args {
+            match v {
+                Json::Num(raw) => section.push_str(&format!(" {k}={raw}")),
+                Json::Str(s) => section.push_str(&format!(" {k}={}", json_str(s))),
+                _ => {
+                    return Err(err_config!(
+                        "trace-check: event {i} arg `{k}` must be a number or string"
+                    ));
+                }
+            }
+        }
+        section.push('\n');
+        out.events += 1;
+    }
+
+    if let Some(open) = stack.last() {
+        return Err(err_config!(
+            "trace-check: span nesting: {} span(s) left open at end of trace (innermost `{open}`)",
+            stack.len()
+        ));
+    }
+
+    out.digest = fnv1a64(section.as_bytes());
+    if out.digest != embedded {
+        return Err(err_config!(
+            "trace-check: digest mismatch: computed {:016x}, embedded {:016x}",
+            out.digest,
+            embedded
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Arg, Tracer, Ts};
+
+    fn lawful() -> Tracer {
+        let mut t = Tracer::new();
+        t.begin("serve", "replay", Ts::Virt(0.0), Vec::new());
+        t.instant("serve", "admit", Ts::Virt(0.5), vec![("id", Arg::U64(0))]);
+        t.counter(
+            "serve",
+            "serve/admission",
+            Ts::Virt(0.5),
+            &[("submitted_total", 1), ("completed_total", 0), ("rejected_total", 0), ("queued", 1)],
+        );
+        t.counter(
+            "serve",
+            "serve/admission",
+            Ts::Virt(1.0),
+            &[("submitted_total", 2), ("completed_total", 2), ("rejected_total", 0), ("queued", 0)],
+        );
+        t.counter(
+            "serve",
+            "serve/cache",
+            Ts::Virt(1.0),
+            &[("lookups_total", 3), ("hits_total", 1), ("misses_total", 2)],
+        );
+        t.end("serve", "replay", Ts::Virt(1.5));
+        t
+    }
+
+    #[test]
+    fn a_lawful_trace_passes_and_reports_its_shape() {
+        let t = lawful();
+        let rep = check_str(&t.to_chrome_json()).unwrap();
+        assert_eq!(rep.events, 6);
+        assert_eq!(rep.spans, 1);
+        assert_eq!(rep.counter_samples, 3);
+        assert_eq!(rep.admission_samples, 2);
+        assert_eq!(rep.cache_samples, 1);
+        assert_eq!(rep.digest, t.gated_digest());
+    }
+
+    #[test]
+    fn wall_events_round_trip_through_the_digest_recompute() {
+        let mut t = lawful();
+        t.instant("train", "overflow", Ts::Wall, vec![("loss_scale", Arg::F64(512.0))]);
+        check_str(&t.to_chrome_json()).unwrap();
+    }
+
+    #[test]
+    fn truncated_json_is_rejected() {
+        let t = lawful();
+        let js = t.to_chrome_json();
+        let err = check_str(&js[..js.len() / 2]).unwrap_err().to_string();
+        assert!(err.contains("trace-check"), "{err}");
+    }
+
+    #[test]
+    fn unbalanced_spans_are_rejected() {
+        let mut t = Tracer::new();
+        t.begin("serve", "replay", Ts::Virt(0.0), Vec::new());
+        let err = check_str(&t.to_chrome_json()).unwrap_err().to_string();
+        assert!(err.contains("left open"), "{err}");
+
+        let mut t = Tracer::new();
+        t.begin("serve", "a", Ts::Virt(0.0), Vec::new());
+        t.end("serve", "b", Ts::Virt(1.0));
+        let err = check_str(&t.to_chrome_json()).unwrap_err().to_string();
+        assert!(err.contains("closes open span"), "{err}");
+
+        let mut t = Tracer::new();
+        t.end("serve", "a", Ts::Virt(1.0));
+        let err = check_str(&t.to_chrome_json()).unwrap_err().to_string();
+        assert!(err.contains("no open span"), "{err}");
+    }
+
+    #[test]
+    fn counter_regressions_are_rejected() {
+        let mut t = Tracer::new();
+        t.counter("serve", "serve/scan", Ts::Virt(0.0), &[("chunks_scanned_total", 5)]);
+        t.counter("serve", "serve/scan", Ts::Virt(1.0), &[("chunks_scanned_total", 3)]);
+        let err = check_str(&t.to_chrome_json()).unwrap_err().to_string();
+        assert!(err.contains("counter regression"), "{err}");
+    }
+
+    #[test]
+    fn conservation_violations_are_rejected() {
+        let mut t = Tracer::new();
+        t.counter(
+            "serve",
+            "serve/admission",
+            Ts::Virt(0.0),
+            &[("submitted_total", 5), ("completed_total", 1), ("rejected_total", 1), ("queued", 1)],
+        );
+        let err = check_str(&t.to_chrome_json()).unwrap_err().to_string();
+        assert!(err.contains("conservation: serve/admission"), "{err}");
+
+        let mut t = Tracer::new();
+        t.counter(
+            "serve",
+            "serve/cache",
+            Ts::Virt(0.0),
+            &[("lookups_total", 5), ("hits_total", 1), ("misses_total", 1)],
+        );
+        let err = check_str(&t.to_chrome_json()).unwrap_err().to_string();
+        assert!(err.contains("conservation: serve/cache"), "{err}");
+    }
+
+    #[test]
+    fn a_doctored_digest_is_rejected() {
+        let t = lawful();
+        let js = t.to_chrome_json();
+        let bad = js.replacen(&format!("{:016x}", t.gated_digest()), "0000000000000000", 1);
+        let err = check_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn missing_conservation_series_is_rejected() {
+        let mut t = Tracer::new();
+        t.counter("serve", "serve/admission", Ts::Virt(0.0), &[("submitted_total", 0)]);
+        let err = check_str(&t.to_chrome_json()).unwrap_err().to_string();
+        assert!(err.contains("missing series"), "{err}");
+    }
+}

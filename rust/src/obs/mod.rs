@@ -1,0 +1,42 @@
+//! Deterministic observability layer (ROADMAP: inspectable trajectories):
+//! structured spans, a unified metrics registry, and Chrome-trace export
+//! across train/eval/serve.
+//!
+//! The paper's central empirical claims are *dynamic* — FP16 mixed
+//! precision **becomes** unstable (overflow bursts, loss-scale collapse)
+//! while Kahan/stochastic-rounding FP8 stays healthy, and peak memory is
+//! a **timeline** property (`memmodel` models phase peaks) — yet
+//! end-of-run aggregates cannot show *when* an overflow storm, a
+//! cache-invalidation stampede, or a shard straggler happened.  This
+//! module turns the determinism contract into inspectable, regression-
+//! gated traces:
+//!
+//! * [`trace`] — the span/event recorder ([`Tracer`]): explicit
+//!   begin/end spans, instant events, and counter samples, timestamped
+//!   on the *injectable clock* (virtual milliseconds inside
+//!   `serve::replay` and the bench scenario grid; the sanctioned
+//!   `util::Stopwatch` shim elsewhere), emitted as Chrome trace-event
+//!   JSON (Perfetto-loadable).  Event *sequence/names/args* are
+//!   deterministic and digest-pinned ([`Tracer::gated_digest`] /
+//!   [`Tracer::gated_section`]); wall-clock timestamps are tagged
+//!   `"clock": "wall"` and never folded into the digest.
+//! * [`registry`] — the unified metrics registry ([`Registry`]):
+//!   counters, gauges, and fixed-bucket histograms with deterministic
+//!   bounds, rendered as a Prometheus-style text page and a JSON
+//!   snapshot.  `ServingStats`, `ServeStats`, `EpochStats`, and the
+//!   `memmodel` phase peaks all export through it.
+//! * [`check`] — the `elmo trace-check` validator: schema, balanced
+//!   span nesting, monotone `*_total` counter series, the serve
+//!   conservation laws re-verified **event by event**, and a recompute
+//!   of the embedded gated digest.
+//!
+//! Determinism tagging rules, the span taxonomy, and registry naming
+//! conventions are documented in docs/OBSERVABILITY.md.
+
+pub mod check;
+pub mod registry;
+pub mod trace;
+
+pub use check::{check_file, check_str, TraceCheck};
+pub use registry::{Histogram, Registry, LATENCY_BUCKETS_MS};
+pub use trace::{Arg, Ph, TraceEvent, Tracer, Ts, TRACE_SCHEMA_VERSION};

@@ -1,0 +1,356 @@
+//! The unified metrics registry: counters, gauges, and fixed-bucket
+//! histograms with deterministic bounds.
+//!
+//! Every aggregate the repo already computes — `ServingStats` and its
+//! cache/replica/swap counters, the batcher's `ServeStats` latency
+//! window, `EpochStats`, `chunks_scanned`, `memmodel` phase peaks —
+//! exports through one [`Registry`], rendered two ways:
+//!
+//! * [`Registry::prometheus_text`] — a Prometheus-style exposition page
+//!   (`# TYPE` lines, cumulative `_bucket{le="..."}` histogram rows),
+//!   for humans and scrapers.
+//! * [`Registry::json_snapshot`] — a deterministic JSON object in the
+//!   house emitter style, for artifacts and diffing.
+//!
+//! Naming conventions (docs/OBSERVABILITY.md): metric names are
+//! `elmo_<layer>_<what>[_<unit>]` over `[a-z0-9_]`; counters end in
+//! `_total`; histogram bucket bounds are fixed at registration time so
+//! two runs always bucket identically.  Both renderings iterate
+//! `BTreeMap`s — deterministic order is load-bearing, the pages are
+//! byte-comparable across same-seed runs.
+
+use std::collections::BTreeMap;
+
+use crate::err_config;
+use crate::error::Result;
+
+/// Fixed latency bucket upper bounds (milliseconds) for the serve-path
+/// histogram: powers of two from a quarter of a millisecond, spanning
+/// sub-deadline flushes to hopeless stragglers.  Shared by `ServeStats`
+/// and the serve CLI so every export buckets identically.
+pub const LATENCY_BUCKETS_MS: [f64; 10] =
+    [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// A fixed-bucket histogram: `counts[i]` observations at
+/// `bounds[i-1] < v <= bounds[i]`, with `counts[bounds.len()]` the
+/// overflow (`+Inf`) bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Result<Self> {
+        if bounds.is_empty() {
+            return Err(err_config!("metrics: histogram needs at least one bucket bound"));
+        }
+        for w in bounds.windows(2) {
+            if !(w[0] < w[1]) {
+                return Err(err_config!(
+                    "metrics: histogram bounds must be strictly ascending, got {:?} then {:?}",
+                    w[0],
+                    w[1]
+                ));
+            }
+        }
+        if bounds.iter().any(|b| !b.is_finite()) {
+            return Err(err_config!("metrics: histogram bounds must be finite (+Inf is implicit)"));
+        }
+        Ok(Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0 })
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.sum += v;
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts; the last entry is `+Inf`.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// The registry.  All maps are `BTreeMap`: render order is part of the
+/// output contract.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+fn check_name(name: &str) -> Result<()> {
+    let ok = !name.is_empty()
+        && name.starts_with("elmo_")
+        && name.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+    if !ok {
+        return Err(err_config!(
+            "metrics: name `{name}` must be elmo_-prefixed [a-z0-9_] (docs/OBSERVABILITY.md)"
+        ));
+    }
+    Ok(())
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add `delta` to a counter (created at zero).  Counter names must
+    /// end in `_total` — the same convention `elmo trace-check` uses to
+    /// pick monotone counter series out of a trace.
+    pub fn inc(&mut self, name: &str, delta: u64) -> Result<()> {
+        check_name(name)?;
+        if !name.ends_with("_total") {
+            return Err(err_config!("metrics: counter `{name}` must end in `_total`"));
+        }
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+        Ok(())
+    }
+
+    /// Set a gauge (last write wins).
+    pub fn gauge(&mut self, name: &str, v: f64) -> Result<()> {
+        check_name(name)?;
+        self.gauges.insert(name.to_string(), v);
+        Ok(())
+    }
+
+    /// Register a histogram with fixed `bounds`.  Re-registering an
+    /// existing name is an error: bounds are part of the contract.
+    pub fn register_hist(&mut self, name: &str, bounds: &[f64]) -> Result<()> {
+        check_name(name)?;
+        if self.hists.contains_key(name) {
+            return Err(err_config!("metrics: histogram `{name}` already registered"));
+        }
+        self.hists.insert(name.to_string(), Histogram::new(bounds)?);
+        Ok(())
+    }
+
+    /// Record one observation into a registered histogram.
+    pub fn observe(&mut self, name: &str, v: f64) -> Result<()> {
+        match self.hists.get_mut(name) {
+            Some(h) => {
+                h.observe(v);
+                Ok(())
+            }
+            None => Err(err_config!("metrics: histogram `{name}` not registered")),
+        }
+    }
+
+    /// Install a fully-populated histogram in one call — the export path
+    /// for aggregates that already hold their samples (e.g. the
+    /// `ServeStats` latency window).  `counts.len()` must be
+    /// `bounds.len() + 1` (the overflow bucket).
+    pub fn hist_bulk(&mut self, name: &str, bounds: &[f64], counts: &[u64], sum: f64) -> Result<()> {
+        check_name(name)?;
+        if self.hists.contains_key(name) {
+            return Err(err_config!("metrics: histogram `{name}` already registered"));
+        }
+        let mut h = Histogram::new(bounds)?;
+        if counts.len() != h.counts.len() {
+            return Err(err_config!(
+                "metrics: histogram `{name}` needs {} counts (bounds + overflow), got {}",
+                h.counts.len(),
+                counts.len()
+            ));
+        }
+        h.counts.copy_from_slice(counts);
+        h.sum = sum;
+        self.hists.insert(name.to_string(), h);
+        Ok(())
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Prometheus-style exposition: counters, then gauges, then
+    /// histograms (cumulative `le` buckets, `_sum`, `_count`).
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v:?}\n"));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.counts[i];
+                out.push_str(&format!("{name}_bucket{{le=\"{b:?}\"}} {cum}\n"));
+            }
+            cum += h.counts[h.bounds.len()];
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+            out.push_str(&format!("{name}_sum {:?}\n", h.sum));
+            out.push_str(&format!("{name}_count {cum}\n"));
+        }
+        out
+    }
+
+    /// Deterministic JSON snapshot in the house emitter style.
+    pub fn json_snapshot(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": {");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            out.push_str(if i > 0 { ",\n    " } else { "\n    " });
+            out.push_str(&format!("\"{name}\": {v}"));
+        }
+        out.push_str(if self.counters.is_empty() { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"gauges\": {");
+        for (i, (name, v)) in self.gauges.iter().enumerate() {
+            out.push_str(if i > 0 { ",\n    " } else { "\n    " });
+            out.push_str(&format!("\"{name}\": {v:?}"));
+        }
+        out.push_str(if self.gauges.is_empty() { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"histograms\": {");
+        for (i, (name, h)) in self.hists.iter().enumerate() {
+            out.push_str(if i > 0 { ",\n    " } else { "\n    " });
+            out.push_str(&format!("\"{name}\": {{\"bounds\": ["));
+            for (j, b) in h.bounds.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("{b:?}"));
+            }
+            out.push_str("], \"counts\": [");
+            for (j, c) in h.counts.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("{c}"));
+            }
+            out.push_str(&format!("], \"sum\": {:?}, \"count\": {}}}", h.sum, h.count()));
+        }
+        out.push_str(if self.hists.is_empty() { "}\n}\n" } else { "\n  }\n}\n" });
+        out
+    }
+
+    /// Write the registry to `path`: Prometheus text when the extension
+    /// is `.prom` or `.txt`, the JSON snapshot otherwise.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let text = if path.ends_with(".prom") || path.ends_with(".txt") {
+            self.prometheus_text()
+        } else {
+            self.json_snapshot()
+        };
+        std::fs::write(path, text).map_err(|e| err_config!("cannot write metrics {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_require_the_total_suffix() {
+        let mut r = Registry::new();
+        r.inc("elmo_serve_submitted_total", 3).unwrap();
+        r.inc("elmo_serve_submitted_total", 2).unwrap();
+        assert_eq!(r.counter("elmo_serve_submitted_total"), Some(5));
+        assert!(r.inc("elmo_serve_submitted", 1).is_err());
+        assert!(r.inc("serve_submitted_total", 1).is_err());
+        assert!(r.inc("elmo_Serve_total", 1).is_err());
+    }
+
+    #[test]
+    fn histogram_buckets_by_upper_bound_with_overflow() {
+        let mut r = Registry::new();
+        r.register_hist("elmo_serve_latency_ms", &LATENCY_BUCKETS_MS).unwrap();
+        for v in [0.1, 0.25, 0.3, 2.0, 500.0] {
+            r.observe("elmo_serve_latency_ms", v).unwrap();
+        }
+        let h = r.hist("elmo_serve_latency_ms").unwrap();
+        // 0.1 and 0.25 land in le=0.25 (bounds are inclusive upper)
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[1], 1); // 0.3 -> le=0.5
+        assert_eq!(h.counts()[3], 1); // 2.0 -> le=2.0
+        assert_eq!(h.counts()[LATENCY_BUCKETS_MS.len()], 1); // 500 -> +Inf
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 502.65).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_histograms_are_rejected() {
+        let mut r = Registry::new();
+        assert!(r.register_hist("elmo_h", &[]).is_err());
+        assert!(r.register_hist("elmo_h", &[2.0, 1.0]).is_err());
+        assert!(r.register_hist("elmo_h", &[1.0, f64::INFINITY]).is_err());
+        r.register_hist("elmo_h", &[1.0]).unwrap();
+        assert!(r.register_hist("elmo_h", &[1.0]).is_err());
+        assert!(r.observe("elmo_missing", 1.0).is_err());
+        assert!(r.hist_bulk("elmo_b", &[1.0, 2.0], &[1, 2], 0.0).is_err());
+    }
+
+    #[test]
+    fn prometheus_page_is_deterministic_and_cumulative() {
+        let mut r = Registry::new();
+        r.inc("elmo_b_total", 1).unwrap();
+        r.inc("elmo_a_total", 2).unwrap();
+        r.gauge("elmo_mem_peak_bytes", 1024.0).unwrap();
+        r.hist_bulk("elmo_lat_ms", &[1.0, 2.0], &[3, 4, 5], 21.5).unwrap();
+        let page = r.prometheus_text();
+        let expected = "\
+# TYPE elmo_a_total counter\nelmo_a_total 2\n\
+# TYPE elmo_b_total counter\nelmo_b_total 1\n\
+# TYPE elmo_mem_peak_bytes gauge\nelmo_mem_peak_bytes 1024.0\n\
+# TYPE elmo_lat_ms histogram\n\
+elmo_lat_ms_bucket{le=\"1.0\"} 3\n\
+elmo_lat_ms_bucket{le=\"2.0\"} 7\n\
+elmo_lat_ms_bucket{le=\"+Inf\"} 12\n\
+elmo_lat_ms_sum 21.5\n\
+elmo_lat_ms_count 12\n";
+        assert_eq!(page, expected);
+    }
+
+    #[test]
+    fn json_snapshot_round_trips_through_the_house_parser() {
+        let mut r = Registry::new();
+        r.inc("elmo_a_total", 2).unwrap();
+        r.gauge("elmo_g", 0.5).unwrap();
+        r.hist_bulk("elmo_lat_ms", &[1.0], &[3, 4], 5.25).unwrap();
+        let js = r.json_snapshot();
+        let v = crate::bench::report::Json::parse(&js).unwrap();
+        let obj = v.as_obj("snapshot").unwrap();
+        let counters =
+            crate::bench::report::obj_get(obj, "counters").unwrap().as_obj("counters").unwrap();
+        assert_eq!(counters.len(), 1);
+        assert_eq!(counters[0].1.as_u64("a").unwrap(), 2);
+        let hists =
+            crate::bench::report::obj_get(obj, "histograms").unwrap().as_obj("h").unwrap();
+        let lat = hists[0].1.as_obj("lat").unwrap();
+        let counts =
+            crate::bench::report::obj_get(lat, "counts").unwrap().as_arr("counts").unwrap();
+        assert_eq!(counts.len(), 2);
+    }
+
+    #[test]
+    fn empty_registry_renders_empty_sections() {
+        let r = Registry::new();
+        assert_eq!(r.prometheus_text(), "");
+        assert_eq!(r.json_snapshot(), "{\n  \"counters\": {},\n  \"gauges\": {},\n  \"histograms\": {}\n}\n");
+    }
+}

@@ -1,0 +1,346 @@
+//! The span/event recorder: Chrome trace-event JSON on the injectable
+//! clock.
+//!
+//! A [`Tracer`] records four phases of the Chrome trace-event format
+//! (<https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU>):
+//! `B`/`E` duration spans, `i` instant events, and `C` counter samples.
+//! Every event carries a *clock domain*:
+//!
+//! * [`Ts::Virt`] — virtual milliseconds from the replayed schedule
+//!   (`serve::replay`, the bench scenario grid).  Deterministic; folded
+//!   into the gated digest.
+//! * [`Ts::Wall`] — the sanctioned `util::Stopwatch` shim, measured from
+//!   the tracer's origin.  Real durations for humans in Perfetto; tagged
+//!   `"clock": "wall"` and **never** folded into the digest.
+//!
+//! The determinism contract (docs/OBSERVABILITY.md): event *sequence,
+//! categories, names, and args* are always deterministic — args must
+//! never carry wall-clock values — so [`Tracer::gated_section`] (and its
+//! FNV-1a digest, [`Tracer::gated_digest`]) is byte-identical across
+//! same-seed runs.  `elmo trace-check` recomputes the digest from the
+//! emitted JSON (`obs::check`), so a trace file cannot drift from its
+//! own pinned section.
+
+use crate::bench::report::json_str;
+use crate::err_config;
+use crate::error::Result;
+use crate::util::{fnv1a64, Stopwatch};
+
+/// Trace file format version, embedded at the top level of the JSON and
+/// validated by `elmo trace-check`.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Chrome trace-event phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ph {
+    /// Span open (`"B"`).
+    Begin,
+    /// Span close (`"E"`).
+    End,
+    /// Instant event (`"i"`, thread-scoped).
+    Instant,
+    /// Counter sample (`"C"`).
+    Counter,
+}
+
+impl Ph {
+    pub fn code(&self) -> &'static str {
+        match self {
+            Ph::Begin => "B",
+            Ph::End => "E",
+            Ph::Instant => "i",
+            Ph::Counter => "C",
+        }
+    }
+}
+
+/// A deterministic event argument.  Wall-clock readings are banned here
+/// by convention (they belong in the `ts` of a wall-domain event): args
+/// are always folded into the gated digest.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arg {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl Arg {
+    /// Render exactly as the JSON emitter and the gated section do, so
+    /// the digest check can rebuild the bytes from parsed JSON.
+    fn render(&self) -> String {
+        match self {
+            Arg::U64(v) => format!("{v}"),
+            // {:?} is shortest-round-trip: parse(render(v)) == v bitwise,
+            // and render(parse(s)) == s for s we emitted.
+            Arg::F64(v) => format!("{v:?}"),
+            Arg::Str(s) => json_str(s),
+        }
+    }
+}
+
+/// Clock domain of one event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Ts {
+    /// Virtual milliseconds (replayed schedule time).  Digest-folded.
+    Virt(f64),
+    /// Wall time from the tracer's origin `Stopwatch`.  Never folded.
+    Wall,
+}
+
+/// One recorded event.  `ts_us` stores the microsecond value exactly as
+/// emitted (`Virt(ms)` is converted once, here), so the digest and the
+/// JSON always agree bitwise.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub ph: Ph,
+    pub cat: &'static str,
+    pub name: String,
+    /// True when the timestamp is wall-domain (excluded from the digest).
+    pub wall: bool,
+    pub ts_us: f64,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+impl TraceEvent {
+    /// The event's line in the gated section.  Wall timestamps are
+    /// replaced by the literal `@wall`; everything else is rendered.
+    fn gated_line(&self) -> String {
+        let mut line = format!("{} {} {}/{}", self.seq, self.ph.code(), self.cat, self.name);
+        if self.wall {
+            line.push_str(" @wall");
+        } else {
+            line.push_str(&format!(" @{:?}us", self.ts_us));
+        }
+        for (k, v) in &self.args {
+            line.push_str(&format!(" {k}={}", v.render()));
+        }
+        line
+    }
+}
+
+/// The recorder.  Owns the event list, a span stack (for
+/// [`Tracer::open_spans`]), and a wall-clock origin: wall-domain events
+/// are timestamped relative to `Tracer::new`.
+#[derive(Debug)]
+pub struct Tracer {
+    events: Vec<TraceEvent>,
+    stack: Vec<String>,
+    origin: Stopwatch,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer { events: Vec::new(), stack: Vec::new(), origin: Stopwatch::start() }
+    }
+
+    fn ts_us(&self, ts: Ts) -> (bool, f64) {
+        match ts {
+            Ts::Virt(ms) => (false, ms * 1000.0),
+            Ts::Wall => (true, self.origin.ms() * 1000.0),
+        }
+    }
+
+    fn push(&mut self, ph: Ph, cat: &'static str, name: String, ts: Ts, args: Vec<(&'static str, Arg)>) {
+        let seq = self.events.len() as u64;
+        let (wall, ts_us) = self.ts_us(ts);
+        self.events.push(TraceEvent { seq, ph, cat, name, wall, ts_us, args });
+    }
+
+    /// Open a span.  `cat` groups spans in Perfetto ("train", "serve",
+    /// "mem"); `name` is the span label.
+    pub fn begin(
+        &mut self,
+        cat: &'static str,
+        name: impl Into<String>,
+        ts: Ts,
+        args: Vec<(&'static str, Arg)>,
+    ) {
+        let name = name.into();
+        self.stack.push(name.clone());
+        self.push(Ph::Begin, cat, name, ts, args);
+    }
+
+    /// Close the innermost span.  A mismatched or surplus `end` is still
+    /// recorded — `elmo trace-check` reports the imbalance, by design.
+    pub fn end(&mut self, cat: &'static str, name: impl Into<String>, ts: Ts) {
+        self.stack.pop();
+        self.push(Ph::End, cat, name.into(), ts, Vec::new());
+    }
+
+    /// Record a thread-scoped instant event.
+    pub fn instant(
+        &mut self,
+        cat: &'static str,
+        name: impl Into<String>,
+        ts: Ts,
+        args: Vec<(&'static str, Arg)>,
+    ) {
+        self.push(Ph::Instant, cat, name.into(), ts, args);
+    }
+
+    /// Record a counter sample: one Perfetto counter track per `name`,
+    /// one series per key.  Series whose key ends in `_total` are
+    /// validated monotone non-decreasing by `elmo trace-check`.
+    pub fn counter(
+        &mut self,
+        cat: &'static str,
+        name: impl Into<String>,
+        ts: Ts,
+        series: &[(&'static str, u64)],
+    ) {
+        let args = series.iter().map(|&(k, v)| (k, Arg::U64(v))).collect();
+        self.push(Ph::Counter, cat, name.into(), ts, args);
+    }
+
+    /// Number of currently-open spans (0 for a balanced trace).
+    pub fn open_spans(&self) -> usize {
+        self.stack.len()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// The deterministic text rendering of the trace: one line per event
+    /// — sequence, phase, cat/name, virtual timestamp (wall timestamps
+    /// render as the literal `@wall`), args.  Byte-identical across
+    /// same-seed runs; the gated digest is the FNV-1a of these bytes.
+    pub fn gated_section(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            out.push_str(&ev.gated_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// FNV-1a 64 of [`Tracer::gated_section`], the value gated by the
+    /// bench grid and re-derived from the JSON by `elmo trace-check`.
+    pub fn gated_digest(&self) -> u64 {
+        fnv1a64(self.gated_section().as_bytes())
+    }
+
+    /// Render the Chrome trace-event JSON document.  Top level carries
+    /// `schema`, `displayTimeUnit`, and the embedded `gated_digest`;
+    /// `traceEvents` holds one object per event, each tagged with its
+    /// clock domain.  Perfetto ignores the extra keys.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": {TRACE_SCHEMA_VERSION},\n"));
+        out.push_str("  \"displayTimeUnit\": \"ms\",\n");
+        out.push_str(&format!("  \"gated_digest\": \"{:016x}\",\n", self.gated_digest()));
+        out.push_str("  \"traceEvents\": [\n");
+        for (i, ev) in self.events.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"seq\": {}, ", ev.seq));
+            out.push_str(&format!("\"ph\": {}, ", json_str(ev.ph.code())));
+            out.push_str(&format!("\"cat\": {}, ", json_str(ev.cat)));
+            out.push_str(&format!("\"name\": {}, ", json_str(&ev.name)));
+            out.push_str("\"pid\": 1, \"tid\": 1, ");
+            out.push_str(&format!("\"ts\": {:?}, ", ev.ts_us));
+            out.push_str(&format!(
+                "\"clock\": \"{}\", ",
+                if ev.wall { "wall" } else { "virtual" }
+            ));
+            if ev.ph == Ph::Instant {
+                out.push_str("\"s\": \"t\", ");
+            }
+            out.push_str("\"args\": {");
+            for (j, (k, v)) in ev.args.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("{}: {}", json_str(k), v.render()));
+            }
+            out.push_str("}}");
+            out.push_str(if i + 1 < self.events.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+            .map_err(|e| err_config!("cannot write trace {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Tracer {
+        let mut t = Tracer::new();
+        t.begin("serve", "flush", Ts::Virt(1.5), vec![("valid", Arg::U64(8))]);
+        t.instant("serve", "admit", Ts::Virt(1.5), vec![("id", Arg::U64(0))]);
+        t.counter("serve", "serve/admission", Ts::Virt(2.0), &[("submitted_total", 1)]);
+        t.end("serve", "flush", Ts::Virt(2.0));
+        t
+    }
+
+    #[test]
+    fn gated_section_pins_the_line_format() {
+        let t = demo();
+        assert_eq!(
+            t.gated_section(),
+            "0 B serve/flush @1500.0us valid=8\n\
+             1 i serve/admit @1500.0us id=0\n\
+             2 C serve/serve/admission @2000.0us submitted_total=1\n\
+             3 E serve/flush @2000.0us\n"
+        );
+        assert_eq!(t.gated_digest(), fnv1a64(t.gated_section().as_bytes()));
+    }
+
+    #[test]
+    fn span_stack_tracks_balance() {
+        let mut t = Tracer::new();
+        assert_eq!(t.open_spans(), 0);
+        t.begin("train", "step", Ts::Wall, Vec::new());
+        t.begin("train", "encoder_fwd", Ts::Wall, Vec::new());
+        assert_eq!(t.open_spans(), 2);
+        t.end("train", "encoder_fwd", Ts::Wall);
+        t.end("train", "step", Ts::Wall);
+        assert_eq!(t.open_spans(), 0);
+    }
+
+    #[test]
+    fn wall_events_do_not_move_the_digest() {
+        let mut a = demo();
+        let mut b = demo();
+        a.instant("train", "overflow", Ts::Wall, vec![("loss_scale", Arg::F64(1024.0))]);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        b.instant("train", "overflow", Ts::Wall, vec![("loss_scale", Arg::F64(1024.0))]);
+        // wall timestamps differ between the two tracers, the digest not
+        assert_eq!(a.gated_digest(), b.gated_digest());
+        assert!(a.gated_section().contains("train/overflow @wall loss_scale=1024.0"));
+    }
+
+    #[test]
+    fn chrome_json_tags_domains_and_embeds_the_digest() {
+        let t = demo();
+        let js = t.to_chrome_json();
+        assert!(js.contains("\"schema\": 1"));
+        assert!(js.contains(&format!("\"gated_digest\": \"{:016x}\"", t.gated_digest())));
+        assert!(js.contains("\"ph\": \"B\""));
+        assert!(js.contains("\"clock\": \"virtual\""));
+        assert!(js.contains("\"s\": \"t\","));
+        assert!(js.contains("\"ts\": 1500.0"));
+    }
+
+    #[test]
+    fn string_args_escape_like_json() {
+        let mut t = Tracer::new();
+        t.instant("serve", "route", Ts::Virt(0.0), vec![("replica", Arg::Str("r\"0\"".into()))]);
+        assert!(t.gated_section().contains("replica=\"r\\\"0\\\"\""));
+        assert!(t.to_chrome_json().contains("\"replica\": \"r\\\"0\\\"\""));
+    }
+}

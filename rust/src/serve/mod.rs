@@ -59,7 +59,9 @@ pub use loadgen::{
 };
 pub use merge::merge_rows;
 pub use replica::{ReplicaRouter, RoutePolicy};
-pub use server::{replay, Admission, Clock, Server, ServerConfig, VirtualClock, WallClock};
+pub use server::{
+    replay, Admission, Clock, Server, ServerConfig, SettableClock, VirtualClock, WallClock,
+};
 pub use shard::{ShardExecutor, ShardPlan};
 pub use stats::{ServingStats, PACKING_WINDOW_CAP};
 pub use swap::WarmSwap;

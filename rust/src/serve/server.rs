@@ -25,8 +25,9 @@
 //! the label-sharded scoring path (`ShardExecutor`) plugs in without the
 //! queue logic ever touching PJRT.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
+use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::Result;
@@ -35,6 +36,7 @@ use crate::{err_config, err_shape};
 use crate::data::SEQ_LEN;
 use crate::infer::Prediction;
 use crate::metrics::TopK;
+use crate::obs::{Arg, Tracer, Ts};
 use crate::util::pad_tail_rows;
 
 use super::stats::ServingStats;
@@ -104,9 +106,30 @@ impl Clock for VirtualClock {
 /// `Server::clock()` is unreachable there).  The warm-swap poll in
 /// `elmo serve` is the canonical user: it drains `WarmSwap::take_due`
 /// at each batch boundary against the replayed time.
-impl Clock for std::rc::Rc<VirtualClock> {
+impl Clock for Rc<VirtualClock> {
     fn now_ms(&self) -> f64 {
         self.as_ref().now_ms()
+    }
+}
+
+/// A clock the replay loop can drive: `set_ms` jumps to an absolute
+/// schedule time.  Implemented for `VirtualClock` (the host-test form)
+/// and `Rc<VirtualClock>` (the shared-handle form `elmo serve` and the
+/// bench scenario grid use), so `replay` works over both without the
+/// drivers giving up their clock handle.
+pub trait SettableClock: Clock {
+    fn set_ms(&self, t_ms: f64);
+}
+
+impl SettableClock for VirtualClock {
+    fn set_ms(&self, t_ms: f64) {
+        self.set(t_ms);
+    }
+}
+
+impl SettableClock for Rc<VirtualClock> {
+    fn set_ms(&self, t_ms: f64) {
+        self.as_ref().set(t_ms);
     }
 }
 
@@ -144,6 +167,8 @@ pub struct Server<C: Clock> {
     queue: VecDeque<PendingQuery>,
     next_id: u64,
     pub stats: ServingStats,
+    /// Optional shared span/event recorder (docs/OBSERVABILITY.md).
+    tracer: Option<Rc<RefCell<Tracer>>>,
 }
 
 impl<C: Clock> Server<C> {
@@ -170,7 +195,37 @@ impl<C: Clock> Server<C> {
             queue: VecDeque::new(),
             next_id: 0,
             stats: ServingStats::default(),
+            tracer: None,
         })
+    }
+
+    /// Attach a shared tracer: the server then emits admit/reject
+    /// instants, a span per flush (with the trigger kind), and a
+    /// `serve/admission` counter sample after every admission burst and
+    /// every flush — the event-by-event form of the conservation law
+    /// `ServingStats::reconciles` checks once at the end.  Timestamps
+    /// are recorded in the virtual domain, so attach only under an
+    /// injectable clock (the replay harness / scenario grid), where
+    /// `now_ms` is deterministic schedule time.
+    pub fn set_tracer(&mut self, tracer: Rc<RefCell<Tracer>>) {
+        self.tracer = Some(tracer);
+    }
+
+    /// Emit one `serve/admission` counter sample at virtual time `now`.
+    fn trace_admission(&self, now: f64) {
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().counter(
+                "serve",
+                "serve/admission",
+                Ts::Virt(now),
+                &[
+                    ("submitted_total", self.stats.submitted),
+                    ("completed_total", self.stats.completed()),
+                    ("rejected_total", self.stats.rejected),
+                    ("queued", self.queue.len() as u64),
+                ],
+            );
+        }
     }
 
     /// The injected clock (the load harness advances a `VirtualClock`
@@ -214,6 +269,29 @@ impl<C: Clock> Server<C> {
             self.queue.push_back(PendingQuery { id, tokens: row.to_vec(), enqueued_ms: now });
             adm.accepted.push(id);
         }
+        if let Some(tr) = &self.tracer {
+            let mut tr = tr.borrow_mut();
+            if let Some(&first) = adm.accepted.first() {
+                tr.instant(
+                    "serve",
+                    "admit",
+                    Ts::Virt(now),
+                    vec![
+                        ("first_id", Arg::U64(first)),
+                        ("rows", Arg::U64(adm.accepted.len() as u64)),
+                    ],
+                );
+            }
+            if adm.rejected > 0 {
+                tr.instant(
+                    "serve",
+                    "reject",
+                    Ts::Virt(now),
+                    vec![("rows", Arg::U64(adm.rejected as u64))],
+                );
+            }
+        }
+        self.trace_admission(now);
         Ok(adm)
     }
 
@@ -242,6 +320,20 @@ impl<C: Clock> Server<C> {
             tokens.extend_from_slice(&q.tokens);
         }
         pad_tail_rows(&mut tokens, SEQ_LEN, self.cfg.width);
+        if let Some(tr) = &self.tracer {
+            // the borrow is scoped: the driver's score closure may hold
+            // a clone of the same tracer and record its own events
+            tr.borrow_mut().begin(
+                "serve",
+                "flush",
+                Ts::Virt(self.clock.now_ms()),
+                vec![
+                    ("valid", Arg::U64(valid as u64)),
+                    ("width", Arg::U64(self.cfg.width as u64)),
+                    ("kind", Arg::Str(if deadline { "deadline" } else { "full" }.into())),
+                ],
+            );
+        }
         let topks = score(&tokens)?;
         if topks.len() < valid {
             return Err(err_shape!(
@@ -256,6 +348,10 @@ impl<C: Clock> Server<C> {
             out.push(Prediction { id: q.id, topk: tk.items().to_vec(), latency_ms: ms });
         }
         self.stats.note_batch(valid, self.cfg.width, deadline);
+        self.trace_admission(done);
+        if let Some(tr) = &self.tracer {
+            tr.borrow_mut().end("serve", "flush", Ts::Virt(done));
+        }
         Ok(())
     }
 
@@ -325,33 +421,45 @@ impl<C: Clock> Server<C> {
 /// After the last arrival the queue drains deadline-by-deadline.
 /// Packing therefore depends only on the schedule: scoring wall time
 /// never touches the virtual clock.
-pub fn replay<F>(
-    server: &mut Server<VirtualClock>,
+pub fn replay<C, F>(
+    server: &mut Server<C>,
     schedule: &[super::loadgen::Arrival],
     mut take_rows: impl FnMut(usize) -> Vec<i32>,
     mut score: F,
     out: &mut Vec<Prediction>,
 ) -> Result<()>
 where
+    C: SettableClock,
     F: FnMut(&[i32]) -> Result<Vec<TopK>>,
 {
+    if let Some(tr) = &server.tracer {
+        tr.borrow_mut().begin(
+            "serve",
+            "replay",
+            Ts::Virt(server.clock.now_ms()),
+            vec![("arrivals", Arg::U64(schedule.len() as u64))],
+        );
+    }
     for arr in schedule {
         while let Some(d) = server.next_deadline() {
             if d > arr.t_ms {
                 break;
             }
-            server.clock().set(d);
+            server.clock().set_ms(d);
             server.poll_deadline(&mut score, out)?;
         }
-        server.clock().set(arr.t_ms);
+        server.clock().set_ms(arr.t_ms);
         let toks = take_rows(arr.rows);
         server.submit(&toks)?;
         server.run_full(&mut score, out)?;
     }
     while let Some(d) = server.next_deadline() {
         let now = server.clock().now_ms();
-        server.clock().set(d.max(now));
+        server.clock().set_ms(d.max(now));
         server.poll_deadline(&mut score, out)?;
+    }
+    if let Some(tr) = &server.tracer {
+        tr.borrow_mut().end("serve", "replay", Ts::Virt(server.clock.now_ms()));
     }
     Ok(())
 }
@@ -376,6 +484,54 @@ mod tests {
         assert_eq!(c.now_ms(), 2.5);
         c.set(10.0);
         assert_eq!(c.now_ms(), 10.0);
+    }
+
+    #[test]
+    fn traced_replay_is_balanced_lawful_and_deterministic() {
+        use crate::serve::loadgen::Arrival;
+
+        let run = || -> (u64, String) {
+            let tracer = Rc::new(RefCell::new(Tracer::new()));
+            let mut sv = Server::new(
+                ServerConfig { width: 2, queue_cap: 4, max_delay_ms: 2.0 },
+                VirtualClock::new(),
+            )
+            .unwrap();
+            sv.set_tracer(tracer.clone());
+            let schedule = [Arrival { t_ms: 1.0, rows: 3 }, Arrival { t_ms: 1.5, rows: 4 }];
+            let mut out = Vec::new();
+            replay(
+                &mut sv,
+                &schedule,
+                |n| vec![0i32; n * SEQ_LEN],
+                |tokens| {
+                    Ok(tokens
+                        .chunks_exact(SEQ_LEN)
+                        .map(|_| {
+                            let mut tk = TopK::new(1);
+                            tk.push(1.0, 0);
+                            tk
+                        })
+                        .collect())
+                },
+                &mut out,
+            )
+            .unwrap();
+            assert!(sv.stats.rejected > 0, "the scenario must exercise rejection");
+            assert!(sv.stats.reconciles(), "{}", sv.stats.summary());
+            let tr = tracer.borrow();
+            assert_eq!(tr.open_spans(), 0, "replay closes every span it opens");
+            (tr.gated_digest(), tr.to_chrome_json())
+        };
+        let (d1, js1) = run();
+        let (d2, js2) = run();
+        assert_eq!(d1, d2, "same schedule, same digest");
+        assert_eq!(js1, js2, "traced JSON is byte-identical across same-seed runs");
+        let rep = crate::obs::check_str(&js1).unwrap();
+        assert!(rep.admission_samples > 0, "{rep:?}");
+        assert!(rep.spans > 0, "flush + replay spans completed");
+        assert_eq!(rep.digest, d1, "trace-check re-derives the recorder's digest");
+        assert!(js1.contains("\"name\": \"reject\""), "reject instant recorded");
     }
 
     #[test]

@@ -161,6 +161,15 @@ pub struct ShardExecutor {
     /// counter the serving stats report (exact mode scans every chunk
     /// per batch; shortlist mode strictly fewer).
     pub chunks_scanned: u64,
+    /// Chunks executed per shard by the **most recent** `score` call —
+    /// the per-batch shape of `shard_chunks`, read by tracing drivers
+    /// to emit per-shard scan events without the executor knowing about
+    /// the tracer (docs/OBSERVABILITY.md).
+    pub last_scan: Vec<u64>,
+    /// Stage-1 shortlist selection size of the most recent `score` call
+    /// (`None` under the exact strategy) — the stage-1/stage-2 funnel
+    /// the trace surfaces per batch.
+    pub last_selected: Option<u64>,
 }
 
 impl ShardExecutor {
@@ -173,6 +182,8 @@ impl ShardExecutor {
             pinned: Vec::new(),
             shard_chunks: vec![0; shards],
             chunks_scanned: 0,
+            last_scan: vec![0; shards],
+            last_selected: None,
         }
     }
 
@@ -278,6 +289,8 @@ impl ShardExecutor {
                     self.shard_chunks[s] += local[s].len() as u64;
                 }
                 self.chunks_scanned += selection.len() as u64;
+                self.last_scan = local.iter().map(|l| l.len() as u64).collect();
+                self.last_selected = Some(selection.len() as u64);
                 self.score_shortlist(ex, view, emb, batch, &local)?
             }
             ScanStrategy::Exact => {
@@ -295,6 +308,9 @@ impl ShardExecutor {
                     self.shard_chunks[s] += self.plan.chunk_range(s).len() as u64;
                 }
                 self.chunks_scanned += self.plan.n_chunks() as u64;
+                self.last_scan =
+                    (0..shards).map(|s| self.plan.chunk_range(s).len() as u64).collect();
+                self.last_selected = None;
                 per_shard
             }
         };
@@ -625,6 +641,8 @@ mod tests {
         assert_eq!(ex.k(), 5);
         assert_eq!(ex.shard_chunks, vec![0, 0]);
         assert_eq!(ex.plan().shards(), 2);
+        assert_eq!(ex.last_scan, vec![0, 0], "no batch scored yet");
+        assert_eq!(ex.last_selected, None, "exact strategy has no stage-1 funnel");
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! therefore the same packing decisions — print the same digest, and any
 //! divergence in packing shows up as a one-line diff.
 
+use crate::error::Result;
 use crate::infer::ServeStats;
+use crate::obs::Registry;
 use crate::util::{fnv1a64_fold, FNV64_OFFSET};
 
 use super::cache::QueryCache;
@@ -181,10 +183,40 @@ impl ServingStats {
         self.shard_chunks.iter().map(|&c| c as f64 / total as f64).collect()
     }
 
+    /// Export every serving aggregate through the unified metrics
+    /// registry (docs/OBSERVABILITY.md): the shared `ServeStats` core
+    /// (run totals, exact window percentiles, the latency histogram)
+    /// plus admission, flush-trigger, scan, swap, cache, and replica
+    /// counters.  Per-shard and per-replica counters get one series
+    /// each so utilization skew is visible on the rendered page.
+    pub fn export(&self, reg: &mut Registry) -> Result<()> {
+        self.core.export(reg)?;
+        reg.inc("elmo_serve_submitted_total", self.submitted)?;
+        reg.inc("elmo_serve_rejected_total", self.rejected)?;
+        reg.inc("elmo_serve_deadline_flushes_total", self.deadline_flushes)?;
+        reg.inc("elmo_serve_full_flushes_total", self.full_flushes)?;
+        reg.inc("elmo_serve_chunks_scanned_total", self.chunks_scanned)?;
+        reg.inc("elmo_serve_swaps_total", self.swaps)?;
+        reg.gauge("elmo_serve_model_version", self.model_version as f64)?;
+        reg.inc("elmo_serve_cache_lookups_total", self.cache_lookups)?;
+        reg.inc("elmo_serve_cache_hits_total", self.cache_hits)?;
+        reg.inc("elmo_serve_cache_misses_total", self.cache_misses)?;
+        reg.inc("elmo_serve_cache_evictions_total", self.cache_evictions)?;
+        reg.inc("elmo_serve_cache_invalidations_total", self.cache_invalidations)?;
+        reg.inc("elmo_serve_cache_batch_skips_total", self.cache_batch_skips)?;
+        for (i, &c) in self.shard_chunks.iter().enumerate() {
+            reg.inc(&format!("elmo_serve_shard{i}_chunks_total"), c)?;
+        }
+        for (i, &b) in self.replica_batches.iter().enumerate() {
+            reg.inc(&format!("elmo_serve_replica{i}_batches_total"), b)?;
+        }
+        Ok(())
+    }
+
     pub fn summary(&self) -> String {
         let mut s = format!(
             "{} completed / {} rejected of {} | {} batches ({} deadline) | \
-             {:.1} q/s | p50 {:.2} ms  p99 {:.2} ms | fill {:.0}% | packing {:016x} | v{}",
+             {:.1} q/s | p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms | fill {:.0}% | packing {:016x} | v{}",
             self.core.completed,
             self.rejected,
             self.submitted,
@@ -192,6 +224,7 @@ impl ServingStats {
             self.deadline_flushes,
             self.core.qps(),
             self.core.p50_ms(),
+            self.core.p90_ms(),
             self.core.p99_ms(),
             100.0 * self.core.fill_ratio(),
             self.packing_digest,
@@ -319,6 +352,33 @@ mod tests {
         assert!(sum.contains("| v2"), "{sum}");
         assert!(sum.contains("cache 3/4 hit"), "{sum}");
         assert!(sum.contains("replicas [2 2]"), "{sum}");
+    }
+
+    #[test]
+    fn export_renders_every_serving_counter() {
+        let mut s = ServingStats::default();
+        s.submitted = 10;
+        s.rejected = 3;
+        for _ in 0..7 {
+            s.record_completion(1.0);
+        }
+        s.note_batch(7, 8, true);
+        s.chunks_scanned = 4;
+        s.shard_chunks = vec![3, 1];
+        s.note_swap();
+        s.replica_batches = vec![1, 0];
+        let mut reg = Registry::new();
+        s.export(&mut reg).unwrap();
+        assert_eq!(reg.counter("elmo_serve_submitted_total"), Some(10));
+        assert_eq!(reg.counter("elmo_serve_rejected_total"), Some(3));
+        assert_eq!(reg.counter("elmo_serve_deadline_flushes_total"), Some(1));
+        assert_eq!(reg.counter("elmo_serve_chunks_scanned_total"), Some(4));
+        assert_eq!(reg.counter("elmo_serve_shard0_chunks_total"), Some(3));
+        assert_eq!(reg.counter("elmo_serve_replica1_batches_total"), Some(0));
+        assert_eq!(reg.gauge_value("elmo_serve_model_version"), Some(2.0));
+        let page = reg.prometheus_text();
+        assert!(page.contains("elmo_serve_completed_total 7"), "{page}");
+        assert!(page.contains("elmo_serve_latency_ms_bucket"), "{page}");
     }
 
     #[test]

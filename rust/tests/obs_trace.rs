@@ -1,0 +1,191 @@
+//! Observability determinism contract (docs/OBSERVABILITY.md):
+//!
+//! 1. the traced bench cells replay byte-identically under the same seed
+//!    (gated section AND digest), and a new seed moves the digest — the
+//!    property the two `trace/*/gated_digest` baseline metrics gate in CI;
+//! 2. every trace the recorder emits passes `trace-check`, with the serve
+//!    conservation laws actually exercised (admission + cache samples);
+//! 3. span nesting is balanced for *any* balanced begin/end program, not
+//!    just the shipped instrumentation (seeded property test);
+//! 4. the `elmo trace-check` binary exits zero on a real trace and
+//!    non-zero on each corruption class: truncated JSON, unbalanced
+//!    spans, counter regression, doctored digest.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use elmo::bench::{run_traced_cell, run_traced_swap_cell, ARRIVAL_SEED};
+use elmo::obs::{check_str, Arg, Tracer, Ts};
+use elmo::util::prop_check;
+
+// ---- determinism: the property the bench baseline gates -----------------
+
+#[test]
+fn same_seed_traced_replay_is_byte_identical_and_seed_moves_it() {
+    let a = run_traced_cell(ARRIVAL_SEED).expect("traced cell");
+    let b = run_traced_cell(ARRIVAL_SEED).expect("traced cell rerun");
+    assert_eq!(a.gated_section, b.gated_section, "gated section must be byte-identical");
+    assert_eq!(a.gated_digest, b.gated_digest);
+    assert_eq!(a.chrome_json, b.chrome_json, "virtual-clock traces carry no wall noise");
+    assert_eq!(a.events, b.events);
+
+    let moved = run_traced_cell(ARRIVAL_SEED + 1).expect("traced cell, new seed");
+    assert_ne!(a.gated_digest, moved.gated_digest, "a new arrival seed must move the digest");
+}
+
+#[test]
+fn same_seed_traced_swap_cell_is_byte_identical_and_distinct() {
+    let a = run_traced_swap_cell(ARRIVAL_SEED).expect("traced swap cell");
+    let b = run_traced_swap_cell(ARRIVAL_SEED).expect("traced swap cell rerun");
+    assert_eq!(a.gated_section, b.gated_section);
+    assert_eq!(a.gated_digest, b.gated_digest);
+
+    let replay = run_traced_cell(ARRIVAL_SEED).expect("traced cell");
+    assert_ne!(a.gated_digest, replay.gated_digest, "the two traced cells pin different streams");
+    assert!(
+        a.gated_section.contains("swap_cutover"),
+        "the swap mix must witness its cutover:\n{}",
+        a.gated_section
+    );
+    assert!(a.gated_section.contains("serve/cache"), "cache law samples must be present");
+}
+
+// ---- every emitted trace is lawful --------------------------------------
+
+#[test]
+fn real_traces_pass_trace_check_with_the_laws_exercised() {
+    let cell = run_traced_cell(ARRIVAL_SEED).expect("traced cell");
+    let rep = check_str(&cell.chrome_json).expect("replay trace is lawful");
+    assert_eq!(rep.events as u64, cell.events);
+    assert_eq!(rep.digest, cell.gated_digest, "checker recompute matches the recorder");
+    assert!(rep.spans > 0, "replay + flush spans must be present");
+    assert!(rep.admission_samples > 0, "admission conservation law must be exercised");
+
+    let swap = run_traced_swap_cell(ARRIVAL_SEED).expect("traced swap cell");
+    let rep = check_str(&swap.chrome_json).expect("swap trace is lawful");
+    assert_eq!(rep.digest, swap.gated_digest);
+    assert!(rep.cache_samples > 0, "cache conservation law must be exercised");
+}
+
+// ---- property: balanced programs always verify --------------------------
+
+#[test]
+fn random_balanced_span_programs_always_verify() {
+    let names = ["epoch", "step", "flush", "scan", "merge"];
+    prop_check("obs-span-balance", 64, |rng| {
+        let mut t = Tracer::new();
+        let mut stack: Vec<&'static str> = Vec::new();
+        let mut ts = 0.0f64;
+        for _ in 0..rng.below(40) {
+            ts += 0.25; // exactly representable: the digest stays stable
+            match rng.below(3) {
+                0 => {
+                    let n = names[rng.below(names.len())];
+                    t.begin("prop", n, Ts::Virt(ts), vec![("depth", Arg::U64(stack.len() as u64))]);
+                    stack.push(n);
+                }
+                1 => match stack.pop() {
+                    Some(n) => t.end("prop", n, Ts::Virt(ts)),
+                    None => t.instant("prop", "tick", Ts::Virt(ts), Vec::new()),
+                },
+                _ => t.instant("prop", "tick", Ts::Virt(ts), Vec::new()),
+            }
+        }
+        while let Some(n) = stack.pop() {
+            ts += 0.25;
+            t.end("prop", n, Ts::Virt(ts));
+        }
+        if t.open_spans() != 0 {
+            return Err(format!("{} spans open after balancing", t.open_spans()));
+        }
+        let rep = check_str(&t.to_chrome_json()).map_err(|e| format!("{e:#?}"))?;
+        if rep.digest != t.gated_digest() {
+            return Err("checker digest disagrees with recorder".to_string());
+        }
+        Ok(())
+    });
+}
+
+// ---- exit codes through the real binary ---------------------------------
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("obs_trace");
+    std::fs::create_dir_all(&dir).expect("tmpdir");
+    dir.join(name)
+}
+
+fn trace_check(path: &Path) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_elmo"))
+        .arg("trace-check")
+        .arg(path)
+        .output()
+        .expect("spawn elmo")
+}
+
+fn combined(out: &std::process::Output) -> String {
+    format!("{}{}", String::from_utf8_lossy(&out.stdout), String::from_utf8_lossy(&out.stderr))
+}
+
+#[test]
+fn binary_accepts_a_real_trace_and_rejects_each_corruption_class() {
+    let cell = run_traced_cell(ARRIVAL_SEED).expect("traced cell");
+    let good = tmp("good.json");
+    std::fs::write(&good, &cell.chrome_json).expect("write good trace");
+    let out = trace_check(&good);
+    let text = combined(&out);
+    assert!(out.status.success(), "real trace must pass:\n{text}");
+    assert!(text.contains("trace-check: OK"), "got: {text}");
+    assert!(
+        text.contains(&format!("{:016x}", cell.gated_digest)),
+        "summary reports the verified digest: {text}"
+    );
+
+    // truncated JSON
+    let trunc = tmp("truncated.json");
+    std::fs::write(&trunc, &cell.chrome_json[..cell.chrome_json.len() / 2])
+        .expect("write truncated trace");
+    let out = trace_check(&trunc);
+    assert!(!out.status.success(), "truncated trace must exit non-zero");
+
+    // unbalanced spans
+    let mut t = Tracer::new();
+    t.begin("serve", "replay", Ts::Virt(0.0), Vec::new());
+    let unb = tmp("unbalanced.json");
+    std::fs::write(&unb, t.to_chrome_json()).expect("write unbalanced trace");
+    let out = trace_check(&unb);
+    assert!(!out.status.success(), "unbalanced trace must exit non-zero");
+    assert!(combined(&out).contains("left open"), "got: {}", combined(&out));
+
+    // counter regression
+    let mut t = Tracer::new();
+    t.counter("serve", "serve/scan", Ts::Virt(0.0), &[("chunks_scanned_total", 5)]);
+    t.counter("serve", "serve/scan", Ts::Virt(1.0), &[("chunks_scanned_total", 3)]);
+    let reg = tmp("regression.json");
+    std::fs::write(&reg, t.to_chrome_json()).expect("write regression trace");
+    let out = trace_check(&reg);
+    assert!(!out.status.success(), "counter regression must exit non-zero");
+    assert!(combined(&out).contains("counter regression"), "got: {}", combined(&out));
+
+    // doctored digest
+    let doctored = tmp("doctored.json");
+    let bad = cell
+        .chrome_json
+        .replacen(&format!("{:016x}", cell.gated_digest), "0000000000000000", 1);
+    std::fs::write(&doctored, bad).expect("write doctored trace");
+    let out = trace_check(&doctored);
+    assert!(!out.status.success(), "doctored digest must exit non-zero");
+    assert!(combined(&out).contains("digest mismatch"), "got: {}", combined(&out));
+}
+
+#[test]
+fn binary_usage_and_missing_file_fail_loudly() {
+    let out = Command::new(env!("CARGO_BIN_EXE_elmo"))
+        .arg("trace-check")
+        .output()
+        .expect("spawn elmo");
+    assert!(!out.status.success(), "missing positional must exit non-zero");
+    assert!(combined(&out).contains("usage"), "got: {}", combined(&out));
+
+    let out = trace_check(Path::new("does/not/exist.json"));
+    assert!(!out.status.success(), "missing file must exit non-zero");
+}
